@@ -1,0 +1,57 @@
+//! Config explorer: sweep the full MAFAT configuration space on any
+//! Darknet-style `.cfg` network and dump a CSV of predictions and
+//! simulated latencies across memory limits — the tool a practitioner
+//! would use to port MAFAT to a new CNN (paper §5 future work).
+//!
+//! Run: cargo run --release --example config_explorer [-- path/to/net.cfg]
+//! (defaults to the built-in YOLOv2-16 prefix; CSV on stdout)
+
+use mafat::network::{cfg, yolov2};
+use mafat::plan::{manual_search_space, plan_config};
+use mafat::predictor::{predict_mem, PredictorParams};
+use mafat::simulate::{mafat_trace, run_trace, SimOptions};
+
+const LIMITS_MB: [u64; 6] = [256, 128, 96, 64, 32, 16];
+
+fn main() -> anyhow::Result<()> {
+    let net = match std::env::args().nth(1) {
+        Some(path) => cfg::load_cfg(std::path::Path::new(&path))?,
+        None => yolov2::yolov2_16(),
+    };
+    eprintln!(
+        "exploring {} ({} layers, cuts at {:?})",
+        net.name,
+        net.n_layers(),
+        net.candidate_cuts()
+    );
+
+    let params = PredictorParams::default();
+    let opts = SimOptions::default();
+
+    // CSV header.
+    print!("config,tasks,predicted_mb,peak_rss_mb");
+    for mb in LIMITS_MB {
+        print!(",latency_ms_at_{mb}mb");
+    }
+    println!();
+
+    for config in manual_search_space(&net) {
+        let plan = plan_config(&net, config)?;
+        let pred = predict_mem(&net, config, &params)?;
+        let steps = mafat_trace(&net, &plan, &opts);
+        let free = run_trace(&steps, None, &opts.cost)?;
+        print!(
+            "{config},{},{:.1},{:.1}",
+            plan.n_tasks(),
+            pred.total_mb(),
+            free.peak_rss_mb()
+        );
+        for mb in LIMITS_MB {
+            let r = run_trace(&steps, Some(mb * (1 << 20)), &opts.cost)?;
+            print!(",{:.0}", r.latency_ms());
+        }
+        println!();
+    }
+    eprintln!("done: {} configurations", manual_search_space(&net).len());
+    Ok(())
+}

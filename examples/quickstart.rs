@@ -1,0 +1,67 @@
+//! Quickstart: the MAFAT workflow on the paper's YOLOv2-16 prefix.
+//!
+//! 1. Inspect the network (Table 2.1 style).
+//! 2. Predict the memory footprint of a configuration (Alg. 1/2).
+//! 3. Search for the best configuration under a budget (Alg. 3).
+//! 4. Simulate the run on the calibrated Pi-3 memory/swap model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mafat::network::yolov2::yolov2_16;
+use mafat::network::MIB;
+use mafat::plan::{plan_config, MafatConfig};
+use mafat::predictor::{predict_mem, PredictorParams};
+use mafat::search::get_config;
+use mafat::simulate::{simulate_config, SimOptions};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The workload: the first 16 (feature-heavy) layers of YOLOv2.
+    let net = yolov2_16();
+    println!(
+        "network: {} | {} layers | {:.1} GMAC | {:.1} MB of weights\n",
+        net.name,
+        net.n_layers(),
+        net.total_macs() as f64 / 1e9,
+        net.total_weight_bytes() as f64 / MIB as f64
+    );
+
+    // 2. Predict memory for a hand-picked configuration.
+    let params = PredictorParams::default();
+    let config: MafatConfig = "3x3/8/2x2".parse()?;
+    let pred = predict_mem(&net, config, &params)?;
+    let plan = plan_config(&net, config)?;
+    println!(
+        "{config}: {} fused tasks, predicted peak memory {:.1} MB \
+         (driven by layer {} of group {})",
+        plan.n_tasks(),
+        pred.total_mb(),
+        pred.peak.layer,
+        pred.peak.group_index
+    );
+
+    // 3. Let Algorithm 3 pick configurations for a sweep of budgets.
+    println!("\nAlgorithm 3 choices:");
+    for mb in [256u64, 128, 96, 64, 32, 16] {
+        let r = get_config(&net, mb * MIB, &params)?;
+        println!(
+            "  {mb:>4} MB -> {:<12} (predicted {:>5.1} MB{})",
+            r.config.to_string(),
+            r.predicted_bytes as f64 / MIB as f64,
+            if r.is_fallback { ", fallback" } else { "" }
+        );
+    }
+
+    // 4. Simulate the chosen config at a tight budget vs the untiled run.
+    println!("\nsimulated latency at a 32 MB limit (calibrated Pi-3 model):");
+    let opts = SimOptions::default().with_limit_mb(32);
+    for config in ["1x1/NoCut".parse()?, get_config(&net, 32 * MIB, &params)?.config] {
+        let r = simulate_config(&net, config, &opts)?;
+        println!(
+            "  {config:<12} {:>8.0} ms  (swap {:>5.1} s, {:>6.1} MB swapped)",
+            r.latency_ms(),
+            r.swap_s,
+            r.swapped_mb()
+        );
+    }
+    Ok(())
+}

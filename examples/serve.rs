@@ -1,0 +1,90 @@
+//! Serving demo: boots the coordinator, drives it with a small client
+//! load (mixed synthetic-image requests over several connections), prints
+//! per-request latencies and the final metrics snapshot — the
+//! single-device edge-serving scenario the paper's intro motivates.
+//!
+//! Requires `make artifacts`. Run:
+//!     cargo run --release --example serve
+
+use mafat::coordinator::{Server, ServerConfig};
+use mafat::engine::Engine;
+use mafat::jsonlite::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let config = "3x3/8/2x2".parse()?;
+
+    let server = Server::start(
+        move || Engine::load(&artifacts, config),
+        "127.0.0.1:0",
+        ServerConfig {
+            queue_depth: 32,
+            max_batch: 4,
+        },
+    )?;
+    let addr = server.local_addr;
+    std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    // Client load: 3 connections x 4 requests each.
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..3)
+        .map(|conn| {
+            std::thread::spawn(move || -> anyhow::Result<Vec<(String, f64, f64)>> {
+                let stream = TcpStream::connect(addr)?;
+                stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+                let mut writer = stream.try_clone()?;
+                let mut reader = BufReader::new(stream);
+                let mut out = Vec::new();
+                for i in 0..4 {
+                    let id = format!("c{conn}-r{i}");
+                    let req = format!(r#"{{"cmd":"infer","id":"{id}","seed":{}}}"#, conn * 10 + i);
+                    writer.write_all(req.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    let mut line = String::new();
+                    reader.read_line(&mut line)?;
+                    let j = Json::parse(&line)?;
+                    anyhow::ensure!(j.get("ok")?.as_bool()?, "request failed: {line}");
+                    out.push((
+                        id,
+                        j.get("latency_ms")?.as_f64()?,
+                        j.get("queue_ms")?.as_f64()?,
+                    ));
+                }
+                Ok(out)
+            })
+        })
+        .collect();
+
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    all.sort_by(|a, b| a.0.cmp(&b.0));
+    println!("{:<10} {:>12} {:>10}", "request", "infer (ms)", "queue (ms)");
+    for (id, lat, q) in &all {
+        println!("{id:<10} {lat:>12.1} {q:>10.1}");
+    }
+    println!(
+        "\n{} requests in {:.2} s wall ({:.2} req/s, single-device worker)",
+        all.len(),
+        wall,
+        all.len() as f64 / wall
+    );
+
+    // Metrics snapshot.
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"{\"cmd\":\"metrics\"}\n")?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = Json::parse(&line)?;
+    println!("\nserver metrics:\n{}", j.str_at("metrics")?);
+    Ok(())
+}

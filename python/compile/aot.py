@@ -1,0 +1,205 @@
+"""AOT pipeline: geometry JSON (from `mafat export-geometry`) -> one HLO
+text module per fused tile-shape class -> `artifacts/manifest.json`.
+
+HLO *text* is the interchange format: jax >= 0.5 serializes HloModuleProto
+with 64-bit instruction ids that the xla crate's XLA (xla_extension 0.5.1)
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Usage (driven by `make artifacts`):
+
+    python -m compile.aot --geometry ../artifacts/geometry.json \
+                          --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import LayerCfg, fused_task_forward, full_forward, geoms_from_json, layers_from_json
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def weight_specs(layers, top, bottom):
+    """ShapeDtypeStructs for the (w, b) pairs of conv layers in [top, bottom]."""
+    specs = []
+    for cfg in layers[top:bottom + 1]:
+        if cfg.is_conv:
+            specs.append(
+                (
+                    jax.ShapeDtypeStruct((cfg.size, cfg.size, cfg.in_c, cfg.out_c), jnp.float32),
+                    jax.ShapeDtypeStruct((cfg.out_c,), jnp.float32),
+                )
+            )
+    return specs
+
+
+def lower_fused_class(layers, top, bottom, geoms, in_h, in_w):
+    """Lower one tile-shape class to HLO text.
+
+    The jitted signature is ``fn(x, w0, b0, w1, b1, ...)`` — positional and
+    flat, so the Rust runtime feeds literals in a fixed order.
+    """
+    group_layers = layers[top:bottom + 1]
+    in_c = group_layers[0].in_c
+
+    def fn(x, *wb):
+        weights = [(wb[2 * i], wb[2 * i + 1]) for i in range(len(wb) // 2)]
+        return (fused_task_forward(x, weights, group_layers, geoms, use_pallas=True),)
+
+    x_spec = jax.ShapeDtypeStruct((in_h, in_w, in_c), jnp.float32)
+    flat = [s for pair in weight_specs(layers, top, bottom) for s in pair]
+    lowered = jax.jit(fn).lower(x_spec, *flat)
+    return to_hlo_text(lowered)
+
+
+def lower_full(layers, in_h, in_w, in_c):
+    def fn(x, *wb):
+        weights = [(wb[2 * i], wb[2 * i + 1]) for i in range(len(wb) // 2)]
+        return (full_forward(x, weights, layers, use_pallas=True),)
+
+    x_spec = jax.ShapeDtypeStruct((in_h, in_w, in_c), jnp.float32)
+    flat = [s for pair in weight_specs(layers, 0, len(layers) - 1) for s in pair]
+    lowered = jax.jit(fn).lower(x_spec, *flat)
+    return to_hlo_text(lowered)
+
+
+def out_shape_of(geoms, layers, top, bottom):
+    last = geoms[-1]
+    return [last.out_h, last.out_w, layers[bottom].out_c]
+
+
+def sanitize(cfg_name: str) -> str:
+    return cfg_name.replace("/", "_").replace("x", "")
+
+
+def build(geometry: dict, out_dir: str, *, verbose: bool = True) -> dict:
+    """Lower every requested module; returns the manifest dict."""
+    manifest_networks = []
+    for net_json in geometry["networks"]:
+        name = net_json["name"]
+        layers = layers_from_json(net_json)
+        net_dir = os.path.join(out_dir, name)
+        os.makedirs(net_dir, exist_ok=True)
+        mnet = {
+            "name": name,
+            "in_w": net_json["in_w"],
+            "in_h": net_json["in_h"],
+            "in_c": net_json["in_c"],
+            "layers": net_json["layers"],
+            "configs": [],
+        }
+
+        if net_json.get("emit_full"):
+            path = os.path.join(name, "full.hlo.txt")
+            if verbose:
+                print(f"[aot] lowering {name}/full", file=sys.stderr)
+            hlo = lower_full(layers, net_json["in_h"], net_json["in_w"], net_json["in_c"])
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(hlo)
+            # Full output shape: walk the layer list.
+            h, w = net_json["in_h"], net_json["in_w"]
+            for cfg in layers:
+                if cfg.is_conv:
+                    # SAME-padded stride-1 convs preserve extent.
+                    pass
+                else:
+                    h, w = h // cfg.stride, w // cfg.stride
+            mnet["full"] = {
+                "path": path,
+                "in": [net_json["in_h"], net_json["in_w"], net_json["in_c"]],
+                "out": [h, w, layers[-1].out_c],
+            }
+
+        for cfg_json in net_json["configs"]:
+            cfg_name = cfg_json["config"]
+            cfg_dir = os.path.join(name, sanitize(cfg_name))
+            os.makedirs(os.path.join(out_dir, cfg_dir), exist_ok=True)
+            mcfg = {"config": cfg_name, "groups": []}
+            for g in cfg_json["groups"]:
+                top, bottom = g["top"], g["bottom"]
+                mclasses = []
+                for klass in g["classes"]:
+                    geoms = geoms_from_json(klass)
+                    in_h, in_w = geoms[0].in_h, geoms[0].in_w
+                    path = os.path.join(cfg_dir, f"g{g['gi']}_{klass['key']}.hlo.txt")
+                    if verbose:
+                        print(
+                            f"[aot] lowering {name}/{cfg_name} g{g['gi']} "
+                            f"class {klass['key']} ({in_h}x{in_w})",
+                            file=sys.stderr,
+                        )
+                    hlo = lower_fused_class(layers, top, bottom, geoms, in_h, in_w)
+                    with open(os.path.join(out_dir, path), "w") as f:
+                        f.write(hlo)
+                    mclasses.append(
+                        {
+                            "key": klass["key"],
+                            "path": path,
+                            "in": [in_h, in_w, layers[top].in_c],
+                            "out": out_shape_of(geoms, layers, top, bottom),
+                            "layers": klass["layers"],
+                        }
+                    )
+                mcfg["groups"].append(
+                    {
+                        "gi": g["gi"],
+                        "top": top,
+                        "bottom": bottom,
+                        "n": g["n"],
+                        "m": g["m"],
+                        "classes": mclasses,
+                        "tasks": g["tasks"],
+                    }
+                )
+            mnet["configs"].append(mcfg)
+        manifest_networks.append(mnet)
+
+    return {
+        "version": 1,
+        "geometry_sha256": hashlib.sha256(
+            json.dumps(geometry, sort_keys=True).encode()
+        ).hexdigest(),
+        "networks": manifest_networks,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--geometry", required=True, help="geometry JSON from `mafat export-geometry`")
+    ap.add_argument("--out", required=True, help="artifacts output directory")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    with open(args.geometry) as f:
+        geometry = json.load(f)
+    os.makedirs(args.out, exist_ok=True)
+    manifest = build(geometry, args.out, verbose=not args.quiet)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    n_modules = sum(
+        len(g["classes"])
+        for net in manifest["networks"]
+        for cfg in net["configs"]
+        for g in cfg["groups"]
+    ) + sum(1 for net in manifest["networks"] if "full" in net)
+    print(f"[aot] wrote {n_modules} HLO modules + {manifest_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

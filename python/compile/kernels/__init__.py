@@ -1,0 +1,4 @@
+"""Layer-1 kernels: Pallas conv/maxpool plus their pure-jnp oracles."""
+
+from .conv2d import conv2d, maxpool2d, vmem_estimate_bytes  # noqa: F401
+from .ref import conv2d_ref, maxpool2d_ref  # noqa: F401

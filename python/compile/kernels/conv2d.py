@@ -1,0 +1,159 @@
+"""Layer-1 Pallas kernels: direct conv2d (+bias+leaky-ReLU) and maxpool.
+
+TPU-idiom formulation of the paper's compute hot-spot (DESIGN.md
+§Hardware-Adaptation): instead of Darknet's im2col + GEMM (whose scratch
+buffer *is* the paper's Eq. 2.1 memory term), the convolution is expressed
+as an im2col-free sum of F*F shifted matmuls
+
+    out[oh, ow, :oc_blk] += x[oh + ky, ow + kx, :] @ w[ky, kx, :, oc_blk]
+
+so each grid step is an MXU-shaped ``(OH*OW, Cin) x (Cin, OCblk)`` matmul
+accumulated in f32, with no materialized scratch. The grid iterates over
+output-channel blocks; ``BlockSpec`` streams one weight block per step while
+the input tile stays resident in VMEM — the HBM<->VMEM schedule that
+replaces the paper's CPU working-set reasoning.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowering produces plain HLO that the
+Rust runtime loads (see /opt/xla-example/README.md). Real-TPU efficiency is
+estimated analytically in EXPERIMENTS.md §Perf.
+
+Layout: feature maps are HWC; weights are (F, F, Cin, Cout); biases (Cout,).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output-channel block: one MXU lane tile. Shapes smaller than the
+# block are handled by padding the weight/bias to a multiple (cheap, done at
+# trace time) so the kernel body stays uniform.
+OC_BLOCK = 128
+
+LEAKY_SLOPE = 0.1
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, fh, fw, apply_act):
+    """One grid step: full spatial tile x one output-channel block.
+
+    x_ref: (IH, IW, Cin) padded input tile (VMEM-resident across steps)
+    w_ref: (fh, fw, Cin, OCblk) weight block for this step
+    b_ref: (OCblk,) bias block
+    o_ref: (OH, OW, OCblk) output block
+    """
+    oh = o_ref.shape[0]
+    ow = o_ref.shape[1]
+    cin = x_ref.shape[2]
+    acc = jnp.zeros((oh * ow, o_ref.shape[2]), dtype=jnp.float32)
+    # F*F shifted matmuls: static python loop -> fully unrolled, each one an
+    # MXU-shaped (OH*OW, Cin) @ (Cin, OCblk).
+    for ky in range(fh):
+        for kx in range(fw):
+            window = x_ref[ky:ky + oh, kx:kx + ow, :].reshape(oh * ow, cin)
+            wblk = w_ref[ky, kx, :, :]
+            acc = acc + jnp.dot(window, wblk, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if apply_act:
+        acc = jnp.where(acc >= 0, acc, LEAKY_SLOPE * acc)
+    o_ref[...] = acc.reshape(oh, ow, o_ref.shape[2])
+
+
+def conv2d(x, w, b, *, stride=1, pads=(0, 0, 0, 0), apply_act=True,
+           oc_block=OC_BLOCK, interpret=True):
+    """SAME/VALID-with-explicit-pads conv + bias + leaky ReLU as a Pallas call.
+
+    Args:
+      x: (H, W, Cin) input tile.
+      w: (F, F, Cin, Cout) filter weights.
+      b: (Cout,) bias.
+      stride: spatial stride (the YOLOv2 prefix uses 1; pooling handles
+        downsampling).
+      pads: (top, bottom, left, right) explicit zero padding — non-zero only
+        on image borders; interior tile edges carry real halo data.
+      apply_act: apply the leaky-ReLU epilogue (Darknet conv default).
+
+    Returns:
+      (OH, OW, Cout) output tile.
+    """
+    if stride != 1:
+        # Strided convs do not appear in the paper's 16-layer prefix; they
+        # lower through the reference path to keep the kernel focused.
+        from . import ref
+
+        return ref.conv2d_ref(x, w, b, stride=stride, pads=pads, apply_act=apply_act)
+
+    fh, fw, cin, cout = w.shape
+    pt, pb, pl_, pr = pads
+    xp = jnp.pad(x, ((pt, pb), (pl_, pr), (0, 0)))
+    ih, iw, _ = xp.shape
+    oh = ih - fh + 1
+    ow = iw - fw + 1
+
+    # Pad Cout up to a block multiple so the grid is uniform.
+    oc_block = min(oc_block, max(32, 1 << (cout - 1).bit_length()))
+    n_blocks = -(-cout // oc_block)
+    cout_pad = n_blocks * oc_block
+    if cout_pad != cout:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, cout_pad - cout)))
+        b = jnp.pad(b, (0, cout_pad - cout))
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, fh=fh, fw=fw, apply_act=apply_act),
+        grid=(n_blocks,),
+        in_specs=[
+            # Input tile: whole tile every step (stays in VMEM).
+            pl.BlockSpec((ih, iw, cin), lambda i: (0, 0, 0)),
+            # Weights: one output-channel block per step.
+            pl.BlockSpec((fh, fw, cin, oc_block), lambda i: (0, 0, 0, i)),
+            pl.BlockSpec((oc_block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((oh, ow, oc_block), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, cout_pad), x.dtype),
+        interpret=interpret,
+    )(xp, w, b)
+    return out[:, :, :cout]
+
+
+def _maxpool_kernel(x_ref, o_ref, *, size):
+    oh = o_ref.shape[0]
+    ow = o_ref.shape[1]
+    c = o_ref.shape[2]
+    x = x_ref[: oh * size, : ow * size, :]
+    x = x.reshape(oh, size, ow, size, c)
+    o_ref[...] = jnp.max(jnp.max(x, axis=3), axis=1)
+
+
+def maxpool2d(x, *, size=2, stride=2, interpret=True):
+    """Non-overlapping max pool (size == stride) as a Pallas call.
+
+    The fused-tile geometry guarantees pool input regions are always
+    window-aligned and even-sized (see rust/src/ftp/traversal.rs), so no
+    padding logic is needed here; the shape is asserted instead.
+    """
+    assert size == stride, "only non-overlapping pools appear in the prefix"
+    h, w, c = x.shape
+    assert h % size == 0 and w % size == 0, (
+        f"pool input {h}x{w} not window-aligned - tiling geometry bug"
+    )
+    oh, ow = h // size, w // size
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, size=size),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((h, w, c), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((oh, ow, c), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def vmem_estimate_bytes(ih, iw, cin, oh, ow, oc_block, fh, fw):
+    """Estimated VMEM residency of one conv grid step (f32), used by the
+    DESIGN.md/EXPERIMENTS.md roofline analysis: input tile + one weight
+    block + one output block + the accumulator."""
+    inp = ih * iw * cin
+    wblk = fh * fw * cin * oc_block
+    out = oh * ow * oc_block
+    acc = oh * ow * oc_block
+    return 4 * (inp + wblk + out + acc)

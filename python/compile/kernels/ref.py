@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is written with stock XLA ops (`lax.conv_general_dilated`,
+`lax.reduce_window`) and no Pallas, so a kernel bug cannot hide in shared
+code. Layout matches the kernels: HWC maps, (F, F, Cin, Cout) weights.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+LEAKY_SLOPE = 0.1
+
+
+def conv2d_ref(x, w, b, *, stride=1, pads=(0, 0, 0, 0), apply_act=True):
+    """Reference conv + bias + leaky ReLU.
+
+    pads is (top, bottom, left, right) explicit zero padding.
+    """
+    pt, pb, pl_, pr = pads
+    # NHWC with a singleton batch.
+    xn = x[None, ...]
+    out = lax.conv_general_dilated(
+        xn,
+        w,
+        window_strides=(stride, stride),
+        padding=((pt, pb), (pl_, pr)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out[0] + b[None, None, :]
+    if apply_act:
+        out = jnp.where(out >= 0, out, LEAKY_SLOPE * out)
+    return out
+
+
+def maxpool2d_ref(x, *, size=2, stride=2):
+    """Reference non-overlapping max pool over an HWC map."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(size, size, 1),
+        window_strides=(stride, stride, 1),
+        padding="VALID",
+    )

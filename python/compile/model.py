@@ -1,0 +1,137 @@
+"""Layer-2 JAX model: the fused layer-group forward pass.
+
+A *fused task* executes a contiguous range of conv/maxpool layers on one
+input tile. Its geometry (per-layer tile shapes and explicit border pads) is
+computed by the Rust tiler (`rust/src/ftp/`) and handed to the AOT pipeline
+as JSON; this module turns one geometry + the layer hyperparameters into a
+concrete JAX function calling the Layer-1 Pallas kernels, ready for
+`jax.jit(...).lower(...)`.
+
+Python only ever runs at build time (`make artifacts`).
+"""
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from .kernels import conv2d, conv2d_ref, maxpool2d, maxpool2d_ref
+
+
+@dataclass(frozen=True)
+class LayerCfg:
+    """Hyperparameters of one layer (mirror of rust LayerKind + channels)."""
+
+    kind: str  # "conv" | "max"
+    in_c: int
+    out_c: int
+    size: int
+    stride: int
+
+    @property
+    def is_conv(self) -> bool:
+        return self.kind == "conv"
+
+
+@dataclass(frozen=True)
+class LayerGeom:
+    """Tile geometry of one layer inside a fused task (mirror of rust
+    ftp::LayerGeom): input tile extent and explicit border padding."""
+
+    in_w: int
+    in_h: int
+    out_w: int
+    out_h: int
+    # (top, bottom, left, right)
+    pads: Sequence[int]
+
+
+def init_params(layers: Sequence[LayerCfg], seed: int = 0):
+    """Deterministic parameters for testing (the engine generates its own
+    weights in Rust with the same layout: (F, F, Cin, Cout) + (Cout,))."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    params = []
+    for cfg in layers:
+        if cfg.is_conv:
+            scale = (2.0 / (cfg.size * cfg.size * cfg.in_c)) ** 0.5
+            w = rng.uniform(-scale, scale, (cfg.size, cfg.size, cfg.in_c, cfg.out_c))
+            b = rng.uniform(-0.1, 0.1, (cfg.out_c,))
+            params.append((jnp.asarray(w, jnp.float32), jnp.asarray(b, jnp.float32)))
+        else:
+            params.append(None)
+    return params
+
+
+def fused_task_forward(x, weights, layers: Sequence[LayerCfg],
+                       geoms: Optional[Sequence[LayerGeom]] = None,
+                       *, use_pallas: bool = True):
+    """Run one fused task: apply every layer of the group to tile `x`.
+
+    Args:
+      x: (H, W, Cin) input tile (halo included, border sides unpadded).
+      weights: flat list of (w, b) for conv layers in order (pools skip).
+      layers: per-layer hyperparameters, group order.
+      geoms: per-layer tile geometry; when None, SAME padding on all sides
+        (the untiled / full-map case).
+      use_pallas: Pallas kernels (True) or the pure-jnp reference (False).
+
+    Returns:
+      (OH, OW, Cout) output tile — exactly the task's grid tile.
+    """
+    conv = conv2d if use_pallas else conv2d_ref
+    pool = maxpool2d if use_pallas else maxpool2d_ref
+    wi = 0
+    for li, cfg in enumerate(layers):
+        if cfg.is_conv:
+            w, b = weights[wi]
+            wi += 1
+            if geoms is None:
+                p = cfg.size // 2
+                pads = (p, p, p, p)
+            else:
+                pads = tuple(geoms[li].pads)
+            x = conv(x, w, b, stride=cfg.stride, pads=pads)
+        else:
+            x = pool(x, size=cfg.size, stride=cfg.stride)
+        if geoms is not None:
+            g = geoms[li]
+            assert x.shape[0] == g.out_h and x.shape[1] == g.out_w, (
+                f"layer {li}: produced {x.shape[:2]}, geometry says "
+                f"({g.out_h}, {g.out_w})"
+            )
+    return x
+
+
+def full_forward(x, weights, layers: Sequence[LayerCfg], *, use_pallas: bool = True):
+    """The untiled reference forward over the whole input map (the
+    verification oracle the engine compares tiled execution against)."""
+    return fused_task_forward(x, weights, layers, None, use_pallas=use_pallas)
+
+
+def layers_from_json(net_json) -> List[LayerCfg]:
+    """Decode the Rust-exported network layer list."""
+    out = []
+    c = net_json["in_c"]
+    for l in net_json["layers"]:
+        if l["kind"] == "conv":
+            out.append(LayerCfg("conv", c, l["filters"], l["size"], l["stride"]))
+            c = l["filters"]
+        else:
+            out.append(LayerCfg("max", c, c, l["size"], l["stride"]))
+    return out
+
+
+def geoms_from_json(class_json) -> List[LayerGeom]:
+    """Decode one tile-class geometry exported by the Rust tiler."""
+    return [
+        LayerGeom(
+            in_w=g["in_w"],
+            in_h=g["in_h"],
+            out_w=g["out_w"],
+            out_h=g["out_h"],
+            pads=(g["pt"], g["pb"], g["pl"], g["pr"]),
+        )
+        for g in class_json["layers"]
+    ]

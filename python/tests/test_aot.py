@@ -1,0 +1,103 @@
+"""AOT pipeline tests: geometry JSON -> HLO text -> manifest, checked
+against golden shapes (a miniature network, so the test runs in seconds)."""
+
+import json
+import os
+import tempfile
+
+from compile import aot
+from compile.model import layers_from_json
+
+
+def mini_geometry():
+    """A hand-written geometry request in the exact schema
+    `mafat export-geometry` emits: an 8x8x3 conv3+pool network, 2x2 tiled."""
+    return {
+        "version": 1,
+        "networks": [
+            {
+                "name": "tiny",
+                "in_w": 8,
+                "in_h": 8,
+                "in_c": 3,
+                "layers": [
+                    {"kind": "conv", "filters": 4, "size": 3, "stride": 1, "pad": 1},
+                    {"kind": "max", "size": 2, "stride": 2},
+                ],
+                "emit_full": True,
+                "configs": [
+                    {
+                        "config": "2x2/NoCut",
+                        "groups": [
+                            {
+                                "gi": 0,
+                                "top": 0,
+                                "bottom": 1,
+                                "n": 2,
+                                "m": 2,
+                                "classes": [
+                                    {
+                                        "key": "corner",
+                                        "layers": [
+                                            # conv: out 4x4 region + halo ->
+                                            # in 5x5, one padded corner
+                                            {"layer": 0, "in_w": 5, "in_h": 5,
+                                             "out_w": 4, "out_h": 4,
+                                             "pt": 1, "pb": 0, "pl": 1, "pr": 0},
+                                            {"layer": 1, "in_w": 4, "in_h": 4,
+                                             "out_w": 2, "out_h": 2,
+                                             "pt": 0, "pb": 0, "pl": 0, "pr": 0},
+                                        ],
+                                    }
+                                ],
+                                "tasks": [
+                                    {"i": 0, "j": 0, "class": "corner",
+                                     "in_rect": [0, 0, 5, 5],
+                                     "out_rect": [0, 0, 2, 2]}
+                                ],
+                            }
+                        ],
+                    }
+                ],
+            }
+        ],
+    }
+
+
+def test_build_emits_hlo_and_manifest():
+    geo = mini_geometry()
+    with tempfile.TemporaryDirectory() as out:
+        manifest = aot.build(geo, out, verbose=False)
+        net = manifest["networks"][0]
+        # Full oracle present with the right shapes.
+        assert net["full"]["in"] == [8, 8, 3]
+        assert net["full"]["out"] == [4, 4, 4]
+        assert os.path.exists(os.path.join(out, net["full"]["path"]))
+        # One class module with echoed geometry.
+        klass = net["configs"][0]["groups"][0]["classes"][0]
+        assert klass["in"] == [5, 5, 3]
+        assert klass["out"] == [2, 2, 4]
+        hlo_path = os.path.join(out, klass["path"])
+        assert os.path.exists(hlo_path)
+        text = open(hlo_path).read()
+        # HLO text sanity: an entry computation over f32 with the right
+        # parameter shapes (input tile + conv weights + bias).
+        assert "ENTRY" in text
+        assert "f32[5,5,3]" in text
+        assert "f32[3,3,3,4]" in text
+        assert "f32[4]" in text
+        # Manifest is valid JSON and round-trips.
+        s = json.dumps(manifest)
+        assert json.loads(s) == manifest
+
+
+def test_layers_from_json_chains_channels():
+    net = mini_geometry()["networks"][0]
+    layers = layers_from_json(net)
+    assert layers[0].in_c == 3 and layers[0].out_c == 4
+    assert layers[1].in_c == 4 and layers[1].out_c == 4
+
+
+def test_sanitize_names():
+    assert aot.sanitize("5x5/8/2x2") == "55_8_22"
+    assert aot.sanitize("1x1/NoCut") == "11_NoCut"

@@ -1,0 +1,102 @@
+"""L1 kernel correctness: Pallas conv/maxpool vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, channel counts, filter sizes, and per-side
+paddings — the exact degrees of freedom the fused-tile geometry exercises.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, conv2d_ref, maxpool2d, maxpool2d_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@given(
+    h=st.integers(3, 14),
+    w=st.integers(3, 14),
+    cin=st.integers(1, 9),
+    cout=st.integers(1, 9),
+    f=st.sampled_from([1, 3]),
+    pt=st.integers(0, 1),
+    pb=st.integers(0, 1),
+    pl=st.integers(0, 1),
+    pr=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref(h, w, cin, cout, f, pt, pb, pl, pr, seed):
+    if f == 1:
+        pt = pb = pl = pr = 0
+    # The padded input must be at least as large as the filter.
+    if h + pt + pb < f or w + pl + pr < f:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, h, w, cin)
+    wts = rand(rng, f, f, cin, cout)
+    b = rand(rng, cout)
+    pads = (pt, pb, pl, pr)
+    got = np.asarray(conv2d(x, wts, b, pads=pads))
+    want = np.asarray(conv2d_ref(x, wts, b, pads=pads))
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    h=st.integers(1, 10),
+    w=st.integers(1, 10),
+    c=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 2 * h, 2 * w, c)
+    got = np.asarray(maxpool2d(x))
+    want = np.asarray(maxpool2d_ref(x))
+    np.testing.assert_allclose(got, want)
+
+
+def test_maxpool_rejects_unaligned():
+    x = jnp.zeros((5, 6, 2), jnp.float32)
+    with pytest.raises(AssertionError):
+        maxpool2d(x)
+
+
+def test_conv_no_activation():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 6, 6, 3)
+    w = rand(rng, 3, 3, 3, 4)
+    b = rand(rng, 4)
+    got = np.asarray(conv2d(x, w, b, pads=(1, 1, 1, 1), apply_act=False))
+    want = np.asarray(conv2d_ref(x, w, b, pads=(1, 1, 1, 1), apply_act=False))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # Negative values survive without the leaky slope.
+    assert (got < 0).any()
+
+
+def test_leaky_relu_applied():
+    # With a large negative bias every output is negative; leaky scales by 0.1.
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(np.abs(rng.normal(size=(4, 4, 2))), jnp.float32)
+    w = jnp.asarray(np.zeros((1, 1, 2, 3)), jnp.float32)
+    b = jnp.asarray([-10.0, -20.0, -30.0], jnp.float32)
+    out = np.asarray(conv2d(x, w, b, pads=(0, 0, 0, 0)))
+    np.testing.assert_allclose(out[..., 0], -1.0, rtol=1e-5)
+    np.testing.assert_allclose(out[..., 2], -3.0, rtol=1e-5)
+
+
+def test_wide_channel_blocks():
+    # Cout > OC block forces a multi-step grid.
+    rng = np.random.default_rng(2)
+    x = rand(rng, 5, 5, 8)
+    w = rand(rng, 3, 3, 8, 300)
+    b = rand(rng, 300)
+    got = np.asarray(conv2d(x, w, b, pads=(1, 1, 1, 1), oc_block=128))
+    want = np.asarray(conv2d_ref(x, w, b, pads=(1, 1, 1, 1)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,112 @@
+"""L2 model correctness: fused group forward vs layer-by-layer reference,
+and pure-JAX tiled-vs-untiled equivalence on hand-built geometry."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.model import LayerCfg, LayerGeom, fused_task_forward, full_forward, init_params
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+# A miniature YOLOv2-style prefix: conv3, pool, conv3, conv1.
+MINI = [
+    LayerCfg("conv", 3, 8, 3, 1),
+    LayerCfg("max", 8, 8, 2, 2),
+    LayerCfg("conv", 8, 16, 3, 1),
+    LayerCfg("conv", 16, 8, 1, 1),
+]
+
+
+def mini_weights(seed=0):
+    return [p for p in init_params(MINI, seed) if p is not None]
+
+
+def test_full_forward_pallas_vs_ref():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 16, 3)), jnp.float32)
+    w = mini_weights()
+    got = np.asarray(full_forward(x, w, MINI, use_pallas=True))
+    want = np.asarray(full_forward(x, w, MINI, use_pallas=False))
+    assert got.shape == (8, 8, 8)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def up_span(o0, o1, f, s, p, extent):
+    """Mirror of rust ftp::traversal::up_span (kept in sync by the
+    cross-language geometry tests in rust/tests/)."""
+    lo = o0 * s - p
+    hi = (o1 - 1) * s - p + f
+    clo, chi = max(lo, 0), min(hi, extent)
+    return clo, chi, clo - lo, hi - chi
+
+
+def build_task_geometry(layers, out_rect, extents):
+    """Walk a tile up through `layers` (bottom->top), producing LayerGeoms
+    and the task input rect. extents[l] = (in_w, in_h) of layer l."""
+    geoms = []
+    rect = out_rect  # (x0, y0, x1, y1) on the bottom layer's output
+    for li in reversed(range(len(layers))):
+        cfg = layers[li]
+        in_w, in_h = extents[li]
+        f = cfg.size
+        s = cfg.stride
+        p = cfg.size // 2 if (cfg.is_conv and cfg.size > 1) else 0
+        x0, x1, pl, pr = up_span(rect[0], rect[2], f, s, p, in_w)
+        y0, y1, pt, pb = up_span(rect[1], rect[3], f, s, p, in_h)
+        geoms.append(
+            LayerGeom(
+                in_w=x1 - x0,
+                in_h=y1 - y0,
+                out_w=rect[2] - rect[0],
+                out_h=rect[3] - rect[1],
+                pads=(pt, pb, pl, pr),
+            )
+        )
+        rect = (x0, y0, x1, y1)
+    geoms.reverse()
+    return geoms, rect
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([2, 4]))
+def test_tiled_equals_untiled(seed, n):
+    """The FTP invariant in pure JAX: fusing+tiling reproduces the untiled
+    output exactly (paper §2.1.1 'mathematically equivalent')."""
+    rng = np.random.default_rng(seed)
+    H = W = 16
+    x = jnp.asarray(rng.normal(size=(H, W, 3)), jnp.float32)
+    w = mini_weights(seed % 7)
+    want = np.asarray(full_forward(x, w, MINI, use_pallas=False))
+
+    extents = [(16, 16), (16, 16), (8, 8), (8, 8)]  # input extent per layer
+    OH = OW = 8
+    got = np.zeros_like(want)
+    step = OH // n
+    for j in range(n):
+        for i in range(n):
+            out_rect = (i * step, j * step, (i + 1) * step, (j + 1) * step)
+            geoms, in_rect = build_task_geometry(MINI, out_rect, extents)
+            tile = x[in_rect[1]:in_rect[3], in_rect[0]:in_rect[2], :]
+            out = fused_task_forward(tile, w, MINI, geoms, use_pallas=False)
+            got[out_rect[1]:out_rect[3], out_rect[0]:out_rect[2], :] = np.asarray(out)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_geometry_shape_assertion_fires():
+    """A wrong geometry must be caught by the shape assertion, not produce
+    silently wrong output."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 16, 3)), jnp.float32)
+    w = mini_weights()
+    bad = [
+        LayerGeom(16, 16, 16, 16, (1, 1, 1, 1)),
+        LayerGeom(16, 16, 9, 8, (0, 0, 0, 0)),  # wrong out_w
+        LayerGeom(8, 8, 8, 8, (1, 1, 1, 1)),
+        LayerGeom(8, 8, 8, 8, (0, 0, 0, 0)),
+    ]
+    try:
+        fused_task_forward(x, w, MINI, bad, use_pallas=False)
+    except AssertionError:
+        return
+    raise AssertionError("bad geometry was not caught")

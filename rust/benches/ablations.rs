@@ -1,0 +1,104 @@
+//! Ablation benches for the design choices DESIGN.md calls out, plus the
+//! paper's §5 future-work extensions implemented by this crate:
+//!
+//!  A. data reuse on/off (DeepThings §2.1.3 carried into MAFAT);
+//!  B. cut position (the memory-aware choice of maxpool boundaries);
+//!  C. 2-group (paper) vs 3-group (extension) at tight memory;
+//!  D. even vs halo-balanced variable tiling (extension);
+//!  E. system hot-set sensitivity (the 31 MB bias split).
+
+mod harness;
+
+use mafat::ftp::{plan_group, plan_group_balanced};
+use mafat::network::yolov2::yolov2_16;
+use mafat::network::MIB;
+use mafat::plan::{plan_config, plan_multi, MafatConfig, MultiConfig, Plan};
+use mafat::predictor::{predict_multi, PredictorParams};
+use mafat::simulate::{mafat_trace, run_trace, simulate_config, SimOptions};
+
+fn latency(net: &mafat::network::Network, plan: &Plan, opts: &SimOptions, mb: u64) -> f64 {
+    let steps = mafat_trace(net, plan, opts);
+    run_trace(&steps, Some(mb * MIB), &opts.cost).unwrap().latency_s
+}
+
+fn main() {
+    let net = yolov2_16();
+    let opts = SimOptions::default();
+    let params = PredictorParams::default();
+
+    println!("=== A. Data reuse on/off (5x5/8/2x2) ===");
+    for mb in [256u64, 64, 32, 16] {
+        let with = simulate_config(
+            &net,
+            MafatConfig::with_cut(5, 8, 2),
+            &SimOptions { data_reuse: true, ..opts }.with_limit_mb(mb),
+        )
+        .unwrap();
+        let without = simulate_config(
+            &net,
+            MafatConfig::with_cut(5, 8, 2),
+            &SimOptions { data_reuse: false, ..opts }.with_limit_mb(mb),
+        )
+        .unwrap();
+        println!(
+            "  {mb:>4} MB: reuse {:>7.0} ms | no reuse {:>7.0} ms | saving {:>4.1}%",
+            with.latency_ms(),
+            without.latency_ms(),
+            (1.0 - with.latency_s / without.latency_s) * 100.0
+        );
+    }
+
+    println!("\n=== B. Cut position (top 3x3, bottom 2x2, 48 MB) ===");
+    for cut in [2usize, 4, 8, 12] {
+        let plan = plan_config(&net, MafatConfig::with_cut(3, cut, 2)).unwrap();
+        println!(
+            "  cut {cut:>2}: {:>7.1} s",
+            latency(&net, &plan, &opts, 48)
+        );
+    }
+
+    println!("\n=== C. 2-group (paper) vs 3-group (extension) at tight memory ===");
+    for mb in [48u64, 32, 24, 16] {
+        let two = plan_config(&net, MafatConfig::with_cut(5, 8, 2)).unwrap();
+        let three_cfg: MultiConfig = "5x5/4/4x4/8/2x2".parse().unwrap();
+        let three = plan_multi(&net, &three_cfg).unwrap();
+        let p3 = predict_multi(&net, &three_cfg, &params).unwrap();
+        println!(
+            "  {mb:>4} MB: 5x5/8/2x2 {:>7.1} s | {three_cfg} {:>7.1} s (pred {:.0} MB)",
+            latency(&net, &two, &opts, mb),
+            latency(&net, &three, &opts, mb),
+            p3.total_mb()
+        );
+    }
+
+    println!("\n=== D. Even vs halo-balanced variable tiling (group 0..7) ===");
+    for n in [3usize, 4, 5] {
+        let even = plan_group(&net, 0, 7, n, n).unwrap();
+        let balanced = plan_group_balanced(&net, 0, 7, n).unwrap();
+        let peak = |g: &mafat::ftp::GroupPlan| {
+            g.tasks.iter().map(|t| t.input_rect().area()).max().unwrap()
+        };
+        println!(
+            "  {n}x{n}: peak tile input {:>6} px even | {:>6} px balanced ({:+.1}%)",
+            peak(&even),
+            peak(&balanced),
+            (peak(&balanced) as f64 / peak(&even) as f64 - 1.0) * 100.0
+        );
+    }
+
+    println!("\n=== E. Hot-set sensitivity (5x5/8/2x2 @16 MB) ===");
+    for hot_mb in [2u64, 8, 16, 27] {
+        let mut o = opts.with_limit_mb(16);
+        o.system.hot_bytes = hot_mb * MIB;
+        o.system.cold_bytes = (31 - hot_mb) * MIB;
+        let r = simulate_config(&net, MafatConfig::with_cut(5, 8, 2), &o).unwrap();
+        println!(
+            "  hot {hot_mb:>2} MB: {:>7.0} ms (swap {:>5.1} s)",
+            r.latency_ms(),
+            r.swap_s
+        );
+    }
+
+    // Wall-clock of the whole ablation suite for the bench harness log.
+    harness::bench("ablation suite total", 1, || ());
+}

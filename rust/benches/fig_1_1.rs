@@ -1,0 +1,20 @@
+//! Bench + regeneration of paper Fig. 1.1: Darknet latency and swapped
+//! bytes versus a decreasing memory constraint.
+mod harness;
+
+use mafat::network::yolov2::yolov2_16;
+use mafat::report::{fig_1_1, render_fig_1_1};
+use mafat::simulate::SimOptions;
+
+fn main() {
+    let net = yolov2_16();
+    let opts = SimOptions::default();
+    let pts = harness::bench("fig-1-1 sweep (9 memory points)", 3, || {
+        fig_1_1(&net, &opts).unwrap()
+    });
+    println!("\n{}", render_fig_1_1(&pts));
+    // Paper anchors: flat right side near 15 s; ~6.5x at 16 MB.
+    let right = pts.first().unwrap().latency_ms;
+    let left = pts.last().unwrap().latency_ms;
+    println!("slowdown at 16 MB vs 256 MB: {:.2}x (paper: ~6.5x)", left / right);
+}

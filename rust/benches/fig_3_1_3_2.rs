@@ -1,0 +1,22 @@
+//! Bench + regeneration of paper Figs. 3.1 and 3.2: predicted vs measured
+//! minimum memory footprints (measured = simulator swap-onset probe).
+mod harness;
+
+use mafat::network::yolov2::yolov2_16;
+use mafat::predictor::PredictorParams;
+use mafat::report::{fig_3_1, fig_3_2, render_footprints};
+use mafat::simulate::SimOptions;
+
+fn main() {
+    let net = yolov2_16();
+    let opts = SimOptions::default();
+    let params = PredictorParams::default();
+    let f31 = harness::bench("fig-3-1 (5 configs x swap-onset probe)", 1, || {
+        fig_3_1(&net, &opts, &params).unwrap()
+    });
+    println!("\n{}", render_footprints("Fig 3.1 - fully fused", &f31));
+    let f32_ = harness::bench("fig-3-2 (5 configs x swap-onset probe)", 1, || {
+        fig_3_2(&net, &opts, &params).unwrap()
+    });
+    println!("\n{}", render_footprints("Fig 3.2 - cut at 8, bottom 2x2", &f32_));
+}

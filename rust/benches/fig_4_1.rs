@@ -1,0 +1,16 @@
+//! Bench + regeneration of paper Fig. 4.1: latency for top tilings
+//! 1x1..5x5 with a cut at layer 8 and a 2x2 bottom group.
+mod harness;
+
+use mafat::network::yolov2::yolov2_16;
+use mafat::report::{fig_4_1, render_series};
+use mafat::simulate::SimOptions;
+
+fn main() {
+    let net = yolov2_16();
+    let opts = SimOptions::default();
+    let series = harness::bench("fig-4-1 (5 tilings x 9 memory points)", 1, || {
+        fig_4_1(&net, &opts).unwrap()
+    });
+    println!("\n{}", render_series("Fig 4.1 - latency per top tiling (cut 8, 2x2)", &series));
+}

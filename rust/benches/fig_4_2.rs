@@ -1,0 +1,16 @@
+//! Bench + regeneration of paper Fig. 4.2: latency for different cut
+//! configurations, each with its best ("min") top tiling annotated.
+mod harness;
+
+use mafat::network::yolov2::yolov2_16;
+use mafat::report::{fig_4_2, render_fig_4_2};
+use mafat::simulate::SimOptions;
+
+fn main() {
+    let net = yolov2_16();
+    let opts = SimOptions::default();
+    let series = harness::bench("fig-4-2 (5 series x 5 tilings x 9 points)", 1, || {
+        fig_4_2(&net, &opts).unwrap()
+    });
+    println!("\n{}", render_fig_4_2(&series));
+}

@@ -1,0 +1,21 @@
+//! Bench + regeneration of paper Fig. 4.3 and Table 4.1: Darknet vs the
+//! best manually-explored configuration vs Algorithm 3, plus the §5
+//! headline claims.
+mod harness;
+
+use mafat::network::yolov2::yolov2_16;
+use mafat::predictor::PredictorParams;
+use mafat::report::{comparison, headline, render_fig_4_3, render_headline, render_table_4_1};
+use mafat::simulate::SimOptions;
+
+fn main() {
+    let net = yolov2_16();
+    let opts = SimOptions::default();
+    let params = PredictorParams::default();
+    let rows = harness::bench("fig-4-3/table-4-1 (35 configs x 9 points)", 1, || {
+        comparison(&net, &opts, &params).unwrap()
+    });
+    println!("\n{}", render_fig_4_3(&rows));
+    println!("{}", render_table_4_1(&rows));
+    println!("{}", render_headline(&headline(&rows)));
+}

@@ -1,0 +1,38 @@
+//! Tiny bench harness shared by the figure benches (no criterion in the
+//! offline environment — see Cargo.toml). Reports min/mean/max wall time
+//! over `iters` runs and returns the last result.
+
+use std::time::Instant;
+
+#[allow(dead_code)]
+pub fn bench<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> R {
+    assert!(iters > 0);
+    let mut times = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        last = Some(f());
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    println!("[bench] {name}: min {min:.2} ms | mean {mean:.2} ms | max {max:.2} ms ({iters} iters)");
+    last.unwrap()
+}
+
+/// Throughput helper: ops/sec over a closure that performs `ops` operations.
+#[allow(dead_code)]
+pub fn bench_throughput(name: &str, iters: usize, ops: u64, mut f: impl FnMut()) {
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "[bench] {name}: {:.2} Mops/s (best of {iters}: {:.2} ms for {ops} ops)",
+        ops as f64 / best / 1e6,
+        best * 1e3
+    );
+}

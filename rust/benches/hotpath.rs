@@ -1,0 +1,116 @@
+//! Hot-path microbenches — the §Perf profiling targets (EXPERIMENTS.md).
+//!
+//! The L3 simulator's inner loops (page touch / LRU / eviction), trace
+//! construction, reuse analysis, planning, the predictor, Algorithm 3, and
+//! the engine's gather/scatter. These are what the perf pass optimizes;
+//! the figure benches above measure the end-to-end effect.
+
+mod harness;
+
+use mafat::engine::FeatureMap;
+use mafat::ftp::{plan_group, Rect};
+use mafat::memsim::{MemSim, MemSimConfig};
+use mafat::network::yolov2::yolov2_16;
+use mafat::network::MIB;
+use mafat::plan::{plan_config, MafatConfig};
+use mafat::predictor::{predict_mem, PredictorParams};
+use mafat::reuse::reuse_analysis;
+use mafat::search::get_config;
+use mafat::simulate::{mafat_trace, run_trace, SimOptions};
+
+fn main() {
+    let net = yolov2_16();
+    let opts = SimOptions::default();
+    let params = PredictorParams::default();
+
+    // 1. memsim page-touch throughput (unconstrained: fault + LRU bump).
+    {
+        let pages = 64 * MIB / 4096;
+        harness::bench_throughput("memsim touch (unconstrained)", 5, pages * 4, || {
+            let mut sim = MemSim::new(MemSimConfig { limit_bytes: None });
+            let a = sim.alloc("a", 64 * MIB);
+            for _ in 0..4 {
+                sim.read(a);
+            }
+        });
+    }
+
+    // 2. memsim under pressure (fault + evict + swap bookkeeping).
+    {
+        let pages = 64 * MIB / 4096;
+        harness::bench_throughput("memsim touch (16 MB limit, thrash)", 5, pages * 4, || {
+            let mut sim = MemSim::new(MemSimConfig {
+                limit_bytes: Some(16 * MIB),
+            });
+            let a = sim.alloc("a", 64 * MIB);
+            for _ in 0..4 {
+                sim.write(a);
+            }
+        });
+    }
+
+    // 3. Trace construction for the paper's heaviest configuration.
+    let plan = plan_config(&net, MafatConfig::with_cut(5, 8, 2)).unwrap();
+    harness::bench("mafat_trace build (5x5/8/2x2)", 20, || {
+        mafat_trace(&net, &plan, &opts)
+    });
+
+    // 4. Full trace replay at a tight limit (the figure benches' kernel).
+    let steps = mafat_trace(&net, &plan, &opts);
+    harness::bench("run_trace 5x5/8/2x2 @16MB", 10, || {
+        run_trace(&steps, Some(16 * MIB), &opts.cost).unwrap()
+    });
+    harness::bench("run_trace darknet @16MB", 10, || {
+        let d = mafat::baseline::darknet_trace(&net, &opts);
+        run_trace(&d, Some(16 * MIB), &opts.cost).unwrap()
+    });
+
+    // 5. Geometry planning + reuse analysis.
+    harness::bench("plan_group 5x5 over layers 0..7", 200, || {
+        plan_group(&net, 0, 7, 5, 5).unwrap()
+    });
+    let group = plan_group(&net, 0, 7, 5, 5).unwrap();
+    harness::bench("reuse_analysis 5x5 group", 50, || {
+        reuse_analysis(&net, &group)
+    });
+
+    // 6. Predictor + Algorithm 3.
+    harness::bench("predict_mem 5x5/8/2x2", 500, || {
+        predict_mem(&net, MafatConfig::with_cut(5, 8, 2), &params).unwrap()
+    });
+    harness::bench("get_config sweep 16..256MB", 50, || {
+        for mb in [16u64, 32, 48, 64, 80, 96, 128, 192, 256] {
+            get_config(&net, mb * MIB, &params).unwrap();
+        }
+    });
+
+    // 7. Engine gather/scatter on a 160x160x128-class map.
+    {
+        let mut map = FeatureMap::zeros(160, 160, 64);
+        for (i, v) in map.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let rect = Rect::new(16, 16, 80, 80);
+        let tile = map.gather(&rect);
+        harness::bench_throughput(
+            "engine gather 64x64x64 tile",
+            50,
+            (tile.len() * 20) as u64,
+            || {
+                for _ in 0..20 {
+                    std::hint::black_box(map.gather(&rect));
+                }
+            },
+        );
+        harness::bench_throughput(
+            "engine scatter 64x64x64 tile",
+            50,
+            (tile.len() * 20) as u64,
+            || {
+                for _ in 0..20 {
+                    map.scatter(&rect, std::hint::black_box(&tile));
+                }
+            },
+        );
+    }
+}

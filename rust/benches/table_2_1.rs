@@ -1,0 +1,11 @@
+//! Bench + regeneration of paper Table 2.1 (per-layer data and sizes).
+mod harness;
+
+use mafat::network::yolov2::yolov2_16;
+use mafat::report::render_table_2_1;
+
+fn main() {
+    let net = yolov2_16();
+    let table = harness::bench("table-2-1", 100, || render_table_2_1(&net));
+    println!("\n{table}");
+}

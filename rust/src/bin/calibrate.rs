@@ -1,0 +1,34 @@
+//! Calibration sweep tool: prints Darknet and MAFAT latency curves for
+//! combinations of cost-model knobs against the paper's anchor points.
+//! Used to fit the CostModel defaults (EXPERIMENTS.md §Calibration).
+//!
+//! Run: cargo run --release --bin calibrate
+
+fn main() {
+    let net = mafat::network::yolov2::yolov2_16();
+    println!("anchors: dk@256=15.1 dk@16~98 (6.5x) | mafat 5x5/8/2x2: 64=18.7 48=20.0 32=22.2 16=31.1 (paper, seconds)\n");
+    for passes in [1u32, 2, 3] {
+        for si in [12.0e6, 15.0e6, 20.0e6] {
+            let mut opts = mafat::simulate::SimOptions::default();
+            opts.cost.gemm_scratch_passes = passes;
+            opts.cost.swap_in_bytes_per_sec = si;
+            print!("passes={passes} si={:2.0}MB/s | dk:", si / 1e6);
+            for mb in [256u64, 192, 128, 96, 64, 48, 32, 16] {
+                let mut o = opts;
+                o.limit_bytes = Some(mb << 20);
+                let r = mafat::baseline::simulate_darknet(&net, &o).unwrap();
+                print!(" {:5.1}", r.latency_s);
+            }
+            let c: mafat::plan::MafatConfig = "5x5/8/2x2".parse().unwrap();
+            print!(" | mafat:");
+            for mb in [64u64, 48, 32, 16] {
+                let mut o = opts;
+                o.limit_bytes = Some(mb << 20);
+                let r = mafat::simulate::simulate_config(&net, c, &o).unwrap();
+                print!(" {:5.1}", r.latency_s);
+            }
+            println!();
+        }
+    }
+    println!("\n(defaults are the passes=2 / si=15 MB/s row; see CostModel::default)");
+}

@@ -1,0 +1,377 @@
+//! Hand-rolled CLI for the `mafat` binary (the offline build has no clap).
+//!
+//! `Args` parses `--key value` / `--flag` pairs; each `cmd_*` function
+//! implements one subcommand. Paper-artifact commands print the same rows
+//! or series the paper reports (see [`crate::report`]).
+
+use crate::network::{cfg, yolov2, Network, MIB};
+use crate::plan::MafatConfig;
+use crate::predictor::{predict_mem, PredictorParams};
+use crate::report;
+use crate::search::get_config;
+use crate::simulate::{simulate_config, SimOptions};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+pub const USAGE: &str = "\
+mafat - Memory-Aware Fusing and Tiling (paper reproduction)
+
+USAGE: mafat <command> [--key value ...]
+
+Paper artifacts (simulated Pi-3 testbed):
+  table-2-1                  per-layer data/sizes of the YOLOv2-16 prefix
+  fig-1-1                    Darknet latency+swap vs memory constraint
+  fig-3-1 | fig-3-2          predicted vs measured footprints
+  fig-4-1 | fig-4-2          latency vs memory per tiling / per cut
+  fig-4-3 | table-4-1        Darknet vs best-measured vs algorithm
+  headline                   the paper's §5 speedup / within-6% claims
+
+Tooling:
+  predict   --config 5x5/8/2x2 [--cfg file.cfg]     memory prediction
+            (k-group extension: --config 4x4/4/3x3/12/1x1)
+  search    --limit-mb 64 [--cfg file.cfg]          run Algorithm 3
+            [--max-groups 3 --max-tiling 6]         k-group extension
+  simulate  --config 5x5/8/2x2 --limit-mb 64        one simulated run
+  export-geometry [--out artifacts/geometry.json]   AOT geometry for aot.py
+
+Real execution (requires `make artifacts`):
+  run       --config 3x3/8/2x2 [--artifacts DIR] [--batch N] [--verify]
+  serve     --addr 127.0.0.1:7077 --config 3x3/8/2x2 [--artifacts DIR]
+
+Common flags:
+  --cfg FILE        Darknet-style .cfg network (default: built-in YOLOv2-16)
+  --bias-mb N       predictor bias constant (default 31)
+  --no-reuse        disable data reuse in simulation
+";
+
+/// Parsed `--key value` arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    kv: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut kv = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("expected --flag, got {a:?}");
+            };
+            // Flag followed by a value, unless next token is another flag
+            // or we're at the end (boolean flag).
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                kv.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { kv })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{key} {v:?}")))
+            .transpose()
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.kv.contains_key(key)
+    }
+
+    /// The network: `--cfg file.cfg` or the built-in YOLOv2-16.
+    pub fn network(&self) -> Result<Network> {
+        match self.get("cfg") {
+            Some(path) => cfg::load_cfg(&PathBuf::from(path)),
+            None => Ok(yolov2::yolov2_16()),
+        }
+    }
+
+    pub fn predictor_params(&self) -> Result<PredictorParams> {
+        let mut p = PredictorParams::default();
+        if let Some(mb) = self.get_u64("bias-mb")? {
+            p.bias_bytes = mb * MIB;
+        }
+        Ok(p)
+    }
+
+    pub fn sim_options(&self) -> Result<SimOptions> {
+        let mut o = SimOptions::default();
+        if self.has("no-reuse") {
+            o.data_reuse = false;
+        }
+        if let Some(mb) = self.get_u64("limit-mb")? {
+            o.limit_bytes = Some(mb * MIB);
+        }
+        Ok(o)
+    }
+
+    pub fn config(&self) -> Result<MafatConfig> {
+        let s = self
+            .get("config")
+            .context("missing --config (e.g. --config 5x5/8/2x2)")?;
+        s.parse()
+    }
+}
+
+// ------------------------------------------------------------ paper tables
+
+pub fn cmd_table_2_1(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    print!("{}", report::render_table_2_1(&net));
+    Ok(())
+}
+
+pub fn cmd_fig_1_1(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let pts = report::fig_1_1(&net, &args.sim_options()?)?;
+    print!("{}", report::render_fig_1_1(&pts));
+    Ok(())
+}
+
+pub fn cmd_fig_3_1(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let pts = report::fig_3_1(&net, &args.sim_options()?, &args.predictor_params()?)?;
+    print!(
+        "{}",
+        report::render_footprints("Fig 3.1 - Fully fused: predicted vs measured footprint", &pts)
+    );
+    Ok(())
+}
+
+pub fn cmd_fig_3_2(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let pts = report::fig_3_2(&net, &args.sim_options()?, &args.predictor_params()?)?;
+    print!(
+        "{}",
+        report::render_footprints(
+            "Fig 3.2 - Cut at 8 (bottom 2x2): predicted vs measured footprint",
+            &pts
+        )
+    );
+    Ok(())
+}
+
+pub fn cmd_fig_4_1(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let series = report::fig_4_1(&net, &args.sim_options()?)?;
+    print!(
+        "{}",
+        report::render_series("Fig 4.1 - Latency per top tiling (cut 8, bottom 2x2)", &series)
+    );
+    Ok(())
+}
+
+pub fn cmd_fig_4_2(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let series = report::fig_4_2(&net, &args.sim_options()?)?;
+    print!("{}", report::render_fig_4_2(&series));
+    Ok(())
+}
+
+pub fn cmd_fig_4_3(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let rows = report::comparison(&net, &args.sim_options()?, &args.predictor_params()?)?;
+    print!("{}", report::render_fig_4_3(&rows));
+    Ok(())
+}
+
+pub fn cmd_table_4_1(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let rows = report::comparison(&net, &args.sim_options()?, &args.predictor_params()?)?;
+    print!("{}", report::render_table_4_1(&rows));
+    Ok(())
+}
+
+pub fn cmd_headline(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let rows = report::comparison(&net, &args.sim_options()?, &args.predictor_params()?)?;
+    print!("{}", report::render_headline(&report::headline(&rows)));
+    Ok(())
+}
+
+// ------------------------------------------------------------------ tooling
+
+pub fn cmd_predict(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let s = args
+        .get("config")
+        .context("missing --config (e.g. --config 5x5/8/2x2 or 4x4/4/3x3/12/1x1)")?;
+    // k-group extension strings (> 2 groups) route through predict_multi.
+    let multi: crate::plan::MultiConfig = s.parse()?;
+    if multi.n_groups() > 2 {
+        let p = crate::predictor::predict_multi(&net, &multi, &args.predictor_params()?)?;
+        println!(
+            "{multi}: predicted max memory {:.1} MB (peak at group {} layer {} tile ({}, {}))",
+            p.total_mb(),
+            p.peak.group_index,
+            p.peak.layer,
+            p.peak.grid_i,
+            p.peak.grid_j
+        );
+        return Ok(());
+    }
+    let config = args.config()?;
+    let p = predict_mem(&net, config, &args.predictor_params()?)?;
+    println!(
+        "{config}: predicted max memory {:.1} MB (peak at group {} layer {} tile ({}, {}): {:.1} MB tile footprint)",
+        p.total_mb(),
+        p.peak.group_index,
+        p.peak.layer,
+        p.peak.grid_i,
+        p.peak.grid_j,
+        p.peak.tile_bytes as f64 / MIB as f64
+    );
+    // With --limit-mb, also estimate swap traffic (§5 future-work item).
+    if let Some(mb) = args.get_u64("limit-mb")? {
+        let sp = crate::predictor::predict_swap_config(
+            &net,
+            config,
+            mb * MIB,
+            &args.sim_options()?,
+        )?;
+        println!(
+            "  at {mb} MB: estimated swap-in {:.1} MB (~{:.1} s stall; resident base {:.1} MB)",
+            sp.swap_in_bytes as f64 / MIB as f64,
+            sp.swap_stall_s,
+            sp.resident_base_bytes as f64 / MIB as f64
+        );
+    }
+    Ok(())
+}
+
+pub fn cmd_search(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let limit = args
+        .get_u64("limit-mb")?
+        .context("missing --limit-mb")?;
+    // --max-groups > 2 switches to the k-group extension search.
+    if let Some(k) = args.get_u64("max-groups")? {
+        if k > 2 {
+            let max_tiling = args.get_u64("max-tiling")?.unwrap_or(5) as usize;
+            let r = crate::search::search_multi(
+                &net,
+                limit * MIB,
+                k as usize,
+                max_tiling,
+                &args.predictor_params()?,
+            )?;
+            println!(
+                "{} (predicted {:.1} MB{}; {} configurations evaluated)",
+                r.config,
+                r.predicted_bytes as f64 / MIB as f64,
+                if r.is_fallback { ", FALLBACK - nothing fits" } else { "" },
+                r.evaluated
+            );
+            return Ok(());
+        }
+    }
+    let r = get_config(&net, limit * MIB, &args.predictor_params()?)?;
+    println!(
+        "{} (predicted {:.1} MB{}; {} configurations evaluated)",
+        r.config,
+        r.predicted_bytes as f64 / MIB as f64,
+        if r.is_fallback { ", FALLBACK - nothing fits" } else { "" },
+        r.evaluated
+    );
+    Ok(())
+}
+
+pub fn cmd_simulate(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let config = args.config()?;
+    let opts = args.sim_options()?;
+    let r = simulate_config(&net, config, &opts)?;
+    println!(
+        "{config} @ {}: latency {:.0} ms (compute {:.0} + overhead {:.0} + swap {:.0}), \
+         swapped {:.1} MB (in {:.1} / out {:.1}), peak RSS {:.1} MB",
+        opts.limit_bytes
+            .map(|b| format!("{} MB", b / MIB))
+            .unwrap_or_else(|| "unconstrained".into()),
+        r.latency_ms(),
+        r.compute_s * 1e3,
+        r.overhead_s * 1e3,
+        r.swap_s * 1e3,
+        r.swapped_mb(),
+        r.stats.swap_in_bytes as f64 / MIB as f64,
+        r.stats.swap_out_bytes as f64 / MIB as f64,
+        r.peak_rss_mb()
+    );
+    Ok(())
+}
+
+pub fn cmd_export_geometry(args: &Args) -> Result<()> {
+    let json = crate::runtime::export::default_export()?;
+    let text = json.to_string_pretty();
+    match args.get("out") {
+        Some(path) => {
+            if let Some(parent) = PathBuf::from(path).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, &text)?;
+            eprintln!("wrote geometry for aot.py to {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------- real execution
+
+pub fn cmd_run(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let config = args.config()?;
+    let batch = args.get_u64("batch")?.unwrap_or(1) as usize;
+    let verify = args.has("verify");
+    crate::engine::run_cli(artifacts, config, batch, verify)
+}
+
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let config = args.config()?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7077");
+    crate::coordinator::serve_cli(artifacts, config, addr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn kv_and_flags() {
+        let a = parse(&["--limit-mb", "64", "--no-reuse", "--config", "5x5/8/2x2"]);
+        assert_eq!(a.get_u64("limit-mb").unwrap(), Some(64));
+        assert!(a.has("no-reuse"));
+        assert_eq!(a.config().unwrap(), MafatConfig::with_cut(5, 8, 2));
+    }
+
+    #[test]
+    fn missing_config_errors() {
+        let a = parse(&[]);
+        assert!(a.config().is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--limit-mb", "sixty-four"]);
+        assert!(a.get_u64("limit-mb").is_err());
+    }
+
+    #[test]
+    fn default_network_is_yolov2() {
+        let a = parse(&[]);
+        assert_eq!(a.network().unwrap().n_layers(), 16);
+    }
+}

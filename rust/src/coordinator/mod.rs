@@ -1,0 +1,343 @@
+//! L3 serving loop: an async-style request coordinator over std threads
+//! (the offline build has no tokio; see Cargo.toml note).
+//!
+//! Architecture — the single-device analogue of a vLLM-style router:
+//!
+//! ```text
+//!  TCP conns --> per-conn reader threads --> bounded request queue
+//!                                              | (backpressure: reject
+//!                                              v  when full)
+//!                                     worker thread (owns Engine)
+//!                                       - drains up to `max_batch`
+//!                                       - executes MAFAT plan per image
+//!                                              |
+//!                                              v
+//!                                   per-request response channels
+//! ```
+//!
+//! Protocol: JSON-lines. Requests:
+//!   {"cmd":"infer","id":"r1","seed":123}            synthetic image
+//!   {"cmd":"infer","id":"r1","image":[...f32...]}   explicit HWC image
+//!        optional "return_output": true
+//!   {"cmd":"metrics"}                               metrics snapshot
+//!   {"cmd":"ping"}                                  liveness
+//! Responses: {"id","ok",...} one line each.
+
+use crate::engine::Engine;
+use crate::jsonlite::Json;
+use crate::metrics::Metrics;
+use crate::plan::MafatConfig;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A queued inference request.
+struct Request {
+    id: String,
+    image: Vec<f32>,
+    return_output: bool,
+    respond: Sender<Json>,
+    enqueued: Instant,
+}
+
+/// Server tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Bounded queue depth; senders beyond this are rejected (backpressure).
+    pub queue_depth: usize,
+    /// Max requests drained per worker wake-up (batched execution).
+    pub max_batch: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            queue_depth: 64,
+            max_batch: 8,
+        }
+    }
+}
+
+/// The serving coordinator handle.
+pub struct Server {
+    listener: TcpListener,
+    queue: SyncSender<Request>,
+    shutdown: Arc<AtomicBool>,
+    pub local_addr: std::net::SocketAddr,
+}
+
+impl Server {
+    /// Bind and start the worker thread. The engine is constructed *inside*
+    /// the worker via `factory` — PJRT handles are not `Send`, so the
+    /// engine must live and die on one thread.
+    pub fn start<F>(factory: F, addr: &str, cfg: ServerConfig) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let worker_shutdown = shutdown.clone();
+        std::thread::Builder::new()
+            .name("mafat-worker".into())
+            .spawn(move || {
+                let engine = match factory() {
+                    Ok(e) => e,
+                    Err(err) => {
+                        eprintln!("engine failed to load: {err:#}");
+                        return;
+                    }
+                };
+                let _ = SERVER_METRICS.set(engine.metrics.clone());
+                let net = engine.network();
+                let _ = SERVER_DIMS.set((net.in_h, net.in_w, net.in_c));
+                eprintln!(
+                    "engine ready: {} | config {} | {} executables",
+                    net.name,
+                    engine.config(),
+                    engine.n_executables()
+                );
+                worker_loop(engine, rx, cfg, worker_shutdown);
+            })?;
+        Ok(Server {
+            listener,
+            queue: tx,
+            shutdown,
+            local_addr,
+        })
+    }
+
+    /// Accept connections until shutdown; blocks the calling thread.
+    pub fn run(&self) -> Result<()> {
+        eprintln!("mafat serve: listening on {}", self.local_addr);
+        for conn in self.listener.incoming() {
+            if self.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let queue = self.queue.clone();
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, queue) {
+                            eprintln!("connection error: {e:#}");
+                        }
+                    });
+                }
+                Err(e) => eprintln!("accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+fn worker_loop(
+    mut engine: Engine,
+    rx: Receiver<Request>,
+    cfg: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+) {
+    while !shutdown.load(Ordering::Relaxed) {
+        // Block for the first request, then drain a batch.
+        let Ok(first) = rx.recv() else { break };
+        let mut batch = vec![first];
+        while batch.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        for req in batch {
+            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let t0 = Instant::now();
+            let resp = match engine.infer(&req.image) {
+                Ok((out, stats)) => {
+                    engine.metrics.requests.inc();
+                    engine
+                        .metrics
+                        .request_latency
+                        .record(t0.elapsed());
+                    let checksum: f32 = out.data.iter().sum();
+                    let mut fields = vec![
+                        ("id", Json::str(req.id.clone())),
+                        ("ok", Json::Bool(true)),
+                        (
+                            "shape",
+                            Json::arr(vec![
+                                Json::num(out.h as f64),
+                                Json::num(out.w as f64),
+                                Json::num(out.c as f64),
+                            ]),
+                        ),
+                        ("checksum", Json::num(checksum as f64)),
+                        ("latency_ms", Json::num(stats.total_ms)),
+                        ("queue_ms", Json::num(queue_ms)),
+                        ("tasks", Json::num(stats.tasks as f64)),
+                    ];
+                    if req.return_output {
+                        fields.push((
+                            "output",
+                            Json::arr(out.data.iter().map(|&v| Json::num(v as f64)).collect()),
+                        ));
+                    }
+                    Json::obj(fields)
+                }
+                Err(e) => {
+                    engine.metrics.errors.inc();
+                    Json::obj(vec![
+                        ("id", Json::str(req.id.clone())),
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::str(format!("{e:#}"))),
+                    ])
+                }
+            };
+            let _ = req.respond.send(resp);
+        }
+    }
+}
+
+/// Metrics registry shared between the worker (which records) and the
+/// connection handlers (which serve `metrics` requests).
+static SERVER_METRICS: std::sync::OnceLock<Arc<Metrics>> = std::sync::OnceLock::new();
+
+fn handle_conn(stream: TcpStream, queue: SyncSender<Request>) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match process_line(&line, &queue) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("{e:#}"))),
+            ]),
+        };
+        writer.write_all(reply.to_string_compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn process_line(line: &str, queue: &SyncSender<Request>) -> Result<Json> {
+    let req = Json::parse(line)?;
+    match req.str_at("cmd").unwrap_or("infer") {
+        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        "metrics" => {
+            let snapshot = SERVER_METRICS
+                .get()
+                .map(|m| m.snapshot())
+                .unwrap_or_else(|| "no metrics yet\n".into());
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("metrics", Json::str(snapshot)),
+            ]))
+        }
+        "infer" => {
+            let id = req
+                .get_opt("id")
+                .and_then(|j| j.as_str().ok())
+                .unwrap_or("anon")
+                .to_string();
+            let image: Vec<f32> = match req.get_opt("image") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32))
+                    .collect::<Result<_>>()?,
+                None => {
+                    // Synthetic image by seed; dimensions are the engine's.
+                    let seed = req
+                        .get_opt("seed")
+                        .map(|s| s.as_f64())
+                        .transpose()?
+                        .unwrap_or(0.0) as u64;
+                    // The worker resolves dimensions; pass the seed through
+                    // a marker: an empty image plus the seed field is
+                    // handled below by re-generating in the worker... keep
+                    // it simple: generate here using the advertised dims.
+                    let dims = SERVER_DIMS.get().copied().unwrap_or((160, 160, 3));
+                    crate::data::gen_image(seed, dims.1, dims.0, dims.2)
+                }
+            };
+            let return_output = req
+                .get_opt("return_output")
+                .map(|b| b.as_bool())
+                .transpose()?
+                .unwrap_or(false);
+            let (tx, rx) = std::sync::mpsc::channel();
+            let request = Request {
+                id: id.clone(),
+                image,
+                return_output,
+                respond: tx,
+                enqueued: Instant::now(),
+            };
+            match queue.try_send(request) {
+                Ok(()) => rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("worker dropped request {id}")),
+                Err(TrySendError::Full(_)) => Ok(Json::obj(vec![
+                    ("id", Json::str(id)),
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str("overloaded: queue full (backpressure)")),
+                ])),
+                Err(TrySendError::Disconnected(_)) => {
+                    anyhow::bail!("server shutting down")
+                }
+            }
+        }
+        other => anyhow::bail!("unknown cmd {other:?}"),
+    }
+}
+
+/// Input dimensions advertised to synthetic-image requests (h, w, c).
+static SERVER_DIMS: std::sync::OnceLock<(usize, usize, usize)> = std::sync::OnceLock::new();
+
+/// CLI entry: load the engine and serve until killed (`mafat serve`).
+pub fn serve_cli(artifacts: &str, config: MafatConfig, addr: &str) -> Result<()> {
+    let artifacts = artifacts.to_string();
+    let server = Server::start(
+        move || Engine::load(&artifacts, config),
+        addr,
+        ServerConfig::default(),
+    )?;
+    server.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_config_defaults_sane() {
+        let c = ServerConfig::default();
+        assert!(c.queue_depth >= c.max_batch);
+    }
+
+    #[test]
+    fn process_line_rejects_garbage() {
+        let (tx, _rx) = sync_channel::<Request>(1);
+        assert!(process_line("not json", &tx).is_err());
+        let r = process_line(r#"{"cmd":"ping"}"#, &tx).unwrap();
+        assert!(r.get("ok").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn unknown_cmd_is_error() {
+        let (tx, _rx) = sync_channel::<Request>(1);
+        assert!(process_line(r#"{"cmd":"reboot"}"#, &tx).is_err());
+    }
+}

@@ -1,0 +1,417 @@
+//! The real inference engine: executes a MAFAT plan tile-by-tile over the
+//! PJRT runtime, entirely in Rust (end-to-end proof that the three layers
+//! compose — see DESIGN.md).
+//!
+//! For every fused task the engine gathers the input tile from the group's
+//! input map (HWC layout: a tile row is one contiguous memcpy), executes
+//! the task's tile-class executable with the group weights, and scatters
+//! the output tile into the group output map. Tasks run in the data-reuse
+//! checkerboard order ([`crate::reuse::schedule_order`] semantics via the
+//! manifest's task list); at a cut the output map simply becomes the next
+//! group's input map ("merge and re-tile", paper §3.1).
+//!
+//! Verification mode runs the untiled `full.hlo.txt` oracle on the same
+//! image and asserts element-wise agreement — the core correctness claim
+//! of tiling + fusing (outputs are mathematically identical, §2.1.1).
+
+use crate::data;
+use crate::ftp::Rect;
+use crate::metrics::Metrics;
+use crate::network::{LayerKind, Network};
+use crate::plan::MafatConfig;
+use crate::runtime::{ConfigEntry, Manifest, ManifestNetwork, Runtime};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Weight seed shared by engine, examples, and tests.
+pub const WEIGHT_SEED: u64 = 0x5EED_0001;
+
+/// Per-conv-layer weights in the AOT layout: (F, F, Cin, Cout) + (Cout,).
+pub struct LayerWeights {
+    pub layer: usize,
+    pub w: Vec<f32>,
+    pub w_dims: [usize; 4],
+    pub b: Vec<f32>,
+}
+
+/// Generate deterministic weights for every conv layer of `net`.
+pub fn gen_network_weights(net: &Network, seed: u64) -> Vec<Option<LayerWeights>> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(l, spec)| match spec.kind {
+            LayerKind::Conv { filters, size, .. } => {
+                let fan_in = size * size * spec.in_c;
+                let count = size * size * spec.in_c * filters;
+                Some(LayerWeights {
+                    layer: l,
+                    w: data::gen_weights(seed, l, count, fan_in),
+                    w_dims: [size, size, spec.in_c, filters],
+                    b: data::gen_bias(seed, l, filters),
+                })
+            }
+            LayerKind::MaxPool { .. } => None,
+        })
+        .collect()
+}
+
+/// An HWC feature map owned by the engine.
+pub struct FeatureMap {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl FeatureMap {
+    pub fn zeros(h: usize, w: usize, c: usize) -> FeatureMap {
+        FeatureMap {
+            h,
+            w,
+            c,
+            data: vec![0.0; h * w * c],
+        }
+    }
+
+    /// Copy the rect (in x/y map coordinates) into a dense HWC tile.
+    pub fn gather(&self, rect: &Rect) -> Vec<f32> {
+        let (tw, th) = (rect.w(), rect.h());
+        let mut out = Vec::with_capacity(tw * th * self.c);
+        for y in rect.y0..rect.y1 {
+            let start = (y * self.w + rect.x0) * self.c;
+            out.extend_from_slice(&self.data[start..start + tw * self.c]);
+        }
+        out
+    }
+
+    /// Scatter a dense HWC tile into the rect.
+    pub fn scatter(&mut self, rect: &Rect, tile: &[f32]) {
+        let (tw, th) = (rect.w(), rect.h());
+        debug_assert_eq!(tile.len(), tw * th * self.c);
+        for (ty, y) in (rect.y0..rect.y1).enumerate() {
+            let dst = (y * self.w + rect.x0) * self.c;
+            let src = ty * tw * self.c;
+            self.data[dst..dst + tw * self.c].copy_from_slice(&tile[src..src + tw * self.c]);
+        }
+        let _ = th;
+    }
+}
+
+/// Timing breakdown of one inference.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InferStats {
+    pub total_ms: f64,
+    pub gather_scatter_ms: f64,
+    pub execute_ms: f64,
+    pub tasks: usize,
+}
+
+/// The engine: a compiled MAFAT configuration ready to serve images.
+pub struct Engine {
+    runtime: Runtime,
+    net: Network,
+    entry: ConfigEntry,
+    /// Per-group weight literals, in the executables' argument order.
+    group_weights: Vec<Vec<xla::Literal>>,
+    /// Weight literals for the untiled oracle (all layers), if present.
+    full_weights: Option<Vec<xla::Literal>>,
+    full_path: Option<String>,
+    pub metrics: Arc<Metrics>,
+}
+
+fn weight_literals(
+    weights: &[Option<LayerWeights>],
+    top: usize,
+    bottom: usize,
+) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::new();
+    for lw in weights[top..=bottom].iter().flatten() {
+        out.push(Runtime::literal(
+            &lw.w,
+            &[lw.w_dims[0], lw.w_dims[1], lw.w_dims[2], lw.w_dims[3]],
+        )?);
+        out.push(Runtime::literal(&lw.b, &[lw.b.len()])?);
+    }
+    Ok(out)
+}
+
+impl Engine {
+    /// Load a configuration's artifacts and pre-compile every tile class.
+    pub fn load(artifacts_dir: impl AsRef<Path>, config: MafatConfig) -> Result<Engine> {
+        let artifacts_dir = artifacts_dir.as_ref();
+        let manifest = Manifest::load(artifacts_dir)?;
+        let mnet = manifest.sole_network()?;
+        Self::load_network(artifacts_dir, mnet, config)
+    }
+
+    /// Load a specific manifest network.
+    pub fn load_network(
+        artifacts_dir: &Path,
+        mnet: &ManifestNetwork,
+        config: MafatConfig,
+    ) -> Result<Engine> {
+        // Clear error first if the config was never compiled, then the
+        // stricter geometry cross-check.
+        let entry = mnet.find_config(config)?.clone();
+        mnet.verify_geometry(config)
+            .context("manifest geometry does not match the tiler - rebuild artifacts")?;
+        let net = mnet.network();
+        let mut runtime = Runtime::cpu(artifacts_dir)?;
+
+        // Pre-compile every class executable.
+        for group in &entry.groups {
+            for class in group.classes.values() {
+                runtime
+                    .load(&class.path)
+                    .with_context(|| format!("loading class {}", class.key))?;
+            }
+        }
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let group_weights = entry
+            .groups
+            .iter()
+            .map(|g| weight_literals(&weights, g.top, g.bottom))
+            .collect::<Result<Vec<_>>>()?;
+        let (full_weights, full_path) = match &mnet.full {
+            Some(f) => {
+                runtime.load(&f.path)?;
+                (
+                    Some(weight_literals(&weights, 0, net.n_layers() - 1)?),
+                    Some(f.path.clone()),
+                )
+            }
+            None => (None, None),
+        };
+        Ok(Engine {
+            runtime,
+            net,
+            entry,
+            group_weights,
+            full_weights,
+            full_path,
+            metrics: Arc::new(Metrics::default()),
+        })
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn config(&self) -> MafatConfig {
+        self.entry.config
+    }
+
+    pub fn n_executables(&self) -> usize {
+        self.runtime.cached()
+    }
+
+    /// Output shape (h, w, c) of the final group.
+    pub fn output_shape(&self) -> (usize, usize, usize) {
+        let bottom = self.entry.groups.last().unwrap().bottom;
+        let (w, h, c) = self.net.out_shape(bottom);
+        (h, w, c)
+    }
+
+    /// A deterministic synthetic input image (HWC).
+    pub fn synthetic_image(&self, seed: u64) -> Vec<f32> {
+        data::gen_image(seed, self.net.in_w, self.net.in_h, self.net.in_c)
+    }
+
+    /// Run one tiled inference. Returns the final feature map and timing.
+    pub fn infer(&mut self, image: &[f32]) -> Result<(FeatureMap, InferStats)> {
+        let t0 = Instant::now();
+        let mut stats = InferStats::default();
+        if image.len() != self.net.in_w * self.net.in_h * self.net.in_c {
+            bail!(
+                "image has {} elems, expected {}x{}x{}",
+                image.len(),
+                self.net.in_h,
+                self.net.in_w,
+                self.net.in_c
+            );
+        }
+        let mut input = FeatureMap {
+            h: self.net.in_h,
+            w: self.net.in_w,
+            c: self.net.in_c,
+            data: image.to_vec(),
+        };
+        for (gi, group) in self.entry.groups.iter().enumerate() {
+            let bottom_spec = &self.net.layers[group.bottom];
+            let mut output = FeatureMap::zeros(bottom_spec.out_h, bottom_spec.out_w, bottom_spec.out_c);
+            // Checkerboard (data-reuse) order: even parity first.
+            let mut order: Vec<usize> = (0..group.tasks.len()).collect();
+            order.sort_by_key(|&ix| {
+                let t = &group.tasks[ix];
+                ((t.i + t.j) % 2, t.j, t.i)
+            });
+            for ix in order {
+                let task = &group.tasks[ix];
+                let class = &group.classes[&task.class];
+                let tg = Instant::now();
+                let tile = input.gather(&task.in_rect);
+                stats.gather_scatter_ms += tg.elapsed().as_secs_f64() * 1e3;
+
+                let te = Instant::now();
+                let lit = Runtime::literal_hwc(
+                    &tile,
+                    class.in_shape[0],
+                    class.in_shape[1],
+                    class.in_shape[2],
+                )?;
+                // Weights are passed by borrow (execute accepts
+                // Borrow<Literal>), so per-task cost is just the input tile.
+                let exe = self.runtime.load(&class.path)?;
+                let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.group_weights[gi].len());
+                args.push(&lit);
+                args.extend(self.group_weights[gi].iter());
+                let out = exe.run_f32(&args)?;
+                let dt = te.elapsed();
+                stats.execute_ms += dt.as_secs_f64() * 1e3;
+                self.metrics.task_latency.record(dt);
+                self.metrics.tasks_executed.inc();
+                stats.tasks += 1;
+
+                let ts = Instant::now();
+                output.scatter(&task.out_rect, &out);
+                stats.gather_scatter_ms += ts.elapsed().as_secs_f64() * 1e3;
+            }
+            input = output; // merge + re-tile at the cut
+        }
+        stats.total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok((input, stats))
+    }
+
+    /// Run the untiled full-network oracle on the same image.
+    pub fn infer_untiled(&mut self, image: &[f32]) -> Result<FeatureMap> {
+        let Some(path) = self.full_path.clone() else {
+            bail!("manifest has no full-network oracle (emit_full=false)");
+        };
+        let lit = Runtime::literal_hwc(image, self.net.in_h, self.net.in_w, self.net.in_c)?;
+        let exe = self.runtime.load(&path)?;
+        let weights = self.full_weights.as_ref().unwrap();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + weights.len());
+        args.push(&lit);
+        args.extend(weights.iter());
+        let out = exe.run_f32(&args)?;
+        let (h, w, c) = self.output_shape();
+        Ok(FeatureMap { h, w, c, data: out })
+    }
+
+    /// Verify tiled == untiled on one image; returns the max abs error.
+    pub fn verify(&mut self, image: &[f32]) -> Result<f32> {
+        let (tiled, _) = self.infer(image)?;
+        let oracle = self.infer_untiled(image)?;
+        if tiled.data.len() != oracle.data.len() {
+            bail!(
+                "output size mismatch: tiled {} vs oracle {}",
+                tiled.data.len(),
+                oracle.data.len()
+            );
+        }
+        let max_err = tiled
+            .data
+            .iter()
+            .zip(&oracle.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        self.metrics.tiles_verified.inc();
+        Ok(max_err)
+    }
+}
+
+/// CLI entry: run `batch` inferences, optionally verifying each against the
+/// untiled oracle, and print a summary (used by `mafat run`).
+pub fn run_cli(artifacts: &str, config: MafatConfig, batch: usize, verify: bool) -> Result<()> {
+    let mut engine = Engine::load(artifacts, config)?;
+    let (h, w, c) = engine.output_shape();
+    println!(
+        "engine: {} | config {config} | {} executables | output {h}x{w}x{c}",
+        engine.network().name,
+        engine.n_executables()
+    );
+    let mut total_ms = 0.0;
+    for i in 0..batch.max(1) {
+        let image = engine.synthetic_image(100 + i as u64);
+        if verify {
+            let err = engine.verify(&image)?;
+            let tol = 2e-3;
+            println!("image {i}: tiled==untiled max |err| = {err:.3e} (tol {tol:.0e})");
+            if err > tol {
+                bail!("verification FAILED on image {i}: {err}");
+            }
+        }
+        let (out, stats) = engine.infer(&image)?;
+        total_ms += stats.total_ms;
+        let checksum: f32 = out.data.iter().sum();
+        println!(
+            "image {i}: {:.1} ms ({} tasks; exec {:.1} ms, gather/scatter {:.2} ms) checksum {checksum:.4}",
+            stats.total_ms, stats.tasks, stats.execute_ms, stats.gather_scatter_ms
+        );
+    }
+    println!(
+        "mean latency {:.1} ms over {} inference(s); throughput {:.2} img/s",
+        total_ms / batch.max(1) as f64,
+        batch.max(1),
+        batch.max(1) as f64 / (total_ms / 1e3)
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16_scaled;
+
+    #[test]
+    fn feature_map_gather_scatter_round_trip() {
+        let mut m = FeatureMap::zeros(8, 8, 3);
+        for (i, v) in m.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let r = Rect::new(2, 3, 6, 7);
+        let tile = m.gather(&r);
+        assert_eq!(tile.len(), 4 * 4 * 3);
+        let mut m2 = FeatureMap::zeros(8, 8, 3);
+        m2.scatter(&r, &tile);
+        let tile2 = m2.gather(&r);
+        assert_eq!(tile, tile2);
+        // First element of the tile is map[(3*8+2)*3].
+        assert_eq!(tile[0], ((3 * 8 + 2) * 3) as f32);
+    }
+
+    #[test]
+    fn weights_match_layer_shapes() {
+        let net = yolov2_16_scaled(160);
+        let ws = gen_network_weights(&net, WEIGHT_SEED);
+        for (l, spec) in net.layers.iter().enumerate() {
+            match spec.kind {
+                LayerKind::Conv { filters, size, .. } => {
+                    let lw = ws[l].as_ref().unwrap();
+                    assert_eq!(lw.w.len(), size * size * spec.in_c * filters);
+                    assert_eq!(lw.b.len(), filters);
+                }
+                LayerKind::MaxPool { .. } => assert!(ws[l].is_none()),
+            }
+        }
+    }
+
+    #[test]
+    fn weights_are_deterministic() {
+        let net = yolov2_16_scaled(160);
+        let a = gen_network_weights(&net, WEIGHT_SEED);
+        let b = gen_network_weights(&net, WEIGHT_SEED);
+        for (x, y) in a.iter().zip(&b) {
+            match (x, y) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.w, y.w);
+                    assert_eq!(x.b, y.b);
+                }
+                (None, None) => {}
+                _ => panic!("mismatch"),
+            }
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Even N x M partitioning of a feature map — the paper's `Grid` function.
+
+use super::rect::Rect;
+
+/// An even `n x m` grid over a `w x h` map (paper Alg. 1 `Grid`): tile
+/// boundaries at `floor(k*W/N)`, so tiles are disjoint, cover the map, and
+/// differ in extent by at most one pixel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grid {
+    pub n: usize, // columns (width axis)
+    pub m: usize, // rows (height axis)
+    pub w: usize,
+    pub h: usize,
+}
+
+impl Grid {
+    pub fn new(n: usize, m: usize, w: usize, h: usize) -> Self {
+        assert!(n >= 1 && m >= 1, "grid must be at least 1x1");
+        assert!(
+            n <= w && m <= h,
+            "grid {n}x{m} finer than map {w}x{h} would create empty tiles"
+        );
+        Grid { n, m, w, h }
+    }
+
+    /// Output rect of tile `(i, j)`; `i` indexes columns, `j` rows.
+    pub fn tile(&self, i: usize, j: usize) -> Rect {
+        assert!(i < self.n && j < self.m);
+        Rect::new(
+            i * self.w / self.n,
+            j * self.h / self.m,
+            (i + 1) * self.w / self.n,
+            (j + 1) * self.h / self.m,
+        )
+    }
+
+    /// All tiles in row-major order.
+    pub fn tiles(&self) -> Vec<Rect> {
+        let mut v = Vec::with_capacity(self.n * self.m);
+        for j in 0..self.m {
+            for i in 0..self.n {
+                v.push(self.tile(i, j));
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_partition() {
+        let g = Grid::new(3, 3, 76, 76);
+        let tiles = g.tiles();
+        let total: usize = tiles.iter().map(|t| t.area()).sum();
+        assert_eq!(total, 76 * 76);
+        // Disjoint.
+        for (a, ra) in tiles.iter().enumerate() {
+            for rb in tiles.iter().skip(a + 1) {
+                assert_eq!(ra.overlap_area(rb), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_dims_differ_by_at_most_one() {
+        let g = Grid::new(5, 5, 38, 38);
+        let ws: Vec<usize> = (0..5).map(|i| g.tile(i, 0).w()).collect();
+        assert_eq!(ws.iter().sum::<usize>(), 38);
+        let (mn, mx) = (ws.iter().min().unwrap(), ws.iter().max().unwrap());
+        assert!(mx - mn <= 1, "{ws:?}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_fine_grid_panics() {
+        Grid::new(10, 10, 4, 4);
+    }
+}

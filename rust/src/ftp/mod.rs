@@ -1,0 +1,325 @@
+//! Fused Tile Partitioning (FTP) geometry, extended with MAFAT's two
+//! independently tiled layer groups (paper §2.1, §3.1).
+//!
+//! The grid partitions the **bottom layer's output**; `up_tile` walks each
+//! tile's required region up through the group. A fused **task** is one tile
+//! executed through every layer of its group; tasks of one group are
+//! mutually independent. Task geometry is fully static, which is what lets
+//! the AOT pipeline compile one HLO executable per distinct tile-shape
+//! class.
+
+mod grid;
+mod rect;
+mod traversal;
+pub mod variable;
+
+pub use grid::Grid;
+pub use rect::Rect;
+pub use traversal::{down_extent, up_tile, Pad4};
+pub use variable::{balance_spans, group_halo, plan_group_balanced, plan_group_from_bounds};
+
+use crate::network::Network;
+use anyhow::{bail, Result};
+
+/// Geometry of one layer inside a fused task: the (clamped) input region it
+/// reads, the output region it produces, and the explicit border padding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerGeom {
+    /// Absolute layer index in the network.
+    pub layer: usize,
+    pub in_rect: Rect,
+    pub out_rect: Rect,
+    pub pad: Pad4,
+}
+
+/// One fused tile task: tile `(i, j)` of a group's grid, with per-layer
+/// geometry in execution order (top of the group first).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskGeom {
+    pub grid_i: usize,
+    pub grid_j: usize,
+    pub layers: Vec<LayerGeom>,
+}
+
+impl TaskGeom {
+    /// Region of the group's *input* feature map this task reads.
+    pub fn input_rect(&self) -> Rect {
+        self.layers.first().expect("task has layers").in_rect
+    }
+
+    /// Region of the group's *output* feature map this task produces
+    /// (its grid tile — halo has shrunk to zero at the bottom).
+    pub fn output_rect(&self) -> Rect {
+        self.layers.last().expect("task has layers").out_rect
+    }
+
+    /// Shape-class key: two tasks with equal keys have identical per-layer
+    /// shapes and paddings and can share one compiled executable.
+    pub fn class_key(&self) -> TileClassKey {
+        TileClassKey(
+            self.layers
+                .iter()
+                .map(|g| (g.in_rect.w(), g.in_rect.h(), g.pad))
+                .collect(),
+        )
+    }
+
+    /// Elements this task writes at its bottom layer (its share of the
+    /// group's output map).
+    pub fn output_elems(&self, net: &Network) -> u64 {
+        let bottom = self.layers.last().unwrap();
+        let c = net.layers[bottom.layer].out_c;
+        (bottom.out_rect.area() * c) as u64
+    }
+
+    /// MACs this task performs, counting redundant halo computation — the
+    /// overhead FTP pays for independence (paper §2.1.2).
+    pub fn macs(&self, net: &Network) -> u64 {
+        self.layers
+            .iter()
+            .map(|g| {
+                let spec = &net.layers[g.layer];
+                let per_out = match spec.kind {
+                    crate::network::LayerKind::Conv { size, .. } => {
+                        (size * size * spec.in_c * spec.out_c) as u64
+                    }
+                    crate::network::LayerKind::MaxPool { size, .. } => {
+                        (size * size * spec.out_c) as u64
+                    }
+                };
+                g.out_rect.area() as u64 * per_out
+            })
+            .sum()
+    }
+}
+
+/// Hashable per-layer shape signature (width, height, padding per layer).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TileClassKey(pub Vec<(usize, usize, Pad4)>);
+
+impl TileClassKey {
+    /// Compact, filesystem-safe name for artifact files: a stable FNV-1a
+    /// hash of the signature.
+    pub fn short_name(&self) -> String {
+        let mut hash: u64 = 0xcbf29ce484222325;
+        for (w, h, p) in &self.0 {
+            for v in [*w, *h, p.left, p.right, p.top, p.bottom] {
+                for byte in (v as u64).to_le_bytes() {
+                    hash ^= byte as u64;
+                    hash = hash.wrapping_mul(0x100000001b3);
+                }
+            }
+        }
+        format!("{hash:016x}")
+    }
+}
+
+/// One layer group: an inclusive layer range fused together and tiled by an
+/// even `n x m` grid over the bottom layer's output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupPlan {
+    pub top: usize,
+    pub bottom: usize,
+    pub n: usize,
+    pub m: usize,
+    pub tasks: Vec<TaskGeom>,
+}
+
+impl GroupPlan {
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Total redundant (overlap) input elements across tasks at the group's
+    /// top layer: sum of task input areas minus the input map area.
+    pub fn overlap_elems(&self, net: &Network) -> u64 {
+        let top_spec = &net.layers[self.top];
+        let sum: u64 = self
+            .tasks
+            .iter()
+            .map(|t| (t.input_rect().area() * top_spec.in_c) as u64)
+            .sum();
+        let full = (top_spec.in_w * top_spec.in_h * top_spec.in_c) as u64;
+        sum.saturating_sub(full)
+    }
+}
+
+/// Plan the geometry of a single layer group.
+pub fn plan_group(net: &Network, top: usize, bottom: usize, n: usize, m: usize) -> Result<GroupPlan> {
+    if top > bottom || bottom >= net.n_layers() {
+        bail!("invalid layer range [{top}, {bottom}] for {} layers", net.n_layers());
+    }
+    let (out_w, out_h, _) = net.out_shape(bottom);
+    if n > out_w || m > out_h {
+        bail!(
+            "tiling {n}x{m} finer than group output {out_w}x{out_h} (layers {top}..={bottom})"
+        );
+    }
+    let grid = Grid::new(n, m, out_w, out_h);
+    let mut tasks = Vec::with_capacity(n * m);
+    for j in 0..m {
+        for i in 0..n {
+            let mut out_rect = grid.tile(i, j);
+            // Walk bottom -> top collecting geometry, then reverse into
+            // execution order.
+            let mut rev: Vec<LayerGeom> = Vec::with_capacity(bottom - top + 1);
+            for l in (top..=bottom).rev() {
+                let spec = &net.layers[l];
+                let (in_rect, pad) = up_tile(spec, &out_rect);
+                rev.push(LayerGeom {
+                    layer: l,
+                    in_rect,
+                    out_rect,
+                    pad,
+                });
+                out_rect = in_rect;
+            }
+            rev.reverse();
+            tasks.push(TaskGeom {
+                grid_i: i,
+                grid_j: j,
+                layers: rev,
+            });
+        }
+    }
+    Ok(GroupPlan {
+        top,
+        bottom,
+        n,
+        m,
+        tasks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+
+    #[test]
+    fn tasks_partition_group_output() {
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 7, 3, 3).unwrap();
+        let (w, h, _) = net.out_shape(7);
+        let total: usize = g.tasks.iter().map(|t| t.output_rect().area()).sum();
+        assert_eq!(total, w * h);
+    }
+
+    #[test]
+    fn task_inputs_cover_map_with_overlap() {
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 7, 4, 4).unwrap();
+        // Every input pixel of layer 0 is read by at least one task, and
+        // fusing creates strictly positive overlap.
+        let sum: usize = g.tasks.iter().map(|t| t.input_rect().area()).sum();
+        assert!(sum > 608 * 608);
+        assert!(g.overlap_elems(&net) > 0);
+        // The union is the full map: check the four corners + center are in
+        // some task.
+        for probe in [(0, 0), (607, 0), (0, 607), (607, 607), (300, 300)] {
+            assert!(g.tasks.iter().any(|t| {
+                let r = t.input_rect();
+                probe.0 >= r.x0 && probe.0 < r.x1 && probe.1 >= r.y0 && probe.1 < r.y1
+            }));
+        }
+    }
+
+    #[test]
+    fn one_by_one_tiling_is_whole_map_no_pad_overhead() {
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 15, 1, 1).unwrap();
+        assert_eq!(g.n_tasks(), 1);
+        let t = &g.tasks[0];
+        assert_eq!(t.input_rect(), Rect::new(0, 0, 608, 608));
+        assert_eq!(g.overlap_elems(&net), 0);
+        // Fully fused task MACs == untiled network MACs.
+        assert_eq!(t.macs(&net), net.total_macs());
+    }
+
+    #[test]
+    fn finer_tiling_more_redundancy() {
+        let net = yolov2_16();
+        let macs = |n: usize| -> u64 {
+            plan_group(&net, 0, 7, n, n)
+                .unwrap()
+                .tasks
+                .iter()
+                .map(|t| t.macs(&net))
+                .sum()
+        };
+        let m1 = macs(1);
+        let m3 = macs(3);
+        let m5 = macs(5);
+        assert!(m1 < m3 && m3 < m5, "{m1} {m3} {m5}");
+    }
+
+    #[test]
+    fn pool_regions_always_window_aligned() {
+        let net = yolov2_16();
+        for n in 1..=5 {
+            let g = plan_group(&net, 0, 15, n, n).unwrap();
+            for t in &g.tasks {
+                for lg in &t.layers {
+                    if net.layers[lg.layer].kind.is_pool() {
+                        assert_eq!(lg.in_rect.x0 % 2, 0);
+                        assert_eq!(lg.in_rect.y0 % 2, 0);
+                        assert_eq!(lg.in_rect.w() % 2, 0);
+                        assert_eq!(lg.in_rect.h() % 2, 0);
+                        assert!(!lg.pad.any());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn class_dedup_small() {
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 7, 5, 5).unwrap();
+        let classes: std::collections::HashSet<_> =
+            g.tasks.iter().map(|t| t.class_key()).collect();
+        // 25 tasks, but only corner/edge/center shape classes (far fewer).
+        assert!(classes.len() < g.n_tasks(), "{} classes", classes.len());
+    }
+
+    #[test]
+    fn forward_shape_consistency() {
+        // For every task and layer: padded input must reproduce the
+        // requested output extent (the invariant the AOT kernels rely on).
+        let net = yolov2_16();
+        for (top, bottom, n) in [(0usize, 7usize, 5usize), (8, 15, 2), (0, 15, 3), (0, 3, 4)] {
+            let g = plan_group(&net, top, bottom, n, n).unwrap();
+            for t in &g.tasks {
+                for lg in &t.layers {
+                    let spec = &net.layers[lg.layer];
+                    let f = spec.kind.filter();
+                    let s = spec.kind.stride();
+                    assert_eq!(
+                        down_extent(lg.in_rect.w(), lg.pad.left, lg.pad.right, f, s),
+                        lg.out_rect.w(),
+                        "layer {} of task ({},{})",
+                        lg.layer,
+                        t.grid_i,
+                        t.grid_j
+                    );
+                    assert_eq!(
+                        down_extent(lg.in_rect.h(), lg.pad.top, lg.pad.bottom, f, s),
+                        lg.out_rect.h()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_chain_within_task() {
+        // Each layer's out_rect is the next layer's in_rect.
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 15, 4, 4).unwrap();
+        for t in &g.tasks {
+            for w in t.layers.windows(2) {
+                assert_eq!(w[0].out_rect, w[1].in_rect);
+            }
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Half-open 2-D regions on a feature map, the currency of all tiling math.
+
+
+/// A half-open rectangle `[x0, x1) x [y0, y1)` in feature-map coordinates
+/// (x = column/width axis, y = row/height axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rect {
+    pub x0: usize,
+    pub y0: usize,
+    pub x1: usize,
+    pub y1: usize,
+}
+
+impl Rect {
+    pub fn new(x0: usize, y0: usize, x1: usize, y1: usize) -> Self {
+        debug_assert!(x0 <= x1 && y0 <= y1, "degenerate rect");
+        Rect { x0, y0, x1, y1 }
+    }
+
+    pub fn w(&self) -> usize {
+        self.x1 - self.x0
+    }
+
+    pub fn h(&self) -> usize {
+        self.y1 - self.y0
+    }
+
+    pub fn area(&self) -> usize {
+        self.w() * self.h()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x0 == self.x1 || self.y0 == self.y1
+    }
+
+    /// Intersection (empty rects normalize to zero-area at the overlap
+    /// corner).
+    pub fn intersect(&self, o: &Rect) -> Rect {
+        let x0 = self.x0.max(o.x0);
+        let y0 = self.y0.max(o.y0);
+        let x1 = self.x1.min(o.x1).max(x0);
+        let y1 = self.y1.min(o.y1).max(y0);
+        Rect { x0, y0, x1, y1 }
+    }
+
+    pub fn contains(&self, o: &Rect) -> bool {
+        self.x0 <= o.x0 && self.y0 <= o.y0 && self.x1 >= o.x1 && self.y1 >= o.y1
+    }
+
+    /// Overlap area with another rect.
+    pub fn overlap_area(&self, o: &Rect) -> usize {
+        self.intersect(o).area()
+    }
+}
+
+impl std::fmt::Display for Rect {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{},{})x[{},{}) ({}x{})",
+            self.x0,
+            self.x1,
+            self.y0,
+            self.y1,
+            self.w(),
+            self.h()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intersect_disjoint_is_empty() {
+        let a = Rect::new(0, 0, 4, 4);
+        let b = Rect::new(8, 8, 12, 12);
+        assert!(a.intersect(&b).is_empty());
+        assert_eq!(a.overlap_area(&b), 0);
+    }
+
+    #[test]
+    fn intersect_partial() {
+        let a = Rect::new(0, 0, 4, 4);
+        let b = Rect::new(2, 3, 10, 10);
+        let i = a.intersect(&b);
+        assert_eq!(i, Rect::new(2, 3, 4, 4));
+        assert_eq!(i.area(), 2);
+    }
+}

@@ -1,0 +1,163 @@
+//! The DeepThings "traversal function" (paper §3.2, `upTile`): given the
+//! output region a layer must produce, compute the input region it needs.
+//!
+//! For a conv with filter `F`, stride `S`, SAME pad `P`, output columns
+//! `[x0, x1)` require input columns `[x0*S - P, (x1-1)*S - P + F)`, clamped
+//! to the input map; the clamped-away part is exactly the zero padding the
+//! task applies explicitly on image borders. For a non-overlapping pool
+//! (`F == S`) the required input is exactly `[x0*S, x1*S)` — always
+//! window-aligned, which is what makes cutting/tiling across pools exact.
+
+use super::rect::Rect;
+use crate::network::LayerSpec;
+
+/// Per-side explicit zero padding a task applies for one layer (only ever
+/// non-zero where the requested region runs past the image border).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Pad4 {
+    pub left: usize,
+    pub right: usize,
+    pub top: usize,
+    pub bottom: usize,
+}
+
+impl Pad4 {
+    pub fn any(&self) -> bool {
+        self.left + self.right + self.top + self.bottom > 0
+    }
+}
+
+/// 1-D traversal: output span `[o0, o1)` -> (clamped input span, pad_lo,
+/// pad_hi) for filter `f`, stride `s`, pad `p`, input extent `extent`.
+fn up_span(o0: usize, o1: usize, f: usize, s: usize, p: usize, extent: usize) -> (usize, usize, usize, usize) {
+    debug_assert!(o1 > o0);
+    // Unclamped bounds in signed arithmetic.
+    let lo = o0 as i64 * s as i64 - p as i64;
+    let hi = (o1 as i64 - 1) * s as i64 - p as i64 + f as i64;
+    let clamped_lo = lo.max(0) as usize;
+    let clamped_hi = (hi.min(extent as i64)) as usize;
+    let pad_lo = (clamped_lo as i64 - lo) as usize;
+    let pad_hi = (hi - clamped_hi as i64) as usize;
+    (clamped_lo, clamped_hi, pad_lo, pad_hi)
+}
+
+/// `upTile`: input region (clamped to the input map) + explicit padding
+/// required for `layer` to produce output region `out`.
+pub fn up_tile(layer: &LayerSpec, out: &Rect) -> (Rect, Pad4) {
+    let f = layer.kind.filter();
+    let s = layer.kind.stride();
+    let p = layer.kind.padding();
+    let (x0, x1, pl, pr) = up_span(out.x0, out.x1, f, s, p, layer.in_w);
+    let (y0, y1, pt, pb) = up_span(out.y0, out.y1, f, s, p, layer.in_h);
+    (
+        Rect::new(x0, y0, x1, y1),
+        Pad4 {
+            left: pl,
+            right: pr,
+            top: pt,
+            bottom: pb,
+        },
+    )
+}
+
+/// Forward check used by tests and the engine: the output extent produced
+/// from a padded input region. Must equal the requested output extent.
+pub fn down_extent(in_len: usize, pad_lo: usize, pad_hi: usize, f: usize, s: usize) -> usize {
+    (in_len + pad_lo + pad_hi - f) / s + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{LayerKind, LayerSpec};
+
+    fn conv3(in_w: usize, in_h: usize, in_c: usize) -> LayerSpec {
+        LayerSpec::resolve(
+            LayerKind::Conv {
+                filters: 8,
+                size: 3,
+                stride: 1,
+                pad: 1,
+            },
+            in_w,
+            in_h,
+            in_c,
+        )
+    }
+
+    fn pool2(in_w: usize, in_h: usize, in_c: usize) -> LayerSpec {
+        LayerSpec::resolve(LayerKind::MaxPool { size: 2, stride: 2 }, in_w, in_h, in_c)
+    }
+
+    #[test]
+    fn conv_interior_grows_by_halo() {
+        let l = conv3(64, 64, 4);
+        let (r, pad) = up_tile(&l, &Rect::new(10, 10, 20, 20));
+        assert_eq!(r, Rect::new(9, 9, 21, 21));
+        assert!(!pad.any());
+    }
+
+    #[test]
+    fn conv_border_pads_explicitly() {
+        let l = conv3(64, 64, 4);
+        let (r, pad) = up_tile(&l, &Rect::new(0, 0, 16, 64));
+        assert_eq!(r, Rect::new(0, 0, 17, 64));
+        assert_eq!(
+            pad,
+            Pad4 {
+                left: 1,
+                right: 0,
+                top: 1,
+                bottom: 1
+            }
+        );
+        // Forward shape check: padded input reproduces the requested output.
+        assert_eq!(down_extent(r.w(), pad.left, pad.right, 3, 1), 16);
+        assert_eq!(down_extent(r.h(), pad.top, pad.bottom, 3, 1), 64);
+    }
+
+    #[test]
+    fn pool_is_exact_and_aligned() {
+        let l = pool2(64, 64, 4);
+        let (r, pad) = up_tile(&l, &Rect::new(3, 5, 17, 32));
+        assert_eq!(r, Rect::new(6, 10, 34, 64));
+        assert!(!pad.any());
+        assert_eq!(r.x0 % 2, 0);
+        assert_eq!(r.y0 % 2, 0);
+    }
+
+    #[test]
+    fn one_by_one_conv_no_halo() {
+        let l = LayerSpec::resolve(
+            LayerKind::Conv {
+                filters: 8,
+                size: 1,
+                stride: 1,
+                pad: 0,
+            },
+            64,
+            64,
+            16,
+        );
+        let (r, pad) = up_tile(&l, &Rect::new(4, 8, 20, 24));
+        assert_eq!(r, Rect::new(4, 8, 20, 24));
+        assert!(!pad.any());
+    }
+
+    #[test]
+    fn full_map_round_trip() {
+        // The whole output requires the whole input with SAME padding.
+        let l = conv3(608, 608, 3);
+        let (r, pad) = up_tile(&l, &Rect::new(0, 0, 608, 608));
+        assert_eq!(r, Rect::new(0, 0, 608, 608));
+        assert_eq!(
+            pad,
+            Pad4 {
+                left: 1,
+                right: 1,
+                top: 1,
+                bottom: 1
+            }
+        );
+    }
+}

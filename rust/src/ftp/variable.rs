@@ -1,0 +1,241 @@
+//! Variable (uneven) tiling — the paper's §5 future work: "variable
+//! tiling, where each end tile is not the same size ... could allow for
+//! reduced task size variation, and thus smaller footprints."
+//!
+//! With an even grid and data fused across many layers, interior tiles
+//! carry halo on *both* sides of each axis while border tiles pad one side
+//! with zeros — so the interior tiles dominate the peak footprint (paper
+//! §3: "the middle task ... is much larger than the surrounding tiles").
+//! [`balance_spans`] shrinks interior tiles so every task's *effective*
+//! extent (tile + halo) is equal, and [`plan_group_balanced`] builds a
+//! [`GroupPlan`] from those boundaries.
+
+use super::{up_tile, GroupPlan, LayerGeom, Rect, TaskGeom};
+use crate::network::Network;
+use anyhow::{bail, Result};
+
+/// Build a group plan from explicit boundary vectors (`xs`/`ys` include 0
+/// and the map extent; tile (i, j) spans `xs[i]..xs[i+1]` x `ys[j]..ys[j+1]`
+/// on the bottom layer's output).
+pub fn plan_group_from_bounds(
+    net: &Network,
+    top: usize,
+    bottom: usize,
+    xs: &[usize],
+    ys: &[usize],
+) -> Result<GroupPlan> {
+    if top > bottom || bottom >= net.n_layers() {
+        bail!("invalid layer range [{top}, {bottom}]");
+    }
+    let (out_w, out_h, _) = net.out_shape(bottom);
+    let valid = |b: &[usize], extent: usize| {
+        b.len() >= 2
+            && b[0] == 0
+            && *b.last().unwrap() == extent
+            && b.windows(2).all(|w| w[0] < w[1])
+    };
+    if !valid(xs, out_w) || !valid(ys, out_h) {
+        bail!("invalid boundaries: xs={xs:?} (extent {out_w}), ys={ys:?} (extent {out_h})");
+    }
+    let mut tasks = Vec::with_capacity((xs.len() - 1) * (ys.len() - 1));
+    for j in 0..ys.len() - 1 {
+        for i in 0..xs.len() - 1 {
+            let mut out_rect = Rect::new(xs[i], ys[j], xs[i + 1], ys[j + 1]);
+            let mut rev: Vec<LayerGeom> = Vec::with_capacity(bottom - top + 1);
+            for l in (top..=bottom).rev() {
+                let spec = &net.layers[l];
+                let (in_rect, pad) = up_tile(spec, &out_rect);
+                rev.push(LayerGeom {
+                    layer: l,
+                    in_rect,
+                    out_rect,
+                    pad,
+                });
+                out_rect = in_rect;
+            }
+            rev.reverse();
+            tasks.push(TaskGeom {
+                grid_i: i,
+                grid_j: j,
+                layers: rev,
+            });
+        }
+    }
+    Ok(GroupPlan {
+        top,
+        bottom,
+        n: xs.len() - 1,
+        m: ys.len() - 1,
+        tasks,
+    })
+}
+
+/// Accumulated one-sided halo a group adds walking from its bottom layer to
+/// its top (in bottom-layer output pixels, i.e. divided by the pool
+/// downsampling below each conv).
+pub fn group_halo(net: &Network, top: usize, bottom: usize) -> usize {
+    // Walk upward tracking the scale factor between layer l's input and the
+    // bottom output; a conv's halo (F/2) at layer l is worth F/2 / scale
+    // bottom pixels. Integer-ceil to stay conservative.
+    let mut scale = 1usize; // layer-l input pixels per bottom-output pixel
+    let mut halo = 0f64;
+    for l in (top..=bottom).rev() {
+        let spec = &net.layers[l];
+        let s = spec.kind.stride();
+        if spec.kind.is_pool() {
+            scale *= s;
+        } else {
+            halo += (spec.kind.filter() / 2) as f64 / scale as f64;
+        }
+    }
+    halo.ceil() as usize
+}
+
+/// Balanced 1-D boundaries: interior tiles (which will carry halo on both
+/// sides) get `q`, border tiles `q + halo`, such that the *effective*
+/// extents (tile + halo x interior-sides) are as equal as integer rounding
+/// allows. Falls back to the even grid when the extent is too small.
+pub fn balance_spans(extent: usize, n: usize, halo: usize) -> Vec<usize> {
+    assert!(n >= 1 && n <= extent);
+    if n <= 2 || extent <= 2 * halo * n {
+        // Nothing to balance (no interior tiles) or halo-dominated.
+        return (0..=n).map(|k| k * extent / n).collect();
+    }
+    // 2 border tiles of q + halo, (n-2) interior tiles of q.
+    let q = (extent - 2 * halo) / n;
+    let mut widths = vec![q; n];
+    widths[0] += halo;
+    widths[n - 1] += halo;
+    // Distribute the rounding remainder to interior tiles first (they are
+    // the smaller ones), left to right.
+    let mut rem = extent - widths.iter().sum::<usize>();
+    let mut k = 1;
+    while rem > 0 {
+        widths[k % n] += 1;
+        rem -= 1;
+        k += 1;
+    }
+    let mut bounds = Vec::with_capacity(n + 1);
+    let mut acc = 0;
+    bounds.push(0);
+    for w in widths {
+        acc += w;
+        bounds.push(acc);
+    }
+    bounds
+}
+
+/// Plan a group with halo-balanced variable tiling.
+pub fn plan_group_balanced(
+    net: &Network,
+    top: usize,
+    bottom: usize,
+    n: usize,
+) -> Result<GroupPlan> {
+    let (out_w, out_h, _) = net.out_shape(bottom);
+    if n > out_w.min(out_h) {
+        bail!("tiling {n} finer than group output {out_w}x{out_h}");
+    }
+    let halo = group_halo(net, top, bottom);
+    let xs = balance_spans(out_w, n, halo);
+    let ys = balance_spans(out_h, n, halo);
+    plan_group_from_bounds(net, top, bottom, &xs, &ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftp::plan_group;
+    use crate::network::yolov2::yolov2_16;
+
+    fn peak_input_area(g: &GroupPlan) -> usize {
+        g.tasks.iter().map(|t| t.input_rect().area()).max().unwrap()
+    }
+
+    #[test]
+    fn bounds_partition() {
+        let b = balance_spans(76, 5, 4);
+        assert_eq!(b[0], 0);
+        assert_eq!(*b.last().unwrap(), 76);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(b.len(), 6);
+    }
+
+    #[test]
+    fn group_halo_yolov2_front() {
+        // Layers 0..7: 3x3 convs at downsampling scales 2, 2, 4, 8 sum to
+        // a small halo in bottom-output pixels.
+        let net = yolov2_16();
+        let h = group_halo(&net, 0, 7);
+        assert!((1..=8).contains(&h), "halo {h}");
+    }
+
+    #[test]
+    fn balanced_plan_partitions_and_verifies() {
+        let net = yolov2_16();
+        let g = plan_group_balanced(&net, 0, 7, 5).unwrap();
+        let (w, h, _) = net.out_shape(7);
+        let total: usize = g.tasks.iter().map(|t| t.output_rect().area()).sum();
+        assert_eq!(total, w * h);
+        // Pool alignment still holds under variable boundaries.
+        for t in &g.tasks {
+            for lg in &t.layers {
+                if net.layers[lg.layer].kind.is_pool() {
+                    assert_eq!(lg.in_rect.x0 % 2, 0);
+                    assert!(!lg.pad.any());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balancing_reduces_peak_tile_input() {
+        // The headline of the extension: the largest task input (the
+        // footprint driver) shrinks versus the even grid.
+        let net = yolov2_16();
+        for n in [3usize, 4, 5] {
+            let even = plan_group(&net, 0, 7, n, n).unwrap();
+            let balanced = plan_group_balanced(&net, 0, 7, n).unwrap();
+            assert!(
+                peak_input_area(&balanced) <= peak_input_area(&even),
+                "n={n}: balanced {} > even {}",
+                peak_input_area(&balanced),
+                peak_input_area(&even)
+            );
+        }
+        // Strict improvement where the integer granularity allows it: at
+        // n=3 the even grid's interior tile (25 px + halo both sides)
+        // shrinks to 24 px while borders absorb the slack.
+        let even = plan_group(&net, 0, 7, 3, 3).unwrap();
+        let balanced = plan_group_balanced(&net, 0, 7, 3).unwrap();
+        assert!(
+            peak_input_area(&balanced) < peak_input_area(&even),
+            "balanced {} vs even {}",
+            peak_input_area(&balanced),
+            peak_input_area(&even)
+        );
+    }
+
+    #[test]
+    fn balancing_reduces_task_size_variation() {
+        // Paper §5: variable tiling "could allow for reduced task size
+        // variation".
+        let net = yolov2_16();
+        let spread = |g: &GroupPlan| {
+            let areas: Vec<usize> = g.tasks.iter().map(|t| t.input_rect().area()).collect();
+            *areas.iter().max().unwrap() - *areas.iter().min().unwrap()
+        };
+        let even = plan_group(&net, 0, 7, 3, 3).unwrap();
+        let balanced = plan_group_balanced(&net, 0, 7, 3).unwrap();
+        assert!(spread(&balanced) < spread(&even));
+    }
+
+    #[test]
+    fn invalid_bounds_rejected() {
+        let net = yolov2_16();
+        assert!(plan_group_from_bounds(&net, 0, 7, &[0, 76], &[0, 40, 76]).is_ok());
+        assert!(plan_group_from_bounds(&net, 0, 7, &[0, 80], &[0, 76]).is_err()); // wrong extent
+        assert!(plan_group_from_bounds(&net, 0, 7, &[0, 40, 40, 76], &[0, 76]).is_err()); // empty tile
+        assert!(plan_group_from_bounds(&net, 0, 7, &[5, 76], &[0, 76]).is_err()); // no 0
+    }
+}

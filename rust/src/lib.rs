@@ -1,0 +1,58 @@
+//! # MAFAT — Memory-Aware Fusing and Tiling for Accelerated Edge Inference
+//!
+//! Production-quality reproduction of Farley & Gerstlauer, *"MAFAT:
+//! Memory-Aware Fusing and Tiling of Neural Networks for Accelerated Edge
+//! Inference"* (2021). MAFAT runs the feature-heavy prefix of a CNN on a
+//! single memory-constrained edge device by splitting it into up to two
+//! fused layer groups, tiling each group independently, predicting the peak
+//! memory of each configuration, and searching for the fastest
+//! configuration that fits a memory budget.
+//!
+//! ## Crate layout (three-layer architecture)
+//!
+//! * **L3 (this crate)** — the coordinator: tiling geometry ([`ftp`]),
+//!   configurations ([`plan`]), the memory predictor ([`predictor`]), the
+//!   configuration search ([`search`]), the data-reuse scheduler ([`reuse`]),
+//!   the memory/swap simulator substrate ([`memsim`]), the Darknet baseline
+//!   ([`baseline`]), end-to-end latency simulation ([`simulate`]), the real
+//!   PJRT inference engine ([`engine`] over [`runtime`]), and the serving
+//!   loop ([`coordinator`]).
+//! * **L2 (build-time JAX)** — `python/compile/model.py` emits one HLO
+//!   module per fused tile-shape class.
+//! * **L1 (build-time Pallas)** — `python/compile/kernels/` holds the conv /
+//!   maxpool kernels the L2 graph calls.
+//!
+//! Python never runs on the request path: `make artifacts` AOT-compiles the
+//! HLO once; the Rust binary loads it via PJRT and is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mafat::network::yolov2::yolov2_16;
+//! use mafat::predictor::{predict_mem, PredictorParams};
+//! use mafat::search::get_config;
+//!
+//! let net = yolov2_16();
+//! let params = PredictorParams::default();
+//! let result = get_config(&net, 64 * mafat::network::MIB, &params).unwrap();
+//! println!("64 MB -> {} (predicted {:.1} MB)",
+//!          result.config, result.predicted_bytes as f64 / 1048576.0);
+//! ```
+
+pub mod baseline;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod ftp;
+pub mod jsonlite;
+pub mod memsim;
+pub mod metrics;
+pub mod network;
+pub mod plan;
+pub mod predictor;
+pub mod report;
+pub mod reuse;
+pub mod runtime;
+pub mod search;
+pub mod simulate;

@@ -1,0 +1,50 @@
+//! `mafat` — command-line entry point for the MAFAT reproduction.
+//!
+//! Subcommands are grouped by purpose:
+//!
+//! * paper artifacts: `table-2-1`, `fig-1-1`, `fig-3-1`, `fig-3-2`,
+//!   `fig-4-1`, `fig-4-2`, `fig-4-3`, `table-4-1`, `headline`
+//! * tooling: `predict`, `search`, `simulate`, `export-geometry`
+//! * real execution: `run` (PJRT engine), `serve` (TCP serving loop)
+
+use anyhow::{bail, Context, Result};
+use mafat::cli::{self, Args};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{}", cli::USAGE);
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{}", cli::USAGE);
+            Ok(())
+        }
+        "table-2-1" => cli::cmd_table_2_1(&args),
+        "fig-1-1" => cli::cmd_fig_1_1(&args),
+        "fig-3-1" => cli::cmd_fig_3_1(&args),
+        "fig-3-2" => cli::cmd_fig_3_2(&args),
+        "fig-4-1" => cli::cmd_fig_4_1(&args),
+        "fig-4-2" => cli::cmd_fig_4_2(&args),
+        "fig-4-3" => cli::cmd_fig_4_3(&args),
+        "table-4-1" => cli::cmd_table_4_1(&args),
+        "headline" => cli::cmd_headline(&args),
+        "predict" => cli::cmd_predict(&args),
+        "search" => cli::cmd_search(&args),
+        "simulate" => cli::cmd_simulate(&args),
+        "export-geometry" => cli::cmd_export_geometry(&args),
+        "run" => cli::cmd_run(&args),
+        "serve" => cli::cmd_serve(&args),
+        other => bail!("unknown command '{other}' (run `mafat help`)"),
+    }
+    .with_context(|| format!("command '{cmd}' failed"))
+}

@@ -1,0 +1,173 @@
+//! Intrusive doubly-linked LRU list over a `Vec` of nodes.
+//!
+//! Node ids are indices into the page table owned by [`super::MemSim`]; the
+//! list stores `prev`/`next` per node and supports O(1) push-front,
+//! move-to-front, unlink, and tail lookup — the operations the eviction
+//! loop needs. This is the simulator's hot path (see EXPERIMENTS.md §Perf).
+
+/// Sentinel "null" node id.
+pub const NIL: u32 = u32::MAX;
+
+/// Simulated page size (4 KiB, matching the Pi's kernel).
+pub const PAGE_BYTES: u64 = 4096;
+
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    prev: u32,
+    next: u32,
+    /// Whether the node is currently linked into the list.
+    linked: bool,
+}
+
+/// Doubly-linked LRU list; head = most recently used, tail = eviction
+/// victim.
+pub struct LruList {
+    nodes: Vec<Node>,
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl LruList {
+    pub fn new() -> Self {
+        LruList {
+            nodes: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            len: 0,
+        }
+    }
+
+    /// Register a new node (unlinked). Returns its id.
+    pub fn push_node(&mut self) -> u32 {
+        self.nodes.push(Node {
+            prev: NIL,
+            next: NIL,
+            linked: false,
+        });
+        self.nodes.len() as u32 - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Least-recently-used node (NIL if empty).
+    pub fn tail(&self) -> u32 {
+        self.tail
+    }
+
+    /// Link an unlinked node at the MRU end.
+    pub fn push_front(&mut self, id: u32) {
+        let node = &mut self.nodes[id as usize];
+        debug_assert!(!node.linked, "push_front of linked node {id}");
+        node.linked = true;
+        node.prev = NIL;
+        node.next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head as usize].prev = id;
+        } else {
+            self.tail = id;
+        }
+        self.head = id;
+        self.len += 1;
+    }
+
+    /// Remove a linked node from the list.
+    pub fn unlink(&mut self, id: u32) {
+        let node = self.nodes[id as usize];
+        debug_assert!(node.linked, "unlink of unlinked node {id}");
+        if node.prev != NIL {
+            self.nodes[node.prev as usize].next = node.next;
+        } else {
+            self.head = node.next;
+        }
+        if node.next != NIL {
+            self.nodes[node.next as usize].prev = node.prev;
+        } else {
+            self.tail = node.prev;
+        }
+        let node = &mut self.nodes[id as usize];
+        node.linked = false;
+        node.prev = NIL;
+        node.next = NIL;
+        self.len -= 1;
+    }
+
+    /// Move a linked node to the MRU end (no-op if already there).
+    pub fn move_to_front(&mut self, id: u32) {
+        if self.head == id {
+            return;
+        }
+        self.unlink(id);
+        self.push_front(id);
+    }
+}
+
+impl Default for LruList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(l: &LruList) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut cur = l.head;
+        while cur != NIL {
+            out.push(cur);
+            cur = l.nodes[cur as usize].next;
+        }
+        out
+    }
+
+    #[test]
+    fn push_unlink_order() {
+        let mut l = LruList::new();
+        let ids: Vec<u32> = (0..4).map(|_| l.push_node()).collect();
+        for &id in &ids {
+            l.push_front(id);
+        }
+        assert_eq!(collect(&l), vec![3, 2, 1, 0]);
+        assert_eq!(l.tail(), 0);
+        l.unlink(2);
+        assert_eq!(collect(&l), vec![3, 1, 0]);
+        l.unlink(0);
+        assert_eq!(l.tail(), 1);
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn move_to_front_reorders() {
+        let mut l = LruList::new();
+        for _ in 0..3 {
+            let id = l.push_node();
+            l.push_front(id);
+        }
+        // order: 2,1,0; tail=0
+        l.move_to_front(0);
+        assert_eq!(collect(&l), vec![0, 2, 1]);
+        assert_eq!(l.tail(), 1);
+        l.move_to_front(0); // already head: no-op
+        assert_eq!(collect(&l), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn unlink_relink_cycle() {
+        let mut l = LruList::new();
+        let a = l.push_node();
+        l.push_front(a);
+        l.unlink(a);
+        assert!(l.is_empty());
+        assert_eq!(l.tail(), NIL);
+        l.push_front(a);
+        assert_eq!(l.tail(), a);
+    }
+}

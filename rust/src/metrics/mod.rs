@@ -1,0 +1,147 @@
+//! Lightweight metrics for the engine and serving loop: counters and
+//! latency histograms with percentile queries, all lock-cheap
+//! (`AtomicU64` counters; histograms behind a `Mutex` only on record).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram (microsecond granularity,
+/// ~2 significant digits — plenty for serving percentiles).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    samples: Mutex<Vec<u64>>, // microseconds
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        self.samples.lock().unwrap().push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    /// q in [0, 1]; returns None when empty.
+    pub fn percentile(&self, q: f64) -> Option<Duration> {
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return None;
+        }
+        s.sort_unstable();
+        let ix = ((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        Some(Duration::from_micros(s[ix]))
+    }
+
+    pub fn mean(&self) -> Option<Duration> {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return None;
+        }
+        Some(Duration::from_micros(s.iter().sum::<u64>() / s.len() as u64))
+    }
+}
+
+/// Registry of named metrics for one engine/server instance.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: Counter,
+    pub tasks_executed: Counter,
+    pub tiles_verified: Counter,
+    pub bytes_in: Counter,
+    pub bytes_out: Counter,
+    pub errors: Counter,
+    pub request_latency: Histogram,
+    pub task_latency: Histogram,
+}
+
+impl Metrics {
+    /// Render a one-line-per-metric text snapshot (the server's `/metrics`).
+    pub fn snapshot(&self) -> String {
+        let mut kv: BTreeMap<&str, String> = BTreeMap::new();
+        kv.insert("requests", self.requests.get().to_string());
+        kv.insert("tasks_executed", self.tasks_executed.get().to_string());
+        kv.insert("tiles_verified", self.tiles_verified.get().to_string());
+        kv.insert("bytes_in", self.bytes_in.get().to_string());
+        kv.insert("bytes_out", self.bytes_out.get().to_string());
+        kv.insert("errors", self.errors.get().to_string());
+        for (name, h) in [
+            ("request_latency", &self.request_latency),
+            ("task_latency", &self.task_latency),
+        ] {
+            if let (Some(p50), Some(p99), Some(mean)) =
+                (h.percentile(0.5), h.percentile(0.99), h.mean())
+            {
+                kv.insert(
+                    match name {
+                        "request_latency" => "request_latency_ms(p50/p99/mean)",
+                        _ => "task_latency_ms(p50/p99/mean)",
+                    },
+                    format!(
+                        "{:.2}/{:.2}/{:.2}",
+                        p50.as_secs_f64() * 1e3,
+                        p99.as_secs_f64() * 1e3,
+                        mean.as_secs_f64() * 1e3
+                    ),
+                );
+            }
+        }
+        kv.iter()
+            .map(|(k, v)| format!("{k} {v}\n"))
+            .collect::<String>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn percentiles() {
+        let h = Histogram::default();
+        assert!(h.percentile(0.5).is_none());
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        let p50 = h.percentile(0.5).unwrap().as_millis();
+        assert!((49..=52).contains(&p50), "p50 {p50}");
+        let p99 = h.percentile(0.99).unwrap().as_millis();
+        assert!(p99 >= 99);
+        assert_eq!(h.percentile(0.0).unwrap().as_millis(), 1);
+    }
+
+    #[test]
+    fn snapshot_contains_counters() {
+        let m = Metrics::default();
+        m.requests.add(3);
+        let s = m.snapshot();
+        assert!(s.contains("requests 3"));
+    }
+}

@@ -1,0 +1,272 @@
+//! Minimal Darknet-style `.cfg` parser, so arbitrary conv/maxpool prefixes
+//! can be fed to MAFAT (the paper's tooling is built on Darknet configs).
+//!
+//! Supported sections: `[net]` (width/height/channels), `[convolutional]`
+//! (filters/size/stride/pad/padding), `[maxpool]` (size/stride). Unknown
+//! keys are ignored (Darknet configs carry training hyperparameters we do
+//! not need); unknown *sections* are an error, because silently dropping a
+//! layer would corrupt all downstream geometry.
+
+use super::{LayerKind, Network};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Debug)]
+struct Section {
+    name: String,
+    kv: HashMap<String, String>,
+    line: usize,
+}
+
+fn parse_sections(text: &str) -> Result<Vec<Section>> {
+    let mut sections: Vec<Section> = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: malformed section header {line:?}", ln + 1);
+            }
+            sections.push(Section {
+                name: line[1..line.len() - 1].trim().to_lowercase(),
+                kv: HashMap::new(),
+                line: ln + 1,
+            });
+        } else {
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key=value, got {line:?}", ln + 1);
+            };
+            let Some(sec) = sections.last_mut() else {
+                bail!("line {}: key=value before any [section]", ln + 1);
+            };
+            sec.kv.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+    }
+    Ok(sections)
+}
+
+fn get_usize(sec: &Section, key: &str, default: Option<usize>) -> Result<usize> {
+    match sec.kv.get(key) {
+        Some(v) => v
+            .parse::<usize>()
+            .with_context(|| format!("section [{}] line {}: bad {key}={v}", sec.name, sec.line)),
+        None => default.ok_or_else(|| {
+            anyhow::anyhow!(
+                "section [{}] line {}: missing required key {key}",
+                sec.name,
+                sec.line
+            )
+        }),
+    }
+}
+
+/// Parse a Darknet-style cfg string into a [`Network`].
+pub fn parse_cfg(name: &str, text: &str) -> Result<Network> {
+    let sections = parse_sections(text)?;
+    let Some(net_sec) = sections.first() else {
+        bail!("empty cfg");
+    };
+    if net_sec.name != "net" && net_sec.name != "network" {
+        bail!("first section must be [net], got [{}]", net_sec.name);
+    }
+    let in_w = get_usize(net_sec, "width", None)?;
+    let in_h = get_usize(net_sec, "height", None)?;
+    let in_c = get_usize(net_sec, "channels", Some(3))?;
+
+    let mut ops: Vec<LayerKind> = Vec::new();
+    for sec in &sections[1..] {
+        match sec.name.as_str() {
+            "convolutional" | "conv" => {
+                let size = get_usize(sec, "size", Some(1))?;
+                // Darknet: `pad=1` means "SAME" (pad = size/2); an explicit
+                // `padding=` overrides with a pixel count.
+                let pad = if sec.kv.contains_key("padding") {
+                    get_usize(sec, "padding", None)?
+                } else if get_usize(sec, "pad", Some(0))? != 0 {
+                    size / 2
+                } else {
+                    0
+                };
+                ops.push(LayerKind::Conv {
+                    filters: get_usize(sec, "filters", Some(1))?,
+                    size,
+                    stride: get_usize(sec, "stride", Some(1))?,
+                    pad,
+                });
+            }
+            "maxpool" | "max" => {
+                let stride = get_usize(sec, "stride", Some(2))?;
+                ops.push(LayerKind::MaxPool {
+                    size: get_usize(sec, "size", Some(stride))?,
+                    stride,
+                });
+            }
+            other => bail!(
+                "line {}: unsupported section [{other}] — MAFAT operates on \
+                 conv/maxpool prefixes only (paper §3.1)",
+                sec.line
+            ),
+        }
+    }
+    let net = Network::from_ops(name, in_w, in_h, in_c, &ops);
+    net.validate()?;
+    Ok(net)
+}
+
+/// Parse a cfg file from disk; the network name is the file stem.
+pub fn load_cfg(path: &Path) -> Result<Network> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading cfg {}", path.display()))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "network".to_string());
+    parse_cfg(&name, &text)
+}
+
+/// The YOLOv2-16 prefix as a cfg string (round-trip tested against
+/// [`super::yolov2::yolov2_16`]); also serves as end-user documentation of
+/// the accepted format.
+pub const YOLOV2_16_CFG: &str = "\
+[net]
+width=608
+height=608
+channels=3
+
+[convolutional]
+filters=32
+size=3
+stride=1
+pad=1
+
+[maxpool]
+size=2
+stride=2
+
+[convolutional]
+filters=64
+size=3
+stride=1
+pad=1
+
+[maxpool]
+size=2
+stride=2
+
+[convolutional]
+filters=128
+size=3
+stride=1
+pad=1
+
+[convolutional]
+filters=64
+size=1
+stride=1
+pad=1
+
+[convolutional]
+filters=128
+size=3
+stride=1
+pad=1
+
+[maxpool]
+size=2
+stride=2
+
+[convolutional]
+filters=256
+size=3
+stride=1
+pad=1
+
+[convolutional]
+filters=128
+size=1
+stride=1
+pad=1
+
+[convolutional]
+filters=256
+size=3
+stride=1
+pad=1
+
+[maxpool]
+size=2
+stride=2
+
+[convolutional]
+filters=512
+size=3
+stride=1
+pad=1
+
+[convolutional]
+filters=256
+size=1
+stride=1
+pad=1
+
+[convolutional]
+filters=512
+size=3
+stride=1
+pad=1
+
+[convolutional]
+filters=256
+size=1
+stride=1
+pad=1
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+
+    #[test]
+    fn cfg_round_trips_yolov2() {
+        let parsed = parse_cfg("yolov2-16", YOLOV2_16_CFG).unwrap();
+        let built = yolov2_16();
+        assert_eq!(parsed.layers, built.layers);
+    }
+
+    #[test]
+    fn comments_and_case_ignored() {
+        let net = parse_cfg(
+            "t",
+            "[NET]\nwidth=32 # comment\nheight=32\nchannels=3\n\n[Convolutional]\nfilters=8\nsize=3\npad=1\n",
+        )
+        .unwrap();
+        assert_eq!(net.out_shape(0), (32, 32, 8));
+    }
+
+    #[test]
+    fn unknown_section_rejected() {
+        assert!(parse_cfg("t", "[net]\nwidth=8\nheight=8\n[route]\nlayers=-1\n").is_err());
+    }
+
+    #[test]
+    fn darknet_pad_semantics() {
+        // pad=1 on a 3x3 conv means SAME (pad=1 pixel); on a 1x1 conv it
+        // means pad=0 — exactly Darknet's behaviour, relied on by YOLOv2's
+        // 1x1 reducers which declare pad=1.
+        let net = parse_cfg(
+            "t",
+            "[net]\nwidth=10\nheight=10\nchannels=4\n[convolutional]\nfilters=4\nsize=1\npad=1\n",
+        )
+        .unwrap();
+        assert_eq!(net.out_shape(0), (10, 10, 4));
+    }
+
+    #[test]
+    fn missing_required_key_fails() {
+        assert!(parse_cfg("t", "[net]\nheight=8\n").is_err());
+    }
+}

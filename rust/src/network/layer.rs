@@ -1,0 +1,254 @@
+//! Layer specifications for the feature-heavy CNN prefix that MAFAT targets.
+//!
+//! MAFAT (paper §3.1) operates on "any set of n convolutional and maxpool
+//! layers". We model exactly those two kinds, with the Darknet semantics the
+//! paper measures: convolutions are SAME-padded (pad = F/2) with bias and
+//! leaky-ReLU activation, maxpools are non-overlapping 2x2/2 windows.
+
+
+/// Number of bytes per feature-map element (Darknet uses f32 throughout).
+pub const BYTES_PER_ELEM: u64 = 4;
+
+/// One mebibyte, the unit used by the paper's tables and cgroup limits.
+pub const MIB: u64 = 1 << 20;
+
+/// The kind of a layer, with its kind-specific hyperparameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// 2-D convolution: `filters` output channels, square `size`x`size`
+    /// kernel, spatial `stride`, symmetric zero `pad` on every side.
+    /// Darknet's YOLOv2 convs are all SAME-padded (`pad = size / 2`) and are
+    /// followed by bias-add + leaky ReLU (slope 0.1), which we fold into the
+    /// layer (they do not change any shape or memory accounting).
+    Conv {
+        filters: usize,
+        size: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Max-pooling with a square `size`x`size` window and `stride`.
+    /// The paper's YOLOv2 prefix only uses `size == stride == 2`.
+    MaxPool { size: usize, stride: usize },
+}
+
+impl LayerKind {
+    /// Filter size seen by the traversal function (1 for 1x1 convs, the
+    /// window size for pools).
+    pub fn filter(&self) -> usize {
+        match *self {
+            LayerKind::Conv { size, .. } => size,
+            LayerKind::MaxPool { size, .. } => size,
+        }
+    }
+
+    /// Spatial stride.
+    pub fn stride(&self) -> usize {
+        match *self {
+            LayerKind::Conv { stride, .. } => stride,
+            LayerKind::MaxPool { stride, .. } => stride,
+        }
+    }
+
+    /// Zero padding per side (0 for pools).
+    pub fn padding(&self) -> usize {
+        match *self {
+            LayerKind::Conv { pad, .. } => pad,
+            LayerKind::MaxPool { .. } => 0,
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, LayerKind::Conv { .. })
+    }
+
+    pub fn is_pool(&self) -> bool {
+        matches!(self, LayerKind::MaxPool { .. })
+    }
+
+    /// Short Darknet-style name ("Conv" / "Max"), as printed in Table 2.1.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Conv { .. } => "Conv",
+            LayerKind::MaxPool { .. } => "Max",
+        }
+    }
+}
+
+/// A fully shape-resolved layer: kind plus input/output dimensions.
+///
+/// Width/height/channels follow the Darknet convention of the paper's
+/// Table 2.1: `Dimensions` there is the *input* tensor `W x H x C`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub kind: LayerKind,
+    pub in_w: usize,
+    pub in_h: usize,
+    pub in_c: usize,
+    pub out_w: usize,
+    pub out_h: usize,
+    pub out_c: usize,
+}
+
+impl LayerSpec {
+    /// Resolve a layer's output shape from its kind and input shape,
+    /// mirroring Darknet's `make_convolutional_layer` / `make_maxpool_layer`
+    /// shape arithmetic.
+    pub fn resolve(kind: LayerKind, in_w: usize, in_h: usize, in_c: usize) -> Self {
+        let (out_w, out_h, out_c) = match kind {
+            LayerKind::Conv {
+                filters,
+                size,
+                stride,
+                pad,
+            } => {
+                let ow = (in_w + 2 * pad - size) / stride + 1;
+                let oh = (in_h + 2 * pad - size) / stride + 1;
+                (ow, oh, filters)
+            }
+            LayerKind::MaxPool { size, stride } => {
+                // Darknet pads maxpool so that out = ceil(in / stride); for
+                // the even dimensions of the YOLOv2 prefix this is in/stride.
+                let ow = (in_w + stride - 1) / stride;
+                let oh = (in_h + stride - 1) / stride;
+                let _ = size;
+                (ow, oh, in_c)
+            }
+        };
+        LayerSpec {
+            kind,
+            in_w,
+            in_h,
+            in_c,
+            out_w,
+            out_h,
+            out_c,
+        }
+    }
+
+    /// Number of weight parameters (filter elements); biases, scales etc.
+    /// are negligible and the paper's Table 2.1 counts filter weights only.
+    pub fn weight_params(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { filters, size, .. } => {
+                (size * size * self.in_c * filters) as u64
+            }
+            LayerKind::MaxPool { .. } => 0,
+        }
+    }
+
+    /// Weight bytes (Table 2.1 "Weights" column).
+    pub fn weight_bytes(&self) -> u64 {
+        self.weight_params() * BYTES_PER_ELEM
+    }
+
+    /// Input tensor bytes (Table 2.1 "Input" column).
+    pub fn input_bytes(&self) -> u64 {
+        (self.in_w * self.in_h * self.in_c) as u64 * BYTES_PER_ELEM
+    }
+
+    /// Output tensor bytes (Table 2.1 "Output" column).
+    pub fn output_bytes(&self) -> u64 {
+        (self.out_w * self.out_h * self.out_c) as u64 * BYTES_PER_ELEM
+    }
+
+    /// Darknet im2col workspace bytes for the *full* layer: paper Eq. (2.1),
+    /// `scratch = w * h * F^2 * c / s` with `w, h` the output dims and `c`
+    /// the *input* channel count. Zero for pools (Darknet allocates none).
+    pub fn scratch_bytes(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { size, stride, .. } => {
+                (self.out_w * self.out_h * size * size * self.in_c / stride) as u64
+                    * BYTES_PER_ELEM
+            }
+            LayerKind::MaxPool { .. } => 0,
+        }
+    }
+
+    /// Total bytes for running this layer alone (Table 2.1 "Total" column):
+    /// weights + input + output + scratch.
+    pub fn total_bytes(&self) -> u64 {
+        self.weight_bytes() + self.input_bytes() + self.output_bytes() + self.scratch_bytes()
+    }
+
+    /// Multiply-accumulate operations to compute the full layer output.
+    /// For pools we count one comparison per window element as one "op"
+    /// (they are a rounding error next to the convs).
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { size, .. } => {
+                (self.out_w * self.out_h) as u64
+                    * (size * size * self.in_c) as u64
+                    * self.out_c as u64
+            }
+            LayerKind::MaxPool { size, .. } => {
+                (self.out_w * self.out_h * self.out_c) as u64 * (size * size) as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_same_pad_shape() {
+        let l = LayerSpec::resolve(
+            LayerKind::Conv {
+                filters: 32,
+                size: 3,
+                stride: 1,
+                pad: 1,
+            },
+            608,
+            608,
+            3,
+        );
+        assert_eq!((l.out_w, l.out_h, l.out_c), (608, 608, 32));
+    }
+
+    #[test]
+    fn maxpool_halves() {
+        let l = LayerSpec::resolve(LayerKind::MaxPool { size: 2, stride: 2 }, 608, 608, 32);
+        assert_eq!((l.out_w, l.out_h, l.out_c), (304, 304, 32));
+    }
+
+    #[test]
+    fn table_2_1_layer0_numbers() {
+        // Paper Table 2.1 row 0: weights 3456 B, input 4.23 MB, output
+        // 45.13 MB, scratch 38.07 MB.
+        let l = LayerSpec::resolve(
+            LayerKind::Conv {
+                filters: 32,
+                size: 3,
+                stride: 1,
+                pad: 1,
+            },
+            608,
+            608,
+            3,
+        );
+        assert_eq!(l.weight_bytes(), 3456);
+        assert!((l.input_bytes() as f64 / MIB as f64 - 4.23).abs() < 0.01);
+        assert!((l.output_bytes() as f64 / MIB as f64 - 45.13).abs() < 0.01);
+        assert!((l.scratch_bytes() as f64 / MIB as f64 - 38.07).abs() < 0.01);
+    }
+
+    #[test]
+    fn one_by_one_conv_scratch_matches_table() {
+        // Table 2.1 row 5: conv 1x1 on 152x152x128 -> 64; scratch 11.28 MB
+        // (= output spatial x in_c, F=1).
+        let l = LayerSpec::resolve(
+            LayerKind::Conv {
+                filters: 64,
+                size: 1,
+                stride: 1,
+                pad: 0,
+            },
+            152,
+            152,
+            128,
+        );
+        assert!((l.scratch_bytes() as f64 / MIB as f64 - 11.28).abs() < 0.01);
+    }
+}

@@ -1,0 +1,150 @@
+//! Network specification: an ordered list of shape-resolved conv/maxpool
+//! layers, the substrate every other module (tiler, predictor, simulator,
+//! engine) consumes.
+
+mod layer;
+pub mod cfg;
+pub mod yolov2;
+
+pub use layer::{LayerKind, LayerSpec, BYTES_PER_ELEM, MIB};
+
+use anyhow::{bail, Result};
+
+/// A network prefix: input tensor shape plus an ordered list of layers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Network {
+    pub name: String,
+    pub in_w: usize,
+    pub in_h: usize,
+    pub in_c: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Network {
+    /// Build a network by resolving shapes through a list of layer kinds.
+    pub fn from_ops(name: &str, in_w: usize, in_h: usize, in_c: usize, ops: &[LayerKind]) -> Self {
+        let (mut w, mut h, mut c) = (in_w, in_h, in_c);
+        let mut layers = Vec::with_capacity(ops.len());
+        for &kind in ops {
+            let l = LayerSpec::resolve(kind, w, h, c);
+            (w, h, c) = (l.out_w, l.out_h, l.out_c);
+            layers.push(l);
+        }
+        Network {
+            name: name.to_string(),
+            in_w,
+            in_h,
+            in_c,
+            layers,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Output shape of layer `l`.
+    pub fn out_shape(&self, l: usize) -> (usize, usize, usize) {
+        let s = &self.layers[l];
+        (s.out_w, s.out_h, s.out_c)
+    }
+
+    /// Input shape of layer `l`.
+    pub fn in_shape(&self, l: usize) -> (usize, usize, usize) {
+        let s = &self.layers[l];
+        (s.in_w, s.in_h, s.in_c)
+    }
+
+    /// Sum of all layers' weight bytes.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    /// Weight bytes of an inclusive layer range (a fused layer group keeps
+    /// all of its groups' weights resident — paper §3.2).
+    pub fn group_weight_bytes(&self, top: usize, bottom: usize) -> u64 {
+        self.layers[top..=bottom]
+            .iter()
+            .map(|l| l.weight_bytes())
+            .sum()
+    }
+
+    /// Total MACs of the full prefix.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Indices of layers *after which* a MAFAT cut is memory-aware, i.e. the
+    /// layer index right after a maxpool (paper §3.1: "cuts were chosen to be
+    /// directly after maxpool layers"). For YOLOv2-16 this returns
+    /// `[2, 4, 8, 12]`.
+    pub fn candidate_cuts(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind.is_pool())
+            .map(|(i, _)| i + 1)
+            .filter(|&c| c < self.layers.len())
+            .collect()
+    }
+
+    /// Sanity-check internal consistency (shapes chain, dims positive).
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            bail!("network has no layers");
+        }
+        let (mut w, mut h, mut c) = (self.in_w, self.in_h, self.in_c);
+        for (i, l) in self.layers.iter().enumerate() {
+            if (l.in_w, l.in_h, l.in_c) != (w, h, c) {
+                bail!(
+                    "layer {i}: input shape {:?} does not chain from previous output {:?}",
+                    (l.in_w, l.in_h, l.in_c),
+                    (w, h, c)
+                );
+            }
+            if l.out_w == 0 || l.out_h == 0 || l.out_c == 0 {
+                bail!("layer {i}: degenerate output shape");
+            }
+            if let LayerKind::MaxPool { size, stride } = l.kind {
+                if size != stride {
+                    bail!("layer {i}: only non-overlapping pools are supported (size == stride)");
+                }
+            }
+            (w, h, c) = (l.out_w, l.out_h, l.out_c);
+        }
+        Ok(())
+    }
+
+    /// A geometry-preserving scaled copy: same ops, input scaled by `1/k`.
+    /// Used to run the real PJRT engine at tractable CPU cost while the
+    /// full-size network drives the analytic predictor/simulator.
+    pub fn scaled(&self, name: &str, in_w: usize, in_h: usize) -> Self {
+        let ops: Vec<LayerKind> = self.layers.iter().map(|l| l.kind).collect();
+        Network::from_ops(name, in_w, in_h, self.in_c, &ops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_cuts_yolov2() {
+        let net = yolov2::yolov2_16();
+        assert_eq!(net.candidate_cuts(), vec![2, 4, 8, 12]);
+    }
+
+    #[test]
+    fn validate_ok() {
+        yolov2::yolov2_16().validate().unwrap();
+    }
+
+    #[test]
+    fn scaled_preserves_ops() {
+        let net = yolov2::yolov2_16();
+        let s = net.scaled("tiny", 160, 160);
+        assert_eq!(s.n_layers(), net.n_layers());
+        assert_eq!(s.out_shape(15), (10, 10, 256));
+        s.validate().unwrap();
+    }
+}

@@ -1,0 +1,133 @@
+//! The first 16 layers of YOLOv2 / Darknet-19 — the paper's evaluation
+//! workload (Table 2.1), plus the scaled variant used by the real engine.
+
+use super::{LayerKind, Network};
+
+/// Convenience constructor for a SAME-padded conv.
+fn conv(filters: usize, size: usize) -> LayerKind {
+    LayerKind::Conv {
+        filters,
+        size,
+        stride: 1,
+        pad: size / 2,
+    }
+}
+
+/// 2x2/2 maxpool, the only pooling the YOLOv2 prefix uses.
+fn maxpool() -> LayerKind {
+    LayerKind::MaxPool { size: 2, stride: 2 }
+}
+
+/// Layer kinds of the first 16 YOLOv2 layers (paper Table 2.1).
+pub fn yolov2_16_ops() -> Vec<LayerKind> {
+    vec![
+        conv(32, 3),  // 0:  608x608x3   -> 608x608x32
+        maxpool(),    // 1:  -> 304x304x32
+        conv(64, 3),  // 2:  -> 304x304x64
+        maxpool(),    // 3:  -> 152x152x64
+        conv(128, 3), // 4:  -> 152x152x128
+        conv(64, 1),  // 5:  -> 152x152x64
+        conv(128, 3), // 6:  -> 152x152x128
+        maxpool(),    // 7:  -> 76x76x128
+        conv(256, 3), // 8:  -> 76x76x256
+        conv(128, 1), // 9:  -> 76x76x128
+        conv(256, 3), // 10: -> 76x76x256
+        maxpool(),    // 11: -> 38x38x256
+        conv(512, 3), // 12: -> 38x38x512
+        conv(256, 1), // 13: -> 38x38x256
+        conv(512, 3), // 14: -> 38x38x512
+        conv(256, 1), // 15: -> 38x38x256
+    ]
+}
+
+/// Full-size YOLOv2-16 prefix at the paper's 608x608x3 input.
+pub fn yolov2_16() -> Network {
+    Network::from_ops("yolov2-16", 608, 608, 3, &yolov2_16_ops())
+}
+
+/// Scaled YOLOv2-16 used by the real PJRT engine (160x160 input by default):
+/// identical layer kinds and channel counts, so all tiling/fusing geometry
+/// exercises exactly the same code paths at ~14x less compute.
+pub fn yolov2_16_scaled(in_wh: usize) -> Network {
+    Network::from_ops(
+        &format!("yolov2-16-s{in_wh}"),
+        in_wh,
+        in_wh,
+        3,
+        &yolov2_16_ops(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::MIB;
+
+    /// Every row of paper Table 2.1, checked against our shape/size
+    /// arithmetic. (Input/Output/Scratch/Total in MiB to 2 decimals; the
+    /// table's layer-12 weight count, 4717872, is a typo for 4718592 —
+    /// 3*3*256*512*4 — which the layer-14 row of the same shape confirms.)
+    #[test]
+    fn table_2_1_full() {
+        let net = yolov2_16();
+        // (in dims, weight bytes, input MB, output MB, scratch MB)
+        // Weight bytes match the paper's column exactly (it is in bytes:
+        // 3456 = 3*3*3*32 params * 4 B); the layer-12 entry is corrected
+        // per the header comment.
+        #[rustfmt::skip]
+        let expect: [(usize, usize, usize, u64, f64, f64, f64); 16] = [
+            (608, 608, 3,        3456,  4.23, 45.13, 38.07),
+            (608, 608, 32,          0, 45.13, 11.28,  0.00),
+            (304, 304, 32,      73728, 11.28, 22.56, 101.53),
+            (304, 304, 64,          0, 22.56,  5.64,  0.00),
+            (152, 152, 64,     294912,  5.64, 11.28, 50.77),
+            (152, 152, 128,     32768, 11.28,  5.64, 11.28),
+            (152, 152, 64,     294912,  5.64, 11.28, 50.77),
+            (152, 152, 128,         0, 11.28,  2.82,  0.00),
+            (76, 76, 128,     1179648,  2.82,  5.64, 25.38),
+            (76, 76, 256,      131072,  5.64,  2.82,  5.64),
+            (76, 76, 128,     1179648,  2.82,  5.64, 25.38),
+            (76, 76, 256,           0,  5.64,  1.41,  0.00),
+            (38, 38, 256,     4718592,  1.41,  2.82, 12.69),
+            (38, 38, 512,      524288,  2.82,  1.41,  2.82),
+            (38, 38, 256,     4718592,  1.41,  2.82, 12.69),
+            (38, 38, 512,      524288,  2.82,  1.41,  2.82),
+        ];
+        for (i, l) in net.layers.iter().enumerate() {
+            let (w, h, c, wb, imb, omb, smb) = expect[i];
+            assert_eq!((l.in_w, l.in_h, l.in_c), (w, h, c), "layer {i} dims");
+            assert_eq!(l.weight_bytes(), wb, "layer {i} weight bytes");
+            assert!(
+                (l.input_bytes() as f64 / MIB as f64 - imb).abs() < 0.01,
+                "layer {i} input"
+            );
+            assert!(
+                (l.output_bytes() as f64 / MIB as f64 - omb).abs() < 0.01,
+                "layer {i} output"
+            );
+            assert!(
+                (l.scratch_bytes() as f64 / MIB as f64 - smb).abs() < 0.015,
+                "layer {i} scratch: got {}",
+                l.scratch_bytes() as f64 / MIB as f64
+            );
+        }
+    }
+
+    #[test]
+    fn layer2_is_biggest_total() {
+        // Paper §2.2: "the largest combined memory for a given layer is
+        // layer 2 ... the processor needs at least 135 MB".
+        let net = yolov2_16();
+        let totals: Vec<u64> = net.layers.iter().map(|l| l.total_bytes()).collect();
+        let argmax = (0..16).max_by_key(|&i| totals[i]).unwrap();
+        assert_eq!(argmax, 2);
+        let mb = totals[2] as f64 / MIB as f64;
+        assert!((135.0..136.5).contains(&mb), "layer 2 total = {mb} MB");
+    }
+
+    #[test]
+    fn final_shape() {
+        let net = yolov2_16();
+        assert_eq!(net.out_shape(15), (38, 38, 256));
+    }
+}

@@ -1,0 +1,227 @@
+//! MAFAT configurations and full execution plans.
+//!
+//! A configuration (paper §3.1, §4.3 notation `N1xM1/c/N2xM2`) is: a top
+//! layer-group tiling, an optional cut layer, and a bottom layer-group
+//! tiling. `NoCut` means a single fused group over all `n` layers.
+
+pub mod multi;
+
+pub use multi::{plan_multi, MultiConfig};
+
+use crate::ftp::{plan_group, GroupPlan};
+use crate::network::Network;
+use anyhow::{bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+/// A MAFAT configuration. `cut == None` is the paper's "NoCut": one group,
+/// tiled `top_tiling x top_tiling`, and `bottom_tiling` is ignored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MafatConfig {
+    /// N1: the top layer group's tiling (N1 x N1 grid).
+    pub top_tiling: usize,
+    /// Layer index at which the network is cut: the top group is layers
+    /// `0..cut`, the bottom group `cut..n`.
+    pub cut: Option<usize>,
+    /// N2: the bottom layer group's tiling (only meaningful with a cut).
+    pub bottom_tiling: usize,
+}
+
+impl MafatConfig {
+    pub fn no_cut(tiling: usize) -> Self {
+        MafatConfig {
+            top_tiling: tiling,
+            cut: None,
+            bottom_tiling: 1,
+        }
+    }
+
+    pub fn with_cut(top_tiling: usize, cut: usize, bottom_tiling: usize) -> Self {
+        MafatConfig {
+            top_tiling,
+            cut: Some(cut),
+            bottom_tiling,
+        }
+    }
+
+    /// The paper's fallback when nothing fits (Alg. 3 line 15 via the §3.3
+    /// text): the most even configuration, 5x5/8/2x2.
+    pub fn most_even_fallback() -> Self {
+        MafatConfig::with_cut(5, 8, 2)
+    }
+}
+
+impl fmt::Display for MafatConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.cut {
+            None => write!(f, "{0}x{0}/NoCut", self.top_tiling),
+            Some(c) => write!(
+                f,
+                "{0}x{0}/{1}/{2}x{2}",
+                self.top_tiling, c, self.bottom_tiling
+            ),
+        }
+    }
+}
+
+impl FromStr for MafatConfig {
+    type Err = anyhow::Error;
+
+    /// Parse the paper's notation: `"3x3/8/2x2"`, `"1x1/NoCut"`, or the
+    /// shorthand `"3/8/2"`.
+    fn from_str(s: &str) -> Result<Self> {
+        fn tile(part: &str) -> Result<usize> {
+            let t = match part.split_once('x') {
+                Some((a, b)) => {
+                    let (a, b) = (a.trim().parse::<usize>()?, b.trim().parse::<usize>()?);
+                    if a != b {
+                        bail!("only square tilings are supported, got {a}x{b}");
+                    }
+                    a
+                }
+                None => part.trim().parse::<usize>()?,
+            };
+            if t == 0 {
+                bail!("tiling must be >= 1");
+            }
+            Ok(t)
+        }
+        let parts: Vec<&str> = s.split('/').collect();
+        match parts.as_slice() {
+            [t, nocut] if nocut.eq_ignore_ascii_case("nocut") => Ok(MafatConfig::no_cut(tile(t)?)),
+            [t] => Ok(MafatConfig::no_cut(tile(t)?)),
+            [t, c, b] => Ok(MafatConfig::with_cut(
+                tile(t)?,
+                c.trim().parse::<usize>()?,
+                tile(b)?,
+            )),
+            _ => bail!("cannot parse MAFAT config {s:?} (expected e.g. 3x3/8/2x2 or 1x1/NoCut)"),
+        }
+    }
+}
+
+/// A fully planned configuration: one or two [`GroupPlan`]s with all task
+/// geometry resolved against a concrete network.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Plan {
+    pub config: MafatConfig,
+    pub groups: Vec<GroupPlan>,
+}
+
+impl Plan {
+    pub fn n_tasks(&self) -> usize {
+        self.groups.iter().map(|g| g.n_tasks()).sum()
+    }
+
+    /// Total MACs including redundant halo computation (no data reuse).
+    pub fn total_macs(&self, net: &Network) -> u64 {
+        self.groups
+            .iter()
+            .flat_map(|g| g.tasks.iter())
+            .map(|t| t.macs(net))
+            .sum()
+    }
+}
+
+/// Resolve a configuration into task geometry for `net`.
+pub fn plan_config(net: &Network, config: MafatConfig) -> Result<Plan> {
+    let n = net.n_layers();
+    let groups = match config.cut {
+        None => vec![plan_group(net, 0, n - 1, config.top_tiling, config.top_tiling)?],
+        Some(cut) => {
+            if cut == 0 || cut >= n {
+                bail!("cut {cut} outside (0, {n})");
+            }
+            vec![
+                plan_group(net, 0, cut - 1, config.top_tiling, config.top_tiling)?,
+                plan_group(net, cut, n - 1, config.bottom_tiling, config.bottom_tiling)?,
+            ]
+        }
+    };
+    Ok(Plan { config, groups })
+}
+
+/// The configuration space the paper explores manually (§4.3): cuts at
+/// {none, 4, 8, 12}, top tilings 1..=5, bottom tilings {2, 3}.
+pub fn manual_search_space(net: &Network) -> Vec<MafatConfig> {
+    let mut out = Vec::new();
+    for t in 1..=5 {
+        out.push(MafatConfig::no_cut(t));
+    }
+    let cuts: Vec<usize> = net
+        .candidate_cuts()
+        .into_iter()
+        .filter(|&c| c >= 4) // a cut at 2 re-tiles a huge map; never useful (§3.1 uses 4/8/12)
+        .collect();
+    for &cut in &cuts {
+        for bottom in [2usize, 3] {
+            for top in 1..=5 {
+                out.push(MafatConfig::with_cut(top, cut, bottom));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+
+    #[test]
+    fn display_matches_paper_notation() {
+        assert_eq!(MafatConfig::no_cut(1).to_string(), "1x1/NoCut");
+        assert_eq!(MafatConfig::with_cut(5, 8, 2).to_string(), "5x5/8/2x2");
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for s in ["1x1/NoCut", "5x5/8/2x2", "3x3/12/2x2", "2x2/NoCut"] {
+            let c: MafatConfig = s.parse().unwrap();
+            assert_eq!(c.to_string(), s);
+        }
+        assert!("3x2/8/2x2".parse::<MafatConfig>().is_err());
+        assert!("0x0/8/2x2".parse::<MafatConfig>().is_err());
+        assert!("".parse::<MafatConfig>().is_err());
+    }
+
+    #[test]
+    fn plan_no_cut_single_group() {
+        let net = yolov2_16();
+        let p = plan_config(&net, MafatConfig::no_cut(3)).unwrap();
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.n_tasks(), 9);
+        assert_eq!(p.groups[0].bottom, 15);
+    }
+
+    #[test]
+    fn plan_cut_two_groups() {
+        let net = yolov2_16();
+        let p = plan_config(&net, MafatConfig::with_cut(5, 8, 2)).unwrap();
+        assert_eq!(p.groups.len(), 2);
+        assert_eq!(p.groups[0].top, 0);
+        assert_eq!(p.groups[0].bottom, 7);
+        assert_eq!(p.groups[1].top, 8);
+        assert_eq!(p.groups[1].bottom, 15);
+        assert_eq!(p.n_tasks(), 25 + 4);
+    }
+
+    #[test]
+    fn invalid_cut_rejected() {
+        let net = yolov2_16();
+        assert!(plan_config(&net, MafatConfig::with_cut(2, 0, 2)).is_err());
+        assert!(plan_config(&net, MafatConfig::with_cut(2, 16, 2)).is_err());
+    }
+
+    #[test]
+    fn manual_space_size() {
+        let net = yolov2_16();
+        let space = manual_search_space(&net);
+        // 5 no-cut + cuts {4,8,12} x bottoms {2,3} x tops {1..5} = 5 + 30.
+        assert_eq!(space.len(), 35);
+        // All plannable.
+        for c in space {
+            plan_config(&net, c).unwrap();
+        }
+    }
+}

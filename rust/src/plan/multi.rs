@@ -1,0 +1,220 @@
+//! Extension beyond the paper (§5 future work): more than two layer
+//! groups. A [`MultiConfig`] cuts the prefix at any subset of the
+//! memory-aware cut points and tiles each group independently; it
+//! generalizes [`super::MafatConfig`] (k = 1 or 2) and lowers to the same
+//! [`super::Plan`], so the predictor, simulator, and engine machinery work
+//! unchanged.
+
+use super::{plan_config, MafatConfig, Plan};
+use crate::ftp::plan_group;
+use crate::network::Network;
+use anyhow::{bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+/// A k-group configuration: `cuts` are strictly increasing layer indices
+/// (each group is `[prev_cut, cut)`), `tilings[i]` is group i's square
+/// tiling; `tilings.len() == cuts.len() + 1`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MultiConfig {
+    pub cuts: Vec<usize>,
+    pub tilings: Vec<usize>,
+}
+
+impl MultiConfig {
+    pub fn new(cuts: Vec<usize>, tilings: Vec<usize>) -> Result<Self> {
+        if tilings.len() != cuts.len() + 1 {
+            bail!(
+                "need {} tilings for {} cuts, got {}",
+                cuts.len() + 1,
+                cuts.len(),
+                tilings.len()
+            );
+        }
+        if cuts.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("cuts must be strictly increasing: {cuts:?}");
+        }
+        if tilings.iter().any(|&t| t == 0) {
+            bail!("tilings must be >= 1");
+        }
+        Ok(MultiConfig { cuts, tilings })
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.tilings.len()
+    }
+
+    /// The paper's 2-group configs embed naturally.
+    pub fn from_mafat(c: MafatConfig) -> Self {
+        match c.cut {
+            None => MultiConfig {
+                cuts: vec![],
+                tilings: vec![c.top_tiling],
+            },
+            Some(cut) => MultiConfig {
+                cuts: vec![cut],
+                tilings: vec![c.top_tiling, c.bottom_tiling],
+            },
+        }
+    }
+
+    /// Group layer ranges for a network of `n` layers: `[(top, bottom)]`.
+    pub fn ranges(&self, n: usize) -> Result<Vec<(usize, usize)>> {
+        if let Some(&last) = self.cuts.last() {
+            if last >= n {
+                bail!("cut {last} outside network of {n} layers");
+            }
+        }
+        if self.cuts.first() == Some(&0) {
+            bail!("cut at layer 0 is meaningless");
+        }
+        let mut out = Vec::with_capacity(self.n_groups());
+        let mut top = 0;
+        for &cut in &self.cuts {
+            out.push((top, cut - 1));
+            top = cut;
+        }
+        out.push((top, n - 1));
+        Ok(out)
+    }
+}
+
+impl fmt::Display for MultiConfig {
+    /// Extends the paper's notation: `3x3/4/2x2/12/1x1` means three groups
+    /// cut at layers 4 and 12.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, t) in self.tilings.iter().enumerate() {
+            if i > 0 {
+                write!(f, "/{}/", self.cuts[i - 1])?;
+            }
+            write!(f, "{t}x{t}")?;
+        }
+        if self.cuts.is_empty() {
+            write!(f, "/NoCut")?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for MultiConfig {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        // 2-group strings use the paper parser for full compatibility.
+        if let Ok(m) = s.parse::<MafatConfig>() {
+            return Ok(MultiConfig::from_mafat(m));
+        }
+        let parts: Vec<&str> = s.split('/').collect();
+        if parts.len() % 2 == 0 {
+            bail!("cannot parse multi config {s:?} (expected TxT[/cut/TxT]...)");
+        }
+        let tile = |p: &str| -> Result<usize> {
+            let t = match p.split_once('x') {
+                Some((a, b)) if a == b => a.parse::<usize>()?,
+                Some(_) => bail!("only square tilings supported in {p:?}"),
+                None => p.parse::<usize>()?,
+            };
+            if t == 0 {
+                bail!("tiling 0");
+            }
+            Ok(t)
+        };
+        let mut tilings = vec![tile(parts[0])?];
+        let mut cuts = Vec::new();
+        let mut i = 1;
+        while i < parts.len() {
+            cuts.push(parts[i].parse::<usize>()?);
+            tilings.push(tile(parts[i + 1])?);
+            i += 2;
+        }
+        MultiConfig::new(cuts, tilings)
+    }
+}
+
+/// Resolve a multi-group configuration into a [`Plan`]. The returned plan's
+/// `config` field carries the nearest 2-group description (for display,
+/// exact when `n_groups <= 2`).
+pub fn plan_multi(net: &Network, config: &MultiConfig) -> Result<Plan> {
+    // Fast path: the paper's shapes go through the existing constructor so
+    // Plan::config is exact.
+    if config.n_groups() == 1 {
+        return plan_config(net, MafatConfig::no_cut(config.tilings[0]));
+    }
+    if config.n_groups() == 2 {
+        return plan_config(
+            net,
+            MafatConfig::with_cut(config.tilings[0], config.cuts[0], config.tilings[1]),
+        );
+    }
+    let ranges = config.ranges(net.n_layers())?;
+    let groups = ranges
+        .iter()
+        .zip(&config.tilings)
+        .map(|(&(top, bottom), &t)| plan_group(net, top, bottom, t, t))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Plan {
+        config: MafatConfig::with_cut(config.tilings[0], config.cuts[0], config.tilings[1]),
+        groups,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+
+    #[test]
+    fn display_and_parse() {
+        let c: MultiConfig = "3x3/4/2x2/12/1x1".parse().unwrap();
+        assert_eq!(c.cuts, vec![4, 12]);
+        assert_eq!(c.tilings, vec![3, 2, 1]);
+        assert_eq!(c.to_string(), "3x3/4/2x2/12/1x1");
+        // Paper notation still works.
+        let two: MultiConfig = "5x5/8/2x2".parse().unwrap();
+        assert_eq!(two.cuts, vec![8]);
+        let one: MultiConfig = "2x2/NoCut".parse().unwrap();
+        assert!(one.cuts.is_empty());
+        assert_eq!(one.to_string(), "2x2/NoCut");
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(MultiConfig::new(vec![8, 4], vec![1, 1, 1]).is_err()); // unordered
+        assert!(MultiConfig::new(vec![8], vec![1]).is_err()); // tilings len
+        assert!(MultiConfig::new(vec![], vec![0]).is_err()); // zero tiling
+        assert!("3x3/4".parse::<MultiConfig>().is_err());
+    }
+
+    #[test]
+    fn ranges_partition_layers() {
+        let c: MultiConfig = "3x3/4/2x2/12/1x1".parse().unwrap();
+        let r = c.ranges(16).unwrap();
+        assert_eq!(r, vec![(0, 3), (4, 11), (12, 15)]);
+        // Out-of-range cut rejected.
+        let bad = MultiConfig::new(vec![20], vec![1, 1]).unwrap();
+        assert!(bad.ranges(16).is_err());
+    }
+
+    #[test]
+    fn three_group_plan_builds_and_simulates() {
+        let net = yolov2_16();
+        let c: MultiConfig = "4x4/4/3x3/12/1x1".parse().unwrap();
+        let plan = plan_multi(&net, &c).unwrap();
+        assert_eq!(plan.groups.len(), 3);
+        assert_eq!(plan.n_tasks(), 16 + 9 + 1);
+        // The generic trace machinery accepts >2 groups unchanged.
+        let r = crate::simulate::simulate_plan(&net, &plan, &crate::simulate::SimOptions::default())
+            .unwrap();
+        assert!(r.latency_s > 0.0);
+        assert_eq!(r.stats.swap_in_bytes, 0);
+    }
+
+    #[test]
+    fn two_group_multi_equals_mafat_plan() {
+        let net = yolov2_16();
+        let m: MultiConfig = "5x5/8/2x2".parse().unwrap();
+        let via_multi = plan_multi(&net, &m).unwrap();
+        let direct = plan_config(&net, MafatConfig::with_cut(5, 8, 2)).unwrap();
+        assert_eq!(via_multi, direct);
+    }
+}

@@ -1,0 +1,296 @@
+//! Maximum-memory-usage predictor — paper §3.2, Algorithms 1 and 2.
+//!
+//! For every tile of a layer group, walking from the group's bottom layer up
+//! to its top, the per-layer footprint is
+//!
+//! ```text
+//! mem(l) = scratch + output + 2 * input        (elements, x4 bytes)
+//! scratch = w_out * h_out * c_in * F^2 / S     (paper Eq. 2.1, per tile)
+//! ```
+//!
+//! (the `2 * input` counts both the layer's input tile and the previous
+//! layer's output — the same buffer, live twice during the hand-off; paper
+//! §3.2 lists the four factors explicitly). The group prediction is the max
+//! over tiles and layers, plus the group's resident weights, plus a constant
+//! bias for network parameters / system overhead (31 MB empirically on the
+//! paper's Pi 3; configurable here). The network prediction is the max over
+//! the (up to two) groups.
+//!
+//! Note: the paper's Alg. 1 prints `while l <= top` / `if l < top` — typos
+//! for `>=`/`>` given `l` starts at `bottom` and walks upward; we implement
+//! the evident intent.
+
+pub mod swap;
+
+pub use swap::{predict_swap, predict_swap_config, SwapPrediction};
+
+use crate::ftp::plan_group;
+use crate::network::{LayerKind, Network, BYTES_PER_ELEM, MIB};
+use crate::plan::MafatConfig;
+use anyhow::Result;
+
+/// Tunable constants of the predictor.
+#[derive(Debug, Clone, Copy)]
+pub struct PredictorParams {
+    /// Constant overhead for network parameters, system variables, runtime —
+    /// the paper's empirically determined 31 MB (§3.2).
+    pub bias_bytes: u64,
+    /// Whether the fused group's weights are added on top of the bias.
+    /// The paper keeps all group weights resident; for YOLOv2-16 they are
+    /// 12-14 MB per group.
+    pub include_weights: bool,
+}
+
+impl Default for PredictorParams {
+    fn default() -> Self {
+        PredictorParams {
+            bias_bytes: 31 * MIB,
+            include_weights: true,
+        }
+    }
+}
+
+/// Where a prediction's maximum was attained — useful for explaining why a
+/// configuration needs the memory it does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeakSite {
+    pub group_index: usize,
+    pub layer: usize,
+    pub grid_i: usize,
+    pub grid_j: usize,
+    /// Peak tile footprint in bytes (before weights/bias).
+    pub tile_bytes: u64,
+}
+
+/// A full prediction: total bytes plus the attribution of the peak.
+#[derive(Debug, Clone, Copy)]
+pub struct Prediction {
+    pub total_bytes: u64,
+    pub peak: PeakSite,
+}
+
+impl Prediction {
+    pub fn total_mb(&self) -> f64 {
+        self.total_bytes as f64 / MIB as f64
+    }
+}
+
+/// Paper Algorithm 1: predict the peak tile footprint (bytes, before
+/// weights/bias) of one layer group tiled `n x m`.
+pub fn predict_layer_group(
+    net: &Network,
+    top: usize,
+    bottom: usize,
+    n: usize,
+    m: usize,
+) -> Result<PeakSite> {
+    let group = plan_group(net, top, bottom, n, m)?;
+    let mut peak = PeakSite {
+        group_index: 0,
+        layer: top,
+        grid_i: 0,
+        grid_j: 0,
+        tile_bytes: 0,
+    };
+    for task in &group.tasks {
+        for lg in &task.layers {
+            let spec = &net.layers[lg.layer];
+            let (w_in, h_in) = (lg.in_rect.w() as u64, lg.in_rect.h() as u64);
+            let (w_out, h_out) = (lg.out_rect.w() as u64, lg.out_rect.h() as u64);
+            let (c_in, c_out) = (spec.in_c as u64, spec.out_c as u64);
+            let scratch = match spec.kind {
+                LayerKind::Conv { size, stride, .. } => {
+                    w_out * h_out * c_in * (size * size) as u64 / stride as u64
+                }
+                LayerKind::MaxPool { .. } => 0,
+            };
+            let input = w_in * h_in * c_in;
+            let output = w_out * h_out * c_out;
+            let mem = (scratch + output + 2 * input) * BYTES_PER_ELEM;
+            if mem > peak.tile_bytes {
+                peak = PeakSite {
+                    group_index: 0,
+                    layer: lg.layer,
+                    grid_i: task.grid_i,
+                    grid_j: task.grid_j,
+                    tile_bytes: mem,
+                };
+            }
+        }
+    }
+    Ok(peak)
+}
+
+/// Paper Algorithm 2 (+ weights/bias): predict the maximum memory usage of a
+/// full MAFAT configuration.
+pub fn predict_mem(net: &Network, config: MafatConfig, params: &PredictorParams) -> Result<Prediction> {
+    let n_layers = net.n_layers();
+    let ranges: Vec<(usize, usize, usize)> = match config.cut {
+        None => vec![(0, n_layers - 1, config.top_tiling)],
+        Some(cut) => vec![
+            (0, cut - 1, config.top_tiling),
+            (cut, n_layers - 1, config.bottom_tiling),
+        ],
+    };
+    predict_ranges(net, &ranges, params)
+}
+
+/// Generalized Algorithm 2 over any list of `(top, bottom, tiling)` layer
+/// groups — the k-group extension (paper §5 future work) reuses the same
+/// per-group predictor.
+pub fn predict_ranges(
+    net: &Network,
+    ranges: &[(usize, usize, usize)],
+    params: &PredictorParams,
+) -> Result<Prediction> {
+    let mut best: Option<Prediction> = None;
+    for (gi, &(top, bottom, tiling)) in ranges.iter().enumerate() {
+        let mut peak = predict_layer_group(net, top, bottom, tiling, tiling)?;
+        peak.group_index = gi;
+        let weights = if params.include_weights {
+            net.group_weight_bytes(top, bottom)
+        } else {
+            0
+        };
+        let total = peak.tile_bytes + weights + params.bias_bytes;
+        if best.map_or(true, |b| total > b.total_bytes) {
+            best = Some(Prediction {
+                total_bytes: total,
+                peak,
+            });
+        }
+    }
+    Ok(best.expect("at least one group"))
+}
+
+/// Predict a multi-group configuration (k-group extension).
+pub fn predict_multi(
+    net: &Network,
+    config: &crate::plan::MultiConfig,
+    params: &PredictorParams,
+) -> Result<Prediction> {
+    let ranges: Vec<(usize, usize, usize)> = config
+        .ranges(net.n_layers())?
+        .into_iter()
+        .zip(&config.tilings)
+        .map(|((top, bottom), &t)| (top, bottom, t))
+        .collect();
+    predict_ranges(net, &ranges, params)
+}
+
+/// Convenience: predicted MB with default parameters.
+pub fn predict_mem_mb(net: &Network, config: MafatConfig) -> Result<f64> {
+    Ok(predict_mem(net, config, &PredictorParams::default())?.total_mb())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+
+    #[test]
+    fn fully_fused_1x1_peak_is_layer_2() {
+        // Untiled single group: the peak must sit at layer 2, the paper's
+        // "largest combined memory" layer (§2.2), with tile footprint
+        // scratch + out + 2*in = 101.53 + 22.56 + 22.56 ~= 146.7 MB.
+        let net = yolov2_16();
+        let p = predict_mem(&net, MafatConfig::no_cut(1), &PredictorParams::default()).unwrap();
+        assert_eq!(p.peak.layer, 2);
+        let tile_mb = p.peak.tile_bytes as f64 / MIB as f64;
+        assert!((tile_mb - 146.65).abs() < 0.1, "tile peak {tile_mb} MB");
+        // Total ~= 146.7 + 13.7 (weights) + 31 (bias) ~= 191 MB — matching
+        // Fig. 1.1's observation that Darknet starts swapping just below
+        // ~192 MB.
+        assert!(
+            (185.0..195.0).contains(&p.total_mb()),
+            "total {} MB",
+            p.total_mb()
+        );
+    }
+
+    #[test]
+    fn finer_tiling_never_increases_prediction() {
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let mut prev = u64::MAX;
+        for t in 1..=5 {
+            let p = predict_mem(&net, MafatConfig::no_cut(t), &params).unwrap();
+            assert!(
+                p.total_bytes <= prev,
+                "tiling {t} increased prediction: {} > {prev}",
+                p.total_bytes
+            );
+            prev = p.total_bytes;
+        }
+    }
+
+    #[test]
+    fn paper_minimum_config_prediction() {
+        // §4.3: "the minimum configuration for the algorithm, 5x5/8/2x2, is
+        // predicted to have a maximum memory usage of 66 MB". Our faithful
+        // re-implementation of Alg. 1/2 with the stated 31 MB bias lands at
+        // ~56 MB — same order and the same *ranking* of configurations; the
+        // residual is absorbed by the paper's empirically-fit bias (see
+        // EXPERIMENTS.md). We assert the reproduced value is stable.
+        let net = yolov2_16();
+        let p = predict_mem(
+            &net,
+            MafatConfig::with_cut(5, 8, 2),
+            &PredictorParams::default(),
+        )
+        .unwrap();
+        assert!(
+            (50.0..70.0).contains(&p.total_mb()),
+            "5x5/8/2x2 predicted {} MB",
+            p.total_mb()
+        );
+    }
+
+    #[test]
+    fn cut_reduces_prediction_vs_no_cut_at_fine_tilings() {
+        // The motivation for MAFAT (§3): two groups allow smaller peak
+        // footprints than one fully fused group at the same top tiling.
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let no_cut = predict_mem(&net, MafatConfig::no_cut(5), &params).unwrap();
+        let cut = predict_mem(&net, MafatConfig::with_cut(5, 8, 2), &params).unwrap();
+        assert!(
+            cut.total_bytes < no_cut.total_bytes,
+            "cut {} >= no-cut {}",
+            cut.total_mb(),
+            no_cut.total_mb()
+        );
+    }
+
+    #[test]
+    fn bias_and_weights_are_additive() {
+        let net = yolov2_16();
+        let base = predict_mem(
+            &net,
+            MafatConfig::no_cut(1),
+            &PredictorParams {
+                bias_bytes: 0,
+                include_weights: false,
+            },
+        )
+        .unwrap();
+        let with_bias = predict_mem(
+            &net,
+            MafatConfig::no_cut(1),
+            &PredictorParams {
+                bias_bytes: 31 * MIB,
+                include_weights: false,
+            },
+        )
+        .unwrap();
+        assert_eq!(with_bias.total_bytes - base.total_bytes, 31 * MIB);
+    }
+
+    #[test]
+    fn group_predictor_respects_range() {
+        let net = yolov2_16();
+        // Group over layers 8..15 only: its peak layer must be in range.
+        let p = predict_layer_group(&net, 8, 15, 2, 2).unwrap();
+        assert!((8..=15).contains(&p.layer));
+    }
+}

@@ -1,0 +1,212 @@
+//! Swap-amount predictor — the paper's final future-work item (§5: "more
+//! sophisticated algorithms could be used to predict amounts of swapping as
+//! well and make more optimal and exhaustive recommendations").
+//!
+//! Extends Alg. 1's per-tile walk into an analytic estimate of swap-in
+//! traffic under a memory limit, without running the page-level simulator:
+//! for every fused task, any byte of its working set beyond what fits next
+//! to the resident base (weights + hot system set) must stream through
+//! memory once per use. The estimate deliberately mirrors the *simulator's*
+//! structure (not its LRU details), so it is validated against
+//! [`crate::simulate`] by rank correlation and band accuracy, exactly as
+//! the paper validates Alg. 1/2 against `vmstat`.
+
+use crate::network::{LayerKind, Network, BYTES_PER_ELEM};
+use crate::plan::{plan_config, MafatConfig, Plan};
+use crate::simulate::SimOptions;
+use anyhow::Result;
+
+/// Predicted swap behaviour of a configuration under a limit.
+#[derive(Debug, Clone, Copy)]
+pub struct SwapPrediction {
+    /// Estimated swap-in bytes for one inference.
+    pub swap_in_bytes: u64,
+    /// Estimated added latency from swapping, seconds.
+    pub swap_stall_s: f64,
+    /// The resident base the estimate assumed (weights + hot set), bytes.
+    pub resident_base_bytes: u64,
+}
+
+/// Estimate swap-in traffic for `plan` under `limit_bytes`.
+///
+/// Model: per group, the *resident base* is the group's weights plus the
+/// hot system set — both touched by every task, so under pressure they are
+/// the survivors (or the thrashers). Each task additionally streams its
+/// per-layer working set `w = in + out + scratch` once. Contributions:
+///
+/// * base overflow: if `base > limit`, every task re-faults the overflow
+///   (`(base - limit)` per task);
+/// * task overflow: each layer's excess of `w + min(base, limit)` over the
+///   limit is streamed in (`gemm_scratch_passes` extra scratch reads give
+///   scratch a weight of `passes`);
+/// * the group input map is re-read across tasks: its excess over what fits
+///   idle is re-faulted once per task ring.
+pub fn predict_swap(
+    net: &Network,
+    plan: &Plan,
+    limit_bytes: u64,
+    opts: &SimOptions,
+) -> SwapPrediction {
+    let hot = opts.system.hot_bytes;
+    let passes = opts.cost.gemm_scratch_passes.max(1) as u64;
+    let mut swap_in = 0u64;
+    let mut base_max = 0u64;
+
+    for group in &plan.groups {
+        let weights = net.group_weight_bytes(group.top, group.bottom);
+        let base = weights + hot;
+        base_max = base_max.max(base);
+        let resident_base = base.min(limit_bytes);
+        let base_overflow = base.saturating_sub(limit_bytes);
+
+        // Group input map: tasks gather disjoint-ish regions, but halo makes
+        // the total read exceed the map; anything beyond the spare capacity
+        // next to the base is a (re-)fault.
+        let top_spec = &net.layers[group.top];
+        let map_bytes = (top_spec.in_w * top_spec.in_h * top_spec.in_c) as u64 * BYTES_PER_ELEM;
+        let spare = limit_bytes.saturating_sub(resident_base);
+
+        for task in &group.tasks {
+            // Every task re-touches the base; if the base itself cannot fit,
+            // the overflow thrashes per task.
+            swap_in += base_overflow;
+
+            // Per-layer streaming working set.
+            for lg in &task.layers {
+                let spec = &net.layers[lg.layer];
+                let input = (lg.in_rect.area() * spec.in_c) as u64 * BYTES_PER_ELEM;
+                let output = (lg.out_rect.area() * spec.out_c) as u64 * BYTES_PER_ELEM;
+                let scratch = match spec.kind {
+                    LayerKind::Conv { size, stride, .. } => {
+                        (lg.out_rect.area() * size * size * spec.in_c / stride) as u64
+                            * BYTES_PER_ELEM
+                    }
+                    LayerKind::MaxPool { .. } => 0,
+                };
+                let working = input + output + scratch * passes;
+                swap_in += working.saturating_sub(spare);
+            }
+
+            // Input-map share beyond spare capacity is a cold read.
+            let tile_share =
+                (task.input_rect().area() * top_spec.in_c) as u64 * BYTES_PER_ELEM;
+            if map_bytes > spare {
+                swap_in += tile_share.min(map_bytes - spare.min(map_bytes));
+            }
+        }
+    }
+
+    SwapPrediction {
+        swap_in_bytes: swap_in,
+        swap_stall_s: swap_in as f64 / opts.cost.swap_in_bytes_per_sec,
+        resident_base_bytes: base_max,
+    }
+}
+
+/// Convenience: predict swap for a config string.
+pub fn predict_swap_config(
+    net: &Network,
+    config: MafatConfig,
+    limit_bytes: u64,
+    opts: &SimOptions,
+) -> Result<SwapPrediction> {
+    let plan = plan_config(net, config)?;
+    Ok(predict_swap(net, &plan, limit_bytes, opts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+    use crate::network::MIB;
+    use crate::simulate::simulate_config;
+
+    #[test]
+    fn no_swap_predicted_when_memory_ample() {
+        let net = yolov2_16();
+        let opts = SimOptions::default();
+        let p =
+            predict_swap_config(&net, MafatConfig::with_cut(5, 8, 2), 256 * MIB, &opts).unwrap();
+        assert_eq!(p.swap_in_bytes, 0, "{p:?}");
+    }
+
+    #[test]
+    fn swap_grows_as_limit_shrinks() {
+        let net = yolov2_16();
+        let opts = SimOptions::default();
+        let mut prev = 0u64;
+        for mb in [96u64, 64, 48, 32, 16] {
+            let p = predict_swap_config(&net, MafatConfig::with_cut(5, 8, 2), mb * MIB, &opts)
+                .unwrap();
+            assert!(p.swap_in_bytes >= prev, "{mb} MB: {p:?}");
+            prev = p.swap_in_bytes;
+        }
+    }
+
+    #[test]
+    fn rank_correlates_with_simulator() {
+        // The estimate must *order* (config, limit) points like the page
+        // simulator does — the property that makes it usable inside a
+        // "more optimal and exhaustive" search (§5).
+        let net = yolov2_16();
+        let opts = SimOptions::default();
+        let mut points = Vec::new();
+        for config in [
+            MafatConfig::no_cut(1),
+            MafatConfig::no_cut(3),
+            MafatConfig::with_cut(2, 8, 2),
+            MafatConfig::with_cut(5, 8, 2),
+            MafatConfig::with_cut(2, 12, 2),
+        ] {
+            for mb in [96u64, 48, 16] {
+                let est = predict_swap_config(&net, config, mb * MIB, &opts)
+                    .unwrap()
+                    .swap_in_bytes as f64;
+                let sim = simulate_config(&net, config, &opts.with_limit_mb(mb))
+                    .unwrap()
+                    .stats
+                    .swap_in_bytes as f64;
+                points.push((est, sim));
+            }
+        }
+        let mut concordant = 0i64;
+        let mut discordant = 0i64;
+        for i in 0..points.len() {
+            for j in i + 1..points.len() {
+                let d = (points[i].0 - points[j].0) * (points[i].1 - points[j].1);
+                if d > 0.0 {
+                    concordant += 1;
+                } else if d < 0.0 {
+                    discordant += 1;
+                }
+            }
+        }
+        let tau = (concordant - discordant) as f64 / (concordant + discordant).max(1) as f64;
+        assert!(tau > 0.55, "swap-predictor rank correlation tau = {tau:.2}");
+    }
+
+    #[test]
+    fn magnitude_within_band_at_tight_limit() {
+        // At 16 MB, the estimate must land within ~3x of the simulated
+        // swap-in for the paper's minimum configuration (an analytic bound,
+        // not a re-run of the simulator).
+        let net = yolov2_16();
+        let opts = SimOptions::default();
+        let est = predict_swap_config(&net, MafatConfig::with_cut(5, 8, 2), 16 * MIB, &opts)
+            .unwrap()
+            .swap_in_bytes as f64;
+        let sim = simulate_config(
+            &net,
+            MafatConfig::with_cut(5, 8, 2),
+            &opts.with_limit_mb(16),
+        )
+        .unwrap()
+        .stats
+        .swap_in_bytes as f64;
+        let ratio = est / sim;
+        assert!(
+            (0.33..3.0).contains(&ratio),
+            "estimate {est:.0} vs simulated {sim:.0}: ratio {ratio:.2}"
+        );
+    }
+}

@@ -1,0 +1,451 @@
+//! Reproduction of every table and figure in the paper's evaluation
+//! (DESIGN.md experiment index). Each `fig_*`/`table_*` function computes
+//! the underlying series; `render_*` pretty-prints them in the same shape
+//! the paper reports. The CLI and the benches both call through here.
+
+use crate::baseline::darknet_trace;
+use crate::network::{Network, MIB};
+use crate::plan::{manual_search_space, MafatConfig};
+use crate::predictor::{predict_mem, PredictorParams};
+use crate::search::get_config;
+use crate::simulate::{
+    mafat_trace, measured_min_limit_mb, run_trace, SimOptions, SimReport, Step,
+};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// The paper's memory sweep (Table 4.1 / Figs. 1.1, 4.1–4.3), in MB.
+pub const MEM_POINTS_MB: [u64; 9] = [256, 192, 128, 96, 80, 64, 48, 32, 16];
+
+fn run_steps(steps: &[Step], limit_mb: Option<u64>, opts: &SimOptions) -> Result<SimReport> {
+    run_trace(steps, limit_mb.map(|m| m * MIB), &opts.cost)
+}
+
+// ---------------------------------------------------------------- Table 2.1
+
+/// Render Table 2.1: per-layer data and sizes.
+pub fn render_table_2_1(net: &Network) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<5} {:<5} {:<14} {:>10} {:>8} {:>8} {:>8} {:>8}",
+        "Layer", "Type", "Dimensions", "Weights", "Input", "Output", "Scratch", "Total"
+    );
+    for (i, l) in net.layers.iter().enumerate() {
+        let mb = |b: u64| b as f64 / MIB as f64;
+        let _ = writeln!(
+            s,
+            "{:<5} {:<5} {:<14} {:>10} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+            i,
+            l.kind.name(),
+            format!("{}x{}x{}", l.in_w, l.in_h, l.in_c),
+            l.weight_bytes(),
+            mb(l.input_bytes()),
+            mb(l.output_bytes()),
+            mb(l.scratch_bytes()),
+            mb(l.total_bytes()),
+        );
+    }
+    let _ = writeln!(s, "(sizes in MiB; weights in bytes — paper Table 2.1)");
+    s
+}
+
+// ----------------------------------------------------------------- Fig. 1.1
+
+/// One point of the Fig. 1.1 sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig11Point {
+    pub limit_mb: u64,
+    pub latency_ms: f64,
+    pub swapped_mb: f64,
+}
+
+/// Fig. 1.1: the original Darknet implementation under decreasing limits.
+pub fn fig_1_1(net: &Network, opts: &SimOptions) -> Result<Vec<Fig11Point>> {
+    let steps = darknet_trace(net, opts);
+    MEM_POINTS_MB
+        .iter()
+        .map(|&mb| {
+            let r = run_steps(&steps, Some(mb), opts)?;
+            Ok(Fig11Point {
+                limit_mb: mb,
+                latency_ms: r.latency_ms(),
+                swapped_mb: r.swapped_mb(),
+            })
+        })
+        .collect()
+}
+
+pub fn render_fig_1_1(points: &[Fig11Point]) -> String {
+    let mut s = String::from("Fig 1.1 - Darknet latency & swap vs memory constraint\n");
+    let _ = writeln!(s, "{:>8} {:>14} {:>14}", "MB", "latency (ms)", "swapped (MB)");
+    for p in points {
+        let _ = writeln!(
+            s,
+            "{:>8} {:>14.0} {:>14.1}",
+            p.limit_mb, p.latency_ms, p.swapped_mb
+        );
+    }
+    s
+}
+
+// ----------------------------------------------------------- Figs. 3.1/3.2
+
+/// One bar pair of Figs. 3.1/3.2: predicted vs simulator-measured minimum
+/// footprint for a configuration.
+#[derive(Debug, Clone)]
+pub struct FootprintPoint {
+    pub config: MafatConfig,
+    pub predicted_mb: f64,
+    pub measured_mb: f64,
+}
+
+fn footprints(
+    net: &Network,
+    configs: &[MafatConfig],
+    opts: &SimOptions,
+    params: &PredictorParams,
+) -> Result<Vec<FootprintPoint>> {
+    configs
+        .iter()
+        .map(|&config| {
+            Ok(FootprintPoint {
+                config,
+                predicted_mb: predict_mem(net, config, params)?.total_mb(),
+                measured_mb: measured_min_limit_mb(net, config, opts)? as f64,
+            })
+        })
+        .collect()
+}
+
+/// Fig. 3.1: fully fused (no cut), tilings 1x1..5x5.
+pub fn fig_3_1(net: &Network, opts: &SimOptions, params: &PredictorParams) -> Result<Vec<FootprintPoint>> {
+    let configs: Vec<MafatConfig> = (1..=5).map(MafatConfig::no_cut).collect();
+    footprints(net, &configs, opts, params)
+}
+
+/// Fig. 3.2: cut at 8, bottom 2x2, top tilings 1x1..5x5.
+pub fn fig_3_2(net: &Network, opts: &SimOptions, params: &PredictorParams) -> Result<Vec<FootprintPoint>> {
+    let configs: Vec<MafatConfig> = (1..=5).map(|t| MafatConfig::with_cut(t, 8, 2)).collect();
+    footprints(net, &configs, opts, params)
+}
+
+pub fn render_footprints(title: &str, points: &[FootprintPoint]) -> String {
+    let mut s = format!("{title}\n");
+    let _ = writeln!(s, "{:<14} {:>14} {:>14}", "config", "predicted MB", "measured MB");
+    for p in points {
+        let _ = writeln!(
+            s,
+            "{:<14} {:>14.1} {:>14.1}",
+            p.config.to_string(),
+            p.predicted_mb,
+            p.measured_mb
+        );
+    }
+    s
+}
+
+// ----------------------------------------------------------------- Fig. 4.1
+
+/// One latency series of Fig. 4.1 (a top tiling, cut 8, bottom 2x2).
+#[derive(Debug, Clone)]
+pub struct LatencySeries {
+    pub label: String,
+    pub config: Option<MafatConfig>,
+    /// (limit MB, latency ms) along [`MEM_POINTS_MB`].
+    pub points: Vec<(u64, f64)>,
+}
+
+/// Fig. 4.1: latency vs memory for top tilings 1..5 with cut 8 / 2x2.
+pub fn fig_4_1(net: &Network, opts: &SimOptions) -> Result<Vec<LatencySeries>> {
+    (1..=5usize)
+        .map(|t| {
+            let config = MafatConfig::with_cut(t, 8, 2);
+            let plan = crate::plan::plan_config(net, config)?;
+            let steps = mafat_trace(net, &plan, opts);
+            let points = MEM_POINTS_MB
+                .iter()
+                .map(|&mb| Ok((mb, run_steps(&steps, Some(mb), opts)?.latency_ms())))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(LatencySeries {
+                label: format!("{t}x{t}/8/2x2"),
+                config: Some(config),
+                points,
+            })
+        })
+        .collect()
+}
+
+pub fn render_series(title: &str, series: &[LatencySeries]) -> String {
+    let mut s = format!("{title}\n");
+    let _ = write!(s, "{:<16}", "config");
+    for mb in MEM_POINTS_MB {
+        let _ = write!(s, "{mb:>9}");
+    }
+    s.push('\n');
+    for line in series {
+        let _ = write!(s, "{:<16}", line.label);
+        for &(_, ms) in &line.points {
+            let _ = write!(s, "{:>9.0}", ms);
+        }
+        s.push('\n');
+    }
+    let _ = writeln!(s, "(latency in ms; columns are memory limits in MB)");
+    s
+}
+
+// ----------------------------------------------------------------- Fig. 4.2
+
+/// Fig. 4.2: per cut/bottom-tiling, the best ("min") top tiling per memory
+/// point. Returns one series per (cut, bottom) with the chosen top tiling
+/// annotated in the label of each point.
+pub struct Fig42Series {
+    pub label: String,
+    /// (limit MB, best latency ms, best top tiling).
+    pub points: Vec<(u64, f64, usize)>,
+}
+
+pub fn fig_4_2(net: &Network, opts: &SimOptions) -> Result<Vec<Fig42Series>> {
+    // (cut, bottom) combos the paper plots: no cut, 4/2x2, 8/2x2, 8/3x3,
+    // 12/2x2.
+    let combos: Vec<(Option<usize>, usize, String)> = vec![
+        (None, 1, "min/NoCut".into()),
+        (Some(4), 2, "min/4/2x2".into()),
+        (Some(8), 2, "min/8/2x2".into()),
+        (Some(8), 3, "min/8/3x3".into()),
+        (Some(12), 2, "min/12/2x2".into()),
+    ];
+    let mut out = Vec::new();
+    for (cut, bottom, label) in combos {
+        // Pre-build traces for each top tiling.
+        let mut traces = Vec::new();
+        for t in 1..=5usize {
+            let config = match cut {
+                None => MafatConfig::no_cut(t),
+                Some(c) => MafatConfig::with_cut(t, c, bottom),
+            };
+            let plan = crate::plan::plan_config(net, config)?;
+            traces.push((t, mafat_trace(net, &plan, opts)));
+        }
+        let mut points = Vec::new();
+        for &mb in &MEM_POINTS_MB {
+            let mut best = (f64::INFINITY, 0usize);
+            for (t, steps) in &traces {
+                let ms = run_steps(steps, Some(mb), opts)?.latency_ms();
+                if ms < best.0 {
+                    best = (ms, *t);
+                }
+            }
+            points.push((mb, best.0, best.1));
+        }
+        out.push(Fig42Series { label, points });
+    }
+    Ok(out)
+}
+
+pub fn render_fig_4_2(series: &[Fig42Series]) -> String {
+    let mut s = String::from("Fig 4.2 - Latency for different cut configurations (best top tiling)\n");
+    let _ = write!(s, "{:<12}", "series");
+    for mb in MEM_POINTS_MB {
+        let _ = write!(s, "{mb:>12}");
+    }
+    s.push('\n');
+    for line in series {
+        let _ = write!(s, "{:<12}", line.label);
+        for &(_, ms, t) in &line.points {
+            let _ = write!(s, "{:>7.0}[{}x{}]", ms, t, t);
+        }
+        s.push('\n');
+    }
+    let _ = writeln!(s, "(latency ms [chosen top tiling]; columns = memory limit MB)");
+    s
+}
+
+// --------------------------------------------------- Fig. 4.3 / Table 4.1
+
+/// One row of Table 4.1 (plus the swap/darknet series of Fig. 4.3).
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    pub limit_mb: u64,
+    pub darknet_ms: f64,
+    pub darknet_swapped_mb: f64,
+    pub best_config: MafatConfig,
+    pub best_ms: f64,
+    pub best_swapped_mb: f64,
+    pub algo_config: MafatConfig,
+    pub algo_ms: f64,
+}
+
+/// Compute Fig. 4.3 + Table 4.1 in one pass: for every memory point, the
+/// Darknet baseline, the best configuration found by exhaustive manual
+/// exploration (paper §4.3), and the configuration chosen by Algorithm 3.
+pub fn comparison(
+    net: &Network,
+    opts: &SimOptions,
+    params: &PredictorParams,
+) -> Result<Vec<ComparisonRow>> {
+    // Pre-build all traces once (35 configs + darknet).
+    let space = manual_search_space(net);
+    let mut traces = Vec::with_capacity(space.len());
+    for &config in &space {
+        let plan = crate::plan::plan_config(net, config)?;
+        traces.push((config, mafat_trace(net, &plan, opts)));
+    }
+    let darknet = darknet_trace(net, opts);
+
+    let mut rows = Vec::new();
+    for &mb in &MEM_POINTS_MB {
+        let d = run_steps(&darknet, Some(mb), opts)?;
+        let mut best: Option<(MafatConfig, SimReport)> = None;
+        for (config, steps) in &traces {
+            let r = run_steps(steps, Some(mb), opts)?;
+            if best.as_ref().map_or(true, |(_, b)| r.latency_s < b.latency_s) {
+                best = Some((*config, r));
+            }
+        }
+        let (best_config, best_r) = best.unwrap();
+        let algo = get_config(net, mb * MIB, params)?;
+        let algo_plan = crate::plan::plan_config(net, algo.config)?;
+        let algo_steps = mafat_trace(net, &algo_plan, opts);
+        let algo_r = run_steps(&algo_steps, Some(mb), opts)?;
+        rows.push(ComparisonRow {
+            limit_mb: mb,
+            darknet_ms: d.latency_ms(),
+            darknet_swapped_mb: d.swapped_mb(),
+            best_config,
+            best_ms: best_r.latency_ms(),
+            best_swapped_mb: best_r.swapped_mb(),
+            algo_config: algo.config,
+            algo_ms: algo_r.latency_ms(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render_table_4_1(rows: &[ComparisonRow]) -> String {
+    let mut s = String::from("Table 4.1 - Best measured vs algorithm configurations\n");
+    let _ = writeln!(
+        s,
+        "{:>5} | {:<14} {:>12} | {:<14} {:>12}",
+        "MB", "Best config", "latency(ms)", "Algo config", "latency(ms)"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:>5} | {:<14} {:>12.0} | {:<14} {:>12.0}",
+            r.limit_mb,
+            r.best_config.to_string(),
+            r.best_ms,
+            r.algo_config.to_string(),
+            r.algo_ms
+        );
+    }
+    s
+}
+
+pub fn render_fig_4_3(rows: &[ComparisonRow]) -> String {
+    let mut s = String::from("Fig 4.3 - Darknet vs best-measured vs algorithm\n");
+    let _ = writeln!(
+        s,
+        "{:>5} {:>13} {:>13} {:>13} {:>12} {:>12}",
+        "MB", "darknet(ms)", "best(ms)", "algo(ms)", "dk swap(MB)", "best swap(MB)"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:>5} {:>13.0} {:>13.0} {:>13.0} {:>12.1} {:>12.1}",
+            r.limit_mb, r.darknet_ms, r.best_ms, r.algo_ms, r.darknet_swapped_mb, r.best_swapped_mb
+        );
+    }
+    s
+}
+
+/// Headline claims (§5): speedup vs Darknet at 64 MB and 16 MB, and the
+/// algorithm's gap to the best measured configuration.
+pub struct Headline {
+    pub speedup_64mb: f64,
+    pub speedup_16mb: f64,
+    pub max_algo_gap_pct: f64,
+}
+
+pub fn headline(rows: &[ComparisonRow]) -> Headline {
+    let at = |mb: u64| rows.iter().find(|r| r.limit_mb == mb).expect("mem point");
+    let gap = rows
+        .iter()
+        .map(|r| (r.algo_ms - r.best_ms) / r.best_ms * 100.0)
+        .fold(f64::MIN, f64::max);
+    Headline {
+        speedup_64mb: at(64).darknet_ms / at(64).best_ms,
+        speedup_16mb: at(16).darknet_ms / at(16).best_ms,
+        max_algo_gap_pct: gap,
+    }
+}
+
+pub fn render_headline(h: &Headline) -> String {
+    format!(
+        "Headline (paper §5: 1.37x @64MB, 2.78x @16MB, algorithm within 6%):\n\
+         speedup vs Darknet @64MB: {:.2}x\n\
+         speedup vs Darknet @16MB: {:.2}x\n\
+         worst algorithm-vs-best gap: {:.1}%\n",
+        h.speedup_64mb, h.speedup_16mb, h.max_algo_gap_pct
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+
+    #[test]
+    fn table_2_1_renders_all_rows() {
+        let s = render_table_2_1(&yolov2_16());
+        assert_eq!(s.lines().count(), 16 + 2);
+        assert!(s.contains("608x608x3"));
+        assert!(s.contains("101.53") || s.contains("101.52"));
+    }
+
+    #[test]
+    fn fig_1_1_monotone() {
+        let net = yolov2_16();
+        let pts = fig_1_1(&net, &SimOptions::default()).unwrap();
+        assert_eq!(pts.len(), MEM_POINTS_MB.len());
+        for w in pts.windows(2) {
+            // Memory shrinks along the sweep; latency must not shrink.
+            assert!(w[1].latency_ms >= w[0].latency_ms * 0.98);
+        }
+    }
+
+    #[test]
+    fn fig_3_1_predictions_decrease_with_tiling() {
+        let net = yolov2_16();
+        let pts = fig_3_1(&net, &SimOptions::default(), &PredictorParams::default()).unwrap();
+        for w in pts.windows(2) {
+            assert!(w[1].predicted_mb <= w[0].predicted_mb + 1e-9);
+        }
+        // Measured tracks predicted within the documented band.
+        for p in &pts {
+            let ratio = p.measured_mb / p.predicted_mb;
+            assert!((0.5..1.4).contains(&ratio), "{}: {ratio}", p.config);
+        }
+    }
+
+    #[test]
+    fn fig_4_1_fine_tilings_win_at_tight_memory() {
+        let net = yolov2_16();
+        let series = fig_4_1(&net, &SimOptions::default()).unwrap();
+        let at = |label: &str, mb: u64| -> f64 {
+            series
+                .iter()
+                .find(|s| s.label.starts_with(label))
+                .unwrap()
+                .points
+                .iter()
+                .find(|(m, _)| *m == mb)
+                .unwrap()
+                .1
+        };
+        // Paper Fig 4.1: 1x1 best at 256 MB, 4x4/5x5 best at 16 MB.
+        assert!(at("1x1", 256) < at("5x5", 256));
+        assert!(at("5x5", 16) < at("1x1", 16));
+    }
+}

@@ -1,0 +1,322 @@
+//! Data reuse between adjacent fused tiles — DeepThings §2.1.3 as used by
+//! MAFAT.
+//!
+//! Fusing makes adjacent tasks recompute each other's halo. With data reuse,
+//! tiles execute in a checkerboard order ("every other tile", paper §2.1.3):
+//! the *even* tiles ((i+j) % 2 == 0) run first and publish their boundary
+//! data; the *odd* tiles then skip every output cell a completed neighbor
+//! already produced. This module provides
+//!
+//! * the reuse-aware schedule ([`schedule_order`]),
+//! * exact per-task/per-layer savings accounting ([`reuse_analysis`]) used
+//!   by the latency simulator, and
+//! * the boundary-buffer footprint estimate the scheduler must keep live.
+
+use crate::ftp::{GroupPlan, Rect};
+use crate::network::{LayerKind, Network, BYTES_PER_ELEM};
+
+/// Execution order for a group's tasks implementing the paper's reuse
+/// schedule: checkerboard-even tiles first (row-major), then odd tiles.
+/// Without reuse the natural row-major order is used; the checkerboard is
+/// also valid then, so we always return it.
+pub fn schedule_order(group: &GroupPlan) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..group.tasks.len()).collect();
+    order.sort_by_key(|&ix| {
+        let t = &group.tasks[ix];
+        let parity = (t.grid_i + t.grid_j) % 2;
+        (parity, t.grid_j, t.grid_i)
+    });
+    order
+}
+
+/// Area of `target` covered by the union of `covers` (exact, via coordinate
+/// compression — all inputs are axis-aligned rects).
+fn covered_area(target: &Rect, covers: &[Rect]) -> usize {
+    let clipped: Vec<Rect> = covers
+        .iter()
+        .map(|c| c.intersect(target))
+        .filter(|c| !c.is_empty())
+        .collect();
+    if clipped.is_empty() {
+        return 0;
+    }
+    let mut xs: Vec<usize> = clipped.iter().flat_map(|r| [r.x0, r.x1]).collect();
+    let mut ys: Vec<usize> = clipped.iter().flat_map(|r| [r.y0, r.y1]).collect();
+    xs.sort_unstable();
+    xs.dedup();
+    ys.sort_unstable();
+    ys.dedup();
+    let mut area = 0usize;
+    for xi in 0..xs.len() - 1 {
+        for yi in 0..ys.len() - 1 {
+            let (cx0, cx1, cy0, cy1) = (xs[xi], xs[xi + 1], ys[yi], ys[yi + 1]);
+            if clipped
+                .iter()
+                .any(|r| r.x0 <= cx0 && r.x1 >= cx1 && r.y0 <= cy0 && r.y1 >= cy1)
+            {
+                area += (cx1 - cx0) * (cy1 - cy0);
+            }
+        }
+    }
+    area
+}
+
+/// Per-task outcome of reuse analysis.
+#[derive(Debug, Clone)]
+pub struct TaskReuse {
+    /// Index into `group.tasks`.
+    pub task_ix: usize,
+    /// Per layer (execution order): output elements actually computed by
+    /// this task after subtracting regions published by earlier neighbors.
+    pub computed_out_elems: Vec<u64>,
+    /// Per layer (execution order): MACs actually performed.
+    pub macs_per_layer: Vec<u64>,
+    /// MACs actually performed (reuse-adjusted), summed over layers.
+    pub macs: u64,
+    /// Elements this task *reused* from earlier tasks (its swap-free input
+    /// from the boundary buffer).
+    pub reused_elems: u64,
+    /// Bytes of halo data this task publishes to the boundary buffer for
+    /// later neighbors.
+    pub published_bytes: u64,
+}
+
+/// Group-level reuse analysis.
+#[derive(Debug, Clone)]
+pub struct ReuseStats {
+    /// In schedule order.
+    pub tasks: Vec<TaskReuse>,
+    /// MACs with reuse across the group.
+    pub total_macs: u64,
+    /// MACs without reuse (every task computes its full halo).
+    pub naive_macs: u64,
+    /// Peak bytes of boundary data the scheduler keeps live for reuse.
+    pub peak_boundary_bytes: u64,
+}
+
+impl ReuseStats {
+    pub fn saved_macs(&self) -> u64 {
+        self.naive_macs - self.total_macs
+    }
+}
+
+/// Exact reuse accounting for one layer group.
+///
+/// For each task in schedule order and each layer, the cells of the task's
+/// required output region that an *earlier-scheduled* task also produces
+/// are reused, not recomputed. (Earlier tasks always produce their full
+/// required regions — a reused cell was itself produced by the earliest
+/// producer.)
+pub fn reuse_analysis(net: &Network, group: &GroupPlan) -> ReuseStats {
+    let order = schedule_order(group);
+    let n_layers = group.bottom - group.top + 1;
+    let mut tasks_out: Vec<TaskReuse> = Vec::with_capacity(order.len());
+    let mut total_macs = 0u64;
+    let mut naive_macs = 0u64;
+    let mut boundary_elems_live = 0u64;
+    let mut peak_boundary = 0u64;
+
+    for (pos, &ix) in order.iter().enumerate() {
+        let task = &group.tasks[ix];
+        let mut computed = Vec::with_capacity(n_layers);
+        let mut macs_per_layer = Vec::with_capacity(n_layers);
+        let mut macs = 0u64;
+        let mut reused = 0u64;
+        for (li, lg) in task.layers.iter().enumerate() {
+            let spec = &net.layers[lg.layer];
+            // Regions produced at this layer by earlier tasks.
+            let earlier: Vec<Rect> = order[..pos]
+                .iter()
+                .map(|&e| group.tasks[e].layers[li].out_rect)
+                .collect();
+            let total_area = lg.out_rect.area();
+            let covered = covered_area(&lg.out_rect, &earlier);
+            let own_area = total_area - covered;
+            let per_out: u64 = match spec.kind {
+                LayerKind::Conv { size, .. } => (size * size * spec.in_c * spec.out_c) as u64,
+                LayerKind::MaxPool { size, .. } => (size * size * spec.out_c) as u64,
+            };
+            let layer_macs = own_area as u64 * per_out;
+            macs += layer_macs;
+            macs_per_layer.push(layer_macs);
+            naive_macs += total_area as u64 * per_out;
+            reused += covered as u64 * spec.out_c as u64;
+            computed.push(own_area as u64 * spec.out_c as u64);
+        }
+        total_macs += macs;
+
+        // Boundary bookkeeping: a task's published halo (the parts of its
+        // per-layer outputs outside its grid column/row share) stays live
+        // until the last neighbor consumes it. We track the running total of
+        // published overlap and treat the high-water mark as the buffer.
+        // Published halo = per-layer output area beyond this tile's
+        // exclusive 1/(n*m) share of the layer's map (the grid is even, so
+        // the exclusive share at any layer is area/(n*m) up to rounding).
+        let share_denom = (group.n * group.m) as u64;
+        let published: u64 = task
+            .layers
+            .iter()
+            .map(|lg| {
+                let spec = &net.layers[lg.layer];
+                let map_area = (spec.out_w * spec.out_h) as u64;
+                let exclusive = map_area / share_denom;
+                let halo = (lg.out_rect.area() as u64).saturating_sub(exclusive);
+                halo * spec.out_c as u64 * BYTES_PER_ELEM
+            })
+            .sum();
+        if (task.grid_i + task.grid_j) % 2 == 0 {
+            boundary_elems_live += published;
+            peak_boundary = peak_boundary.max(boundary_elems_live);
+        } else {
+            // Odd tiles consume; release a proportional share.
+            boundary_elems_live = boundary_elems_live.saturating_sub(published);
+        }
+
+        tasks_out.push(TaskReuse {
+            task_ix: ix,
+            computed_out_elems: computed,
+            macs_per_layer,
+            macs,
+            reused_elems: reused,
+            published_bytes: published,
+        });
+    }
+
+    ReuseStats {
+        tasks: tasks_out,
+        total_macs,
+        naive_macs,
+        peak_boundary_bytes: peak_boundary,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftp::plan_group;
+    use crate::network::yolov2::yolov2_16;
+
+    #[test]
+    fn covered_area_basic() {
+        let t = Rect::new(0, 0, 10, 10);
+        assert_eq!(covered_area(&t, &[]), 0);
+        assert_eq!(covered_area(&t, &[Rect::new(0, 0, 10, 10)]), 100);
+        assert_eq!(covered_area(&t, &[Rect::new(5, 0, 15, 10)]), 50);
+        // Two overlapping covers are not double counted.
+        assert_eq!(
+            covered_area(&t, &[Rect::new(0, 0, 6, 10), Rect::new(4, 0, 10, 10)]),
+            100
+        );
+        // Disjoint covers add up.
+        assert_eq!(
+            covered_area(&t, &[Rect::new(0, 0, 3, 10), Rect::new(7, 0, 10, 10)]),
+            60
+        );
+    }
+
+    #[test]
+    fn checkerboard_order_even_first() {
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 7, 3, 3).unwrap();
+        let order = schedule_order(&g);
+        let parities: Vec<usize> = order
+            .iter()
+            .map(|&ix| (g.tasks[ix].grid_i + g.tasks[ix].grid_j) % 2)
+            .collect();
+        // All 0s then all 1s.
+        let first_odd = parities.iter().position(|&p| p == 1).unwrap();
+        assert!(parities[..first_odd].iter().all(|&p| p == 0));
+        assert!(parities[first_odd..].iter().all(|&p| p == 1));
+        // 3x3 checkerboard: 5 even, 4 odd.
+        assert_eq!(first_odd, 5);
+    }
+
+    #[test]
+    fn reuse_saves_macs_only_with_tiling() {
+        let net = yolov2_16();
+        let g1 = plan_group(&net, 0, 7, 1, 1).unwrap();
+        let r1 = reuse_analysis(&net, &g1);
+        assert_eq!(r1.saved_macs(), 0, "single tile has nothing to reuse");
+
+        let g3 = plan_group(&net, 0, 7, 3, 3).unwrap();
+        let r3 = reuse_analysis(&net, &g3);
+        assert!(r3.saved_macs() > 0);
+        assert!(r3.total_macs < r3.naive_macs);
+    }
+
+    #[test]
+    fn reuse_approaches_untiled_compute() {
+        // Paper §2.1.3: reuse gives fused tilings "comparable computational
+        // complexity to the original". With full reuse, total MACs must be
+        // well below naive and within ~12% of the untiled group.
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 7, 5, 5).unwrap();
+        let r = reuse_analysis(&net, &g);
+        let untiled: u64 = plan_group(&net, 0, 7, 1, 1).unwrap().tasks[0].macs(&net);
+        let ratio = r.total_macs as f64 / untiled as f64;
+        assert!(
+            (1.0..1.12).contains(&ratio),
+            "reuse-adjusted / untiled = {ratio}"
+        );
+        let naive_ratio = r.naive_macs as f64 / untiled as f64;
+        assert!(naive_ratio > ratio, "naive {naive_ratio} <= reuse {ratio}");
+    }
+
+    #[test]
+    fn first_scheduled_task_computes_everything() {
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 7, 3, 3).unwrap();
+        let r = reuse_analysis(&net, &g);
+        let first = &r.tasks[0];
+        let t = &g.tasks[first.task_ix];
+        assert_eq!(first.reused_elems, 0);
+        assert_eq!(first.macs, t.macs(&net));
+    }
+
+    #[test]
+    fn odd_tiles_reuse_something() {
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 7, 3, 3).unwrap();
+        let r = reuse_analysis(&net, &g);
+        // Every odd-parity task must reuse at least one element (it has at
+        // least one even neighbor that ran first).
+        for tr in &r.tasks {
+            let t = &g.tasks[tr.task_ix];
+            if (t.grid_i + t.grid_j) % 2 == 1 {
+                assert!(tr.reused_elems > 0, "tile ({},{})", t.grid_i, t.grid_j);
+            }
+        }
+    }
+
+    #[test]
+    fn max_reuser_is_odd_parity() {
+        // Odd-parity tiles run after all even tiles and have the most
+        // published neighbors; the biggest reuser must be one of them.
+        // (The paper's §3 observation — the 3x3 *center* tile reuses
+        // nothing when it runs first — holds here too: (1,1) is even
+        // parity and reuses only from the two corners scheduled before it.)
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 7, 3, 3).unwrap();
+        let r = reuse_analysis(&net, &g);
+        let max = r.tasks.iter().max_by_key(|t| t.reused_elems).unwrap();
+        let t = &g.tasks[max.task_ix];
+        assert_eq!(
+            (t.grid_i + t.grid_j) % 2,
+            1,
+            "max reuser is ({},{})",
+            t.grid_i,
+            t.grid_j
+        );
+        // And the center computes strictly less than the first-scheduled
+        // corner's full workload once its corner neighbors have published.
+        let center = r
+            .tasks
+            .iter()
+            .find(|tr| {
+                let t = &g.tasks[tr.task_ix];
+                (t.grid_i, t.grid_j) == (1, 1)
+            })
+            .unwrap();
+        assert!(center.reused_elems > 0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Geometry export: the bridge from the Rust tiler (the single source of
+//! truth for all tiling/fusing geometry) to the Python AOT pipeline.
+//!
+//! `make artifacts` runs `mafat export-geometry`, feeds the JSON to
+//! `python/compile/aot.py`, which lowers one HLO module per tile-shape
+//! class and writes `artifacts/manifest.json` back. The manifest echoes the
+//! geometry so [`super::manifest`] can cross-check it against a freshly
+//! planned configuration (any drift is a hard error, not a silent wrong
+//! answer).
+
+use crate::ftp::TaskGeom;
+use crate::jsonlite::Json;
+use crate::network::{LayerKind, Network};
+use crate::plan::{plan_config, MafatConfig};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// What to export for one network.
+pub struct ExportSpec<'a> {
+    pub net: &'a Network,
+    pub configs: Vec<MafatConfig>,
+    /// Also emit the untiled full-network forward (the engine's
+    /// verification oracle).
+    pub emit_full: bool,
+}
+
+fn layer_kind_json(kind: &LayerKind) -> Json {
+    match *kind {
+        LayerKind::Conv {
+            filters,
+            size,
+            stride,
+            pad,
+        } => Json::obj(vec![
+            ("kind", Json::str("conv")),
+            ("filters", Json::num(filters as f64)),
+            ("size", Json::num(size as f64)),
+            ("stride", Json::num(stride as f64)),
+            ("pad", Json::num(pad as f64)),
+        ]),
+        LayerKind::MaxPool { size, stride } => Json::obj(vec![
+            ("kind", Json::str("max")),
+            ("size", Json::num(size as f64)),
+            ("stride", Json::num(stride as f64)),
+        ]),
+    }
+}
+
+fn rect_json(r: &crate::ftp::Rect) -> Json {
+    Json::arr(vec![
+        Json::num(r.x0 as f64),
+        Json::num(r.y0 as f64),
+        Json::num(r.x1 as f64),
+        Json::num(r.y1 as f64),
+    ])
+}
+
+/// Per-layer geometry of a task (shared by every task in its class).
+fn task_layers_json(task: &TaskGeom) -> Json {
+    Json::arr(
+        task.layers
+            .iter()
+            .map(|lg| {
+                Json::obj(vec![
+                    ("layer", Json::num(lg.layer as f64)),
+                    ("in_w", Json::num(lg.in_rect.w() as f64)),
+                    ("in_h", Json::num(lg.in_rect.h() as f64)),
+                    ("out_w", Json::num(lg.out_rect.w() as f64)),
+                    ("out_h", Json::num(lg.out_rect.h() as f64)),
+                    ("pt", Json::num(lg.pad.top as f64)),
+                    ("pb", Json::num(lg.pad.bottom as f64)),
+                    ("pl", Json::num(lg.pad.left as f64)),
+                    ("pr", Json::num(lg.pad.right as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Build the export JSON for a set of networks/configs.
+pub fn export_geometry(specs: &[ExportSpec<'_>]) -> Result<Json> {
+    let mut networks = Vec::new();
+    for spec in specs {
+        let net = spec.net;
+        let mut configs = Vec::new();
+        for &config in &spec.configs {
+            let plan = plan_config(net, config)?;
+            let mut groups = Vec::new();
+            for (gi, group) in plan.groups.iter().enumerate() {
+                // Dedupe tasks into shape classes.
+                let mut classes: BTreeMap<String, Json> = BTreeMap::new();
+                let mut tasks = Vec::new();
+                for task in &group.tasks {
+                    let key = task.class_key().short_name();
+                    classes
+                        .entry(key.clone())
+                        .or_insert_with(|| {
+                            Json::obj(vec![
+                                ("key", Json::str(key.clone())),
+                                ("layers", task_layers_json(task)),
+                            ])
+                        });
+                    tasks.push(Json::obj(vec![
+                        ("i", Json::num(task.grid_i as f64)),
+                        ("j", Json::num(task.grid_j as f64)),
+                        ("class", Json::str(key)),
+                        ("in_rect", rect_json(&task.input_rect())),
+                        ("out_rect", rect_json(&task.output_rect())),
+                    ]));
+                }
+                groups.push(Json::obj(vec![
+                    ("gi", Json::num(gi as f64)),
+                    ("top", Json::num(group.top as f64)),
+                    ("bottom", Json::num(group.bottom as f64)),
+                    ("n", Json::num(group.n as f64)),
+                    ("m", Json::num(group.m as f64)),
+                    ("classes", Json::Arr(classes.into_values().collect())),
+                    ("tasks", Json::Arr(tasks)),
+                ]));
+            }
+            configs.push(Json::obj(vec![
+                ("config", Json::str(config.to_string())),
+                ("groups", Json::Arr(groups)),
+            ]));
+        }
+        networks.push(Json::obj(vec![
+            ("name", Json::str(net.name.clone())),
+            ("in_w", Json::num(net.in_w as f64)),
+            ("in_h", Json::num(net.in_h as f64)),
+            ("in_c", Json::num(net.in_c as f64)),
+            (
+                "layers",
+                Json::arr(net.layers.iter().map(|l| layer_kind_json(&l.kind)).collect()),
+            ),
+            ("emit_full", Json::Bool(spec.emit_full)),
+            ("configs", Json::Arr(configs)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("networks", Json::Arr(networks)),
+    ]))
+}
+
+/// The default artifact set: the scaled YOLOv2-16 with the configurations
+/// the examples/integration tests exercise.
+pub fn default_export() -> Result<Json> {
+    let net = crate::network::yolov2::yolov2_16_scaled(160);
+    let configs = vec![
+        MafatConfig::no_cut(1),
+        MafatConfig::no_cut(2),
+        MafatConfig::with_cut(3, 8, 2),
+        MafatConfig::with_cut(5, 8, 2),
+        MafatConfig::with_cut(2, 12, 2),
+    ];
+    export_geometry(&[ExportSpec {
+        net: &net,
+        configs,
+        emit_full: true,
+    }])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16_scaled;
+
+    #[test]
+    fn export_structure() {
+        let j = default_export().unwrap();
+        let nets = j.get("networks").unwrap().as_arr().unwrap();
+        assert_eq!(nets.len(), 1);
+        let net = &nets[0];
+        assert_eq!(net.usize_at("in_w").unwrap(), 160);
+        assert_eq!(net.get("layers").unwrap().as_arr().unwrap().len(), 16);
+        let configs = net.get("configs").unwrap().as_arr().unwrap();
+        assert_eq!(configs.len(), 5);
+        // 5x5/8/2x2 has two groups; classes deduped below task count.
+        let c552 = configs
+            .iter()
+            .find(|c| c.str_at("config").unwrap() == "5x5/8/2x2")
+            .unwrap();
+        let groups = c552.get("groups").unwrap().as_arr().unwrap();
+        assert_eq!(groups.len(), 2);
+        let g0 = &groups[0];
+        let n_tasks = g0.get("tasks").unwrap().as_arr().unwrap().len();
+        let n_classes = g0.get("classes").unwrap().as_arr().unwrap().len();
+        assert_eq!(n_tasks, 25);
+        assert!(n_classes < n_tasks, "{n_classes} classes");
+    }
+
+    #[test]
+    fn export_parses_back() {
+        let j = default_export().unwrap();
+        let text = j.to_string_pretty();
+        let back = crate::jsonlite::Json::parse(&text).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn every_task_class_is_defined() {
+        let j = export_geometry(&[ExportSpec {
+            net: &yolov2_16_scaled(160),
+            configs: vec![MafatConfig::with_cut(4, 8, 3)],
+            emit_full: false,
+        }])
+        .unwrap();
+        let net = &j.get("networks").unwrap().as_arr().unwrap()[0];
+        for cfg in net.get("configs").unwrap().as_arr().unwrap() {
+            for g in cfg.get("groups").unwrap().as_arr().unwrap() {
+                let classes: Vec<&str> = g
+                    .get("classes")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|c| c.str_at("key").unwrap())
+                    .collect();
+                for t in g.get("tasks").unwrap().as_arr().unwrap() {
+                    assert!(classes.contains(&t.str_at("class").unwrap()));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,445 @@
+//! The artifact manifest written by `python/compile/aot.py`, plus the
+//! geometry cross-check against a freshly planned configuration.
+
+use crate::ftp::Rect;
+use crate::jsonlite::Json;
+use crate::network::{LayerKind, Network};
+use crate::plan::{plan_config, MafatConfig};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One compiled tile-shape class: the HLO file plus its I/O shapes (HWC).
+#[derive(Debug, Clone)]
+pub struct ClassEntry {
+    pub key: String,
+    pub path: String,
+    pub in_shape: [usize; 3],  // h, w, c
+    pub out_shape: [usize; 3], // h, w, c
+}
+
+/// One task instance of a group.
+#[derive(Debug, Clone)]
+pub struct TaskEntry {
+    pub i: usize,
+    pub j: usize,
+    pub class: String,
+    pub in_rect: Rect,
+    pub out_rect: Rect,
+}
+
+/// One fused layer group of a configuration.
+#[derive(Debug, Clone)]
+pub struct GroupEntry {
+    pub gi: usize,
+    pub top: usize,
+    pub bottom: usize,
+    pub n: usize,
+    pub m: usize,
+    pub classes: HashMap<String, ClassEntry>,
+    pub tasks: Vec<TaskEntry>,
+}
+
+/// One compiled configuration.
+#[derive(Debug, Clone)]
+pub struct ConfigEntry {
+    pub config: MafatConfig,
+    pub groups: Vec<GroupEntry>,
+}
+
+/// The untiled full-network module (verification oracle).
+#[derive(Debug, Clone)]
+pub struct FullEntry {
+    pub path: String,
+    pub in_shape: [usize; 3],
+    pub out_shape: [usize; 3],
+}
+
+/// One network of the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestNetwork {
+    pub name: String,
+    pub in_w: usize,
+    pub in_h: usize,
+    pub in_c: usize,
+    pub ops: Vec<LayerKind>,
+    pub full: Option<FullEntry>,
+    pub configs: Vec<ConfigEntry>,
+}
+
+impl ManifestNetwork {
+    /// Rebuild the shape-resolved [`Network`] from the manifest ops.
+    pub fn network(&self) -> Network {
+        Network::from_ops(&self.name, self.in_w, self.in_h, self.in_c, &self.ops)
+    }
+
+    pub fn find_config(&self, config: MafatConfig) -> Result<&ConfigEntry> {
+        self.configs
+            .iter()
+            .find(|c| c.config == config)
+            .with_context(|| {
+                format!(
+                    "config {config} not in manifest (have: {})",
+                    self.configs
+                        .iter()
+                        .map(|c| c.config.to_string())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Cross-check the manifest geometry against a freshly planned
+    /// configuration — any drift between the Rust tiler and the artifacts
+    /// is a hard error.
+    pub fn verify_geometry(&self, config: MafatConfig) -> Result<()> {
+        let net = self.network();
+        net.validate()?;
+        let entry = self.find_config(config)?;
+        let plan = plan_config(&net, config)?;
+        if plan.groups.len() != entry.groups.len() {
+            bail!("group count mismatch");
+        }
+        for (pg, mg) in plan.groups.iter().zip(&entry.groups) {
+            if (pg.top, pg.bottom, pg.n, pg.m) != (mg.top, mg.bottom, mg.n, mg.m) {
+                bail!(
+                    "group shape mismatch: planned ({},{},{},{}) manifest ({},{},{},{})",
+                    pg.top, pg.bottom, pg.n, pg.m, mg.top, mg.bottom, mg.n, mg.m
+                );
+            }
+            if pg.tasks.len() != mg.tasks.len() {
+                bail!("task count mismatch in group {}", mg.gi);
+            }
+            for (pt, mt) in pg.tasks.iter().zip(&mg.tasks) {
+                if (pt.grid_i, pt.grid_j) != (mt.i, mt.j)
+                    || pt.input_rect() != mt.in_rect
+                    || pt.output_rect() != mt.out_rect
+                {
+                    bail!(
+                        "task ({},{}) geometry drift: planned in {} out {}, manifest in {} out {}",
+                        pt.grid_i, pt.grid_j,
+                        pt.input_rect(), pt.output_rect(),
+                        mt.in_rect, mt.out_rect
+                    );
+                }
+                if pt.class_key().short_name() != mt.class {
+                    bail!("task ({},{}) class-key drift", pt.grid_i, pt.grid_j);
+                }
+                let class = mg
+                    .classes
+                    .get(&mt.class)
+                    .with_context(|| format!("missing class {}", mt.class))?;
+                let ir = pt.input_rect();
+                let in_c = net.layers[pg.top].in_c;
+                if class.in_shape != [ir.h(), ir.w(), in_c] {
+                    bail!(
+                        "class {} input shape {:?} != task input {:?}",
+                        mt.class,
+                        class.in_shape,
+                        [ir.h(), ir.w(), in_c]
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub networks: Vec<ManifestNetwork>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} - did you run `make artifacts`?",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut networks = Vec::new();
+        for n in j.get("networks")?.as_arr()? {
+            networks.push(parse_network(n)?);
+        }
+        Ok(Manifest { networks })
+    }
+
+    pub fn find_network(&self, name: &str) -> Result<&ManifestNetwork> {
+        self.networks
+            .iter()
+            .find(|n| n.name == name)
+            .with_context(|| format!("network '{name}' not in manifest"))
+    }
+
+    /// The only network, when there is exactly one (the common case).
+    pub fn sole_network(&self) -> Result<&ManifestNetwork> {
+        match self.networks.as_slice() {
+            [one] => Ok(one),
+            many => bail!("expected exactly one network in manifest, found {}", many.len()),
+        }
+    }
+}
+
+fn parse_ops(layers: &Json) -> Result<Vec<LayerKind>> {
+    layers
+        .as_arr()?
+        .iter()
+        .map(|l| {
+            Ok(match l.str_at("kind")? {
+                "conv" => LayerKind::Conv {
+                    filters: l.usize_at("filters")?,
+                    size: l.usize_at("size")?,
+                    stride: l.usize_at("stride")?,
+                    pad: l.usize_at("pad")?,
+                },
+                "max" => LayerKind::MaxPool {
+                    size: l.usize_at("size")?,
+                    stride: l.usize_at("stride")?,
+                },
+                other => bail!("unknown layer kind {other:?}"),
+            })
+        })
+        .collect()
+}
+
+fn parse_shape3(j: &Json) -> Result<[usize; 3]> {
+    let a = j.as_arr()?;
+    if a.len() != 3 {
+        bail!("expected [h, w, c]");
+    }
+    Ok([a[0].as_usize()?, a[1].as_usize()?, a[2].as_usize()?])
+}
+
+fn parse_rect(j: &Json) -> Result<Rect> {
+    let a = j.as_arr()?;
+    if a.len() != 4 {
+        bail!("expected [x0, y0, x1, y1]");
+    }
+    Ok(Rect::new(
+        a[0].as_usize()?,
+        a[1].as_usize()?,
+        a[2].as_usize()?,
+        a[3].as_usize()?,
+    ))
+}
+
+fn parse_network(n: &Json) -> Result<ManifestNetwork> {
+    let mut configs = Vec::new();
+    for c in n.get("configs")?.as_arr()? {
+        let config: MafatConfig = c.str_at("config")?.parse()?;
+        let mut groups = Vec::new();
+        for g in c.get("groups")?.as_arr()? {
+            let mut classes = HashMap::new();
+            for k in g.get("classes")?.as_arr()? {
+                let entry = ClassEntry {
+                    key: k.str_at("key")?.to_string(),
+                    path: k.str_at("path")?.to_string(),
+                    in_shape: parse_shape3(k.get("in")?)?,
+                    out_shape: parse_shape3(k.get("out")?)?,
+                };
+                classes.insert(entry.key.clone(), entry);
+            }
+            let mut tasks = Vec::new();
+            for t in g.get("tasks")?.as_arr()? {
+                tasks.push(TaskEntry {
+                    i: t.usize_at("i")?,
+                    j: t.usize_at("j")?,
+                    class: t.str_at("class")?.to_string(),
+                    in_rect: parse_rect(t.get("in_rect")?)?,
+                    out_rect: parse_rect(t.get("out_rect")?)?,
+                });
+            }
+            groups.push(GroupEntry {
+                gi: g.usize_at("gi")?,
+                top: g.usize_at("top")?,
+                bottom: g.usize_at("bottom")?,
+                n: g.usize_at("n")?,
+                m: g.usize_at("m")?,
+                classes,
+                tasks,
+            });
+        }
+        configs.push(ConfigEntry { config, groups });
+    }
+    let full = match n.get_opt("full") {
+        Some(f) => Some(FullEntry {
+            path: f.str_at("path")?.to_string(),
+            in_shape: parse_shape3(f.get("in")?)?,
+            out_shape: parse_shape3(f.get("out")?)?,
+        }),
+        None => None,
+    };
+    Ok(ManifestNetwork {
+        name: n.str_at("name")?.to_string(),
+        in_w: n.usize_at("in_w")?,
+        in_h: n.usize_at("in_h")?,
+        in_c: n.usize_at("in_c")?,
+        ops: parse_ops(n.get("layers")?)?,
+        full,
+        configs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal manifest in exactly the JSON style aot.py emits.
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "networks": [{
+        "name": "tiny", "in_w": 8, "in_h": 8, "in_c": 3,
+        "layers": [
+          {"kind": "conv", "filters": 4, "size": 3, "stride": 1, "pad": 1},
+          {"kind": "max", "size": 2, "stride": 2}
+        ],
+        "full": {"path": "tiny/full.hlo.txt", "in": [8, 8, 3], "out": [4, 4, 4]},
+        "configs": [{
+          "config": "2x2/NoCut",
+          "groups": [{
+            "gi": 0, "top": 0, "bottom": 1, "n": 2, "m": 2,
+            "classes": [
+              {"key": "k0", "path": "tiny/22_NoCut/g0_k0.hlo.txt",
+               "in": [5, 5, 3], "out": [2, 2, 4], "layers": []}
+            ],
+            "tasks": [
+              {"i": 0, "j": 0, "class": "k0", "in_rect": [0, 0, 5, 5], "out_rect": [0, 0, 2, 2]},
+              {"i": 1, "j": 0, "class": "k0", "in_rect": [3, 0, 8, 5], "out_rect": [2, 0, 4, 2]},
+              {"i": 0, "j": 1, "class": "k0", "in_rect": [0, 3, 5, 8], "out_rect": [0, 2, 2, 4]},
+              {"i": 1, "j": 1, "class": "k0", "in_rect": [3, 3, 8, 8], "out_rect": [2, 2, 4, 4]}
+            ]
+          }]
+        }]
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let n = m.sole_network().unwrap();
+        assert_eq!(n.name, "tiny");
+        assert_eq!(n.ops.len(), 2);
+        assert!(n.full.is_some());
+        let cfg = n.find_config("2x2/NoCut".parse().unwrap()).unwrap();
+        assert_eq!(cfg.groups[0].tasks.len(), 4);
+        assert_eq!(
+            cfg.groups[0].classes.get("k0").unwrap().in_shape,
+            [5, 5, 3]
+        );
+    }
+
+    #[test]
+    fn network_rebuild_matches() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let net = m.sole_network().unwrap().network();
+        assert_eq!(net.out_shape(1), (4, 4, 4));
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn missing_config_reports_available() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m
+            .sole_network()
+            .unwrap()
+            .find_config("5x5/8/2x2".parse().unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("2x2/NoCut"), "{err}");
+    }
+
+    #[test]
+    fn geometry_verification_against_real_export() {
+        // Round-trip: export geometry from the tiler, fake an aot manifest
+        // from it (same echo aot.py performs), and verify.
+        use crate::runtime::export::{export_geometry, ExportSpec};
+        let net = crate::network::yolov2::yolov2_16_scaled(160);
+        let config: MafatConfig = "3x3/8/2x2".parse().unwrap();
+        let geo = export_geometry(&[ExportSpec {
+            net: &net,
+            configs: vec![config],
+            emit_full: false,
+        }])
+        .unwrap();
+        // Build the manifest JSON the way aot.py would (echoing geometry,
+        // adding paths/shapes).
+        let gnet = &geo.get("networks").unwrap().as_arr().unwrap()[0];
+        let mut mani_cfgs = Vec::new();
+        for c in gnet.get("configs").unwrap().as_arr().unwrap() {
+            let mut groups = Vec::new();
+            for g in c.get("groups").unwrap().as_arr().unwrap() {
+                let top = g.usize_at("top").unwrap();
+                let bottom = g.usize_at("bottom").unwrap();
+                let mut classes = Vec::new();
+                for k in g.get("classes").unwrap().as_arr().unwrap() {
+                    let layers = k.get("layers").unwrap().as_arr().unwrap();
+                    let first = &layers[0];
+                    let last = layers.last().unwrap();
+                    let in_c = net.layers[top].in_c;
+                    let out_c = net.layers[bottom].out_c;
+                    classes.push(Json::obj(vec![
+                        ("key", Json::str(k.str_at("key").unwrap())),
+                        ("path", Json::str("x.hlo.txt")),
+                        (
+                            "in",
+                            Json::arr(vec![
+                                Json::num(first.usize_at("in_h").unwrap() as f64),
+                                Json::num(first.usize_at("in_w").unwrap() as f64),
+                                Json::num(in_c as f64),
+                            ]),
+                        ),
+                        (
+                            "out",
+                            Json::arr(vec![
+                                Json::num(last.usize_at("out_h").unwrap() as f64),
+                                Json::num(last.usize_at("out_w").unwrap() as f64),
+                                Json::num(out_c as f64),
+                            ]),
+                        ),
+                    ]));
+                }
+                groups.push(Json::obj(vec![
+                    ("gi", Json::num(g.usize_at("gi").unwrap() as f64)),
+                    ("top", Json::num(top as f64)),
+                    ("bottom", Json::num(bottom as f64)),
+                    ("n", Json::num(g.usize_at("n").unwrap() as f64)),
+                    ("m", Json::num(g.usize_at("m").unwrap() as f64)),
+                    ("classes", Json::Arr(classes)),
+                    ("tasks", g.get("tasks").unwrap().clone()),
+                ]));
+            }
+            mani_cfgs.push(Json::obj(vec![
+                ("config", Json::str(c.str_at("config").unwrap())),
+                ("groups", Json::Arr(groups)),
+            ]));
+        }
+        let mani = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            (
+                "networks",
+                Json::arr(vec![Json::obj(vec![
+                    ("name", Json::str(net.name.clone())),
+                    ("in_w", Json::num(net.in_w as f64)),
+                    ("in_h", Json::num(net.in_h as f64)),
+                    ("in_c", Json::num(net.in_c as f64)),
+                    ("layers", gnet.get("layers").unwrap().clone()),
+                    ("configs", Json::Arr(mani_cfgs)),
+                ])]),
+            ),
+        ]);
+        let parsed = Manifest::parse(&mani.to_string_pretty()).unwrap();
+        parsed
+            .sole_network()
+            .unwrap()
+            .verify_geometry(config)
+            .unwrap();
+    }
+}

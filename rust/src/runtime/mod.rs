@@ -1,0 +1,118 @@
+//! PJRT runtime: load AOT-compiled HLO text modules and execute them from
+//! the Rust request path (Python is never involved at runtime).
+//!
+//! Wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//! Compiled executables are cached per artifact path.
+
+pub mod export;
+pub mod manifest;
+
+pub use manifest::{
+    ClassEntry, ConfigEntry, FullEntry, GroupEntry, Manifest, ManifestNetwork, TaskEntry,
+};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded-and-compiled HLO module.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs; returns the flat f32 output.
+    ///
+    /// The AOT pipeline lowers with `return_tuple=True`, so the result is a
+    /// 1-tuple literal that we unwrap.
+    pub fn run_f32<L: std::borrow::Borrow<xla::Literal>>(&self, inputs: &[L]) -> Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let out = lit.to_tuple1().context("unwrapping 1-tuple result")?;
+        out.to_vec::<f32>().context("result to f32 vec")
+    }
+}
+
+/// PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, Executable>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: HashMap::new(),
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) the HLO module at `rel_path` under the
+    /// artifacts directory.
+    pub fn load(&mut self, rel_path: &str) -> Result<&Executable> {
+        let full = self.artifacts_dir.join(rel_path);
+        if !self.cache.contains_key(&full) {
+            let proto = xla::HloModuleProto::from_text_file(
+                full.to_str()
+                    .ok_or_else(|| anyhow!("non-UTF-8 artifact path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", full.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", full.display()))?;
+            self.cache.insert(
+                full.clone(),
+                Executable {
+                    exe,
+                    path: rel_path.to_string(),
+                },
+            );
+        }
+        Ok(&self.cache[&full])
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Build an HWC f32 literal from a flat slice.
+    pub fn literal_hwc(data: &[f32], h: usize, w: usize, c: usize) -> Result<xla::Literal> {
+        Self::literal(data, &[h, w, c])
+    }
+
+    /// Build a literal of arbitrary dims from a flat slice.
+    ///
+    /// Uses `create_from_shape_and_untyped_data` (single copy) rather than
+    /// `vec1` + `reshape` (two copies) — see EXPERIMENTS.md §Perf.
+    pub fn literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        if data.len() != n {
+            anyhow::bail!("literal shape mismatch: {} elems vs {dims:?}", data.len());
+        }
+        // Safety of the cast: f32 slices are always valid byte sequences.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+            .context("creating literal from host data")
+    }
+}

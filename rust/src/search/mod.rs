@@ -1,0 +1,435 @@
+//! Configuration search — paper §3.3, Algorithm 3 — plus an exhaustive
+//! search used as the "best measured" baseline of §4.3/Table 4.1.
+//!
+//! Algorithm 3 walks the restricted space from the highest-memory (fastest)
+//! configuration toward more even, smaller-footprint ones, returning the
+//! first whose *predicted* memory fits the limit:
+//!
+//! * cuts in order `{n (no cut), 12, 8}`;
+//! * top tilings `1..=5`;
+//! * bottom tiling fixed at 2x2 (the paper's manual exploration found it
+//!   best whenever a cut is made; the TR's listing prints `LG2 <- 4`, a
+//!   typo — every algorithm output in Table 4.1 uses 2x2);
+//! * cuts at layer >= 12 with top tiling > 2 are skipped (line 11: they
+//!   "developed more overlapped data and overhead ... and are never
+//!   optimal");
+//! * fallback: the most even configuration, 5x5/8/2x2.
+
+use crate::network::Network;
+use crate::plan::{manual_search_space, MafatConfig};
+use crate::predictor::{predict_mem, PredictorParams};
+use anyhow::Result;
+
+/// Outcome of a configuration search.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchResult {
+    pub config: MafatConfig,
+    /// Predicted memory of the chosen configuration, bytes.
+    pub predicted_bytes: u64,
+    /// True if nothing fit and the fallback was returned.
+    pub is_fallback: bool,
+    /// Number of configurations whose prediction was evaluated.
+    pub evaluated: usize,
+}
+
+/// The cut schedule of Algorithm 3 for a given network: `n` (no cut) first,
+/// then the memory-aware cuts from largest to smallest, keeping only those
+/// >= 8 per the paper's restriction ("no latency advantage was found for
+/// cuts at layer 4"). For YOLOv2-16 this is `{16, 12, 8}`.
+pub fn algorithm3_cuts(net: &Network) -> Vec<usize> {
+    let n = net.n_layers();
+    let mut cuts: Vec<usize> = net
+        .candidate_cuts()
+        .into_iter()
+        .filter(|&c| c >= 8)
+        .collect();
+    cuts.sort_unstable_by(|a, b| b.cmp(a));
+    let mut all = vec![n];
+    all.extend(cuts);
+    all
+}
+
+/// The most even configuration that exists for `net`: the paper hard-codes
+/// 5x5/8/2x2 for YOLOv2-16; for other prefixes we take the middle
+/// memory-aware cut (or no cut when none exists) and clamp the tilings to
+/// the map extents.
+pub fn fallback_for(net: &Network) -> MafatConfig {
+    let clamp = |t: usize, bottom: usize| -> usize {
+        let (w, h, _) = net.out_shape(bottom);
+        t.min(w).min(h)
+    };
+    let n = net.n_layers();
+    let paper = MafatConfig::most_even_fallback();
+    if let Some(cut) = paper.cut {
+        if cut < n && net.candidate_cuts().contains(&cut) {
+            return MafatConfig::with_cut(
+                clamp(paper.top_tiling, cut - 1),
+                cut,
+                clamp(paper.bottom_tiling, n - 1),
+            );
+        }
+    }
+    let cuts = net.candidate_cuts();
+    match cuts.get(cuts.len() / 2) {
+        Some(&cut) => MafatConfig::with_cut(clamp(5, cut - 1), cut, clamp(2, n - 1)),
+        None => MafatConfig::no_cut(clamp(5, n - 1)),
+    }
+}
+
+/// Paper Algorithm 3: greedy search for the fewest-tiles configuration whose
+/// predicted memory fits `memory_limit_bytes`.
+pub fn get_config(
+    net: &Network,
+    memory_limit_bytes: u64,
+    params: &PredictorParams,
+) -> Result<SearchResult> {
+    let n = net.n_layers();
+    let bottom_tiling = 2; // LG2: fixed 2x2 (see module docs)
+    let mut evaluated = 0usize;
+    for cut in algorithm3_cuts(net) {
+        for tile in 1..=5usize {
+            // Line 11: cuts at layer >= 12 (including "no cut") with more
+            // than 2x2 top tiles are never optimal — skip.
+            if cut >= 12 && tile > 2 {
+                continue;
+            }
+            let config = if cut == n {
+                MafatConfig::no_cut(tile)
+            } else {
+                MafatConfig::with_cut(tile, cut, bottom_tiling)
+            };
+            evaluated += 1;
+            // A tiling finer than a group's output map is not plannable on
+            // very small prefixes; skip it (cannot happen on YOLOv2-16).
+            let Ok(pred) = predict_mem(net, config, params) else {
+                continue;
+            };
+            if pred.total_bytes < memory_limit_bytes {
+                return Ok(SearchResult {
+                    config,
+                    predicted_bytes: pred.total_bytes,
+                    is_fallback: false,
+                    evaluated,
+                });
+            }
+        }
+    }
+    // Nothing fits: return the most even configuration (§3.3).
+    let fallback = fallback_for(net);
+    let pred = predict_mem(net, fallback, params)?;
+    Ok(SearchResult {
+        config: fallback,
+        predicted_bytes: pred.total_bytes,
+        is_fallback: true,
+        evaluated,
+    })
+}
+
+/// Result of the k-group extension search.
+#[derive(Debug, Clone)]
+pub struct MultiSearchResult {
+    pub config: crate::plan::MultiConfig,
+    pub predicted_bytes: u64,
+    /// Overhead proxy used for ranking: total task MACs (includes halo
+    /// redundancy) plus a per-task launch equivalent.
+    pub cost_proxy: u64,
+    pub evaluated: usize,
+    pub is_fallback: bool,
+}
+
+/// Extension beyond the paper (§5 future work): search over up to
+/// `max_groups` layer groups (cuts at any subset of the memory-aware cut
+/// points, square tilings `1..=max_tiling` per group). Returns the
+/// lowest-overhead configuration whose *predicted* memory fits.
+///
+/// The overhead proxy is redundant-MAC count plus a per-task constant
+/// (~70 ms at the calibrated 0.865 GMAC/s), which tracks the simulator's
+/// unswapped latency ordering.
+pub fn search_multi(
+    net: &Network,
+    memory_limit_bytes: u64,
+    max_groups: usize,
+    max_tiling: usize,
+    params: &PredictorParams,
+) -> Result<MultiSearchResult> {
+    use crate::plan::{plan_multi, MultiConfig};
+    const TASK_MACS_EQUIV: u64 = 60_000_000; // ~task_overhead_s * macs_per_sec
+
+    let cuts = net.candidate_cuts();
+    let mut cut_sets: Vec<Vec<usize>> = vec![vec![]];
+    // All strictly-increasing subsets of the candidate cuts, size < max_groups.
+    for k in 1..max_groups {
+        let mut stack = vec![(0usize, Vec::new())];
+        while let Some((start, cur)) = stack.pop() {
+            if cur.len() == k {
+                cut_sets.push(cur);
+                continue;
+            }
+            for (i, &c) in cuts.iter().enumerate().skip(start) {
+                let mut next = cur.clone();
+                next.push(c);
+                stack.push((i + 1, next));
+            }
+        }
+    }
+
+    let mut best: Option<MultiSearchResult> = None;
+    let mut evaluated = 0usize;
+    for cut_set in &cut_sets {
+        let n_groups = cut_set.len() + 1;
+        // Enumerate tilings via mixed-radix counting.
+        let combos = (max_tiling as u64).pow(n_groups as u32);
+        for ix in 0..combos {
+            let mut tilings = Vec::with_capacity(n_groups);
+            let mut rem = ix;
+            for _ in 0..n_groups {
+                tilings.push(1 + (rem % max_tiling as u64) as usize);
+                rem /= max_tiling as u64;
+            }
+            let Ok(config) = MultiConfig::new(cut_set.clone(), tilings) else {
+                continue;
+            };
+            evaluated += 1;
+            let Ok(pred) = crate::predictor::predict_multi(net, &config, params) else {
+                continue; // tiling finer than a group's map
+            };
+            if pred.total_bytes >= memory_limit_bytes {
+                continue;
+            }
+            let Ok(plan) = plan_multi(net, &config) else { continue };
+            let proxy = plan.total_macs(net) + plan.n_tasks() as u64 * TASK_MACS_EQUIV;
+            if best
+                .as_ref()
+                .map_or(true, |b| proxy < b.cost_proxy)
+            {
+                best = Some(MultiSearchResult {
+                    config,
+                    predicted_bytes: pred.total_bytes,
+                    cost_proxy: proxy,
+                    evaluated,
+                    is_fallback: false,
+                });
+            }
+        }
+    }
+    if let Some(mut b) = best {
+        b.evaluated = evaluated;
+        return Ok(b);
+    }
+    // Nothing fits: reuse the 2-group fallback.
+    let fb = fallback_for(net);
+    let pred = predict_mem(net, fb, params)?;
+    Ok(MultiSearchResult {
+        config: crate::plan::MultiConfig::from_mafat(fb),
+        predicted_bytes: pred.total_bytes,
+        cost_proxy: u64::MAX,
+        evaluated,
+        is_fallback: true,
+    })
+}
+
+/// Exhaustive search over the paper's manual-exploration space (§4.3),
+/// ranking by a caller-supplied latency oracle (the simulator in benches,
+/// the real engine in examples). Returns configs sorted fastest-first.
+pub fn exhaustive_by_latency<F>(
+    net: &Network,
+    mut latency_of: F,
+) -> Result<Vec<(MafatConfig, f64)>>
+where
+    F: FnMut(MafatConfig) -> Result<f64>,
+{
+    let mut out = Vec::new();
+    for config in manual_search_space(net) {
+        out.push((config, latency_of(config)?));
+    }
+    out.sort_by(|a, b| a.1.total_cmp(&b.1));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+    use crate::network::MIB;
+
+    fn search(limit_mb: u64) -> SearchResult {
+        get_config(&yolov2_16(), limit_mb * MIB, &PredictorParams::default()).unwrap()
+    }
+
+    #[test]
+    fn cut_schedule_yolov2() {
+        assert_eq!(algorithm3_cuts(&yolov2_16()), vec![16, 12, 8]);
+    }
+
+    #[test]
+    fn generous_memory_returns_untiled() {
+        // Table 4.1: at 256 MB and 192 MB the algorithm returns 1x1/NoCut.
+        for mb in [256, 192] {
+            let r = search(mb);
+            assert_eq!(r.config, MafatConfig::no_cut(1), "{mb} MB");
+            assert!(!r.is_fallback);
+        }
+    }
+
+    #[test]
+    fn tight_memory_returns_fallback_or_fine_tilings() {
+        // Table 4.1: at 32 MB and 16 MB the algorithm outputs 5x5/8/2x2
+        // (the fallback — nothing fits below the minimum footprint).
+        for mb in [32, 16] {
+            let r = search(mb);
+            assert_eq!(r.config, MafatConfig::with_cut(5, 8, 2), "{mb} MB");
+        }
+    }
+
+    #[test]
+    fn search_is_monotone_in_limit() {
+        // A larger limit never returns a configuration with a *smaller*
+        // prediction (the greedy order guarantees it).
+        let mut prev = 0u64;
+        for mb in [16u64, 32, 48, 64, 80, 96, 128, 192, 256, 512] {
+            let r = search(mb);
+            assert!(
+                r.predicted_bytes >= prev || r.is_fallback,
+                "limit {mb} MB broke monotonicity"
+            );
+            if !r.is_fallback {
+                prev = r.predicted_bytes;
+            }
+        }
+    }
+
+    #[test]
+    fn returned_config_fits_unless_fallback() {
+        for mb in [16u64, 32, 48, 64, 80, 96, 128, 192, 256] {
+            let r = search(mb);
+            if !r.is_fallback {
+                assert!(
+                    r.predicted_bytes < mb * MIB,
+                    "{mb} MB: {} does not fit",
+                    r.config
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn line11_restriction_enforced() {
+        // No returned no-cut / cut-12 config may have top tiling > 2.
+        for mb in 8..300u64 {
+            let r = search(mb);
+            match r.config.cut {
+                None => assert!(r.config.top_tiling <= 2, "{}", r.config),
+                Some(c) if c >= 12 => assert!(r.config.top_tiling <= 2, "{}", r.config),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn table_4_1_algorithm_column() {
+        // The paper's algorithm outputs at the measured memory points
+        // (Table 4.1, right half). Our predictor's absolute scale differs
+        // slightly from the paper's fitted bias, so the transition points
+        // can shift by one bucket; the *sequence* of configurations must
+        // match. We assert exact matches at the anchor points the paper's
+        // ordering forces.
+        assert_eq!(search(256).config.to_string(), "1x1/NoCut");
+        assert_eq!(search(192).config.to_string(), "1x1/NoCut");
+        assert_eq!(search(16).config.to_string(), "5x5/8/2x2");
+        assert_eq!(search(32).config.to_string(), "5x5/8/2x2");
+        // The full claimed sequence, in order of decreasing memory:
+        let seq: Vec<String> = [256u64, 192, 128, 96, 80, 64, 48, 32, 16]
+            .iter()
+            .map(|&mb| search(mb).config.to_string())
+            .collect();
+        // Must be weakly "more tiled" as memory shrinks: indices into the
+        // greedy order never decrease.
+        let order = |s: &str| -> usize {
+            let greedy = [
+                "1x1/NoCut",
+                "2x2/NoCut",
+                "1x1/12/2x2",
+                "2x2/12/2x2",
+                "1x1/8/2x2",
+                "2x2/8/2x2",
+                "3x3/8/2x2",
+                "4x4/8/2x2",
+                "5x5/8/2x2",
+            ];
+            greedy.iter().position(|g| *g == s).unwrap_or(usize::MAX)
+        };
+        for w in seq.windows(2) {
+            assert!(
+                order(&w[0]) <= order(&w[1]),
+                "sequence not monotone: {seq:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_search_matches_paper_search_at_two_groups() {
+        // With max_groups = 2, the extension must fit whenever Alg. 3 fits
+        // and never pick something with a larger prediction than the limit.
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        for mb in [256u64, 96, 64, 32] {
+            let multi = search_multi(&net, mb * MIB, 2, 5, &params).unwrap();
+            let paper = get_config(&net, mb * MIB, &params).unwrap();
+            assert_eq!(multi.is_fallback, paper.is_fallback, "{mb} MB");
+            if !multi.is_fallback {
+                assert!(multi.predicted_bytes < mb * MIB);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_search_three_groups_never_worse_fit() {
+        // Adding a third group can only widen the feasible set.
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        for mb in [64u64, 48, 40] {
+            let two = search_multi(&net, mb * MIB, 2, 5, &params).unwrap();
+            let three = search_multi(&net, mb * MIB, 3, 5, &params).unwrap();
+            if !two.is_fallback {
+                assert!(!three.is_fallback, "{mb} MB");
+                assert!(three.cost_proxy <= two.cost_proxy, "{mb} MB");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_search_finds_smaller_footprints_than_two_groups() {
+        // The extension's minimum achievable footprint is at most the
+        // 2-group minimum (paper §4.3: no 2-group config runs below 66 MB
+        // predicted; 3 groups + 6x6 tilings can go lower).
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let min_pred = |max_groups: usize, max_tiling: usize| -> u64 {
+            // Probe decreasing limits until fallback; the smallest
+            // successful prediction is the achievable floor.
+            let mut floor = u64::MAX;
+            for mb in (20..=80).rev() {
+                let r = search_multi(&net, mb * MIB, max_groups, max_tiling, &params).unwrap();
+                if !r.is_fallback {
+                    floor = floor.min(r.predicted_bytes);
+                }
+            }
+            floor
+        };
+        let two = min_pred(2, 5);
+        let three = min_pred(3, 6);
+        assert!(three <= two, "3-group floor {three} > 2-group floor {two}");
+    }
+
+    #[test]
+    fn exhaustive_sorts_by_latency() {
+        let net = yolov2_16();
+        // Toy oracle: latency = number of tasks (so 1x1/NoCut wins).
+        let ranked = exhaustive_by_latency(&net, |c| {
+            Ok(crate::plan::plan_config(&net, c)?.n_tasks() as f64)
+        })
+        .unwrap();
+        assert_eq!(ranked[0].0, MafatConfig::no_cut(1));
+        assert!(ranked.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+}

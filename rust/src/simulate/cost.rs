@@ -1,0 +1,105 @@
+//! Latency cost model calibrated to the paper's Raspberry Pi 3 testbed
+//! (single Cortex-A53 core, SD-card swap).
+//!
+//! Calibration anchors (see EXPERIMENTS.md §Calibration):
+//! * untiled YOLOv2-16 at ample memory ~= 15.0 s (Table 4.1: 15065 ms);
+//!   the 16-layer prefix is 13.0 GMAC
+//!   -> `macs_per_sec ~= 13.0 G / 15.0 s ~= 0.865 GMAC/s`;
+//! * Darknet at a 16 MB limit ~= 6.5x slower (Fig. 1.1)
+//!   -> swap bandwidths in the SD-card class (~20 MB/s in, ~8 MB/s out);
+//! * finer tilings slower at ample memory by task overhead (Fig. 4.1).
+
+use crate::memsim::MemStats;
+
+/// Tunable cost-model constants.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Effective single-core convolution throughput.
+    pub macs_per_sec: f64,
+    /// Fixed cost per fused task launch (parameter setup, bookkeeping —
+    /// §2.1.1 "small amount of additional overhead for the parameters and
+    /// other functions").
+    pub task_overhead_s: f64,
+    /// Fixed cost per layer invocation inside a task.
+    pub layer_overhead_s: f64,
+    /// memcpy bandwidth for the merge + re-tile at a cut (§3.1).
+    pub memcpy_bytes_per_sec: f64,
+    /// Swap-device read bandwidth (swap-in, SD-card sequential-ish read).
+    pub swap_in_bytes_per_sec: f64,
+    /// GEMM passes over the im2col scratch: Darknet's naive triple loop
+    /// re-scans the scratch per output-channel block; 2 models one extra
+    /// cache-defeating pass (the dominant thrash amplifier under swap).
+    pub gemm_scratch_passes: u32,
+    /// Effective swap-out stall bandwidth. Raw SD writes are ~8-10 MB/s but
+    /// write-back is asynchronous (kswapd); only allocation outpacing the
+    /// writer stalls, so the *effective* per-byte stall is several times
+    /// cheaper than a synchronous write.
+    pub swap_out_bytes_per_sec: f64,
+}
+
+impl Default for CostModel {
+    /// Raspberry Pi 3 class constants, fitted to the paper's anchors.
+    fn default() -> Self {
+        CostModel {
+            macs_per_sec: 0.865e9,
+            task_overhead_s: 0.060,
+            layer_overhead_s: 0.004,
+            memcpy_bytes_per_sec: 600e6,
+            gemm_scratch_passes: 2,
+            swap_in_bytes_per_sec: 15e6,
+            swap_out_bytes_per_sec: 60e6,
+        }
+    }
+}
+
+impl CostModel {
+    /// Seconds for `macs` multiply-accumulates.
+    pub fn compute_s(&self, macs: u64) -> f64 {
+        macs as f64 / self.macs_per_sec
+    }
+
+    /// Seconds of swap stall implied by a delta of memsim counters.
+    pub fn swap_s(&self, before: &MemStats, after: &MemStats) -> f64 {
+        let si = (after.swap_in_bytes - before.swap_in_bytes) as f64;
+        let so = (after.swap_out_bytes - before.swap_out_bytes) as f64;
+        si / self.swap_in_bytes_per_sec + so / self.swap_out_bytes_per_sec
+    }
+
+    /// Seconds to move `bytes` through memcpy (merge/re-tile).
+    pub fn memcpy_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.memcpy_bytes_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+
+    #[test]
+    fn unswapped_full_network_near_paper_latency() {
+        // Anchor: ~13.0 GMAC / 0.865 GMAC/s ~= 15.0 s.
+        let net = yolov2_16();
+        let cm = CostModel::default();
+        let s = cm.compute_s(net.total_macs());
+        assert!((14.0..16.0).contains(&s), "untiled compute {s} s");
+    }
+
+    #[test]
+    fn swap_cost_uses_deltas() {
+        let cm = CostModel::default();
+        let a = MemStats {
+            swap_in_bytes: 10_000_000,
+            swap_out_bytes: 5_000_000,
+            ..Default::default()
+        };
+        let b = MemStats {
+            swap_in_bytes: 32_000_000,
+            swap_out_bytes: 14_000_000,
+            ..Default::default()
+        };
+        let s = cm.swap_s(&a, &b);
+        let expect = 22e6 / 15e6 + 9e6 / 60e6;
+        assert!((s - expect).abs() < 1e-9);
+    }
+}

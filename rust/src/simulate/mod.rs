@@ -1,0 +1,452 @@
+//! End-to-end latency simulation of MAFAT configurations under a memory
+//! constraint — the reproduction of the paper's §4 measurement harness
+//! (cgroup-constricted Raspberry Pi 3), built on [`crate::memsim`].
+//!
+//! [`mafat_trace`] turns a [`Plan`] into a memory/compute [`Step`] trace
+//! that mirrors how a Darknet-based fused-tile implementation actually
+//! touches memory: weights loaded up front, per-task tile gather, per-layer
+//! im2col scratch write+read, ping-pong tile buffers, output scatter into
+//! the group output map, merge + re-tile at the cut. [`simulate_config`]
+//! replays it under a limit and prices it with the [`cost::CostModel`].
+
+pub mod cost;
+mod trace;
+
+pub use cost::CostModel;
+pub use trace::{run_trace, touch_map_region, SimReport, Step};
+
+use crate::network::{LayerKind, Network, BYTES_PER_ELEM, MIB};
+use crate::plan::{plan_config, MafatConfig, Plan};
+use crate::reuse::{reuse_analysis, schedule_order};
+use anyhow::Result;
+
+/// Process-level memory not modelled by buffers: the paper's 31 MB bias
+/// (§3.2) — "network parameters, system variables, and other data". The
+/// paper's empirically-fitted constant behaves as *always resident* (their
+/// measured footprints track prediction+bias), so the model splits it into
+/// a `hot_bytes` part touched by every task/layer (code, stack, libc,
+/// network bookkeeping) and a `cold_bytes` part touched only at startup
+/// (one-time eviction under pressure, no re-faults). The split is a
+/// calibration knob: larger `hot` raises measured footprints and tight-
+/// memory thrash together.
+#[derive(Debug, Clone, Copy)]
+pub struct SystemModel {
+    pub cold_bytes: u64,
+    pub hot_bytes: u64,
+}
+
+impl Default for SystemModel {
+    fn default() -> Self {
+        SystemModel {
+            cold_bytes: 23 * MIB,
+            hot_bytes: 8 * MIB,
+        }
+    }
+}
+
+/// All knobs of a simulation run.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    pub limit_bytes: Option<u64>,
+    /// Apply DeepThings-style data reuse (checkerboard schedule, skip
+    /// neighbor-provided cells).
+    pub data_reuse: bool,
+    pub cost: CostModel,
+    pub system: SystemModel,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            limit_bytes: None,
+            data_reuse: true,
+            cost: CostModel::default(),
+            system: SystemModel::default(),
+        }
+    }
+}
+
+impl SimOptions {
+    pub fn with_limit_mb(mut self, mb: u64) -> Self {
+        self.limit_bytes = Some(mb * MIB);
+        self
+    }
+}
+
+fn tile_bytes(area: usize, channels: usize) -> u64 {
+    (area * channels) as u64 * BYTES_PER_ELEM
+}
+
+/// Build the step trace for a MAFAT plan.
+pub fn mafat_trace(net: &Network, plan: &Plan, opts: &SimOptions) -> Vec<Step> {
+    let mut steps: Vec<Step> = Vec::new();
+    let push = |steps: &mut Vec<Step>, s: Step| steps.push(s);
+
+    // Startup: system regions + weights + input image.
+    push(&mut steps, Step::Alloc { key: "sys.cold".into(), bytes: opts.system.cold_bytes });
+    push(&mut steps, Step::Write { key: "sys.cold".into() });
+    push(&mut steps, Step::Alloc { key: "sys.hot".into(), bytes: opts.system.hot_bytes });
+    push(&mut steps, Step::Write { key: "sys.hot".into() });
+    for g in &plan.groups {
+        for l in g.top..=g.bottom {
+            let bytes = net.layers[l].weight_bytes();
+            if bytes > 0 {
+                push(&mut steps, Step::Alloc { key: format!("w{l}"), bytes });
+                push(&mut steps, Step::Write { key: format!("w{l}") });
+            }
+        }
+    }
+    push(&mut steps, Step::Alloc {
+        key: "map.in.g0".into(),
+        bytes: (net.in_w * net.in_h * net.in_c) as u64 * BYTES_PER_ELEM,
+    });
+    push(&mut steps, Step::Write { key: "map.in.g0".into() });
+
+    let n_groups = plan.groups.len();
+    for (gi, group) in plan.groups.iter().enumerate() {
+        let in_key = format!("map.in.g{gi}");
+        let out_key = if gi + 1 == n_groups {
+            "map.out".to_string()
+        } else {
+            format!("map.in.g{}", gi + 1)
+        };
+        let bottom_spec = &net.layers[group.bottom];
+        let (out_w, out_h, out_c) = (bottom_spec.out_w, bottom_spec.out_h, bottom_spec.out_c);
+        push(&mut steps, Step::Alloc {
+            key: out_key.clone(),
+            bytes: tile_bytes(out_w * out_h, out_c),
+        });
+
+        let top_spec = &net.layers[group.top];
+        let (in_w, in_h, in_c) = (top_spec.in_w, top_spec.in_h, top_spec.in_c);
+
+        // Reuse analysis provides both the schedule and reuse-adjusted MACs.
+        let analysis = opts.data_reuse.then(|| reuse_analysis(net, group));
+        let order = schedule_order(group);
+        let reuse_buf_key = format!("reuse.g{gi}");
+        if let Some(a) = &analysis {
+            if a.peak_boundary_bytes > 0 {
+                push(&mut steps, Step::Alloc {
+                    key: reuse_buf_key.clone(),
+                    bytes: a.peak_boundary_bytes,
+                });
+            }
+        }
+
+        for (pos, &tix) in order.iter().enumerate() {
+            let task = &group.tasks[tix];
+            // Per-task fixed costs + hot working set.
+            push(&mut steps, Step::Read { key: "sys.hot".into() });
+            push(&mut steps, Step::Overhead { seconds: opts.cost.task_overhead_s });
+
+            // Gather the input tile from the group input map.
+            let in_rect = task.input_rect();
+            let in_buf = format!("g{gi}.t{tix}.in");
+            push(&mut steps, Step::Alloc {
+                key: in_buf.clone(),
+                bytes: tile_bytes(in_rect.area(), in_c),
+            });
+            push(&mut steps, Step::ReadMap {
+                key: in_key.clone(),
+                w: in_w,
+                h: in_h,
+                c: in_c,
+                rect: in_rect,
+            });
+            push(&mut steps, Step::Write { key: in_buf.clone() });
+
+            // Reused boundary data arrives from the reuse buffer.
+            if let Some(a) = &analysis {
+                let tr = &a.tasks[pos];
+                let reused_bytes =
+                    (tr.reused_elems * BYTES_PER_ELEM).min(a.peak_boundary_bytes);
+                if reused_bytes > 0 {
+                    push(&mut steps, Step::ReadMap {
+                        key: reuse_buf_key.clone(),
+                        w: (a.peak_boundary_bytes / BYTES_PER_ELEM).max(1) as usize,
+                        h: 1,
+                        c: 1,
+                        rect: crate::ftp::Rect::new(
+                            0,
+                            0,
+                            (reused_bytes / BYTES_PER_ELEM).max(1) as usize,
+                            1,
+                        ),
+                    });
+                }
+            }
+
+            // Execute the fused layers with ping-pong tile buffers.
+            let mut cur_buf = in_buf;
+            for (li, lg) in task.layers.iter().enumerate() {
+                let spec = &net.layers[lg.layer];
+                push(&mut steps, Step::Overhead { seconds: opts.cost.layer_overhead_s });
+                if spec.weight_bytes() > 0 {
+                    push(&mut steps, Step::Read { key: format!("w{}", lg.layer) });
+                }
+                let out_buf = format!("g{gi}.t{tix}.l{li}");
+                push(&mut steps, Step::Alloc {
+                    key: out_buf.clone(),
+                    bytes: tile_bytes(lg.out_rect.area(), spec.out_c),
+                });
+                match spec.kind {
+                    LayerKind::Conv { size, stride, .. } => {
+                        // im2col: read input tile, write scratch; GEMM: read
+                        // scratch, write output tile.
+                        let scr = format!("g{gi}.t{tix}.l{li}.scr");
+                        let scr_bytes = (lg.out_rect.area() * size * size * spec.in_c
+                            / stride) as u64
+                            * BYTES_PER_ELEM;
+                        push(&mut steps, Step::Alloc { key: scr.clone(), bytes: scr_bytes.max(1) });
+                        push(&mut steps, Step::Read { key: cur_buf.clone() });
+                        push(&mut steps, Step::Write { key: scr.clone() });
+                        for _ in 0..opts.cost.gemm_scratch_passes {
+                            push(&mut steps, Step::Read { key: scr.clone() });
+                        }
+                        push(&mut steps, Step::Write { key: out_buf.clone() });
+                        push(&mut steps, Step::Free { key: scr });
+                    }
+                    LayerKind::MaxPool { .. } => {
+                        push(&mut steps, Step::Read { key: cur_buf.clone() });
+                        push(&mut steps, Step::Write { key: out_buf.clone() });
+                    }
+                }
+                let macs = match &analysis {
+                    Some(a) => a.tasks[pos].macs_per_layer[li],
+                    None => {
+                        let per_out: u64 = match spec.kind {
+                            LayerKind::Conv { size, .. } => {
+                                (size * size * spec.in_c * spec.out_c) as u64
+                            }
+                            LayerKind::MaxPool { size, .. } => {
+                                (size * size * spec.out_c) as u64
+                            }
+                        };
+                        lg.out_rect.area() as u64 * per_out
+                    }
+                };
+                push(&mut steps, Step::Compute { macs });
+                push(&mut steps, Step::Free { key: cur_buf });
+                cur_buf = out_buf;
+            }
+
+            // Publish halo for neighbors (reuse) and scatter the output tile
+            // into the group output map.
+            if let Some(a) = &analysis {
+                let tr = &a.tasks[pos];
+                let pub_bytes = tr.published_bytes.min(a.peak_boundary_bytes);
+                if pub_bytes > 0 && a.peak_boundary_bytes > 0 {
+                    push(&mut steps, Step::WriteMap {
+                        key: reuse_buf_key.clone(),
+                        w: (a.peak_boundary_bytes / BYTES_PER_ELEM).max(1) as usize,
+                        h: 1,
+                        c: 1,
+                        rect: crate::ftp::Rect::new(
+                            0,
+                            0,
+                            (pub_bytes / BYTES_PER_ELEM).max(1) as usize,
+                            1,
+                        ),
+                    });
+                }
+            }
+            push(&mut steps, Step::Read { key: cur_buf.clone() });
+            push(&mut steps, Step::WriteMap {
+                key: out_key.clone(),
+                w: out_w,
+                h: out_h,
+                c: out_c,
+                rect: task.output_rect(),
+            });
+            push(&mut steps, Step::Free { key: cur_buf });
+        }
+
+        if let Some(a) = &analysis {
+            if a.peak_boundary_bytes > 0 {
+                push(&mut steps, Step::Free { key: reuse_buf_key });
+            }
+        }
+
+        // Merge + re-tile at the cut (§3.1): one pass over the cut map.
+        if gi + 1 < n_groups {
+            let cut_bytes = tile_bytes(out_w * out_h, out_c);
+            push(&mut steps, Step::Read { key: out_key.clone() });
+            push(&mut steps, Step::Overhead {
+                seconds: opts.cost.memcpy_s(2 * cut_bytes),
+            });
+        }
+        // The group's input map is dead now.
+        push(&mut steps, Step::Free { key: in_key });
+    }
+
+    steps
+}
+
+/// Simulate one MAFAT configuration end to end.
+pub fn simulate_config(net: &Network, config: MafatConfig, opts: &SimOptions) -> Result<SimReport> {
+    let plan = plan_config(net, config)?;
+    simulate_plan(net, &plan, opts)
+}
+
+/// Simulate a pre-built plan.
+pub fn simulate_plan(net: &Network, plan: &Plan, opts: &SimOptions) -> Result<SimReport> {
+    let steps = mafat_trace(net, plan, opts);
+    run_trace(&steps, opts.limit_bytes, &opts.cost)
+}
+
+/// Swap-in threshold below which a run counts as "no swapping observed":
+/// the paper's vmstat-based measurement had noise (§4.1); a page or two of
+/// cold-state refault does not count as thrash.
+pub const SWAP_OBSERVED_BYTES: u64 = 8 * MIB;
+
+/// The paper's "measured" memory footprint (Figs. 3.1/3.2): the smallest
+/// limit under which the run shows no swap-ins (the paper decremented the
+/// cgroup limit 1 MB at a time until swaps were observed). Returns MB.
+pub fn probe_min_limit_mb<F>(mut run: F, lo_mb: u64, hi_mb: u64) -> Result<u64>
+where
+    F: FnMut(u64) -> Result<bool>, // limit MB -> swaps observed?
+{
+    // The predicate is monotone in practice (more memory, fewer swaps);
+    // binary search with a final linear verification step.
+    let (mut lo, mut hi) = (lo_mb, hi_mb);
+    if run(hi)? {
+        return Ok(hi); // even the ceiling swaps: report the ceiling
+    }
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if run(mid)? {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(lo)
+}
+
+/// Measured minimum footprint of a MAFAT configuration (MB).
+pub fn measured_min_limit_mb(net: &Network, config: MafatConfig, opts: &SimOptions) -> Result<u64> {
+    let plan = plan_config(net, config)?;
+    let steps = mafat_trace(net, &plan, opts);
+    probe_min_limit_mb(
+        |mb| {
+            let r = run_trace(&steps, Some(mb * MIB), &opts.cost)?;
+            Ok(r.stats.swap_in_bytes > SWAP_OBSERVED_BYTES)
+        },
+        8,
+        512,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+
+    fn opts() -> SimOptions {
+        SimOptions::default()
+    }
+
+    #[test]
+    fn untiled_unconstrained_matches_anchor() {
+        // 1x1/NoCut with ample memory must land near the paper's 15.0 s.
+        let net = yolov2_16();
+        let r = simulate_config(&net, MafatConfig::no_cut(1), &opts()).unwrap();
+        assert!(
+            (14.0..16.5).contains(&r.latency_s),
+            "latency {} s",
+            r.latency_s
+        );
+        assert_eq!(r.stats.swap_in_bytes, 0);
+    }
+
+    #[test]
+    fn tighter_memory_never_faster() {
+        // Latency grows (weakly) as the limit shrinks — Fig. 1.1's shape.
+        let net = yolov2_16();
+        let config = MafatConfig::no_cut(1);
+        let mut prev = 0.0f64;
+        for mb in [256u64, 128, 64, 32, 16] {
+            let r = simulate_config(&net, config, &opts().with_limit_mb(mb)).unwrap();
+            assert!(
+                r.latency_s >= prev * 0.98,
+                "latency shrank as memory tightened at {mb} MB: {} < {prev}",
+                r.latency_s
+            );
+            prev = prev.max(r.latency_s);
+        }
+        let loose = simulate_config(&net, config, &opts().with_limit_mb(256)).unwrap();
+        let tight = simulate_config(&net, config, &opts().with_limit_mb(16)).unwrap();
+        assert!(tight.latency_s > loose.latency_s);
+    }
+
+    #[test]
+    fn mafat_beats_darknet_like_config_at_tight_memory() {
+        // The headline: at tight limits the most even config must beat the
+        // untiled one.
+        let net = yolov2_16();
+        let o = opts().with_limit_mb(32);
+        let untiled = simulate_config(&net, MafatConfig::no_cut(1), &o).unwrap();
+        let even = simulate_config(&net, MafatConfig::with_cut(5, 8, 2), &o).unwrap();
+        assert!(
+            even.latency_s < untiled.latency_s,
+            "5x5/8/2x2 {} s vs 1x1 {} s at 32 MB",
+            even.latency_s,
+            untiled.latency_s
+        );
+    }
+
+    #[test]
+    fn finer_tiling_slower_when_memory_ample() {
+        // Fig. 4.1: at >200 MB the 1x1 tiling is best.
+        let net = yolov2_16();
+        let o = opts().with_limit_mb(256);
+        let t1 = simulate_config(&net, MafatConfig::with_cut(1, 8, 2), &o).unwrap();
+        let t5 = simulate_config(&net, MafatConfig::with_cut(5, 8, 2), &o).unwrap();
+        assert!(t1.latency_s < t5.latency_s);
+    }
+
+    #[test]
+    fn measured_limit_close_to_prediction() {
+        // Fig. 3.1-flavoured check: simulator-measured min footprint within
+        // ~35% of the Alg. 1/2 prediction for a few configs.
+        let net = yolov2_16();
+        let params = crate::predictor::PredictorParams::default();
+        for config in [
+            MafatConfig::no_cut(1),
+            MafatConfig::no_cut(3),
+            MafatConfig::with_cut(5, 8, 2),
+        ] {
+            let measured = measured_min_limit_mb(&net, config, &opts()).unwrap() as f64;
+            let predicted =
+                crate::predictor::predict_mem(&net, config, &params).unwrap().total_mb();
+            let ratio = measured / predicted;
+            assert!(
+                (0.65..1.35).contains(&ratio),
+                "{config}: measured {measured} MB vs predicted {predicted:.1} MB"
+            );
+        }
+    }
+
+    #[test]
+    fn reuse_reduces_latency_at_fine_tilings() {
+        let net = yolov2_16();
+        let config = MafatConfig::with_cut(5, 8, 2);
+        let with = simulate_config(&net, config, &SimOptions { data_reuse: true, ..opts() })
+            .unwrap();
+        let without = simulate_config(&net, config, &SimOptions { data_reuse: false, ..opts() })
+            .unwrap();
+        assert!(with.compute_s < without.compute_s);
+    }
+
+    #[test]
+    fn trace_is_balanced() {
+        // Every alloc is freed or alive at the end; run_trace validates
+        // double-alloc/unknown-key; here we additionally check the trace
+        // runs cleanly for every config in the manual space.
+        let net = yolov2_16();
+        for config in crate::plan::manual_search_space(&net) {
+            let r = simulate_config(&net, config, &opts());
+            assert!(r.is_ok(), "{config}: {:?}", r.err());
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Memory/compute traces: the bridge between an execution strategy (MAFAT
+//! plan or the Darknet baseline) and the [`crate::memsim`] substrate.
+//!
+//! A trace is a flat list of [`Step`]s — allocations, frees, reads/writes of
+//! (regions of) buffers, compute, and fixed overheads. [`run_trace`] replays
+//! it against a `MemSim` and prices the result with a
+//! [`super::cost::CostModel`]. Keeping traces first-class makes the
+//! simulator unit-testable and lets the figure benches share one runner.
+
+use crate::ftp::Rect;
+use crate::memsim::{MemSim, MemSimConfig, MemStats, RegionId};
+use crate::network::BYTES_PER_ELEM;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+use super::cost::CostModel;
+
+/// One step of an execution trace. Buffer keys are free-form strings
+/// (unique per live allocation).
+#[derive(Debug, Clone)]
+pub enum Step {
+    Alloc { key: String, bytes: u64 },
+    Free { key: String },
+    /// Touch a full buffer.
+    Read { key: String },
+    Write { key: String },
+    /// Touch a CHW-laid-out sub-region of a feature-map buffer, channel by
+    /// channel, row by row (exact page behaviour of strided tile access).
+    ReadMap { key: String, w: usize, h: usize, c: usize, rect: Rect },
+    WriteMap { key: String, w: usize, h: usize, c: usize, rect: Rect },
+    /// Touch a contiguous byte range (e.g. the prefix of a shared workspace
+    /// that a small layer actually uses).
+    ReadRange { key: String, offset: u64, len: u64 },
+    WriteRange { key: String, offset: u64, len: u64 },
+    /// Burn `macs` multiply-accumulates.
+    Compute { macs: u64 },
+    /// Fixed wall-clock overhead in seconds (task launch, merge memcpy...).
+    Overhead { seconds: f64 },
+}
+
+/// Result of replaying a trace.
+#[derive(Debug, Clone, Copy)]
+pub struct SimReport {
+    pub latency_s: f64,
+    pub compute_s: f64,
+    pub overhead_s: f64,
+    pub swap_s: f64,
+    pub stats: MemStats,
+}
+
+impl SimReport {
+    pub fn latency_ms(&self) -> f64 {
+        self.latency_s * 1e3
+    }
+
+    pub fn swapped_mb(&self) -> f64 {
+        self.stats.swap_total_bytes() as f64 / (1 << 20) as f64
+    }
+
+    pub fn peak_rss_mb(&self) -> f64 {
+        self.stats.peak_rss_bytes as f64 / (1 << 20) as f64
+    }
+}
+
+/// Touch a rectangular sub-region of a CHW feature map, page-exactly.
+pub fn touch_map_region(
+    sim: &mut MemSim,
+    region: RegionId,
+    w: usize,
+    h: usize,
+    c: usize,
+    rect: &Rect,
+    write: bool,
+) -> Result<()> {
+    debug_assert!(rect.x1 <= w && rect.y1 <= h, "rect {rect} outside {w}x{h}");
+    let row_bytes = w as u64 * BYTES_PER_ELEM;
+    let seg_bytes = rect.w() as u64 * BYTES_PER_ELEM;
+    for ch in 0..c as u64 {
+        let chan_off = ch * h as u64 * row_bytes;
+        for y in rect.y0 as u64..rect.y1 as u64 {
+            let off = chan_off + y * row_bytes + rect.x0 as u64 * BYTES_PER_ELEM;
+            sim.touch_range(region, off, seg_bytes, write)?;
+        }
+    }
+    Ok(())
+}
+
+/// Replay `steps` against a fresh `MemSim` with the given memory limit and
+/// price the run. Compute and swap are serialized (single core, synchronous
+/// demand paging — the Pi-3 behaviour the paper measures).
+pub fn run_trace(steps: &[Step], limit_bytes: Option<u64>, cost: &CostModel) -> Result<SimReport> {
+    let mut sim = MemSim::new(MemSimConfig { limit_bytes });
+    let mut regions: HashMap<String, RegionId> = HashMap::new();
+    let mut compute_s = 0.0f64;
+    let mut overhead_s = 0.0f64;
+
+    let lookup = |regions: &HashMap<String, RegionId>, key: &str| -> Result<RegionId> {
+        regions
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("trace references unknown buffer '{key}'"))
+    };
+
+    for step in steps {
+        match step {
+            Step::Alloc { key, bytes } => {
+                if regions.contains_key(key) {
+                    anyhow::bail!("trace allocates '{key}' twice");
+                }
+                let id = sim.alloc(key, *bytes);
+                regions.insert(key.clone(), id);
+            }
+            Step::Free { key } => {
+                let id = lookup(&regions, key)?;
+                sim.free(id);
+                regions.remove(key);
+            }
+            Step::Read { key } => sim.read(lookup(&regions, key)?),
+            Step::Write { key } => sim.write(lookup(&regions, key)?),
+            Step::ReadMap { key, w, h, c, rect } => {
+                touch_map_region(&mut sim, lookup(&regions, key)?, *w, *h, *c, rect, false)?;
+            }
+            Step::WriteMap { key, w, h, c, rect } => {
+                touch_map_region(&mut sim, lookup(&regions, key)?, *w, *h, *c, rect, true)?;
+            }
+            Step::ReadRange { key, offset, len } => {
+                sim.touch_range(lookup(&regions, key)?, *offset, *len, false)?;
+            }
+            Step::WriteRange { key, offset, len } => {
+                sim.touch_range(lookup(&regions, key)?, *offset, *len, true)?;
+            }
+            Step::Compute { macs } => compute_s += cost.compute_s(*macs),
+            Step::Overhead { seconds } => overhead_s += seconds,
+        }
+    }
+
+    let stats = sim.stats();
+    let swap_s = cost.swap_s(&MemStats::default(), &stats);
+    Ok(SimReport {
+        latency_s: compute_s + overhead_s + swap_s,
+        compute_s,
+        overhead_s,
+        swap_s,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1 << 20;
+
+    fn steps_basic() -> Vec<Step> {
+        vec![
+            Step::Alloc { key: "a".into(), bytes: 8 * MB },
+            Step::Write { key: "a".into() },
+            Step::Compute { macs: 865_000_000 },
+            Step::Free { key: "a".into() },
+        ]
+    }
+
+    #[test]
+    fn unconstrained_latency_is_compute_only() {
+        let r = run_trace(&steps_basic(), None, &CostModel::default()).unwrap();
+        assert!((r.latency_s - 1.0).abs() < 1e-6, "{}", r.latency_s);
+        assert_eq!(r.stats.swap_total_bytes(), 0);
+    }
+
+    #[test]
+    fn constrained_adds_swap_time() {
+        let steps = vec![
+            Step::Alloc { key: "a".into(), bytes: 8 * MB },
+            Step::Alloc { key: "b".into(), bytes: 8 * MB },
+            Step::Write { key: "a".into() },
+            Step::Write { key: "b".into() },
+            Step::Read { key: "a".into() },
+        ];
+        let free = run_trace(&steps, None, &CostModel::default()).unwrap();
+        let tight = run_trace(&steps, Some(8 * MB), &CostModel::default()).unwrap();
+        assert!(tight.latency_s > free.latency_s);
+        assert!(tight.swap_s > 0.0);
+        assert!(tight.stats.swap_in_bytes > 0);
+    }
+
+    #[test]
+    fn unknown_buffer_is_error() {
+        let steps = vec![Step::Read { key: "ghost".into() }];
+        assert!(run_trace(&steps, None, &CostModel::default()).is_err());
+    }
+
+    #[test]
+    fn double_alloc_is_error() {
+        let steps = vec![
+            Step::Alloc { key: "a".into(), bytes: MB },
+            Step::Alloc { key: "a".into(), bytes: MB },
+        ];
+        assert!(run_trace(&steps, None, &CostModel::default()).is_err());
+    }
+
+    #[test]
+    fn map_region_touch_is_page_exact() {
+        use crate::memsim::{MemSimConfig, PAGE_BYTES};
+        // 64x64x4 map; touching a 16x16 tile must fault far fewer pages
+        // than the whole map.
+        let mut sim = MemSim::new(MemSimConfig { limit_bytes: None });
+        let bytes = 64 * 64 * 4 * BYTES_PER_ELEM;
+        let id = sim.alloc("map", bytes);
+        touch_map_region(&mut sim, id, 64, 64, 4, &Rect::new(0, 0, 16, 16), true).unwrap();
+        let touched = sim.stats().rss_bytes;
+        assert!(touched < bytes / 2, "touched {touched} of {bytes}");
+        assert!(touched >= 16 * 16 * 4 * BYTES_PER_ELEM / PAGE_BYTES * PAGE_BYTES / 4);
+    }
+}

@@ -1,0 +1,117 @@
+//! CLI smoke tests: drive the actual `mafat` binary end to end (argument
+//! parsing, subcommand wiring, output shape) for everything that does not
+//! need artifacts.
+
+use std::process::Command;
+
+fn mafat(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_mafat"))
+        .args(args)
+        .output()
+        .expect("spawn mafat");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, stdout, _) = mafat(&["help"]);
+    assert!(ok);
+    for cmd in ["table-2-1", "fig-4-3", "predict", "search", "simulate", "run", "serve"] {
+        assert!(stdout.contains(cmd), "usage missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let (ok, _, stderr) = mafat(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"), "{stderr}");
+}
+
+#[test]
+fn table_2_1_prints_all_layers() {
+    let (ok, stdout, _) = mafat(&["table-2-1"]);
+    assert!(ok);
+    assert!(stdout.contains("608x608x3"));
+    assert!(stdout.contains("38x38x512"));
+}
+
+#[test]
+fn predict_with_swap_estimate() {
+    let (ok, stdout, _) = mafat(&["predict", "--config", "5x5/8/2x2", "--limit-mb", "16"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("predicted max memory"));
+    assert!(stdout.contains("estimated swap-in"));
+}
+
+#[test]
+fn predict_multi_group() {
+    let (ok, stdout, _) = mafat(&["predict", "--config", "4x4/4/3x3/12/1x1"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("4x4/4/3x3/12/1x1"));
+}
+
+#[test]
+fn search_paper_and_extension() {
+    let (ok, stdout, _) = mafat(&["search", "--limit-mb", "64"]);
+    assert!(ok);
+    assert!(stdout.contains("predicted"));
+    let (ok2, stdout2, _) = mafat(&[
+        "search", "--limit-mb", "48", "--max-groups", "3", "--max-tiling", "6",
+    ]);
+    assert!(ok2);
+    // The 3-group search must find something below the 2-group 55.2 MB floor.
+    assert!(!stdout2.contains("FALLBACK"), "{stdout2}");
+}
+
+#[test]
+fn simulate_reports_breakdown() {
+    let (ok, stdout, _) = mafat(&["simulate", "--config", "3x3/8/2x2", "--limit-mb", "48"]);
+    assert!(ok);
+    assert!(stdout.contains("latency"));
+    assert!(stdout.contains("peak RSS"));
+}
+
+#[test]
+fn simulate_rejects_bad_config() {
+    let (ok, _, stderr) = mafat(&["simulate", "--config", "3x2/8/2x2"]);
+    assert!(!ok);
+    assert!(stderr.contains("square"), "{stderr}");
+}
+
+#[test]
+fn custom_cfg_file_flows_through() {
+    let dir = std::env::temp_dir().join("mafat_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("small.cfg");
+    std::fs::write(
+        &path,
+        "[net]\nwidth=64\nheight=64\nchannels=3\n\
+         [convolutional]\nfilters=16\nsize=3\nstride=1\npad=1\n\
+         [maxpool]\nsize=2\nstride=2\n\
+         [convolutional]\nfilters=32\nsize=3\nstride=1\npad=1\n\
+         [maxpool]\nsize=2\nstride=2\n",
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = mafat(&[
+        "predict",
+        "--config",
+        "2x2/NoCut",
+        "--cfg",
+        path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("predicted max memory"), "{stdout}");
+}
+
+#[test]
+fn export_geometry_to_stdout_parses() {
+    let (ok, stdout, _) = mafat(&["export-geometry"]);
+    assert!(ok);
+    let j = mafat::jsonlite::Json::parse(&stdout).unwrap();
+    assert!(j.get("networks").unwrap().as_arr().unwrap().len() == 1);
+}

@@ -1,0 +1,115 @@
+//! End-to-end engine integration: real artifacts, real PJRT execution.
+//!
+//! These tests need `make artifacts` to have run (the `test` Makefile
+//! target guarantees it); they skip with a loud message when artifacts are
+//! missing so a bare `cargo test` still passes.
+
+use mafat::engine::Engine;
+use mafat::plan::MafatConfig;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing - run `make artifacts`");
+        None
+    }
+}
+
+fn configs() -> Vec<MafatConfig> {
+    vec![
+        "1x1/NoCut".parse().unwrap(),
+        "2x2/NoCut".parse().unwrap(),
+        "3x3/8/2x2".parse().unwrap(),
+        "5x5/8/2x2".parse().unwrap(),
+        "2x2/12/2x2".parse().unwrap(),
+    ]
+}
+
+#[test]
+fn every_compiled_config_verifies_against_untiled_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    for config in configs() {
+        let mut engine = Engine::load(dir, config).unwrap();
+        let image = engine.synthetic_image(7);
+        let err = engine.verify(&image).unwrap();
+        // Same kernels, same fp32 op order per output cell: tiling must be
+        // numerically *identical*, not just close (paper §2.1.1).
+        assert_eq!(err, 0.0, "{config}: max |err| = {err}");
+    }
+}
+
+#[test]
+fn inference_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir, "3x3/8/2x2".parse().unwrap()).unwrap();
+    let image = engine.synthetic_image(99);
+    let (a, _) = engine.infer(&image).unwrap();
+    let (b, _) = engine.infer(&image).unwrap();
+    assert_eq!(a.data, b.data);
+}
+
+#[test]
+fn all_configs_agree_with_each_other() {
+    // Different tilings/cuts of the same network on the same image must
+    // produce the same final map.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut outputs = Vec::new();
+    for config in configs() {
+        let mut engine = Engine::load(dir, config).unwrap();
+        let image = engine.synthetic_image(3);
+        let (out, stats) = engine.infer(&image).unwrap();
+        assert!(stats.tasks > 0);
+        outputs.push((config, out.data));
+    }
+    let (c0, first) = &outputs[0];
+    for (c, data) in &outputs[1..] {
+        assert_eq!(first, data, "{c0} vs {c} disagree");
+    }
+}
+
+#[test]
+fn different_images_differ() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir, "2x2/NoCut".parse().unwrap()).unwrap();
+    let (a, _) = engine.infer(&engine.synthetic_image(1)).unwrap();
+    let (b, _) = engine.infer(&engine.synthetic_image(2)).unwrap();
+    assert_ne!(a.data, b.data);
+}
+
+#[test]
+fn wrong_image_size_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir, "2x2/NoCut".parse().unwrap()).unwrap();
+    assert!(engine.infer(&[0.0; 10]).is_err());
+}
+
+#[test]
+fn missing_config_is_a_clear_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let err = Engine::load(dir, "4x4/4/3x3".parse::<MafatConfig>().unwrap())
+        .err()
+        .expect("should fail")
+        .to_string();
+    assert!(err.contains("not in manifest") || err.contains("4x4/4/3x3"), "{err}");
+}
+
+#[test]
+fn output_shape_matches_network() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir, "1x1/NoCut".parse().unwrap()).unwrap();
+    // 160 input, 4 pools -> 10x10; final conv stack ends at 256 channels.
+    assert_eq!(engine.output_shape(), (10, 10, 256));
+}
+
+#[test]
+fn task_metrics_accumulate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir, "5x5/8/2x2".parse().unwrap()).unwrap();
+    let image = engine.synthetic_image(5);
+    let (_, stats) = engine.infer(&image).unwrap();
+    assert_eq!(stats.tasks, 25 + 4);
+    assert_eq!(engine.metrics.tasks_executed.get(), 29);
+    assert!(engine.metrics.task_latency.percentile(0.5).is_some());
+}

@@ -1,0 +1,156 @@
+//! Cross-module integration below the PJRT layer (no artifacts needed):
+//! geometry export <-> manifest schema <-> tiler, and simulator <->
+//! predictor <-> search consistency over the whole manual space.
+
+use mafat::jsonlite::Json;
+use mafat::network::yolov2::{yolov2_16, yolov2_16_scaled};
+use mafat::network::MIB;
+use mafat::plan::{manual_search_space, plan_config, MafatConfig};
+use mafat::predictor::{predict_mem, PredictorParams};
+use mafat::runtime::export::default_export;
+use mafat::runtime::Manifest;
+use mafat::search::{exhaustive_by_latency, get_config};
+use mafat::simulate::{simulate_config, SimOptions};
+
+#[test]
+fn manifest_on_disk_matches_tiler_when_present() {
+    // If `make artifacts` ran, the real manifest must verify against a
+    // fresh plan for every config it advertises.
+    let Ok(m) = Manifest::load(std::path::Path::new("artifacts")) else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let net = m.sole_network().unwrap();
+    assert_eq!(net.network().layers, yolov2_16_scaled(160).layers);
+    for cfg in &net.configs {
+        net.verify_geometry(cfg.config).unwrap();
+    }
+}
+
+#[test]
+fn export_geometry_total_task_coverage() {
+    // In the default export, every config's tasks exactly tile the final
+    // output map of its bottom group.
+    let j = default_export().unwrap();
+    let net_json = &j.get("networks").unwrap().as_arr().unwrap()[0];
+    let net = yolov2_16_scaled(160);
+    for cfg in net_json.get("configs").unwrap().as_arr().unwrap() {
+        let groups = cfg.get("groups").unwrap().as_arr().unwrap();
+        for g in groups {
+            let bottom = g.usize_at("bottom").unwrap();
+            let (w, h, _) = net.out_shape(bottom);
+            let total: usize = g
+                .get("tasks")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|t| {
+                    let r = t.get("out_rect").unwrap().as_arr().unwrap();
+                    let (x0, y0, x1, y1) = (
+                        r[0].as_usize().unwrap(),
+                        r[1].as_usize().unwrap(),
+                        r[2].as_usize().unwrap(),
+                        r[3].as_usize().unwrap(),
+                    );
+                    (x1 - x0) * (y1 - y0)
+                })
+                .sum();
+            assert_eq!(total, w * h);
+        }
+    }
+}
+
+#[test]
+fn export_json_round_trips_through_parser() {
+    let j = default_export().unwrap();
+    assert_eq!(Json::parse(&j.to_string_pretty()).unwrap(), j);
+}
+
+#[test]
+fn algorithm_config_close_to_exhaustive_best() {
+    // The paper's §4.4 claim on the simulated testbed: Algorithm 3's
+    // configuration is within a few percent of the best configuration
+    // found by exhaustive search, at every memory point.
+    let net = yolov2_16();
+    let opts = SimOptions::default();
+    let params = PredictorParams::default();
+    for mb in [96u64, 64, 48, 32, 16] {
+        let o = SimOptions {
+            limit_bytes: Some(mb * MIB),
+            ..opts
+        };
+        let ranked = exhaustive_by_latency(&net, |c| {
+            Ok(simulate_config(&net, c, &o)?.latency_s)
+        })
+        .unwrap();
+        let (best_cfg, best_s) = ranked[0];
+        let algo = get_config(&net, mb * MIB, &params).unwrap();
+        let algo_s = simulate_config(&net, algo.config, &o).unwrap().latency_s;
+        let gap = (algo_s - best_s) / best_s;
+        assert!(
+            gap < 0.12,
+            "{mb} MB: algo {} ({algo_s:.1}s) vs best {best_cfg} ({best_s:.1}s) gap {:.0}%",
+            algo.config,
+            gap * 100.0
+        );
+    }
+}
+
+#[test]
+fn predictor_ranks_like_simulator_footprints() {
+    // Spearman-style sanity: across the manual space, configs the
+    // predictor calls smaller must not have systematically *larger*
+    // simulated footprints (within one bucket of noise).
+    let net = yolov2_16();
+    let opts = SimOptions::default();
+    let mut points: Vec<(f64, f64)> = Vec::new();
+    for config in manual_search_space(&net) {
+        let p = predict_mem(&net, config, &PredictorParams::default()).unwrap();
+        let plan = plan_config(&net, config).unwrap();
+        let steps = mafat_trace_for(&net, &plan, &opts);
+        // Peak RSS under no limit = what the process actually needs.
+        let r = mafat::simulate::run_trace(&steps, None, &opts.cost).unwrap();
+        points.push((p.total_mb(), r.peak_rss_mb()));
+    }
+    // Rank correlation (concordant vs discordant pairs).
+    let mut concordant = 0i64;
+    let mut discordant = 0i64;
+    for i in 0..points.len() {
+        for j in i + 1..points.len() {
+            let d = (points[i].0 - points[j].0) * (points[i].1 - points[j].1);
+            if d > 0.0 {
+                concordant += 1;
+            } else if d < 0.0 {
+                discordant += 1;
+            }
+        }
+    }
+    let tau = (concordant - discordant) as f64 / (concordant + discordant).max(1) as f64;
+    assert!(
+        tau > 0.6,
+        "predictor/simulator rank correlation too weak: tau = {tau:.2}"
+    );
+}
+
+fn mafat_trace_for(
+    net: &mafat::network::Network,
+    plan: &mafat::plan::Plan,
+    opts: &SimOptions,
+) -> Vec<mafat::simulate::Step> {
+    mafat::simulate::mafat_trace(net, plan, opts)
+}
+
+#[test]
+fn cfg_file_round_trip_through_cli_surface() {
+    // A cfg written to disk parses to the same network the built-in uses.
+    let dir = std::env::temp_dir().join("mafat_test_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("yolov2_16.cfg");
+    std::fs::write(&path, mafat::network::cfg::YOLOV2_16_CFG).unwrap();
+    let net = mafat::network::cfg::load_cfg(&path).unwrap();
+    assert_eq!(net.layers, yolov2_16().layers);
+    // And the full pipeline below PJRT runs on it.
+    let r = simulate_config(&net, MafatConfig::with_cut(5, 8, 2), &SimOptions::default()).unwrap();
+    assert!(r.latency_s > 0.0);
+}

@@ -1,0 +1,130 @@
+//! Serving-loop integration: boot the coordinator on an ephemeral port and
+//! speak the JSON-lines protocol over real TCP.
+
+use mafat::coordinator::{Server, ServerConfig};
+use mafat::engine::Engine;
+use mafat::jsonlite::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::Duration;
+
+fn artifacts_ok() -> bool {
+    let ok = Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing - run `make artifacts`");
+    }
+    ok
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn call(&mut self, req: &str) -> Json {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(&line).unwrap()
+    }
+}
+
+#[test]
+fn serve_end_to_end() {
+    if !artifacts_ok() {
+        return;
+    }
+    let server = Server::start(
+        || Engine::load("artifacts", "2x2/NoCut".parse().unwrap()),
+        "127.0.0.1:0",
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let addr = server.local_addr;
+    let accept = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    let mut c = Client::connect(addr);
+
+    // Liveness.
+    let pong = c.call(r#"{"cmd":"ping"}"#);
+    assert!(pong.get("ok").unwrap().as_bool().unwrap());
+
+    // Synthetic-image inference (engine may still be compiling: the queue
+    // holds the request until the worker is ready).
+    let r = c.call(r#"{"cmd":"infer","id":"r1","seed":7}"#);
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+    assert_eq!(r.str_at("id").unwrap(), "r1");
+    let shape = r.get("shape").unwrap().as_arr().unwrap();
+    assert_eq!(shape.len(), 3);
+    assert!(r.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // Same seed -> same checksum (deterministic serving).
+    let r2 = c.call(r#"{"cmd":"infer","id":"r2","seed":7}"#);
+    assert_eq!(
+        r.get("checksum").unwrap().as_f64().unwrap(),
+        r2.get("checksum").unwrap().as_f64().unwrap()
+    );
+
+    // Different seed -> different checksum.
+    let r3 = c.call(r#"{"cmd":"infer","id":"r3","seed":8}"#);
+    assert_ne!(
+        r.get("checksum").unwrap().as_f64().unwrap(),
+        r3.get("checksum").unwrap().as_f64().unwrap()
+    );
+
+    // Metrics after traffic.
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    assert!(m.get("ok").unwrap().as_bool().unwrap());
+    let snapshot = m.str_at("metrics").unwrap();
+    assert!(snapshot.contains("requests"), "{snapshot}");
+
+    // Malformed request -> structured error, connection stays usable.
+    let e = c.call(r#"{"cmd":"nonsense"}"#);
+    assert!(!e.get("ok").unwrap().as_bool().unwrap());
+    let pong2 = c.call(r#"{"cmd":"ping"}"#);
+    assert!(pong2.get("ok").unwrap().as_bool().unwrap());
+
+    // Failure injection: an image with the wrong element count must come
+    // back as a structured per-request error, not kill the worker.
+    let bad = c.call(r#"{"cmd":"infer","id":"bad","image":[1.0,2.0,3.0]}"#);
+    assert!(!bad.get("ok").unwrap().as_bool().unwrap());
+    assert!(bad
+        .str_at("error")
+        .unwrap()
+        .contains("elems"), "{bad:?}");
+    // The worker survives and keeps serving.
+    let after = c.call(r#"{"cmd":"infer","id":"after-bad","seed":7}"#);
+    assert!(after.get("ok").unwrap().as_bool().unwrap());
+
+    // Parallel clients.
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let r = c.call(&format!(r#"{{"cmd":"infer","id":"p{i}","seed":{i}}}"#));
+                assert!(r.get("ok").unwrap().as_bool().unwrap());
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    drop(accept); // listener thread keeps running; process exit reaps it
+}

@@ -1,0 +1,262 @@
+//! Property-based tests over randomized networks and configurations.
+//!
+//! The offline environment has no proptest; `Cases` below is a small
+//! deterministic driver over the crate's SplitMix64 — every failure prints
+//! the seed, and re-running with that seed reproduces the case exactly.
+
+use mafat::data::SplitMix64;
+use mafat::ftp::{down_extent, plan_group};
+use mafat::network::{LayerKind, Network, MIB};
+use mafat::plan::{plan_config, MafatConfig};
+use mafat::predictor::{predict_mem, PredictorParams};
+use mafat::reuse::{reuse_analysis, schedule_order};
+use mafat::search::get_config;
+
+const CASES: u64 = 60;
+
+/// Run `f` over `n` deterministic cases, reporting the failing seed.
+fn cases(n: u64, f: impl Fn(&mut SplitMix64)) {
+    for seed in 0..n {
+        let mut rng = SplitMix64::new(0xC0FFEE ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// A random conv/maxpool prefix with valid (even, large-enough) dims.
+fn random_network(rng: &mut SplitMix64) -> Network {
+    let mut ops = Vec::new();
+    let n_layers = 2 + rng.next_below(8);
+    let mut pools = 0;
+    for _ in 0..n_layers {
+        // Bias toward convs; at most 3 pools to keep maps >= 8.
+        if pools < 3 && rng.next_below(4) == 0 {
+            ops.push(LayerKind::MaxPool { size: 2, stride: 2 });
+            pools += 1;
+        } else {
+            let size = if rng.next_below(3) == 0 { 1 } else { 3 };
+            ops.push(LayerKind::Conv {
+                filters: 1 << (2 + rng.next_below(4)),
+                size,
+                stride: 1,
+                pad: size / 2,
+            });
+        }
+    }
+    // Input extent: multiple of 8 so 3 pools stay even.
+    let wh = 8 * (8 + rng.next_below(9)); // 64..136
+    Network::from_ops("prop", wh, wh, 3, &ops)
+}
+
+fn random_config(rng: &mut SplitMix64, net: &Network) -> MafatConfig {
+    let cuts = net.candidate_cuts();
+    let tiling = 1 + rng.next_below(4);
+    if cuts.is_empty() || rng.next_below(3) == 0 {
+        MafatConfig::no_cut(tiling)
+    } else {
+        let cut = cuts[rng.next_below(cuts.len())];
+        MafatConfig::with_cut(tiling, cut, 1 + rng.next_below(3))
+    }
+}
+
+#[test]
+fn prop_network_validates() {
+    cases(CASES, |rng| {
+        random_network(rng).validate().unwrap();
+    });
+}
+
+#[test]
+fn prop_grid_partitions_exactly() {
+    cases(CASES, |rng| {
+        let net = random_network(rng);
+        let n = 1 + rng.next_below(5);
+        let bottom = net.n_layers() - 1;
+        let (w, h, _) = net.out_shape(bottom);
+        if n > w.min(h) {
+            return;
+        }
+        let g = plan_group(&net, 0, bottom, n, n).unwrap();
+        let total: usize = g.tasks.iter().map(|t| t.output_rect().area()).sum();
+        assert_eq!(total, w * h, "tiles must partition the output map");
+        // Disjoint.
+        for (a, ta) in g.tasks.iter().enumerate() {
+            for tb in g.tasks.iter().skip(a + 1) {
+                assert_eq!(ta.output_rect().overlap_area(&tb.output_rect()), 0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pool_regions_window_aligned_and_shapes_consistent() {
+    cases(CASES, |rng| {
+        let net = random_network(rng);
+        let config = random_config(rng, &net);
+        let Ok(plan) = plan_config(&net, config) else { return };
+        for group in &plan.groups {
+            for task in &group.tasks {
+                for lg in &task.layers {
+                    let spec = &net.layers[lg.layer];
+                    if spec.kind.is_pool() {
+                        assert_eq!(lg.in_rect.x0 % 2, 0);
+                        assert_eq!(lg.in_rect.w() % 2, 0);
+                        assert!(!lg.pad.any());
+                    }
+                    let f = spec.kind.filter();
+                    let s = spec.kind.stride();
+                    assert_eq!(
+                        down_extent(lg.in_rect.w(), lg.pad.left, lg.pad.right, f, s),
+                        lg.out_rect.w()
+                    );
+                    assert_eq!(
+                        down_extent(lg.in_rect.h(), lg.pad.top, lg.pad.bottom, f, s),
+                        lg.out_rect.h()
+                    );
+                }
+                // Layers chain.
+                for w in task.layers.windows(2) {
+                    assert_eq!(w[0].out_rect, w[1].in_rect);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_predictor_monotone_in_tiling_when_halo_small() {
+    // Monotonicity in the tiling is NOT a universal FTP property: a deep
+    // fusing on a small map can make a middle tile (halo on both sides)
+    // bigger than a coarser grid's corner tile. It holds whenever the
+    // accumulated halo is small relative to the tile extent — the paper's
+    // YOLOv2 regime. Guard accordingly.
+    cases(CASES, |rng| {
+        let net = random_network(rng);
+        let params = PredictorParams::default();
+        let (w, h, _) = net.out_shape(net.n_layers() - 1);
+        let max_t = 5.min(w.min(h));
+        // Accumulated one-sided halo at the top layer (upper bound).
+        let halo: usize = net
+            .layers
+            .iter()
+            .map(|l| l.kind.filter() / 2)
+            .sum();
+        if halo * 2 * max_t >= w.min(h) {
+            return; // deep-halo regime: monotonicity not claimed
+        }
+        let mut prev = u64::MAX;
+        for t in 1..=max_t {
+            let p = predict_mem(&net, MafatConfig::no_cut(t), &params).unwrap();
+            assert!(
+                p.total_bytes <= prev,
+                "tiling {t} increased prediction on {}x{} (halo {halo})",
+                net.in_w,
+                net.in_h
+            );
+            prev = p.total_bytes;
+        }
+    });
+}
+
+#[test]
+fn prop_search_result_fits_or_is_fallback() {
+    cases(CASES, |rng| {
+        let net = random_network(rng);
+        let limit = (16 + rng.next_below(300) as u64) * MIB;
+        let params = PredictorParams::default();
+        let r = get_config(&net, limit, &params).unwrap();
+        if !r.is_fallback {
+            assert!(r.predicted_bytes < limit);
+        }
+        // The returned config must be plannable whenever its cut exists in
+        // this network (the fallback hard-codes cut 8, which a short prefix
+        // may not have — the paper's algorithm is YOLOv2-specific there).
+        if let Some(cut) = r.config.cut {
+            if cut < net.n_layers() {
+                plan_config(&net, r.config).unwrap();
+            }
+        } else {
+            plan_config(&net, r.config).unwrap();
+        }
+    });
+}
+
+#[test]
+fn prop_reuse_schedule_is_permutation_and_even_first() {
+    cases(CASES, |rng| {
+        let net = random_network(rng);
+        let n = 1 + rng.next_below(4);
+        let bottom = net.n_layers() - 1;
+        let (w, h, _) = net.out_shape(bottom);
+        if n > w.min(h) {
+            return;
+        }
+        let g = plan_group(&net, 0, bottom, n, n).unwrap();
+        let order = schedule_order(&g);
+        let mut seen = vec![false; g.tasks.len()];
+        let mut parity_flip = 0;
+        let mut last_parity = 0;
+        for &ix in &order {
+            assert!(!seen[ix], "duplicate task in schedule");
+            seen[ix] = true;
+            let t = &g.tasks[ix];
+            let p = (t.grid_i + t.grid_j) % 2;
+            if p != last_parity {
+                parity_flip += 1;
+                last_parity = p;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "schedule misses tasks");
+        assert!(parity_flip <= 1, "parity interleaved: schedule not even-first");
+    });
+}
+
+#[test]
+fn prop_reuse_never_increases_macs() {
+    cases(30, |rng| {
+        let net = random_network(rng);
+        let n = 1 + rng.next_below(4);
+        let bottom = net.n_layers() - 1;
+        let (w, h, _) = net.out_shape(bottom);
+        if n > w.min(h) {
+            return;
+        }
+        let g = plan_group(&net, 0, bottom, n, n).unwrap();
+        let r = reuse_analysis(&net, &g);
+        assert!(r.total_macs <= r.naive_macs);
+        // And never below the untiled ideal.
+        let untiled: u64 = plan_group(&net, 0, bottom, 1, 1).unwrap().tasks[0].macs(&net);
+        assert!(
+            r.total_macs >= untiled,
+            "reuse 'saved' more work than exists: {} < {untiled}",
+            r.total_macs
+        );
+    });
+}
+
+#[test]
+fn prop_config_display_parse_round_trip() {
+    cases(200, |rng| {
+        let config = MafatConfig {
+            top_tiling: 1 + rng.next_below(9),
+            cut: if rng.next_below(2) == 0 {
+                None
+            } else {
+                Some(1 + rng.next_below(20))
+            },
+            bottom_tiling: 1 + rng.next_below(9),
+        };
+        let text = config.to_string();
+        let back: MafatConfig = text.parse().unwrap();
+        // NoCut normalizes bottom_tiling to 1.
+        if config.cut.is_some() {
+            assert_eq!(back, config);
+        } else {
+            assert_eq!(back.top_tiling, config.top_tiling);
+            assert_eq!(back.cut, None);
+        }
+    });
+}
