@@ -4,6 +4,7 @@
 //! 2. Predict the memory footprint of a configuration (Alg. 1/2).
 //! 3. Search for the best configuration under a budget (Alg. 3).
 //! 4. Simulate the run on the calibrated Pi-3 memory/swap model.
+//! 5. Walk the Pareto frontier of the k-group extension (memory vs. cost).
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -61,6 +62,20 @@ fn main() -> anyhow::Result<()> {
             r.latency_ms(),
             r.swap_s,
             r.swapped_mb()
+        );
+    }
+
+    // 5. Beyond a single budget: the Pareto frontier of the k-group
+    //    extension space shows what every additional megabyte buys
+    //    (also `mafat frontier` on the CLI; the serving coordinator picks
+    //    from this curve automatically when no --config is given).
+    println!("\nPareto frontier (up to 3 groups, tilings 1..=5):");
+    for p in mafat::search::frontier(&net, 3, 5, &params)? {
+        println!(
+            "  {:>6.1} MB -> {:<24} (cost {:>5.2} GMACeq)",
+            p.predicted_bytes as f64 / MIB as f64,
+            p.config.to_string(),
+            p.cost_proxy as f64 / 1e9
         );
     }
     Ok(())

@@ -1,0 +1,97 @@
+//! Search-scaling bench: the memoized/pruned/parallel planner versus the
+//! naive exhaustive k-group search on YOLOv2-16 at `max_groups = 4,
+//! max_tiling = 8`.
+//!
+//! Proves the planner refactor's two claims and fails loudly if either
+//! regresses:
+//!
+//! * **>= 10x fewer `plan_group` calls** — the naive search re-plans every
+//!   `(top, bottom, tiling)` group once per cut-set x tiling combo; the
+//!   planner plans each at most once per search (counted via
+//!   `ftp::PLAN_GROUP_CALLS`);
+//! * **identical answers** — same config, predicted bytes, and cost proxy
+//!   at every probed limit — with a wall-clock speedup.
+
+mod harness;
+
+use mafat::ftp::PLAN_GROUP_CALLS;
+use mafat::network::yolov2::yolov2_16;
+use mafat::network::MIB;
+use mafat::predictor::PredictorParams;
+use mafat::search::{search_multi, search_multi_exhaustive};
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+fn plan_calls_during<R>(f: impl FnOnce() -> R) -> (R, u64) {
+    let before = PLAN_GROUP_CALLS.load(Ordering::Relaxed);
+    let r = f();
+    (r, PLAN_GROUP_CALLS.load(Ordering::Relaxed) - before)
+}
+
+fn main() {
+    let net = yolov2_16();
+    let params = PredictorParams::default();
+    let (max_groups, max_tiling) = (4usize, 8usize);
+
+    println!(
+        "search scaling on {} | max_groups={max_groups} max_tiling={max_tiling}\n",
+        net.name
+    );
+    println!(
+        "{:>6} {:<26} {:>12} {:>12} {:>9} {:>11} {:>11}",
+        "MB", "config", "naive plans", "cached plans", "ratio", "naive ms", "cached ms"
+    );
+
+    let mut worst_ratio = f64::INFINITY;
+    let mut naive_total_ms = 0.0;
+    let mut cached_total_ms = 0.0;
+    for mb in [192u64, 96, 64, 48] {
+        let t0 = Instant::now();
+        let (slow, slow_calls) = plan_calls_during(|| {
+            search_multi_exhaustive(&net, mb * MIB, max_groups, max_tiling, &params).unwrap()
+        });
+        let slow_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t1 = Instant::now();
+        let (fast, fast_calls) = plan_calls_during(|| {
+            search_multi(&net, mb * MIB, max_groups, max_tiling, &params).unwrap()
+        });
+        let fast_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+        // Identical answers (the equivalence the unit tests also pin).
+        assert_eq!(fast.config, slow.config, "{mb} MB");
+        assert_eq!(fast.predicted_bytes, slow.predicted_bytes, "{mb} MB");
+        assert_eq!(fast.cost_proxy, slow.cost_proxy, "{mb} MB");
+        assert_eq!(fast.is_fallback, slow.is_fallback, "{mb} MB");
+
+        let ratio = slow_calls as f64 / fast_calls.max(1) as f64;
+        worst_ratio = worst_ratio.min(ratio);
+        naive_total_ms += slow_ms;
+        cached_total_ms += fast_ms;
+        println!(
+            "{mb:>6} {:<26} {slow_calls:>12} {fast_calls:>12} {ratio:>8.1}x {slow_ms:>11.2} {fast_ms:>11.2}",
+            fast.config.to_string()
+        );
+    }
+
+    println!(
+        "\nworst plan_group ratio: {worst_ratio:.1}x | wall clock: {naive_total_ms:.1} ms naive \
+         vs {cached_total_ms:.1} ms cached ({:.1}x)",
+        naive_total_ms / cached_total_ms.max(1e-9)
+    );
+    assert!(
+        worst_ratio >= 10.0,
+        "planner must cut plan_group calls by >= 10x (got {worst_ratio:.1}x)"
+    );
+    assert!(
+        cached_total_ms < naive_total_ms,
+        "planner must be faster in wall clock ({cached_total_ms:.1} ms vs {naive_total_ms:.1} ms)"
+    );
+
+    // Amortized picture across a limit sweep with one shared cache.
+    harness::bench("cached search_multi sweep 16..256 MB (fresh cache each)", 5, || {
+        for mb in [16u64, 48, 64, 96, 128, 192, 256] {
+            search_multi(&net, mb * MIB, max_groups, max_tiling, &params).unwrap();
+        }
+    });
+}

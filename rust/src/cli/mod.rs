@@ -32,12 +32,17 @@ Tooling:
             (k-group extension: --config 4x4/4/3x3/12/1x1)
   search    --limit-mb 64 [--cfg file.cfg]          run Algorithm 3
             [--max-groups 3 --max-tiling 6]         k-group extension
+  frontier  [--max-groups 3 --max-tiling 5]         Pareto frontier of the
+            [--limit-mb 64]                         k-group space (memory
+                                                    vs. cost; * = pick)
   simulate  --config 5x5/8/2x2 --limit-mb 64        one simulated run
   export-geometry [--out artifacts/geometry.json]   AOT geometry for aot.py
 
 Real execution (requires `make artifacts`):
   run       --config 3x3/8/2x2 [--artifacts DIR] [--batch N] [--verify]
   serve     --addr 127.0.0.1:7077 --config 3x3/8/2x2 [--artifacts DIR]
+            (no --config: auto-picked among the manifest's compiled
+             configs from the probed memory budget, or from --limit-mb)
 
 Common flags:
   --cfg FILE        Darknet-style .cfg network (default: built-in YOLOv2-16)
@@ -265,7 +270,7 @@ pub fn cmd_search(args: &Args) -> Result<()> {
                 &args.predictor_params()?,
             )?;
             println!(
-                "{} (predicted {:.1} MB{}; {} configurations evaluated)",
+                "{} (predicted {:.1} MB{}; {} layer groups planned)",
                 r.config,
                 r.predicted_bytes as f64 / MIB as f64,
                 if r.is_fallback { ", FALLBACK - nothing fits" } else { "" },
@@ -282,6 +287,54 @@ pub fn cmd_search(args: &Args) -> Result<()> {
         if r.is_fallback { ", FALLBACK - nothing fits" } else { "" },
         r.evaluated
     );
+    Ok(())
+}
+
+pub fn cmd_frontier(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let params = args.predictor_params()?;
+    let max_groups = args.get_u64("max-groups")?.unwrap_or(3) as usize;
+    let max_tiling = args.get_u64("max-tiling")?.unwrap_or(5) as usize;
+    let points = crate::search::frontier(&net, max_groups, max_tiling, &params)?;
+    let limit = args.get_u64("limit-mb")?.map(|mb| mb * MIB);
+    let picked = limit.and_then(|l| crate::search::pick_for_limit(&points, l));
+    println!(
+        "Pareto frontier: {} (<= {max_groups} groups, tilings 1..={max_tiling}; {} points)",
+        net.name,
+        points.len()
+    );
+    println!(
+        "{:<4} {:<24} {:>14} {:>16} {:>12}",
+        "", "config", "predicted MB", "cost (GMACeq)", "est. s"
+    );
+    // Price the proxy with the calibrated throughput the simulator uses.
+    let macs_per_sec = crate::simulate::CostModel::default().macs_per_sec;
+    for p in &points {
+        let mark = match picked {
+            Some(sel) if std::ptr::eq(sel, p) => "*",
+            _ => "",
+        };
+        println!(
+            "{mark:<4} {:<24} {:>14.1} {:>16.2} {:>12.1}",
+            p.config.to_string(),
+            p.predicted_bytes as f64 / MIB as f64,
+            p.cost_proxy as f64 / 1e9,
+            p.cost_proxy as f64 / macs_per_sec
+        );
+    }
+    if let Some(l) = limit {
+        match picked {
+            Some(p) => println!("pick for {} MB: {}", l / MIB, p.config),
+            None => println!(
+                "pick for {} MB: nothing fits (floor is {:.1} MB)",
+                l / MIB,
+                points
+                    .first()
+                    .map(|p| p.predicted_bytes as f64 / MIB as f64)
+                    .unwrap_or(f64::NAN)
+            ),
+        }
+    }
     Ok(())
 }
 
@@ -336,8 +389,34 @@ pub fn cmd_run(args: &Args) -> Result<()> {
 
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
-    let config = args.config()?;
     let addr = args.get("addr").unwrap_or("127.0.0.1:7077");
+    // Without --config, auto-pick among the *compiled* configurations of
+    // the artifact manifest against the probed (or --limit-mb overridden)
+    // memory budget, predicting on the manifest's own (served) network.
+    let config = if args.has("config") {
+        args.config()?
+    } else {
+        let params = args.predictor_params()?;
+        let limit = match args.get_u64("limit-mb")? {
+            Some(mb) => mb * MIB,
+            None => crate::coordinator::probe_memory_limit_bytes().context(
+                "cannot probe the memory budget on this host; pass --config or --limit-mb",
+            )?,
+        };
+        let manifest = crate::runtime::Manifest::load(&PathBuf::from(artifacts))?;
+        let mnet = manifest.sole_network()?;
+        let (config, predicted) =
+            crate::coordinator::auto_config_from_manifest(mnet, limit, &params)?;
+        eprintln!(
+            "auto-selected {config} (of {} compiled configs) for a {:.0} MB budget \
+             (predicted {:.1} MB on {})",
+            mnet.configs.len(),
+            limit as f64 / MIB as f64,
+            predicted as f64 / MIB as f64,
+            mnet.name
+        );
+        config
+    };
     crate::coordinator::serve_cli(artifacts, config, addr)
 }
 

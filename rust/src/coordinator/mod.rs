@@ -73,7 +73,11 @@ pub struct Server {
 impl Server {
     /// Bind and start the worker thread. The engine is constructed *inside*
     /// the worker via `factory` — PJRT handles are not `Send`, so the
-    /// engine must live and die on one thread.
+    /// engine must live and die on one thread. `start` waits for the
+    /// engine to load and **fails outright when the factory fails**:
+    /// previously the worker exited silently while the listener kept
+    /// accepting, so every queued client waited on a response that could
+    /// never come.
     pub fn start<F>(factory: F, addr: &str, cfg: ServerConfig) -> Result<Server>
     where
         F: FnOnce() -> Result<Engine> + Send + 'static,
@@ -81,15 +85,20 @@ impl Server {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local_addr = listener.local_addr()?;
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<std::result::Result<(), String>>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let worker_shutdown = shutdown.clone();
         std::thread::Builder::new()
             .name("mafat-worker".into())
             .spawn(move || {
                 let engine = match factory() {
-                    Ok(e) => e,
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
                     Err(err) => {
                         eprintln!("engine failed to load: {err:#}");
+                        let _ = ready_tx.send(Err(format!("{err:#}")));
                         return;
                     }
                 };
@@ -104,6 +113,11 @@ impl Server {
                 );
                 worker_loop(engine, rx, cfg, worker_shutdown);
             })?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => anyhow::bail!("engine failed to load: {msg}"),
+            Err(_) => anyhow::bail!("engine worker died during startup"),
+        }
         Ok(Server {
             listener,
             queue: tx,
@@ -317,6 +331,114 @@ pub fn serve_cli(artifacts: &str, config: MafatConfig, addr: &str) -> Result<()>
     server.run()
 }
 
+// ------------------------------------------------- auto configuration pick
+
+/// Probe the memory budget available to this process, in bytes: the
+/// tightest of the cgroup (v2 `memory.max`, v1 `limit_in_bytes`) limit and
+/// `/proc/meminfo` `MemAvailable`. `None` when nothing can be probed
+/// (non-Linux, masked procfs).
+pub fn probe_memory_limit_bytes() -> Option<u64> {
+    let mut limit: Option<u64> = None;
+    let mut consider = |bytes: u64| {
+        limit = Some(limit.map_or(bytes, |l: u64| l.min(bytes)));
+    };
+    for path in ["/sys/fs/cgroup/memory.max", "/sys/fs/cgroup/memory/memory.limit_in_bytes"] {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Ok(bytes) = text.trim().parse::<u64>() {
+                // Treat the kernel's "effectively unlimited" sentinels as
+                // absent: cgroup v2 prints "max" (fails the parse), cgroup
+                // v1 prints PAGE_COUNTER_MAX * PAGE_SIZE, which lands just
+                // under 2^63 — anything >= 1 EiB is not a real limit.
+                if bytes < 1 << 60 {
+                    consider(bytes);
+                }
+            }
+        }
+    }
+    if let Ok(text) = std::fs::read_to_string("/proc/meminfo") {
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("MemAvailable:") {
+                if let Some(kb) = rest.split_whitespace().next().and_then(|v| v.parse::<u64>().ok())
+                {
+                    consider(kb * 1024);
+                }
+            }
+        }
+    }
+    limit
+}
+
+/// Pick a configuration for a memory budget from the Pareto frontier of
+/// the paper-shaped space (up to 2 groups, tilings 1..=5). This is the
+/// *analytic* pick — it ranges over every shape the planner can express,
+/// not just what an artifact bundle compiled; serving uses
+/// [`auto_config_from_manifest`] to stay within the compiled set. Returns
+/// the cheapest fitting configuration and its predicted bytes, or the
+/// most even fallback when nothing fits.
+pub fn auto_config(
+    net: &crate::network::Network,
+    limit_bytes: u64,
+    params: &crate::predictor::PredictorParams,
+) -> Result<(MafatConfig, u64)> {
+    let points = crate::search::frontier(net, 2, 5, params)?;
+    if let Some(p) = crate::search::pick_for_limit(&points, limit_bytes) {
+        let config = p
+            .config
+            .to_mafat()
+            .expect("2-group frontier points are paper-shaped");
+        return Ok((config, p.predicted_bytes));
+    }
+    let fb = crate::search::fallback_for(net);
+    let pred = crate::predictor::predict_mem(net, fb, params)?;
+    Ok((fb, pred.total_bytes))
+}
+
+/// Pick the cheapest *compiled* configuration that fits `limit_bytes`,
+/// predicting against the manifest's own network (the model actually
+/// served, which may be a scaled variant of the analysis network). When
+/// nothing fits, returns the smallest-footprint compiled configuration —
+/// serving degrades to the closest fit rather than refusing to start.
+pub fn auto_config_from_manifest(
+    mnet: &crate::runtime::ManifestNetwork,
+    limit_bytes: u64,
+    params: &crate::predictor::PredictorParams,
+) -> Result<(MafatConfig, u64)> {
+    use crate::search::planner::TASK_MACS_EQUIV;
+    let net = mnet.network();
+    // (config, predicted bytes, cost proxy) of the best fitting entry.
+    let mut best: Option<(MafatConfig, u64, u64)> = None;
+    let mut smallest: Option<(MafatConfig, u64)> = None;
+    for entry in &mnet.configs {
+        let Ok(pred) = crate::predictor::predict_mem(&net, entry.config, params) else {
+            continue;
+        };
+        let Ok(plan) = crate::plan::plan_config(&net, entry.config) else {
+            continue;
+        };
+        let proxy = plan.total_macs(&net) + plan.n_tasks() as u64 * TASK_MACS_EQUIV;
+        let smaller = match &smallest {
+            None => true,
+            Some((_, bytes)) => pred.total_bytes < *bytes,
+        };
+        if smaller {
+            smallest = Some((entry.config, pred.total_bytes));
+        }
+        if pred.total_bytes < limit_bytes {
+            let better = match &best {
+                None => true,
+                Some((_, _, best_proxy)) => proxy < *best_proxy,
+            };
+            if better {
+                best = Some((entry.config, pred.total_bytes, proxy));
+            }
+        }
+    }
+    if let Some((config, bytes, _)) = best {
+        return Ok((config, bytes));
+    }
+    smallest.context("manifest has no plannable configurations")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,5 +461,76 @@ mod tests {
     fn unknown_cmd_is_error() {
         let (tx, _rx) = sync_channel::<Request>(1);
         assert!(process_line(r#"{"cmd":"reboot"}"#, &tx).is_err());
+    }
+
+    // (The factory-failure path of Server::start is covered by the
+    // integration test `engine_load_failure_surfaces_from_start` in
+    // tests/integration_serve.rs.)
+
+    #[test]
+    fn probe_memory_limit_is_positive_when_available() {
+        if let Some(bytes) = probe_memory_limit_bytes() {
+            assert!(bytes > 0);
+        }
+    }
+
+    #[test]
+    fn auto_config_picks_fitting_paper_shape() {
+        use crate::network::yolov2::yolov2_16;
+        use crate::network::MIB;
+        use crate::predictor::{predict_mem, PredictorParams};
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        // Generous budget: the untiled config wins.
+        let (cfg, bytes) = auto_config(&net, 256 * MIB, &params).unwrap();
+        assert_eq!(cfg, MafatConfig::no_cut(1));
+        assert!(bytes < 256 * MIB);
+        // Mid budget: the pick fits and its reported bytes match Alg. 2.
+        let (cfg, bytes) = auto_config(&net, 80 * MIB, &params).unwrap();
+        assert!(bytes < 80 * MIB, "{cfg}: {bytes}");
+        assert_eq!(
+            predict_mem(&net, cfg, &params).unwrap().total_bytes,
+            bytes
+        );
+        // Impossible budget: the documented fallback.
+        let (cfg, _) = auto_config(&net, MIB, &params).unwrap();
+        assert_eq!(cfg, MafatConfig::most_even_fallback());
+    }
+
+    #[test]
+    fn manifest_auto_pick_stays_within_compiled_set() {
+        use crate::network::yolov2::yolov2_16_ops;
+        use crate::network::MIB;
+        use crate::predictor::PredictorParams;
+        use crate::runtime::{ConfigEntry, ManifestNetwork};
+        let compiled: Vec<MafatConfig> =
+            ["1x1/NoCut", "2x2/NoCut", "3x3/8/2x2", "5x5/8/2x2", "2x2/12/2x2"]
+                .iter()
+                .map(|s| s.parse().unwrap())
+                .collect();
+        let mnet = ManifestNetwork {
+            name: "yolov2-16-s160".into(),
+            in_w: 160,
+            in_h: 160,
+            in_c: 3,
+            ops: yolov2_16_ops(),
+            full: None,
+            configs: compiled
+                .iter()
+                .map(|&config| ConfigEntry {
+                    config,
+                    groups: vec![],
+                })
+                .collect(),
+        };
+        let params = PredictorParams::default();
+        // Generous budget: the cheapest compiled config (untiled) wins.
+        let (cfg, bytes) = auto_config_from_manifest(&mnet, 512 * MIB, &params).unwrap();
+        assert_eq!(cfg, MafatConfig::no_cut(1));
+        assert!(bytes < 512 * MIB);
+        // Impossible budget: degrades to the smallest-footprint compiled
+        // config — never to a shape outside the manifest.
+        let (cfg, _) = auto_config_from_manifest(&mnet, MIB, &params).unwrap();
+        assert!(compiled.contains(&cfg), "{cfg} not in the compiled set");
     }
 }

@@ -19,7 +19,7 @@ use crate::ftp::Rect;
 use crate::metrics::Metrics;
 use crate::network::{LayerKind, Network};
 use crate::plan::MafatConfig;
-use crate::runtime::{ConfigEntry, Manifest, ManifestNetwork, Runtime};
+use crate::runtime::{xla, ConfigEntry, Manifest, ManifestNetwork, Runtime};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 use std::sync::Arc;

@@ -20,6 +20,14 @@ pub use variable::{balance_spans, group_halo, plan_group_balanced, plan_group_fr
 
 use crate::network::Network;
 use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of [`plan_group`] invocations. Instrumentation for the
+/// search-scaling bench (`benches/search_scaling.rs`), which proves the
+/// memoized planner re-plans each `(top, bottom, tiling)` group at most once
+/// per search. Monotonically increasing; read/reset it only from
+/// single-scenario harnesses (benches), not from parallel unit tests.
+pub static PLAN_GROUP_CALLS: AtomicU64 = AtomicU64::new(0);
 
 /// Geometry of one layer inside a fused task: the (clamped) input region it
 /// reads, the output region it produces, and the explicit border padding.
@@ -146,6 +154,7 @@ impl GroupPlan {
 
 /// Plan the geometry of a single layer group.
 pub fn plan_group(net: &Network, top: usize, bottom: usize, n: usize, m: usize) -> Result<GroupPlan> {
+    PLAN_GROUP_CALLS.fetch_add(1, Ordering::Relaxed);
     if top > bottom || bottom >= net.n_layers() {
         bail!("invalid layer range [{top}, {bottom}] for {} layers", net.n_layers());
     }

@@ -12,11 +12,14 @@
 //!
 //! * **L3 (this crate)** — the coordinator: tiling geometry ([`ftp`]),
 //!   configurations ([`plan`]), the memory predictor ([`predictor`]), the
-//!   configuration search ([`search`]), the data-reuse scheduler ([`reuse`]),
-//!   the memory/swap simulator substrate ([`memsim`]), the Darknet baseline
+//!   configuration search ([`search`]) with its memoized/pruned/parallel
+//!   planner ([`search::planner`]) and Pareto frontier
+//!   ([`search::frontier`]), the data-reuse scheduler ([`reuse`]), the
+//!   memory/swap simulator substrate ([`memsim`]), the Darknet baseline
 //!   ([`baseline`]), end-to-end latency simulation ([`simulate`]), the real
 //!   PJRT inference engine ([`engine`] over [`runtime`]), and the serving
-//!   loop ([`coordinator`]).
+//!   loop ([`coordinator`], which auto-picks a config from the probed
+//!   memory budget via the frontier when none is given).
 //! * **L2 (build-time JAX)** — `python/compile/model.py` emits one HLO
 //!   module per fused tile-shape class.
 //! * **L1 (build-time Pallas)** — `python/compile/kernels/` holds the conv /
@@ -37,6 +40,13 @@
 //! let result = get_config(&net, 64 * mafat::network::MIB, &params).unwrap();
 //! println!("64 MB -> {} (predicted {:.1} MB)",
 //!          result.config, result.predicted_bytes as f64 / 1048576.0);
+//!
+//! // Beyond a single limit: the Pareto frontier of the k-group space
+//! // (predicted memory vs. execution-cost proxy) answers "what does each
+//! // additional megabyte buy?" — also `mafat frontier` on the CLI.
+//! for p in mafat::search::frontier(&net, 3, 5, &params).unwrap() {
+//!     println!("{:>6.1} MB -> {}", p.predicted_bytes as f64 / 1048576.0, p.config);
+//! }
 //! ```
 
 pub mod baseline;

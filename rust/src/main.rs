@@ -4,7 +4,7 @@
 //!
 //! * paper artifacts: `table-2-1`, `fig-1-1`, `fig-3-1`, `fig-3-2`,
 //!   `fig-4-1`, `fig-4-2`, `fig-4-3`, `table-4-1`, `headline`
-//! * tooling: `predict`, `search`, `simulate`, `export-geometry`
+//! * tooling: `predict`, `search`, `frontier`, `simulate`, `export-geometry`
 //! * real execution: `run` (PJRT engine), `serve` (TCP serving loop)
 
 use anyhow::{bail, Context, Result};
@@ -40,6 +40,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "headline" => cli::cmd_headline(&args),
         "predict" => cli::cmd_predict(&args),
         "search" => cli::cmd_search(&args),
+        "frontier" => cli::cmd_frontier(&args),
         "simulate" => cli::cmd_simulate(&args),
         "export-geometry" => cli::cmd_export_geometry(&args),
         "run" => cli::cmd_run(&args),

@@ -58,6 +58,26 @@ impl MultiConfig {
         }
     }
 
+    /// The exact 2-group description, when one exists (`n_groups <= 2`).
+    pub fn to_mafat(&self) -> Option<MafatConfig> {
+        match (self.cuts.as_slice(), self.tilings.as_slice()) {
+            ([], [t]) => Some(MafatConfig::no_cut(*t)),
+            ([cut], [top, bottom]) => Some(MafatConfig::with_cut(*top, *cut, *bottom)),
+            _ => None,
+        }
+    }
+
+    /// Group layer ranges with their tilings: `[(top, bottom, tiling)]` —
+    /// the shape the per-group predictor and planner cache consume.
+    pub fn ranges_with_tilings(&self, n: usize) -> Result<Vec<(usize, usize, usize)>> {
+        Ok(self
+            .ranges(n)?
+            .into_iter()
+            .zip(&self.tilings)
+            .map(|((top, bottom), &t)| (top, bottom, t))
+            .collect())
+    }
+
     /// Group layer ranges for a network of `n` layers: `[(top, bottom)]`.
     pub fn ranges(&self, n: usize) -> Result<Vec<(usize, usize)>> {
         if let Some(&last) = self.cuts.last() {
@@ -183,6 +203,25 @@ mod tests {
         assert!(MultiConfig::new(vec![8], vec![1]).is_err()); // tilings len
         assert!(MultiConfig::new(vec![], vec![0]).is_err()); // zero tiling
         assert!("3x3/4".parse::<MultiConfig>().is_err());
+    }
+
+    #[test]
+    fn to_mafat_covers_paper_shapes_only() {
+        let two: MultiConfig = "5x5/8/2x2".parse().unwrap();
+        assert_eq!(two.to_mafat(), Some(MafatConfig::with_cut(5, 8, 2)));
+        let one: MultiConfig = "3x3/NoCut".parse().unwrap();
+        assert_eq!(one.to_mafat(), Some(MafatConfig::no_cut(3)));
+        let three: MultiConfig = "3x3/4/2x2/12/1x1".parse().unwrap();
+        assert_eq!(three.to_mafat(), None);
+    }
+
+    #[test]
+    fn ranges_with_tilings_zip() {
+        let c: MultiConfig = "3x3/4/2x2/12/1x1".parse().unwrap();
+        assert_eq!(
+            c.ranges_with_tilings(16).unwrap(),
+            vec![(0, 3, 3), (4, 11, 2), (12, 15, 1)]
+        );
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod swap;
 
 pub use swap::{predict_swap, predict_swap_config, SwapPrediction};
 
-use crate::ftp::plan_group;
+use crate::ftp::{plan_group, GroupPlan};
 use crate::network::{LayerKind, Network, BYTES_PER_ELEM, MIB};
 use crate::plan::MafatConfig;
 use anyhow::Result;
@@ -85,9 +85,17 @@ pub fn predict_layer_group(
     m: usize,
 ) -> Result<PeakSite> {
     let group = plan_group(net, top, bottom, n, m)?;
+    Ok(peak_of_group_plan(net, &group))
+}
+
+/// Algorithm 1 over an already-planned group — lets callers that also need
+/// the plan's task geometry (the memoized planner in [`crate::search`])
+/// derive peak footprint, MACs, and task counts from a *single*
+/// `plan_group` call instead of re-planning per quantity.
+pub fn peak_of_group_plan(net: &Network, group: &GroupPlan) -> PeakSite {
     let mut peak = PeakSite {
         group_index: 0,
-        layer: top,
+        layer: group.top,
         grid_i: 0,
         grid_j: 0,
         tile_bytes: 0,
@@ -118,7 +126,7 @@ pub fn predict_layer_group(
             }
         }
     }
-    Ok(peak)
+    peak
 }
 
 /// Paper Algorithm 2 (+ weights/bias): predict the maximum memory usage of a
@@ -169,12 +177,7 @@ pub fn predict_multi(
     config: &crate::plan::MultiConfig,
     params: &PredictorParams,
 ) -> Result<Prediction> {
-    let ranges: Vec<(usize, usize, usize)> = config
-        .ranges(net.n_layers())?
-        .into_iter()
-        .zip(&config.tilings)
-        .map(|((top, bottom), &t)| (top, bottom, t))
-        .collect();
+    let ranges = config.ranges_with_tilings(net.n_layers())?;
     predict_ranges(net, &ranges, params)
 }
 

@@ -8,6 +8,9 @@
 
 pub mod export;
 pub mod manifest;
+// The PJRT binding: the offline build ships an API-compatible stub (see its
+// module docs for how to swap in the real `xla` crate).
+pub mod xla;
 
 pub use manifest::{
     ClassEntry, ConfigEntry, FullEntry, GroupEntry, Manifest, ManifestNetwork, TaskEntry,

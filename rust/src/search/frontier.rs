@@ -1,0 +1,212 @@
+//! Pareto frontier of the k-group configuration space: predicted memory
+//! (Alg. 2) versus cost proxy (task MACs + launch overhead).
+//!
+//! The frontier answers the deployment question the single-limit search
+//! cannot: *what does each additional megabyte buy?* The coordinator uses
+//! it to auto-pick a serving configuration from a probed memory budget, and
+//! the `mafat frontier` CLI prints it for operators.
+//!
+//! Construction reuses the per-group factorization of [`super::planner`]:
+//! within a cut-set, the minimum-cost configuration whose predicted bytes
+//! fit a byte level `L` is coordinate-wise (per group, the coarsest tiling
+//! whose total is `<= L`), so sweeping `L` over the distinct group totals
+//! enumerates every Pareto candidate of that cut-set. Candidates from all
+//! cut-sets are then filtered to the non-dominated set.
+
+use super::planner::{cut_set_ranges, enumerate_cut_sets, GroupCache};
+use crate::network::Network;
+use crate::plan::MultiConfig;
+use crate::predictor::PredictorParams;
+use anyhow::Result;
+
+/// One non-dominated configuration: strictly less memory than every point
+/// after it, strictly lower cost than every point before it.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    pub config: MultiConfig,
+    /// Predicted maximum memory (Alg. 2), bytes.
+    pub predicted_bytes: u64,
+    /// Cost proxy (task MACs incl. halo redundancy + launch equivalent).
+    pub cost_proxy: u64,
+}
+
+/// Compute the Pareto frontier over cuts at any subset of the memory-aware
+/// cut points (up to `max_groups` groups) and square tilings
+/// `1..=max_tiling` per group. Sorted by `predicted_bytes` ascending;
+/// `cost_proxy` is strictly descending along the result.
+pub fn frontier(
+    net: &Network,
+    max_groups: usize,
+    max_tiling: usize,
+    params: &PredictorParams,
+) -> Result<Vec<FrontierPoint>> {
+    let cache = GroupCache::new(net);
+    let n_layers = net.n_layers();
+    // (bytes, proxy, seq, config) candidates across all cut-sets.
+    let mut candidates: Vec<(u64, u64, usize, MultiConfig)> = Vec::new();
+
+    for (seq, cut_set) in enumerate_cut_sets(&net.candidate_cuts(), max_groups)
+        .into_iter()
+        .enumerate()
+    {
+        let ranges = cut_set_ranges(&cut_set, n_layers);
+        // Per group: every plannable tiling's (tiling, total bytes, proxy),
+        // finest-to-coarsest totals. Each group is planned once per tiling
+        // thanks to the shared cache.
+        let mut per_group: Vec<Vec<(usize, u64, u64)>> = Vec::with_capacity(ranges.len());
+        let mut ok = true;
+        for &(top, bottom) in &ranges {
+            let (out_w, out_h, _) = net.out_shape(bottom);
+            let cap = max_tiling.min(out_w).min(out_h);
+            let evals: Vec<(usize, u64, u64)> = (1..=cap)
+                .filter_map(|t| {
+                    cache
+                        .eval(top, bottom, t)
+                        .map(|e| (t, e.total_bytes(params), e.cost_proxy()))
+                })
+                .collect();
+            if evals.is_empty() {
+                ok = false;
+                break;
+            }
+            per_group.push(evals);
+        }
+        if !ok {
+            continue;
+        }
+
+        // Candidate byte levels: every achievable per-group total.
+        let mut levels: Vec<u64> = per_group
+            .iter()
+            .flat_map(|g| g.iter().map(|&(_, b, _)| b))
+            .collect();
+        levels.sort_unstable();
+        levels.dedup();
+
+        for &level in &levels {
+            // Coarsest tiling per group with total <= level.
+            let mut bytes = 0u64;
+            let mut proxy = 0u64;
+            let mut tilings = Vec::with_capacity(per_group.len());
+            let mut feasible = true;
+            for evals in &per_group {
+                match evals.iter().find(|&&(_, b, _)| b <= level) {
+                    Some(&(t, b, p)) => {
+                        bytes = bytes.max(b);
+                        proxy += p;
+                        tilings.push(t);
+                    }
+                    None => {
+                        feasible = false;
+                        break;
+                    }
+                }
+            }
+            if !feasible {
+                continue;
+            }
+            let config = MultiConfig::new(cut_set.clone(), tilings)?;
+            candidates.push((bytes, proxy, seq, config));
+        }
+    }
+
+    // Keep the non-dominated set: sort by (bytes, proxy, seq) and keep
+    // points that strictly improve the cost proxy as bytes grow.
+    candidates.sort_by(|a, b| (a.0, a.1, a.2).cmp(&(b.0, b.1, b.2)));
+    let mut out: Vec<FrontierPoint> = Vec::new();
+    let mut best_proxy = u64::MAX;
+    for (bytes, proxy, _, config) in candidates {
+        if proxy < best_proxy {
+            best_proxy = proxy;
+            out.push(FrontierPoint {
+                config,
+                predicted_bytes: bytes,
+                cost_proxy: proxy,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// The cheapest frontier point that fits under `limit_bytes` (the point the
+/// limit-driven search would pick), if any.
+pub fn pick_for_limit(points: &[FrontierPoint], limit_bytes: u64) -> Option<&FrontierPoint> {
+    // Points are sorted by bytes ascending with strictly descending cost:
+    // the best fitting point is the last one below the limit.
+    points
+        .iter()
+        .rev()
+        .find(|p| p.predicted_bytes < limit_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+    use crate::network::MIB;
+    use crate::predictor::predict_multi;
+
+    #[test]
+    fn frontier_is_sorted_and_strictly_dominating() {
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let pts = frontier(&net, 3, 5, &params).unwrap();
+        assert!(pts.len() >= 3, "frontier has only {} points", pts.len());
+        for w in pts.windows(2) {
+            assert!(w[0].predicted_bytes < w[1].predicted_bytes);
+            assert!(w[0].cost_proxy > w[1].cost_proxy);
+        }
+    }
+
+    #[test]
+    fn frontier_points_report_true_predictions() {
+        // Each point's predicted_bytes must equal Alg. 2 on its config.
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        for p in frontier(&net, 3, 5, &params).unwrap() {
+            let pred = predict_multi(&net, &p.config, &params).unwrap();
+            assert_eq!(pred.total_bytes, p.predicted_bytes, "{}", p.config);
+        }
+    }
+
+    #[test]
+    fn frontier_pick_agrees_with_search_multi() {
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        for max_groups in [2usize, 3] {
+            let pts = frontier(&net, max_groups, 5, &params).unwrap();
+            for mb in [256u64, 128, 96, 64] {
+                let picked = pick_for_limit(&pts, mb * MIB).unwrap();
+                let searched =
+                    super::super::search_multi(&net, mb * MIB, max_groups, 5, &params).unwrap();
+                assert!(!searched.is_fallback);
+                assert_eq!(
+                    picked.cost_proxy, searched.cost_proxy,
+                    "{mb} MB x {max_groups} groups: {} vs {}",
+                    picked.config, searched.config
+                );
+                assert!(picked.predicted_bytes < mb * MIB);
+            }
+        }
+    }
+
+    #[test]
+    fn nothing_fits_below_the_floor() {
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let pts = frontier(&net, 2, 5, &params).unwrap();
+        assert!(pick_for_limit(&pts, 16 * MIB).is_none());
+    }
+
+    #[test]
+    fn deeper_grouping_extends_the_frontier_floor() {
+        // More groups + finer tilings can only reach (weakly) lower memory.
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let two = frontier(&net, 2, 5, &params).unwrap();
+        let three = frontier(&net, 3, 6, &params).unwrap();
+        assert!(
+            three.first().unwrap().predicted_bytes <= two.first().unwrap().predicted_bytes
+        );
+    }
+}

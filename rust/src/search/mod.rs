@@ -1,5 +1,6 @@
 //! Configuration search — paper §3.3, Algorithm 3 — plus an exhaustive
-//! search used as the "best measured" baseline of §4.3/Table 4.1.
+//! search used as the "best measured" baseline of §4.3/Table 4.1, and the
+//! planner subsystem behind the k-group extension.
 //!
 //! Algorithm 3 walks the restricted space from the highest-memory (fastest)
 //! configuration toward more even, smaller-footprint ones, returning the
@@ -14,9 +15,27 @@
 //!   "developed more overlapped data and overhead ... and are never
 //!   optimal");
 //! * fallback: the most even configuration, 5x5/8/2x2.
+//!
+//! The §5-extension search over `k > 2` groups ([`search_multi`]) runs on
+//! the [`planner`] subsystem: a per-group prediction cache shared across
+//! all cut-sets (each `(top, bottom, tiling)` group is planned exactly once
+//! per search), monotonicity-based pruning (per group, binary search for
+//! the coarsest tiling that fits instead of enumerating `max_tiling^k`
+//! combos), and parallel evaluation of independent cut-sets on std threads.
+//! [`frontier`] exposes the Pareto frontier (predicted bytes vs. cost
+//! proxy) that the CLI's `frontier` subcommand prints and the coordinator
+//! uses to auto-pick a serving configuration. The uncached
+//! [`search_multi_exhaustive`] reference is retained to prove equivalence
+//! in tests and `benches/search_scaling.rs`.
+
+pub mod frontier;
+pub mod planner;
+
+pub use frontier::{frontier, pick_for_limit, FrontierPoint};
+pub use planner::{GroupCache, PlannerStats};
 
 use crate::network::Network;
-use crate::plan::{manual_search_space, MafatConfig};
+use crate::plan::{manual_search_space, MafatConfig, MultiConfig};
 use crate::predictor::{predict_mem, PredictorParams};
 use anyhow::Result;
 
@@ -52,7 +71,8 @@ pub fn algorithm3_cuts(net: &Network) -> Vec<usize> {
 /// The most even configuration that exists for `net`: the paper hard-codes
 /// 5x5/8/2x2 for YOLOv2-16; for other prefixes we take the middle
 /// memory-aware cut (or no cut when none exists) and clamp the tilings to
-/// the map extents.
+/// the map extents *and* to Algorithm 3's line-11 restriction (no-cut and
+/// cut >= 12 configurations never use a top tiling above 2).
 pub fn fallback_for(net: &Network) -> MafatConfig {
     let clamp = |t: usize, bottom: usize| -> usize {
         let (w, h, _) = net.out_shape(bottom);
@@ -71,8 +91,13 @@ pub fn fallback_for(net: &Network) -> MafatConfig {
     }
     let cuts = net.candidate_cuts();
     match cuts.get(cuts.len() / 2) {
-        Some(&cut) => MafatConfig::with_cut(clamp(5, cut - 1), cut, clamp(2, n - 1)),
-        None => MafatConfig::no_cut(clamp(5, n - 1)),
+        Some(&cut) => {
+            // Line 11: late cuts never use a top tiling above 2.
+            let top_max = if cut >= 12 { 2 } else { 5 };
+            MafatConfig::with_cut(clamp(top_max, cut - 1), cut, clamp(2, n - 1))
+        }
+        // Line 11 again: a no-cut configuration is restricted to <= 2x2.
+        None => MafatConfig::no_cut(clamp(2, n - 1)),
     }
 }
 
@@ -128,11 +153,15 @@ pub fn get_config(
 /// Result of the k-group extension search.
 #[derive(Debug, Clone)]
 pub struct MultiSearchResult {
-    pub config: crate::plan::MultiConfig,
+    pub config: MultiConfig,
     pub predicted_bytes: u64,
     /// Overhead proxy used for ranking: total task MACs (includes halo
     /// redundancy) plus a per-task launch equivalent.
     pub cost_proxy: u64,
+    /// Work performed: for the cached planner, the number of `plan_group`
+    /// calls (each distinct `(top, bottom, tiling)` group is planned at
+    /// most once); for the exhaustive reference, the number of candidate
+    /// configurations predicted.
     pub evaluated: usize,
     pub is_fallback: bool,
 }
@@ -144,7 +173,10 @@ pub struct MultiSearchResult {
 ///
 /// The overhead proxy is redundant-MAC count plus a per-task constant
 /// (~70 ms at the calibrated 0.865 GMAC/s), which tracks the simulator's
-/// unswapped latency ordering.
+/// unswapped latency ordering. Runs on the memoized/pruned/parallel
+/// [`planner`]; returns exactly the result of [`search_multi_exhaustive`]
+/// with `O(cut_sets * groups * log(max_tiling))` group evaluations instead
+/// of `O(cut_sets * max_tiling^k)` full re-plans.
 pub fn search_multi(
     net: &Network,
     memory_limit_bytes: u64,
@@ -152,27 +184,80 @@ pub fn search_multi(
     max_tiling: usize,
     params: &PredictorParams,
 ) -> Result<MultiSearchResult> {
-    use crate::plan::{plan_multi, MultiConfig};
-    const TASK_MACS_EQUIV: u64 = 60_000_000; // ~task_overhead_s * macs_per_sec
+    let cache = GroupCache::new(net);
+    search_multi_with_cache(net, memory_limit_bytes, max_groups, max_tiling, params, &cache)
+}
 
-    let cuts = net.candidate_cuts();
-    let mut cut_sets: Vec<Vec<usize>> = vec![vec![]];
-    // All strictly-increasing subsets of the candidate cuts, size < max_groups.
-    for k in 1..max_groups {
-        let mut stack = vec![(0usize, Vec::new())];
-        while let Some((start, cur)) = stack.pop() {
-            if cur.len() == k {
-                cut_sets.push(cur);
-                continue;
-            }
-            for (i, &c) in cuts.iter().enumerate().skip(start) {
-                let mut next = cur.clone();
-                next.push(c);
-                stack.push((i + 1, next));
+/// [`search_multi`] against a caller-provided [`GroupCache`] — lets tests
+/// and benches inspect the planner's plan/hit counters, and lets repeated
+/// searches (e.g. a limit sweep) share one cache.
+pub fn search_multi_with_cache(
+    net: &Network,
+    memory_limit_bytes: u64,
+    max_groups: usize,
+    max_tiling: usize,
+    params: &PredictorParams,
+    cache: &GroupCache<'_>,
+) -> Result<MultiSearchResult> {
+    // `evaluated` reports the plans performed by *this* search, so a warm
+    // shared cache shows up as (near-)zero new work, not the cache's
+    // cumulative lifetime count.
+    let plans_before = cache.stats().group_plans;
+    let cut_sets = planner::enumerate_cut_sets(&net.candidate_cuts(), max_groups);
+    let results =
+        planner::evaluate_cut_sets(cache, &cut_sets, memory_limit_bytes, max_tiling, params);
+
+    // Deterministic reduction: minimum cost proxy, earliest cut-set on ties
+    // (matching the sequential reference's "first strictly better wins").
+    let mut best: Option<(usize, &(Vec<usize>, u64, u64))> = None;
+    for (ix, r) in results.iter().enumerate() {
+        if let Some(cand) = r {
+            let improves = match best {
+                None => true,
+                Some((_, b)) => cand.2 < b.2,
+            };
+            if improves {
+                best = Some((ix, cand));
             }
         }
     }
+    let evaluated = cache.stats().group_plans - plans_before;
+    if let Some((ix, (tilings, bytes, proxy))) = best {
+        return Ok(MultiSearchResult {
+            config: MultiConfig::new(cut_sets[ix].clone(), tilings.clone())?,
+            predicted_bytes: *bytes,
+            cost_proxy: *proxy,
+            evaluated,
+            is_fallback: false,
+        });
+    }
+    // Nothing fits: reuse the 2-group fallback.
+    let fb = fallback_for(net);
+    let pred = predict_mem(net, fb, params)?;
+    Ok(MultiSearchResult {
+        config: MultiConfig::from_mafat(fb),
+        predicted_bytes: pred.total_bytes,
+        cost_proxy: u64::MAX,
+        evaluated,
+        is_fallback: true,
+    })
+}
 
+/// The naive reference implementation of the k-group search: enumerate
+/// every cut-set x tiling combo, re-predicting and re-planning each one.
+/// Kept (unoptimized, exactly the pre-planner behaviour) as the ground
+/// truth for the equivalence tests and `benches/search_scaling.rs`; use
+/// [`search_multi`] everywhere else.
+pub fn search_multi_exhaustive(
+    net: &Network,
+    memory_limit_bytes: u64,
+    max_groups: usize,
+    max_tiling: usize,
+    params: &PredictorParams,
+) -> Result<MultiSearchResult> {
+    use crate::plan::plan_multi;
+
+    let cut_sets = planner::enumerate_cut_sets(&net.candidate_cuts(), max_groups);
     let mut best: Option<MultiSearchResult> = None;
     let mut evaluated = 0usize;
     for cut_set in &cut_sets {
@@ -197,11 +282,13 @@ pub fn search_multi(
                 continue;
             }
             let Ok(plan) = plan_multi(net, &config) else { continue };
-            let proxy = plan.total_macs(net) + plan.n_tasks() as u64 * TASK_MACS_EQUIV;
-            if best
-                .as_ref()
-                .map_or(true, |b| proxy < b.cost_proxy)
-            {
+            let proxy =
+                plan.total_macs(net) + plan.n_tasks() as u64 * planner::TASK_MACS_EQUIV;
+            let improves = match &best {
+                None => true,
+                Some(b) => proxy < b.cost_proxy,
+            };
+            if improves {
                 best = Some(MultiSearchResult {
                     config,
                     predicted_bytes: pred.total_bytes,
@@ -216,11 +303,10 @@ pub fn search_multi(
         b.evaluated = evaluated;
         return Ok(b);
     }
-    // Nothing fits: reuse the 2-group fallback.
     let fb = fallback_for(net);
     let pred = predict_mem(net, fb, params)?;
     Ok(MultiSearchResult {
-        config: crate::plan::MultiConfig::from_mafat(fb),
+        config: MultiConfig::from_mafat(fb),
         predicted_bytes: pred.total_bytes,
         cost_proxy: u64::MAX,
         evaluated,
@@ -231,6 +317,12 @@ pub fn search_multi(
 /// Exhaustive search over the paper's manual-exploration space (§4.3),
 /// ranking by a caller-supplied latency oracle (the simulator in benches,
 /// the real engine in examples). Returns configs sorted fastest-first.
+/// Configurations the oracle cannot measure (unplannable on a short prefix,
+/// an engine error on one shape) are skipped — like `get_config` skips
+/// unplannable predictions — rather than aborting the whole search; but if
+/// the oracle fails for *every* configuration (systemic breakage: missing
+/// artifacts, dead engine) the last error is returned so the root cause is
+/// not silently swallowed into an empty ranking.
 pub fn exhaustive_by_latency<F>(
     net: &Network,
     mut latency_of: F,
@@ -239,8 +331,17 @@ where
     F: FnMut(MafatConfig) -> Result<f64>,
 {
     let mut out = Vec::new();
+    let mut last_err = None;
     for config in manual_search_space(net) {
-        out.push((config, latency_of(config)?));
+        match latency_of(config) {
+            Ok(latency) => out.push((config, latency)),
+            Err(e) => last_err = Some(e.context(format!("latency oracle failed on {config}"))),
+        }
+    }
+    if out.is_empty() {
+        if let Some(e) = last_err {
+            return Err(e.context("latency oracle failed for every configuration"));
+        }
     }
     out.sort_by(|a, b| a.1.total_cmp(&b.1));
     Ok(out)
@@ -250,7 +351,7 @@ where
 mod tests {
     use super::*;
     use crate::network::yolov2::yolov2_16;
-    use crate::network::MIB;
+    use crate::network::{LayerKind, MIB};
 
     fn search(limit_mb: u64) -> SearchResult {
         get_config(&yolov2_16(), limit_mb * MIB, &PredictorParams::default()).unwrap()
@@ -323,6 +424,29 @@ mod tests {
                 _ => {}
             }
         }
+    }
+
+    #[test]
+    fn fallback_on_cutless_prefix_respects_line11() {
+        // Regression for the no-cut fallback branch: on a short conv-only
+        // prefix (no maxpool, hence no memory-aware cut points) the
+        // fallback must be a no-cut config with top tiling <= 2 —
+        // Algorithm 3 line 11 restricts no-cut configs to at most 2x2.
+        let conv = LayerKind::Conv {
+            filters: 16,
+            size: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let net = crate::network::Network::from_ops("short", 64, 64, 3, &[conv, conv, conv]);
+        assert!(net.candidate_cuts().is_empty());
+        let fb = fallback_for(&net);
+        assert_eq!(fb.cut, None);
+        assert!(fb.top_tiling <= 2, "fallback {fb} violates line 11");
+        // And the fallback actually surfaces through a too-tight search.
+        let r = get_config(&net, MIB, &PredictorParams::default()).unwrap();
+        assert!(r.is_fallback);
+        assert!(r.config.top_tiling <= 2, "{}", r.config);
     }
 
     #[test]
@@ -422,6 +546,67 @@ mod tests {
     }
 
     #[test]
+    fn cached_search_matches_exhaustive_reference() {
+        // The acceptance bar of the planner refactor: identical best
+        // configs (same predicted bytes and cost proxy) as the naive
+        // implementation on YOLOv2-16, across limits and group counts.
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        for max_groups in [2usize, 3] {
+            for mb in (16..=256u64).step_by(16) {
+                let fast = search_multi(&net, mb * MIB, max_groups, 5, &params).unwrap();
+                let slow =
+                    search_multi_exhaustive(&net, mb * MIB, max_groups, 5, &params).unwrap();
+                assert_eq!(fast.is_fallback, slow.is_fallback, "{mb} MB k={max_groups}");
+                assert_eq!(fast.config, slow.config, "{mb} MB k={max_groups}");
+                assert_eq!(
+                    fast.predicted_bytes, slow.predicted_bytes,
+                    "{mb} MB k={max_groups}"
+                );
+                assert_eq!(fast.cost_proxy, slow.cost_proxy, "{mb} MB k={max_groups}");
+            }
+        }
+    }
+
+    #[test]
+    fn planner_plans_each_group_at_most_once_per_search() {
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let cache = GroupCache::new(&net);
+        let r = search_multi_with_cache(&net, 64 * MIB, 4, 8, &params, &cache).unwrap();
+        assert!(!r.is_fallback);
+        let s = cache.stats();
+        // Every plan_group call corresponds to a distinct (top, bottom,
+        // tiling) key — no group is ever planned twice.
+        assert_eq!(s.group_plans, s.distinct_groups);
+        // And the cache actually got re-probed across cut-sets.
+        assert!(s.cache_hits > 0, "{s:?}");
+        // 3 candidate cuts -> at most 10 distinct ranges x 8 tilings.
+        assert!(s.group_plans <= 80, "{s:?}");
+    }
+
+    #[test]
+    fn shared_cache_sweep_reuses_groups_across_limits() {
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let cache = GroupCache::new(&net);
+        let mut uncached_equivalent = 0usize;
+        for mb in [256u64, 128, 96, 64, 48] {
+            let r = search_multi_with_cache(&net, mb * MIB, 3, 5, &params, &cache).unwrap();
+            let slow = search_multi_exhaustive(&net, mb * MIB, 3, 5, &params).unwrap();
+            assert_eq!(r.config, slow.config, "{mb} MB");
+            assert_eq!(r.predicted_bytes, slow.predicted_bytes, "{mb} MB");
+            assert_eq!(r.cost_proxy, slow.cost_proxy, "{mb} MB");
+            uncached_equivalent += slow.evaluated;
+        }
+        let s = cache.stats();
+        assert!(
+            s.group_plans < uncached_equivalent,
+            "cache did not reduce work: {s:?} vs {uncached_equivalent} reference configs"
+        );
+    }
+
+    #[test]
     fn exhaustive_sorts_by_latency() {
         let net = yolov2_16();
         // Toy oracle: latency = number of tasks (so 1x1/NoCut wins).
@@ -431,5 +616,53 @@ mod tests {
         .unwrap();
         assert_eq!(ranked[0].0, MafatConfig::no_cut(1));
         assert!(ranked.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn exhaustive_skips_failing_oracle_configs() {
+        // Regression: a single oracle error must not abort the whole
+        // search — the failing config is skipped, the rest are ranked.
+        let net = yolov2_16();
+        let space = manual_search_space(&net);
+        let poison = MafatConfig::with_cut(3, 8, 2);
+        assert!(space.contains(&poison));
+        let ranked = exhaustive_by_latency(&net, |c| {
+            if c == poison {
+                anyhow::bail!("oracle cannot measure {c}");
+            }
+            Ok(crate::plan::plan_config(&net, c)?.n_tasks() as f64)
+        })
+        .unwrap();
+        assert_eq!(ranked.len(), space.len() - 1);
+        assert!(ranked.iter().all(|(c, _)| *c != poison));
+        assert!(ranked.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn exhaustive_surfaces_systemic_oracle_failure() {
+        // If the oracle fails on *every* config (dead engine, missing
+        // artifacts), the error must surface instead of Ok(vec![]).
+        let net = yolov2_16();
+        let err = exhaustive_by_latency(&net, |_| -> Result<f64> {
+            anyhow::bail!("engine never started")
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("every configuration"), "{msg}");
+        assert!(msg.contains("engine never started"), "{msg}");
+    }
+
+    #[test]
+    fn shared_cache_reports_per_search_evaluated() {
+        // `evaluated` is this search's new plans, not the cache lifetime
+        // count: a warm cache reports (near-)zero additional work.
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let cache = GroupCache::new(&net);
+        let cold = search_multi_with_cache(&net, 96 * MIB, 3, 5, &params, &cache).unwrap();
+        assert!(cold.evaluated > 0);
+        let warm = search_multi_with_cache(&net, 96 * MIB, 3, 5, &params, &cache).unwrap();
+        assert_eq!(warm.evaluated, 0, "warm repeat re-planned groups");
+        assert_eq!(warm.config, cold.config);
     }
 }

@@ -1,0 +1,405 @@
+//! The memoized, pruned, parallel planner behind [`super::search_multi`]
+//! and [`super::frontier`].
+//!
+//! The k-group search space factors per layer group: a multi-group config's
+//! predicted memory is the *max* over its groups' totals (Alg. 2) and its
+//! cost proxy is the *sum* of its groups' task MACs + launch overhead, so
+//! both objectives decompose over `(top, bottom, tiling)` groups that are
+//! shared by many cut-sets. Three consequences, exploited here:
+//!
+//! 1. **Memoization** — [`GroupCache`] plans each `(top, bottom, tiling)`
+//!    group exactly once per search (one `plan_group` call yields the peak
+//!    tile footprint via Alg. 1, the MAC count, and the task count), no
+//!    matter how many cut-sets or tiling combos reference it.
+//! 2. **Monotonicity pruning** — finer tiling never increases the predicted
+//!    footprint (`finer_tiling_never_increases_prediction`) and never
+//!    decreases the cost proxy (more tasks, more halo MACs), so within a
+//!    cut-set the optimal feasible tiling vector is *coordinate-wise*: per
+//!    group, binary-search the coarsest tiling that fits the limit. The
+//!    `max_tiling^k` combo enumeration of the naive search collapses to
+//!    `k * log2(max_tiling)` cache probes.
+//! 3. **Parallelism** — cut-sets are independent, so they are evaluated
+//!    across a small std-thread pool (the offline build has no tokio); the
+//!    reduction is deterministic (min cost proxy, earliest cut-set on ties)
+//!    regardless of thread scheduling.
+
+use crate::ftp::plan_group;
+use crate::network::Network;
+use crate::predictor::{peak_of_group_plan, PredictorParams};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Per-task launch-equivalent MACs (~70 ms at the calibrated 0.865 GMAC/s)
+/// used by the cost proxy that ranks feasible configurations.
+pub const TASK_MACS_EQUIV: u64 = 60_000_000;
+
+/// Everything the search needs to know about one planned layer group,
+/// derived from a single `plan_group` call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupEval {
+    /// Peak tile footprint (bytes, before weights/bias) — Algorithm 1.
+    pub peak_tile_bytes: u64,
+    /// Resident weights of the group's layers.
+    pub weight_bytes: u64,
+    /// Task MACs including redundant halo computation.
+    pub macs: u64,
+    /// Number of fused tile tasks (`tiling^2`).
+    pub n_tasks: u64,
+}
+
+impl GroupEval {
+    /// The group's contribution to Algorithm 2's max: peak + weights + bias.
+    pub fn total_bytes(&self, params: &PredictorParams) -> u64 {
+        let weights = if params.include_weights {
+            self.weight_bytes
+        } else {
+            0
+        };
+        self.peak_tile_bytes + weights + params.bias_bytes
+    }
+
+    /// The group's contribution to the cost proxy (task MACs + launch
+    /// equivalent).
+    pub fn cost_proxy(&self) -> u64 {
+        self.macs + self.n_tasks * TASK_MACS_EQUIV
+    }
+}
+
+/// Counters exposed by [`GroupCache::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlannerStats {
+    /// `plan_group` calls performed (== cache misses == distinct keys).
+    pub group_plans: usize,
+    /// Probes answered from the cache.
+    pub cache_hits: usize,
+    /// Distinct `(top, bottom, tiling)` keys resident.
+    pub distinct_groups: usize,
+}
+
+/// Plan-once memo of `(top, bottom, tiling) -> GroupEval`, shared across
+/// every cut-set (and thread) of one search. `None` records an unplannable
+/// key (tiling finer than the group's output map) so failures are cached
+/// too. Each key maps to a once-cell so distinct groups can be planned
+/// concurrently by the thread pool while a key is still provably planned
+/// at most once (the map mutex guards only the cheap get-or-insert).
+pub struct GroupCache<'a> {
+    net: &'a Network,
+    map: Mutex<HashMap<(usize, usize, usize), Arc<OnceLock<Option<GroupEval>>>>>,
+    hits: AtomicUsize,
+    plans: AtomicUsize,
+}
+
+impl<'a> GroupCache<'a> {
+    pub fn new(net: &'a Network) -> Self {
+        GroupCache {
+            net,
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            plans: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn network(&self) -> &'a Network {
+        self.net
+    }
+
+    /// Evaluate one group, planning it at most once per cache lifetime.
+    /// Returns `None` when the tiling is not plannable for this group.
+    pub fn eval(&self, top: usize, bottom: usize, tiling: usize) -> Option<GroupEval> {
+        let key = (top, bottom, tiling);
+        let cell = {
+            let mut map = self.map.lock().unwrap();
+            map.entry(key).or_default().clone()
+        };
+        if let Some(cached) = cell.get() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *cached;
+        }
+        // The once-cell runs the plan exactly once; a concurrent caller of
+        // the same key blocks on it, callers of other keys proceed.
+        *cell.get_or_init(|| {
+            self.plans.fetch_add(1, Ordering::Relaxed);
+            plan_group(self.net, top, bottom, tiling, tiling)
+                .ok()
+                .map(|plan| {
+                    let peak = peak_of_group_plan(self.net, &plan);
+                    GroupEval {
+                        peak_tile_bytes: peak.tile_bytes,
+                        weight_bytes: self.net.group_weight_bytes(top, bottom),
+                        macs: plan.tasks.iter().map(|t| t.macs(self.net)).sum(),
+                        n_tasks: plan.n_tasks() as u64,
+                    }
+                })
+        })
+    }
+
+    pub fn stats(&self) -> PlannerStats {
+        PlannerStats {
+            group_plans: self.plans.load(Ordering::Relaxed),
+            cache_hits: self.hits.load(Ordering::Relaxed),
+            distinct_groups: self.map.lock().unwrap().len(),
+        }
+    }
+}
+
+/// All strictly-increasing subsets of `cuts` with fewer than `max_groups`
+/// elements (so up to `max_groups` layer groups), the empty set (no cut)
+/// first — the exact enumeration order of the naive reference search, which
+/// the deterministic reduction relies on for tie-breaking parity.
+pub fn enumerate_cut_sets(cuts: &[usize], max_groups: usize) -> Vec<Vec<usize>> {
+    let mut cut_sets: Vec<Vec<usize>> = vec![vec![]];
+    for k in 1..max_groups {
+        let mut stack = vec![(0usize, Vec::new())];
+        while let Some((start, cur)) = stack.pop() {
+            if cur.len() == k {
+                cut_sets.push(cur);
+                continue;
+            }
+            for (i, &c) in cuts.iter().enumerate().skip(start) {
+                let mut next = cur.clone();
+                next.push(c);
+                stack.push((i + 1, next));
+            }
+        }
+    }
+    cut_sets
+}
+
+/// `[(top, bottom)]` layer ranges induced by a strictly-increasing cut set.
+pub fn cut_set_ranges(cut_set: &[usize], n_layers: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(cut_set.len() + 1);
+    let mut top = 0usize;
+    for &cut in cut_set {
+        out.push((top, cut - 1));
+        top = cut;
+    }
+    out.push((top, n_layers - 1));
+    out
+}
+
+/// The best feasible configuration of one cut-set: per group, the coarsest
+/// tiling whose predicted total fits `limit` (binary search over the
+/// monotone fit predicate). Returns `(tilings, predicted_bytes,
+/// cost_proxy)`, or `None` when some group cannot fit at any tiling
+/// `<= max_tiling`.
+pub fn best_tilings_for_cut_set(
+    cache: &GroupCache<'_>,
+    cut_set: &[usize],
+    limit_bytes: u64,
+    max_tiling: usize,
+    params: &PredictorParams,
+) -> Option<(Vec<usize>, u64, u64)> {
+    let net = cache.network();
+    let ranges = cut_set_ranges(cut_set, net.n_layers());
+    let mut tilings = Vec::with_capacity(ranges.len());
+    let mut bytes = 0u64;
+    let mut proxy = 0u64;
+    for &(top, bottom) in &ranges {
+        let (out_w, out_h, _) = net.out_shape(bottom);
+        let cap = max_tiling.min(out_w).min(out_h);
+        if cap == 0 {
+            return None;
+        }
+        let fits = |t: usize| -> bool {
+            cache
+                .eval(top, bottom, t)
+                .is_some_and(|e| e.total_bytes(params) < limit_bytes)
+        };
+        // Finest tiling is the group's floor; nothing to search if even
+        // that does not fit.
+        if !fits(cap) {
+            return None;
+        }
+        // Binary search the first (coarsest) fitting tiling in 1..=cap:
+        // fits is monotone (false..false, true..true) in t.
+        let (mut lo, mut hi) = (1usize, cap);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if fits(mid) {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        let eval = cache.eval(top, bottom, lo).expect("fitting tiling plans");
+        bytes = bytes.max(eval.total_bytes(params));
+        proxy += eval.cost_proxy();
+        tilings.push(lo);
+    }
+    Some((tilings, bytes, proxy))
+}
+
+/// Evaluate every cut-set, fanning out over a small std-thread pool when
+/// there are enough of them to amortize the spawns. The output vector is
+/// indexed by cut-set position, so the result is deterministic regardless
+/// of scheduling.
+pub fn evaluate_cut_sets(
+    cache: &GroupCache<'_>,
+    cut_sets: &[Vec<usize>],
+    limit_bytes: u64,
+    max_tiling: usize,
+    params: &PredictorParams,
+) -> Vec<Option<(Vec<usize>, u64, u64)>> {
+    let n_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+        .min(cut_sets.len().max(1));
+    if n_threads <= 1 || cut_sets.len() < 4 {
+        return cut_sets
+            .iter()
+            .map(|cs| best_tilings_for_cut_set(cache, cs, limit_bytes, max_tiling, params))
+            .collect();
+    }
+    let mut out: Vec<Option<(Vec<usize>, u64, u64)>> = vec![None; cut_sets.len()];
+    let chunk = cut_sets.len().div_ceil(n_threads);
+    std::thread::scope(|scope| {
+        for (ci, slots) in out.chunks_mut(chunk).enumerate() {
+            let base = ci * chunk;
+            scope.spawn(move || {
+                for (k, slot) in slots.iter_mut().enumerate() {
+                    *slot = best_tilings_for_cut_set(
+                        cache,
+                        &cut_sets[base + k],
+                        limit_bytes,
+                        max_tiling,
+                        params,
+                    );
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::yolov2::yolov2_16;
+    use crate::network::MIB;
+    use crate::predictor::{predict_layer_group, predict_ranges};
+
+    #[test]
+    fn cut_set_enumeration_counts() {
+        let cuts = [4usize, 8, 12];
+        assert_eq!(enumerate_cut_sets(&cuts, 1), vec![Vec::<usize>::new()]);
+        assert_eq!(enumerate_cut_sets(&cuts, 2).len(), 1 + 3);
+        assert_eq!(enumerate_cut_sets(&cuts, 3).len(), 1 + 3 + 3);
+        assert_eq!(enumerate_cut_sets(&cuts, 4).len(), 1 + 3 + 3 + 1);
+        // Every enumerated set is strictly increasing.
+        for cs in enumerate_cut_sets(&cuts, 4) {
+            assert!(cs.windows(2).all(|w| w[0] < w[1]), "{cs:?}");
+        }
+    }
+
+    #[test]
+    fn ranges_partition_the_prefix() {
+        let r = cut_set_ranges(&[4, 12], 16);
+        assert_eq!(r, vec![(0, 3), (4, 11), (12, 15)]);
+        assert_eq!(cut_set_ranges(&[], 16), vec![(0, 15)]);
+    }
+
+    #[test]
+    fn cache_eval_matches_direct_prediction() {
+        let net = yolov2_16();
+        let cache = GroupCache::new(&net);
+        for (top, bottom, t) in [(0usize, 15usize, 1usize), (0, 7, 5), (8, 15, 2)] {
+            let eval = cache.eval(top, bottom, t).unwrap();
+            let peak = predict_layer_group(&net, top, bottom, t, t).unwrap();
+            assert_eq!(eval.peak_tile_bytes, peak.tile_bytes, "({top},{bottom},{t})");
+            assert_eq!(eval.n_tasks, (t * t) as u64);
+            // total_bytes composes exactly like Algorithm 2.
+            let params = PredictorParams::default();
+            let pred = predict_ranges(&net, &[(top, bottom, t)], &params).unwrap();
+            assert_eq!(eval.total_bytes(&params), pred.total_bytes);
+        }
+    }
+
+    #[test]
+    fn cache_plans_each_key_once() {
+        let net = yolov2_16();
+        let cache = GroupCache::new(&net);
+        for _ in 0..3 {
+            cache.eval(0, 7, 3);
+            cache.eval(8, 15, 2);
+        }
+        let s = cache.stats();
+        assert_eq!(s.group_plans, 2);
+        assert_eq!(s.distinct_groups, 2);
+        assert_eq!(s.cache_hits, 4);
+    }
+
+    #[test]
+    fn unplannable_tiling_is_cached_as_none() {
+        let net = yolov2_16();
+        let cache = GroupCache::new(&net);
+        // Bottom map is 38x38: tiling 50 cannot plan.
+        assert!(cache.eval(0, 15, 50).is_none());
+        assert!(cache.eval(0, 15, 50).is_none());
+        let s = cache.stats();
+        assert_eq!(s.group_plans, 1);
+        assert_eq!(s.cache_hits, 1);
+    }
+
+    #[test]
+    fn group_fit_is_monotone_in_tiling_on_yolov2() {
+        // The predicate the binary search relies on: per group, total bytes
+        // never increase and the cost proxy never decreases as the tiling
+        // refines.
+        let net = yolov2_16();
+        let cache = GroupCache::new(&net);
+        let params = PredictorParams::default();
+        for (top, bottom) in [(0usize, 15usize), (0, 7), (0, 11), (4, 15), (8, 15), (12, 15)] {
+            let mut prev_bytes = u64::MAX;
+            let mut prev_proxy = 0u64;
+            for t in 1..=8usize {
+                let Some(e) = cache.eval(top, bottom, t) else { break };
+                assert!(
+                    e.total_bytes(&params) <= prev_bytes,
+                    "group ({top},{bottom}) tiling {t} grew"
+                );
+                assert!(e.cost_proxy() > prev_proxy, "proxy must strictly grow");
+                prev_bytes = e.total_bytes(&params);
+                prev_proxy = e.cost_proxy();
+            }
+        }
+    }
+
+    #[test]
+    fn binary_search_picks_coarsest_fitting_tiling() {
+        let net = yolov2_16();
+        let cache = GroupCache::new(&net);
+        let params = PredictorParams::default();
+        // No-cut at a generous limit: the coarsest tiling (1) fits.
+        let (t, bytes, _) =
+            best_tilings_for_cut_set(&cache, &[], 256 * MIB, 5, &params).unwrap();
+        assert_eq!(t, vec![1]);
+        assert!(bytes < 256 * MIB);
+        // Tighter limit forces a finer tiling; linear scan cross-check.
+        let limit = 120 * MIB;
+        let (t, bytes, _) = best_tilings_for_cut_set(&cache, &[], limit, 5, &params).unwrap();
+        let linear = (1..=5)
+            .find(|&x| cache.eval(0, 15, x).unwrap().total_bytes(&params) < limit)
+            .unwrap();
+        assert_eq!(t, vec![linear]);
+        assert!(bytes < limit);
+        // Impossible limit: infeasible.
+        assert!(best_tilings_for_cut_set(&cache, &[], MIB, 5, &params).is_none());
+    }
+
+    #[test]
+    fn parallel_evaluation_matches_sequential() {
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let cut_sets = enumerate_cut_sets(&net.candidate_cuts(), 4);
+        let cache_a = GroupCache::new(&net);
+        let seq: Vec<_> = cut_sets
+            .iter()
+            .map(|cs| best_tilings_for_cut_set(&cache_a, cs, 64 * MIB, 6, &params))
+            .collect();
+        let cache_b = GroupCache::new(&net);
+        let par = evaluate_cut_sets(&cache_b, &cut_sets, 64 * MIB, 6, &params);
+        assert_eq!(seq, par);
+    }
+}

@@ -69,6 +69,18 @@ fn search_paper_and_extension() {
 }
 
 #[test]
+fn frontier_prints_pareto_points_and_pick() {
+    let (ok, stdout, _) = mafat(&["frontier", "--max-groups", "3", "--limit-mb", "96"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("Pareto frontier"), "{stdout}");
+    // The generous end of the frontier is always the untiled config.
+    assert!(stdout.contains("1x1/NoCut"), "{stdout}");
+    assert!(stdout.contains("pick for 96 MB"), "{stdout}");
+    // Memory column is sorted ascending; at least a few points exist.
+    assert!(stdout.lines().count() >= 5, "{stdout}");
+}
+
+#[test]
 fn simulate_reports_breakdown() {
     let (ok, stdout, _) = mafat(&["simulate", "--config", "3x3/8/2x2", "--limit-mb", "48"]);
     assert!(ok);

@@ -44,6 +44,24 @@ impl Client {
 }
 
 #[test]
+fn engine_load_failure_surfaces_from_start() {
+    // No artifacts needed: a factory that fails must fail Server::start
+    // itself (previously the worker died silently and queued clients hung
+    // forever waiting on a response nobody would send).
+    let result = Server::start(
+        || anyhow::bail!("synthetic engine load failure"),
+        "127.0.0.1:0",
+        ServerConfig::default(),
+    );
+    let err = match result {
+        Ok(_) => panic!("start must surface the load error"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("engine failed to load"), "{err}");
+    assert!(err.contains("synthetic engine load failure"), "{err}");
+}
+
+#[test]
 fn serve_end_to_end() {
     if !artifacts_ok() {
         return;
