@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Gate the search-scaling bench against its committed baseline.
+
+Usage: bench_diff.py CURRENT.json BASELINE.json [--tolerance 1.25]
+
+Fails (exit 1) when the cached planner performs more than `tolerance` times
+the baseline's `plan_group` calls at any `max_groups` — the planner's
+memoization guarantee regressing. Call counts are deterministic (they depend
+only on the network and the binary-search probe sequence, never on timing),
+so the comparison is exact; wall-clock fields are reported but never gated.
+"""
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--tolerance", type=float, default=1.25,
+                    help="fail when current > baseline * tolerance (default 1.25 = +25%%)")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    base_rows = {r["max_groups"]: r for r in base["per_max_groups"]}
+    failed = False
+    for row in cur["per_max_groups"]:
+        mg = row["max_groups"]
+        got = row["cached_plan_group_calls"]
+        ref = base_rows.get(mg)
+        if ref is None:
+            print(f"max_groups={mg}: no baseline row, skipping")
+            continue
+        want = ref["cached_plan_group_calls"]
+        limit = want * args.tolerance
+        status = "REGRESSION" if got > limit else "ok"
+        if got > limit:
+            failed = True
+        wall = row.get("cached_wall_ms")
+        wall_s = f", wall {wall:.1f} ms" if isinstance(wall, (int, float)) else ""
+        print(f"max_groups={mg}: cached plan_group calls {got} vs baseline {want} "
+              f"(limit {limit:.0f}) -> {status}{wall_s}")
+        if got < want:
+            print(f"  note: improved below baseline; consider tightening "
+                  f"rust/benches/BENCH_search.baseline.json to {got}")
+    if failed:
+        print("bench regression gate FAILED (>25% more plan_group calls than baseline)")
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -155,17 +155,21 @@ def build(geometry: dict, out_dir: str, *, verbose: bool = True) -> dict:
                             "layers": klass["layers"],
                         }
                     )
-                mcfg["groups"].append(
-                    {
-                        "gi": g["gi"],
-                        "top": top,
-                        "bottom": bottom,
-                        "n": g["n"],
-                        "m": g["m"],
-                        "classes": mclasses,
-                        "tasks": g["tasks"],
-                    }
-                )
+                mgroup = {
+                    "gi": g["gi"],
+                    "top": top,
+                    "bottom": bottom,
+                    "n": g["n"],
+                    "m": g["m"],
+                    "classes": mclasses,
+                    "tasks": g["tasks"],
+                }
+                # Echo tile boundaries so the Rust side can rebuild
+                # variable (halo-balanced) tilings exactly.
+                for bounds_key in ("xs", "ys"):
+                    if bounds_key in g:
+                        mgroup[bounds_key] = g[bounds_key]
+                mcfg["groups"].append(mgroup)
             mnet["configs"].append(mcfg)
         manifest_networks.append(mnet)
 

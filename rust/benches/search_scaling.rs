@@ -1,26 +1,38 @@
 //! Search-scaling bench: the memoized/pruned/parallel planner versus the
-//! naive exhaustive k-group search on YOLOv2-16 at `max_groups = 4,
-//! max_tiling = 8`.
+//! naive exhaustive k-group search on YOLOv2-16 at `max_tiling = 8`, swept
+//! over `max_groups = 2, 3, 4`.
 //!
 //! Proves the planner refactor's two claims and fails loudly if either
 //! regresses:
 //!
-//! * **>= 10x fewer `plan_group` calls** — the naive search re-plans every
-//!   `(top, bottom, tiling)` group once per cut-set x tiling combo; the
-//!   planner plans each at most once per search (counted via
-//!   `ftp::PLAN_GROUP_CALLS`);
+//! * **>= 10x fewer `plan_group` calls** at every `max_groups` — the naive
+//!   search re-plans every `(top, bottom, tiling)` group once per cut-set x
+//!   tiling combo; the planner plans each at most once per search (counted
+//!   via `ftp::PLAN_GROUP_CALLS`);
 //! * **identical answers** — same config, predicted bytes, and cost proxy
 //!   at every probed limit — with a wall-clock speedup.
+//!
+//! Additionally writes a machine-readable `BENCH_search.json` (plan_group
+//! calls and wall clock per `max_groups`) that CI uploads as an artifact
+//! and diffs against the committed baseline
+//! (`rust/benches/BENCH_search.baseline.json`, gated by
+//! `ci/bench_diff.py`): a >25% growth in cached plan_group calls fails the
+//! pipeline. The call counts are deterministic — they only depend on the
+//! network and the binary-search probe sequence — so the gate is exact.
 
 mod harness;
 
 use mafat::ftp::PLAN_GROUP_CALLS;
+use mafat::jsonlite::Json;
 use mafat::network::yolov2::yolov2_16;
 use mafat::network::MIB;
 use mafat::predictor::PredictorParams;
 use mafat::search::{search_multi, search_multi_exhaustive};
 use std::sync::atomic::Ordering;
 use std::time::Instant;
+
+const LIMITS_MB: [u64; 4] = [192, 96, 64, 48];
+const MAX_TILING: usize = 8;
 
 fn plan_calls_during<R>(f: impl FnOnce() -> R) -> (R, u64) {
     let before = PLAN_GROUP_CALLS.load(Ordering::Relaxed);
@@ -31,67 +43,98 @@ fn plan_calls_during<R>(f: impl FnOnce() -> R) -> (R, u64) {
 fn main() {
     let net = yolov2_16();
     let params = PredictorParams::default();
-    let (max_groups, max_tiling) = (4usize, 8usize);
 
     println!(
-        "search scaling on {} | max_groups={max_groups} max_tiling={max_tiling}\n",
+        "search scaling on {} | max_tiling={MAX_TILING} | limits {LIMITS_MB:?} MB\n",
         net.name
     );
-    println!(
-        "{:>6} {:<26} {:>12} {:>12} {:>9} {:>11} {:>11}",
-        "MB", "config", "naive plans", "cached plans", "ratio", "naive ms", "cached ms"
-    );
 
-    let mut worst_ratio = f64::INFINITY;
+    let mut rows: Vec<Json> = Vec::new();
     let mut naive_total_ms = 0.0;
     let mut cached_total_ms = 0.0;
-    for mb in [192u64, 96, 64, 48] {
-        let t0 = Instant::now();
-        let (slow, slow_calls) = plan_calls_during(|| {
-            search_multi_exhaustive(&net, mb * MIB, max_groups, max_tiling, &params).unwrap()
-        });
-        let slow_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        let t1 = Instant::now();
-        let (fast, fast_calls) = plan_calls_during(|| {
-            search_multi(&net, mb * MIB, max_groups, max_tiling, &params).unwrap()
-        });
-        let fast_ms = t1.elapsed().as_secs_f64() * 1e3;
-
-        // Identical answers (the equivalence the unit tests also pin).
-        assert_eq!(fast.config, slow.config, "{mb} MB");
-        assert_eq!(fast.predicted_bytes, slow.predicted_bytes, "{mb} MB");
-        assert_eq!(fast.cost_proxy, slow.cost_proxy, "{mb} MB");
-        assert_eq!(fast.is_fallback, slow.is_fallback, "{mb} MB");
-
-        let ratio = slow_calls as f64 / fast_calls.max(1) as f64;
-        worst_ratio = worst_ratio.min(ratio);
-        naive_total_ms += slow_ms;
-        cached_total_ms += fast_ms;
+    for max_groups in [2usize, 3, 4] {
+        println!("-- max_groups = {max_groups}");
         println!(
-            "{mb:>6} {:<26} {slow_calls:>12} {fast_calls:>12} {ratio:>8.1}x {slow_ms:>11.2} {fast_ms:>11.2}",
-            fast.config.to_string()
+            "{:>6} {:<26} {:>12} {:>12} {:>9} {:>11} {:>11}",
+            "MB", "config", "naive plans", "cached plans", "ratio", "naive ms", "cached ms"
         );
+        let mut worst_ratio = f64::INFINITY;
+        let mut naive_calls_total = 0u64;
+        let mut cached_calls_total = 0u64;
+        let mut naive_ms_total = 0.0;
+        let mut cached_ms_total = 0.0;
+        for mb in LIMITS_MB {
+            let t0 = Instant::now();
+            let (slow, slow_calls) = plan_calls_during(|| {
+                search_multi_exhaustive(&net, mb * MIB, max_groups, MAX_TILING, &params).unwrap()
+            });
+            let slow_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+            let t1 = Instant::now();
+            let (fast, fast_calls) = plan_calls_during(|| {
+                search_multi(&net, mb * MIB, max_groups, MAX_TILING, &params).unwrap()
+            });
+            let fast_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+            // Identical answers (the equivalence the unit tests also pin).
+            assert_eq!(fast.config, slow.config, "{mb} MB k={max_groups}");
+            assert_eq!(fast.predicted_bytes, slow.predicted_bytes, "{mb} MB k={max_groups}");
+            assert_eq!(fast.cost_proxy, slow.cost_proxy, "{mb} MB k={max_groups}");
+            assert_eq!(fast.is_fallback, slow.is_fallback, "{mb} MB k={max_groups}");
+
+            let ratio = slow_calls as f64 / fast_calls.max(1) as f64;
+            worst_ratio = worst_ratio.min(ratio);
+            naive_calls_total += slow_calls;
+            cached_calls_total += fast_calls;
+            naive_ms_total += slow_ms;
+            cached_ms_total += fast_ms;
+            println!(
+                "{mb:>6} {:<26} {slow_calls:>12} {fast_calls:>12} {ratio:>8.1}x {slow_ms:>11.2} {fast_ms:>11.2}",
+                fast.config.to_string()
+            );
+        }
+        println!(
+            "   worst plan_group ratio: {worst_ratio:.1}x | {naive_ms_total:.1} ms naive vs {cached_ms_total:.1} ms cached\n"
+        );
+        assert!(
+            worst_ratio >= 10.0,
+            "planner must cut plan_group calls by >= 10x at max_groups={max_groups} \
+             (got {worst_ratio:.1}x)"
+        );
+        naive_total_ms += naive_ms_total;
+        cached_total_ms += cached_ms_total;
+        rows.push(Json::obj(vec![
+            ("max_groups", Json::num(max_groups as f64)),
+            ("cached_plan_group_calls", Json::num(cached_calls_total as f64)),
+            ("naive_plan_group_calls", Json::num(naive_calls_total as f64)),
+            ("cached_wall_ms", Json::num(cached_ms_total)),
+            ("naive_wall_ms", Json::num(naive_ms_total)),
+        ]));
     }
 
-    println!(
-        "\nworst plan_group ratio: {worst_ratio:.1}x | wall clock: {naive_total_ms:.1} ms naive \
-         vs {cached_total_ms:.1} ms cached ({:.1}x)",
-        naive_total_ms / cached_total_ms.max(1e-9)
-    );
-    assert!(
-        worst_ratio >= 10.0,
-        "planner must cut plan_group calls by >= 10x (got {worst_ratio:.1}x)"
-    );
     assert!(
         cached_total_ms < naive_total_ms,
         "planner must be faster in wall clock ({cached_total_ms:.1} ms vs {naive_total_ms:.1} ms)"
     );
 
+    let doc = Json::obj(vec![
+        ("bench", Json::str("search_scaling")),
+        ("network", Json::str(net.name.clone())),
+        ("max_tiling", Json::num(MAX_TILING as f64)),
+        (
+            "limits_mb",
+            Json::arr(LIMITS_MB.iter().map(|&mb| Json::num(mb as f64)).collect()),
+        ),
+        ("per_max_groups", Json::Arr(rows)),
+    ]);
+    let out = "BENCH_search.json";
+    std::fs::write(out, doc.to_string_pretty()).expect("write BENCH_search.json");
+    println!("wrote {out}");
+
     // Amortized picture across a limit sweep with one shared cache.
     harness::bench("cached search_multi sweep 16..256 MB (fresh cache each)", 5, || {
         for mb in [16u64, 48, 64, 96, 128, 192, 256] {
-            search_multi(&net, mb * MIB, max_groups, max_tiling, &params).unwrap();
+            search_multi(&net, mb * MIB, 4, MAX_TILING, &params).unwrap();
         }
     });
 }

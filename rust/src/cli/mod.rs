@@ -32,9 +32,22 @@ Tooling:
             (k-group extension: --config 4x4/4/3x3/12/1x1)
   search    --limit-mb 64 [--cfg file.cfg]          run Algorithm 3
             [--max-groups 3 --max-tiling 6]         k-group extension
+            [--variable]                            + halo-balanced tilings
   frontier  [--max-groups 3 --max-tiling 5]         Pareto frontier of the
             [--limit-mb 64]                         k-group space (memory
-                                                    vs. cost; * = pick)
+            [--variable]                            vs. cost; * = pick);
+            [--swap-axis] [--json]                  --variable widens the
+                                                    space with halo-balanced
+                                                    tilings (TvT notation);
+                                                    --swap-axis adds the
+                                                    predicted swap stall at
+                                                    the limit (default 32
+                                                    MB) and picks the
+                                                    min-stall config below
+                                                    the no-swap floor;
+                                                    --json emits the points
+                                                    (variant + boundaries
+                                                    included) as JSON
   simulate  --config 5x5/8/2x2 --limit-mb 64        one simulated run
   export-geometry [--out artifacts/geometry.json]   AOT geometry for aot.py
 
@@ -210,9 +223,10 @@ pub fn cmd_predict(args: &Args) -> Result<()> {
     let s = args
         .get("config")
         .context("missing --config (e.g. --config 5x5/8/2x2 or 4x4/4/3x3/12/1x1)")?;
-    // k-group extension strings (> 2 groups) route through predict_multi.
+    // k-group extension strings (> 2 groups, or variable `TvT` tilings)
+    // route through predict_multi.
     let multi: crate::plan::MultiConfig = s.parse()?;
-    if multi.n_groups() > 2 {
+    if multi.n_groups() > 2 || !multi.is_even() {
         let p = crate::predictor::predict_multi(&net, &multi, &args.predictor_params()?)?;
         println!(
             "{multi}: predicted max memory {:.1} MB (peak at group {} layer {} tile ({}, {}))",
@@ -222,6 +236,20 @@ pub fn cmd_predict(args: &Args) -> Result<()> {
             p.peak.grid_i,
             p.peak.grid_j
         );
+        if let Some(mb) = args.get_u64("limit-mb")? {
+            let sp = crate::predictor::predict_swap_multi(
+                &net,
+                &multi,
+                mb * MIB,
+                &args.sim_options()?,
+            )?;
+            println!(
+                "  at {mb} MB: estimated swap-in {:.1} MB (~{:.1} s stall; resident base {:.1} MB)",
+                sp.swap_in_bytes as f64 / MIB as f64,
+                sp.swap_stall_s,
+                sp.resident_base_bytes as f64 / MIB as f64
+            );
+        }
         return Ok(());
     }
     let config = args.config()?;
@@ -258,26 +286,26 @@ pub fn cmd_search(args: &Args) -> Result<()> {
     let limit = args
         .get_u64("limit-mb")?
         .context("missing --limit-mb")?;
-    // --max-groups > 2 switches to the k-group extension search.
-    if let Some(k) = args.get_u64("max-groups")? {
-        if k > 2 {
-            let max_tiling = args.get_u64("max-tiling")?.unwrap_or(5) as usize;
-            let r = crate::search::search_multi(
-                &net,
-                limit * MIB,
-                k as usize,
-                max_tiling,
-                &args.predictor_params()?,
-            )?;
-            println!(
-                "{} (predicted {:.1} MB{}; {} layer groups planned)",
-                r.config,
-                r.predicted_bytes as f64 / MIB as f64,
-                if r.is_fallback { ", FALLBACK - nothing fits" } else { "" },
-                r.evaluated
-            );
-            return Ok(());
-        }
+    // --max-groups > 2 (or --variable) switches to the k-group extension
+    // search; --variable widens it with halo-balanced tilings.
+    let variable = args.has("variable");
+    if variable || args.get_u64("max-groups")?.is_some_and(|k| k > 2) {
+        let k = args.get_u64("max-groups")?.unwrap_or(2) as usize;
+        let max_tiling = args.get_u64("max-tiling")?.unwrap_or(5) as usize;
+        let params = args.predictor_params()?;
+        let r = if variable {
+            crate::search::search_multi_variable(&net, limit * MIB, k, max_tiling, &params)?
+        } else {
+            crate::search::search_multi(&net, limit * MIB, k, max_tiling, &params)?
+        };
+        println!(
+            "{} (predicted {:.1} MB{}; {} layer groups planned)",
+            r.config,
+            r.predicted_bytes as f64 / MIB as f64,
+            if r.is_fallback { ", FALLBACK - nothing fits" } else { "" },
+            r.evaluated
+        );
+        return Ok(());
     }
     let r = get_config(&net, limit * MIB, &args.predictor_params()?)?;
     println!(
@@ -291,31 +319,152 @@ pub fn cmd_search(args: &Args) -> Result<()> {
 }
 
 pub fn cmd_frontier(args: &Args) -> Result<()> {
+    use crate::jsonlite::Json;
+    use crate::search::SwapAwarePick;
+
     let net = args.network()?;
     let params = args.predictor_params()?;
     let max_groups = args.get_u64("max-groups")?.unwrap_or(3) as usize;
     let max_tiling = args.get_u64("max-tiling")?.unwrap_or(5) as usize;
-    let points = crate::search::frontier(&net, max_groups, max_tiling, &params)?;
-    let limit = args.get_u64("limit-mb")?.map(|mb| mb * MIB);
-    let picked = limit.and_then(|l| crate::search::pick_for_limit(&points, l));
+    let variable = args.has("variable");
+    let swap_axis = args.has("swap-axis");
+    let json_out = args.has("json");
+    let points = if variable {
+        crate::search::frontier_variable(&net, max_groups, max_tiling, &params)?
+    } else {
+        crate::search::frontier(&net, max_groups, max_tiling, &params)?
+    };
+    // The swap axis needs a probed limit; default to a tight 32 MB so
+    // `frontier --swap-axis` alone shows the below-the-floor behaviour.
+    let limit = match args.get_u64("limit-mb")? {
+        Some(mb) => Some(mb * MIB),
+        None if swap_axis => Some(32 * MIB),
+        None => None,
+    };
+    let opts = args.sim_options()?;
+    let stalls = match (swap_axis, limit) {
+        (true, Some(l)) => Some(crate::search::swap_axis(&net, &points, l, &opts)?),
+        _ => None,
+    };
+    let picked = match limit {
+        Some(l) if swap_axis => crate::search::pick_for_limit_swap_aware(&net, &points, l, &opts)?,
+        Some(l) => crate::search::pick_for_limit(&points, l).map(SwapAwarePick::Fits),
+        None => None,
+    };
+    let picked_ix = picked
+        .as_ref()
+        .and_then(|pk| points.iter().position(|p| std::ptr::eq(p, pk.point())));
+
+    if json_out {
+        let mut jpoints = Vec::with_capacity(points.len());
+        for (ix, p) in points.iter().enumerate() {
+            let plan = crate::plan::plan_multi(&net, &p.config)?;
+            let bounds_json = |b: Vec<usize>| {
+                Json::arr(b.into_iter().map(|v| Json::num(v as f64)).collect())
+            };
+            let groups: Vec<Json> = plan
+                .groups
+                .iter()
+                .zip(&p.config.variants)
+                .zip(&p.config.tilings)
+                .map(|((g, v), &t)| {
+                    let (xs, ys) = g.bounds();
+                    Json::obj(vec![
+                        ("top", Json::num(g.top as f64)),
+                        ("bottom", Json::num(g.bottom as f64)),
+                        ("tiling", Json::num(t as f64)),
+                        ("variant", Json::str(v.name())),
+                        ("xs", bounds_json(xs)),
+                        ("ys", bounds_json(ys)),
+                    ])
+                })
+                .collect();
+            let mut fields = vec![
+                ("config", Json::str(p.config.to_string())),
+                ("predicted_bytes", Json::num(p.predicted_bytes as f64)),
+                (
+                    "predicted_mb",
+                    Json::num(p.predicted_bytes as f64 / MIB as f64),
+                ),
+                ("cost_proxy_macs", Json::num(p.cost_proxy as f64)),
+                ("groups", Json::Arr(groups)),
+            ];
+            if let Some(stalls) = &stalls {
+                fields.push((
+                    "swap_in_mb",
+                    Json::num(stalls[ix].swap_in_bytes as f64 / MIB as f64),
+                ));
+                fields.push(("swap_stall_s", Json::num(stalls[ix].swap_stall_s)));
+            }
+            jpoints.push(Json::obj(fields));
+        }
+        let pick_json = match (&picked, picked_ix) {
+            (Some(pk), Some(ix)) => {
+                let mut fields = vec![
+                    ("config", Json::str(pk.point().config.to_string())),
+                    ("index", Json::num(ix as f64)),
+                    ("fits", Json::Bool(pk.swap().is_none())),
+                ];
+                if let Some(swap) = pk.swap() {
+                    fields.push((
+                        "swap_in_mb",
+                        Json::num(swap.swap_in_bytes as f64 / MIB as f64),
+                    ));
+                    fields.push(("swap_stall_s", Json::num(swap.swap_stall_s)));
+                }
+                Json::obj(fields)
+            }
+            _ => Json::Null,
+        };
+        let doc = Json::obj(vec![
+            ("network", Json::str(net.name.clone())),
+            ("max_groups", Json::num(max_groups as f64)),
+            ("max_tiling", Json::num(max_tiling as f64)),
+            ("variable", Json::Bool(variable)),
+            (
+                "limit_mb",
+                limit.map(|l| Json::num(l as f64 / MIB as f64)).unwrap_or(Json::Null),
+            ),
+            ("points", Json::Arr(jpoints)),
+            ("pick", pick_json),
+        ]);
+        println!("{}", doc.to_string_pretty());
+        return Ok(());
+    }
+
     println!(
-        "Pareto frontier: {} (<= {max_groups} groups, tilings 1..={max_tiling}; {} points)",
+        "Pareto frontier: {} (<= {max_groups} groups, tilings 1..={max_tiling}{}; {} points)",
         net.name,
+        if variable { ", variable tilings" } else { "" },
         points.len()
     );
+    let swap_cols = if stalls.is_some() {
+        format!(
+            " {:>12} {:>9}",
+            format!("swap@{}MB", limit.unwrap_or(0) / MIB),
+            "stall s"
+        )
+    } else {
+        String::new()
+    };
     println!(
-        "{:<4} {:<24} {:>14} {:>16} {:>12}",
+        "{:<4} {:<24} {:>14} {:>16} {:>12}{swap_cols}",
         "", "config", "predicted MB", "cost (GMACeq)", "est. s"
     );
     // Price the proxy with the calibrated throughput the simulator uses.
     let macs_per_sec = crate::simulate::CostModel::default().macs_per_sec;
-    for p in &points {
-        let mark = match picked {
-            Some(sel) if std::ptr::eq(sel, p) => "*",
-            _ => "",
+    for (ix, p) in points.iter().enumerate() {
+        let mark = if picked_ix == Some(ix) { "*" } else { "" };
+        let swap_cols = match &stalls {
+            Some(stalls) => format!(
+                " {:>12.1} {:>9.1}",
+                stalls[ix].swap_in_bytes as f64 / MIB as f64,
+                stalls[ix].swap_stall_s
+            ),
+            None => String::new(),
         };
         println!(
-            "{mark:<4} {:<24} {:>14.1} {:>16.2} {:>12.1}",
+            "{mark:<4} {:<24} {:>14.1} {:>16.2} {:>12.1}{swap_cols}",
             p.config.to_string(),
             p.predicted_bytes as f64 / MIB as f64,
             p.cost_proxy as f64 / 1e9,
@@ -323,8 +472,16 @@ pub fn cmd_frontier(args: &Args) -> Result<()> {
         );
     }
     if let Some(l) = limit {
-        match picked {
-            Some(p) => println!("pick for {} MB: {}", l / MIB, p.config),
+        match &picked {
+            Some(pk) => match pk.swap() {
+                None => println!("pick for {} MB: {}", l / MIB, pk.point().config),
+                Some(swap) => println!(
+                    "pick for {} MB: {} (below the no-swap floor; min predicted stall {:.1} s)",
+                    l / MIB,
+                    pk.point().config,
+                    swap.swap_stall_s
+                ),
+            },
             None => println!(
                 "pick for {} MB: nothing fits (floor is {:.1} MB)",
                 l / MIB,

@@ -373,21 +373,28 @@ pub fn probe_memory_limit_bytes() -> Option<u64> {
 /// *analytic* pick — it ranges over every shape the planner can express,
 /// not just what an artifact bundle compiled; serving uses
 /// [`auto_config_from_manifest`] to stay within the compiled set. Returns
-/// the cheapest fitting configuration and its predicted bytes, or the
-/// most even fallback when nothing fits.
+/// the cheapest fitting configuration and its predicted bytes; for budgets
+/// below the no-swap floor it picks through the frontier's swap axis — the
+/// configuration with the minimal *predicted swap stall* at the budget —
+/// instead of a fixed fallback.
 pub fn auto_config(
     net: &crate::network::Network,
     limit_bytes: u64,
     params: &crate::predictor::PredictorParams,
 ) -> Result<(MafatConfig, u64)> {
     let points = crate::search::frontier(net, 2, 5, params)?;
-    if let Some(p) = crate::search::pick_for_limit(&points, limit_bytes) {
+    let opts = crate::simulate::SimOptions::default();
+    if let Some(pick) =
+        crate::search::pick_for_limit_swap_aware(net, &points, limit_bytes, &opts)?
+    {
+        let p = pick.point();
         let config = p
             .config
             .to_mafat()
-            .expect("2-group frontier points are paper-shaped");
+            .expect("2-group even frontier points are paper-shaped");
         return Ok((config, p.predicted_bytes));
     }
+    // Empty frontier (degenerate network): the documented fallback.
     let fb = crate::search::fallback_for(net);
     let pred = crate::predictor::predict_mem(net, fb, params)?;
     Ok((fb, pred.total_bytes))
@@ -396,8 +403,10 @@ pub fn auto_config(
 /// Pick the cheapest *compiled* configuration that fits `limit_bytes`,
 /// predicting against the manifest's own network (the model actually
 /// served, which may be a scaled variant of the analysis network). When
-/// nothing fits, returns the smallest-footprint compiled configuration —
-/// serving degrades to the closest fit rather than refusing to start.
+/// nothing fits, serving degrades to the compiled configuration with the
+/// minimal *predicted swap stall* at the budget (`predictor::predict_swap`)
+/// rather than refusing to start. Entries the 2-group engine cannot name
+/// (k > 2 groups or variable tilings) are skipped.
 pub fn auto_config_from_manifest(
     mnet: &crate::runtime::ManifestNetwork,
     limit_bytes: u64,
@@ -405,38 +414,50 @@ pub fn auto_config_from_manifest(
 ) -> Result<(MafatConfig, u64)> {
     use crate::search::planner::TASK_MACS_EQUIV;
     let net = mnet.network();
+    let opts = crate::simulate::SimOptions::default();
     // (config, predicted bytes, cost proxy) of the best fitting entry.
     let mut best: Option<(MafatConfig, u64, u64)> = None;
-    let mut smallest: Option<(MafatConfig, u64)> = None;
+    // (config, predicted bytes, stall, proxy) of the least-swap entry.
+    let mut least_stall: Option<(MafatConfig, u64, f64, u64)> = None;
     for entry in &mnet.configs {
-        let Ok(pred) = crate::predictor::predict_mem(&net, entry.config, params) else {
+        let Some(config) = entry.config.to_mafat() else {
+            continue; // the serving engine loads paper-shaped configs only
+        };
+        let Ok(pred) = crate::predictor::predict_multi(&net, &entry.config, params) else {
             continue;
         };
-        let Ok(plan) = crate::plan::plan_config(&net, entry.config) else {
+        let Ok(plan) = crate::plan::plan_multi(&net, &entry.config) else {
             continue;
         };
         let proxy = plan.total_macs(&net) + plan.n_tasks() as u64 * TASK_MACS_EQUIV;
-        let smaller = match &smallest {
-            None => true,
-            Some((_, bytes)) => pred.total_bytes < *bytes,
-        };
-        if smaller {
-            smallest = Some((entry.config, pred.total_bytes));
-        }
         if pred.total_bytes < limit_bytes {
             let better = match &best {
                 None => true,
                 Some((_, _, best_proxy)) => proxy < *best_proxy,
             };
             if better {
-                best = Some((entry.config, pred.total_bytes, proxy));
+                best = Some((config, pred.total_bytes, proxy));
             }
+        }
+        let swap = crate::predictor::predict_swap(&net, &plan, limit_bytes, &opts);
+        let calmer = match &least_stall {
+            None => true,
+            Some((_, _, stall, ls_proxy)) => match swap.swap_stall_s.total_cmp(stall) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => proxy < *ls_proxy,
+            },
+        };
+        if calmer {
+            least_stall = Some((config, pred.total_bytes, swap.swap_stall_s, proxy));
         }
     }
     if let Some((config, bytes, _)) = best {
         return Ok((config, bytes));
     }
-    smallest.context("manifest has no plannable configurations")
+    least_stall
+        .map(|(config, bytes, _, _)| (config, bytes))
+        .context("manifest has no servable configurations")
 }
 
 #[cfg(test)]
@@ -492,15 +513,42 @@ mod tests {
             predict_mem(&net, cfg, &params).unwrap().total_bytes,
             bytes
         );
-        // Impossible budget: the documented fallback.
-        let (cfg, _) = auto_config(&net, MIB, &params).unwrap();
-        assert_eq!(cfg, MafatConfig::most_even_fallback());
+    }
+
+    #[test]
+    fn auto_config_below_the_floor_minimizes_predicted_stall() {
+        // An impossible budget no longer returns a fixed fallback: the pick
+        // routes through the frontier's swap axis and lands on the
+        // frontier config with the minimal predicted swap stall.
+        use crate::network::yolov2::yolov2_16;
+        use crate::network::MIB;
+        use crate::predictor::{predict_swap_config, PredictorParams};
+        use crate::simulate::SimOptions;
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let opts = SimOptions::default();
+        let limit = MIB;
+        let (cfg, _) = auto_config(&net, limit, &params).unwrap();
+        let picked_stall = predict_swap_config(&net, cfg, limit, &opts)
+            .unwrap()
+            .swap_stall_s;
+        for p in crate::search::frontier(&net, 2, 5, &params).unwrap() {
+            let other = p.config.to_mafat().unwrap();
+            let stall = predict_swap_config(&net, other, limit, &opts)
+                .unwrap()
+                .swap_stall_s;
+            assert!(
+                picked_stall <= stall,
+                "{other} stalls less ({stall:.1}s) than the pick {cfg} ({picked_stall:.1}s)"
+            );
+        }
     }
 
     #[test]
     fn manifest_auto_pick_stays_within_compiled_set() {
         use crate::network::yolov2::yolov2_16_ops;
         use crate::network::MIB;
+        use crate::plan::MultiConfig;
         use crate::predictor::PredictorParams;
         use crate::runtime::{ConfigEntry, ManifestNetwork};
         let compiled: Vec<MafatConfig> =
@@ -518,7 +566,7 @@ mod tests {
             configs: compiled
                 .iter()
                 .map(|&config| ConfigEntry {
-                    config,
+                    config: MultiConfig::from_mafat(config),
                     groups: vec![],
                 })
                 .collect(),
@@ -528,8 +576,8 @@ mod tests {
         let (cfg, bytes) = auto_config_from_manifest(&mnet, 512 * MIB, &params).unwrap();
         assert_eq!(cfg, MafatConfig::no_cut(1));
         assert!(bytes < 512 * MIB);
-        // Impossible budget: degrades to the smallest-footprint compiled
-        // config — never to a shape outside the manifest.
+        // Impossible budget: degrades to the compiled config with the
+        // least predicted swap stall — never a shape outside the manifest.
         let (cfg, _) = auto_config_from_manifest(&mnet, MIB, &params).unwrap();
         assert!(compiled.contains(&cfg), "{cfg} not in the compiled set");
     }

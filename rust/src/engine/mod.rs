@@ -112,6 +112,7 @@ pub struct InferStats {
 pub struct Engine {
     runtime: Runtime,
     net: Network,
+    config: MafatConfig,
     entry: ConfigEntry,
     /// Per-group weight literals, in the executables' argument order.
     group_weights: Vec<Vec<xla::Literal>>,
@@ -154,8 +155,9 @@ impl Engine {
     ) -> Result<Engine> {
         // Clear error first if the config was never compiled, then the
         // stricter geometry cross-check.
-        let entry = mnet.find_config(config)?.clone();
-        mnet.verify_geometry(config)
+        let multi = crate::plan::MultiConfig::from_mafat(config);
+        let entry = mnet.find_config(&multi)?.clone();
+        mnet.verify_geometry(&multi)
             .context("manifest geometry does not match the tiler - rebuild artifacts")?;
         let net = mnet.network();
         let mut runtime = Runtime::cpu(artifacts_dir)?;
@@ -187,6 +189,7 @@ impl Engine {
         Ok(Engine {
             runtime,
             net,
+            config,
             entry,
             group_weights,
             full_weights,
@@ -200,7 +203,7 @@ impl Engine {
     }
 
     pub fn config(&self) -> MafatConfig {
-        self.entry.config
+        self.config
     }
 
     pub fn n_executables(&self) -> usize {

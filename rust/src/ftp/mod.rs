@@ -16,7 +16,10 @@ pub mod variable;
 pub use grid::Grid;
 pub use rect::Rect;
 pub use traversal::{down_extent, up_tile, Pad4};
-pub use variable::{balance_spans, group_halo, plan_group_balanced, plan_group_from_bounds};
+pub use variable::{
+    balance_spans, group_halo, plan_group_balanced, plan_group_balanced_searched,
+    plan_group_from_bounds, GroupVariant,
+};
 
 use crate::network::Network;
 use anyhow::{bail, Result};
@@ -136,6 +139,28 @@ pub struct GroupPlan {
 impl GroupPlan {
     pub fn n_tasks(&self) -> usize {
         self.tasks.len()
+    }
+
+    /// The 1-D tile boundaries of this plan on the bottom layer's output
+    /// map (`xs` column bounds, `ys` row bounds, each including 0 and the
+    /// extent). Recovered from task geometry, so it is exact for both even
+    /// and variable plans — the form manifests serialize.
+    pub fn bounds(&self) -> (Vec<usize>, Vec<usize>) {
+        let mut xs = Vec::with_capacity(self.n + 1);
+        let mut ys = Vec::with_capacity(self.m + 1);
+        for t in &self.tasks {
+            if t.grid_j == 0 {
+                xs.push(t.output_rect().x0);
+            }
+            if t.grid_i == 0 {
+                ys.push(t.output_rect().y0);
+            }
+        }
+        if let Some(t) = self.tasks.last() {
+            xs.push(t.output_rect().x1);
+            ys.push(t.output_rect().y1);
+        }
+        (xs, ys)
     }
 
     /// Total redundant (overlap) input elements across tasks at the group's
@@ -318,6 +343,16 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn bounds_recover_the_grid() {
+        let net = yolov2_16();
+        let g = plan_group(&net, 0, 7, 3, 3).unwrap();
+        let (xs, ys) = g.bounds();
+        let (w, h, _) = net.out_shape(7);
+        assert_eq!(xs, vec![0, w / 3, 2 * w / 3, w]);
+        assert_eq!(ys, vec![0, h / 3, 2 * h / 3, h]);
     }
 
     #[test]

@@ -14,6 +14,28 @@ use super::{up_tile, GroupPlan, LayerGeom, Rect, TaskGeom};
 use crate::network::Network;
 use anyhow::{bail, Result};
 
+/// Which tiling variant a layer group uses: the paper's even grid, or the
+/// halo-balanced variable boundaries of this module. Carried by
+/// [`crate::plan::MultiConfig`] and recorded by the search planner's cache
+/// entries so the frontier/CLI can report which variant won.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GroupVariant {
+    /// Even `n x n` grid (`floor(k*W/N)` boundaries).
+    Even,
+    /// Halo-balanced boundaries from [`plan_group_balanced_searched`].
+    Balanced,
+}
+
+impl GroupVariant {
+    /// Stable lowercase name used in JSON output and manifests.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GroupVariant::Even => "even",
+            GroupVariant::Balanced => "balanced",
+        }
+    }
+}
+
 /// Build a group plan from explicit boundary vectors (`xs`/`ys` include 0
 /// and the map extent; tile (i, j) spans `xs[i]..xs[i+1]` x `ys[j]..ys[j+1]`
 /// on the bottom layer's output).
@@ -125,7 +147,10 @@ pub fn balance_spans(extent: usize, n: usize, halo: usize) -> Vec<usize> {
     bounds
 }
 
-/// Plan a group with halo-balanced variable tiling.
+/// Plan a group with halo-balanced variable tiling at the exact
+/// [`group_halo`] estimate. This is the un-searched primitive;
+/// [`plan_group_balanced_searched`] additionally searches neighbouring halo
+/// estimates and is what the config planner and search subsystem use.
 pub fn plan_group_balanced(
     net: &Network,
     top: usize,
@@ -140,6 +165,45 @@ pub fn plan_group_balanced(
     let xs = balance_spans(out_w, n, halo);
     let ys = balance_spans(out_h, n, halo);
     plan_group_from_bounds(net, top, bottom, &xs, &ys)
+}
+
+/// Boundary search over balanced spans: [`group_halo`] integer-ceils a
+/// fractional halo, so the exact estimate is not always the one that
+/// minimizes the planned peak. Build balanced spans for the halo candidates
+/// `{h-1, h, h+1}`, plan each, and keep the one whose Algorithm-1 peak tile
+/// footprint is smallest (ties go to the smallest candidate, so the result
+/// is deterministic). Returns the winning plan together with its `(xs, ys)`
+/// boundaries so callers (geometry export, manifests) can serialize them.
+pub fn plan_group_balanced_searched(
+    net: &Network,
+    top: usize,
+    bottom: usize,
+    n: usize,
+) -> Result<(GroupPlan, Vec<usize>, Vec<usize>)> {
+    let (out_w, out_h, _) = net.out_shape(bottom);
+    if n > out_w.min(out_h) {
+        bail!("tiling {n} finer than group output {out_w}x{out_h}");
+    }
+    let h0 = group_halo(net, top, bottom);
+    let mut candidates = vec![h0.saturating_sub(1), h0, h0 + 1];
+    candidates.sort_unstable();
+    candidates.dedup();
+    let mut best: Option<(u64, GroupPlan, Vec<usize>, Vec<usize>)> = None;
+    for halo in candidates {
+        let xs = balance_spans(out_w, n, halo);
+        let ys = balance_spans(out_h, n, halo);
+        let plan = plan_group_from_bounds(net, top, bottom, &xs, &ys)?;
+        let peak = crate::predictor::peak_of_group_plan(net, &plan).tile_bytes;
+        let better = match &best {
+            None => true,
+            Some((b, _, _, _)) => peak < *b,
+        };
+        if better {
+            best = Some((peak, plan, xs, ys));
+        }
+    }
+    let (_, plan, xs, ys) = best.expect("at least one halo candidate");
+    Ok((plan, xs, ys))
 }
 
 #[cfg(test)]
@@ -228,6 +292,36 @@ mod tests {
         let even = plan_group(&net, 0, 7, 3, 3).unwrap();
         let balanced = plan_group_balanced(&net, 0, 7, 3).unwrap();
         assert!(spread(&balanced) < spread(&even));
+    }
+
+    #[test]
+    fn searched_balancing_never_worse_than_exact_halo() {
+        // The boundary search includes the exact halo estimate, so its peak
+        // can only improve on plan_group_balanced — and it must report the
+        // boundaries of the plan it returns.
+        let net = yolov2_16();
+        for (top, bottom, n) in [(0usize, 7usize, 3usize), (0, 7, 5), (0, 11, 4), (8, 15, 3)] {
+            let exact = plan_group_balanced(&net, top, bottom, n).unwrap();
+            let (searched, xs, ys) = plan_group_balanced_searched(&net, top, bottom, n).unwrap();
+            assert!(
+                peak_input_area(&searched) <= peak_input_area(&exact),
+                "({top},{bottom})@{n}: searched {} > exact {}",
+                peak_input_area(&searched),
+                peak_input_area(&exact)
+            );
+            let (bx, by) = searched.bounds();
+            assert_eq!(bx, xs, "({top},{bottom})@{n}");
+            assert_eq!(by, ys);
+            // And the boundaries rebuild the identical plan.
+            let rebuilt = plan_group_from_bounds(&net, top, bottom, &xs, &ys).unwrap();
+            assert_eq!(rebuilt, searched);
+        }
+    }
+
+    #[test]
+    fn group_variant_names_are_stable() {
+        assert_eq!(GroupVariant::Even.name(), "even");
+        assert_eq!(GroupVariant::Balanced.name(), "balanced");
     }
 
     #[test]

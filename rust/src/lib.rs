@@ -47,6 +47,16 @@
 //! for p in mafat::search::frontier(&net, 3, 5, &params).unwrap() {
 //!     println!("{:>6.1} MB -> {}", p.predicted_bytes as f64 / 1048576.0, p.config);
 //! }
+//!
+//! // Below the even-grid no-swap floor, two extensions keep going:
+//! // `frontier_variable` widens the space with halo-balanced variable
+//! // tilings (`5v5/12/3v3`), and `pick_for_limit_swap_aware` falls back
+//! // to the minimal predicted-swap-stall configuration instead of failing.
+//! let var = mafat::search::frontier_variable(&net, 2, 5, &params).unwrap();
+//! let pick = mafat::search::pick_for_limit_swap_aware(
+//!     &net, &var, 40 * mafat::network::MIB, &mafat::simulate::SimOptions::default(),
+//! ).unwrap().unwrap();
+//! println!("40 MB -> {} (swap-tolerant: {})", pick.point().config, pick.swap().is_some());
 //! ```
 
 pub mod baseline;

@@ -99,7 +99,15 @@ pub struct MemSim {
 }
 
 impl MemSim {
+    /// Build a simulator. A limit of `Some(0)` is a programming error —
+    /// the eviction loop's page arithmetic assumes at least one resident
+    /// page — so it is rejected loudly instead of thrashing forever;
+    /// simulate an unconstrained run with `None`.
     pub fn new(cfg: MemSimConfig) -> Self {
+        assert!(
+            cfg.limit_bytes != Some(0),
+            "memsim: memory limit must be > 0 bytes (use None for an unconstrained run)"
+        );
         MemSim {
             cfg,
             regions: Vec::new(),
@@ -298,6 +306,14 @@ mod tests {
         MemSim::new(MemSimConfig {
             limit_bytes: limit_mb.map(|m| m * MB),
         })
+    }
+
+    #[test]
+    #[should_panic(expected = "memory limit must be > 0")]
+    fn zero_limit_rejected() {
+        MemSim::new(MemSimConfig {
+            limit_bytes: Some(0),
+        });
     }
 
     #[test]

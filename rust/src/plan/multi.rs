@@ -6,7 +6,7 @@
 //! unchanged.
 
 use super::{plan_config, MafatConfig, Plan};
-use crate::ftp::plan_group;
+use crate::ftp::{plan_group, plan_group_balanced_searched, GroupVariant};
 use crate::network::Network;
 use anyhow::{bail, Result};
 use std::fmt;
@@ -14,15 +14,29 @@ use std::str::FromStr;
 
 /// A k-group configuration: `cuts` are strictly increasing layer indices
 /// (each group is `[prev_cut, cut)`), `tilings[i]` is group i's square
-/// tiling; `tilings.len() == cuts.len() + 1`.
+/// tiling, and `variants[i]` records whether group i uses the paper's even
+/// grid or the halo-balanced variable boundaries (`ftp::variable`);
+/// `tilings.len() == variants.len() == cuts.len() + 1`.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct MultiConfig {
     pub cuts: Vec<usize>,
     pub tilings: Vec<usize>,
+    pub variants: Vec<GroupVariant>,
 }
 
 impl MultiConfig {
+    /// An even-grid configuration (every group uses the paper's grid).
     pub fn new(cuts: Vec<usize>, tilings: Vec<usize>) -> Result<Self> {
+        let variants = vec![GroupVariant::Even; tilings.len()];
+        MultiConfig::with_variants(cuts, tilings, variants)
+    }
+
+    /// A configuration with explicit per-group tiling variants.
+    pub fn with_variants(
+        cuts: Vec<usize>,
+        tilings: Vec<usize>,
+        variants: Vec<GroupVariant>,
+    ) -> Result<Self> {
         if tilings.len() != cuts.len() + 1 {
             bail!(
                 "need {} tilings for {} cuts, got {}",
@@ -31,17 +45,34 @@ impl MultiConfig {
                 tilings.len()
             );
         }
+        if variants.len() != tilings.len() {
+            bail!(
+                "need {} variants for {} tilings, got {}",
+                tilings.len(),
+                tilings.len(),
+                variants.len()
+            );
+        }
         if cuts.windows(2).any(|w| w[0] >= w[1]) {
             bail!("cuts must be strictly increasing: {cuts:?}");
         }
         if tilings.iter().any(|&t| t == 0) {
             bail!("tilings must be >= 1");
         }
-        Ok(MultiConfig { cuts, tilings })
+        Ok(MultiConfig {
+            cuts,
+            tilings,
+            variants,
+        })
     }
 
     pub fn n_groups(&self) -> usize {
         self.tilings.len()
+    }
+
+    /// True when every group uses the paper's even grid.
+    pub fn is_even(&self) -> bool {
+        self.variants.iter().all(|&v| v == GroupVariant::Even)
     }
 
     /// The paper's 2-group configs embed naturally.
@@ -50,16 +81,22 @@ impl MultiConfig {
             None => MultiConfig {
                 cuts: vec![],
                 tilings: vec![c.top_tiling],
+                variants: vec![GroupVariant::Even],
             },
             Some(cut) => MultiConfig {
                 cuts: vec![cut],
                 tilings: vec![c.top_tiling, c.bottom_tiling],
+                variants: vec![GroupVariant::Even; 2],
             },
         }
     }
 
-    /// The exact 2-group description, when one exists (`n_groups <= 2`).
+    /// The exact 2-group description, when one exists (`n_groups <= 2` and
+    /// every group even — `MafatConfig` cannot express variable tilings).
     pub fn to_mafat(&self) -> Option<MafatConfig> {
+        if !self.is_even() {
+            return None;
+        }
         match (self.cuts.as_slice(), self.tilings.as_slice()) {
             ([], [t]) => Some(MafatConfig::no_cut(*t)),
             ([cut], [top, bottom]) => Some(MafatConfig::with_cut(*top, *cut, *bottom)),
@@ -101,13 +138,18 @@ impl MultiConfig {
 
 impl fmt::Display for MultiConfig {
     /// Extends the paper's notation: `3x3/4/2x2/12/1x1` means three groups
-    /// cut at layers 4 and 12.
+    /// cut at layers 4 and 12; a balanced (variable-boundary) group prints
+    /// `v` instead of `x` (`5v5/12/3v3`).
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         for (i, t) in self.tilings.iter().enumerate() {
             if i > 0 {
                 write!(f, "/{}/", self.cuts[i - 1])?;
             }
-            write!(f, "{t}x{t}")?;
+            let sep = match self.variants[i] {
+                GroupVariant::Even => 'x',
+                GroupVariant::Balanced => 'v',
+            };
+            write!(f, "{t}{sep}{t}")?;
         }
         if self.cuts.is_empty() {
             write!(f, "/NoCut")?;
@@ -116,64 +158,95 @@ impl fmt::Display for MultiConfig {
     }
 }
 
+fn parse_tile(p: &str) -> Result<(usize, GroupVariant)> {
+    let (t, v) = match p.split_once('x') {
+        Some((a, b)) if a == b => (a.parse::<usize>()?, GroupVariant::Even),
+        Some(_) => bail!("only square tilings supported in {p:?}"),
+        None => match p.split_once('v') {
+            Some((a, b)) if a == b => (a.parse::<usize>()?, GroupVariant::Balanced),
+            Some(_) => bail!("only square tilings supported in {p:?}"),
+            None => (p.parse::<usize>()?, GroupVariant::Even),
+        },
+    };
+    if t == 0 {
+        bail!("tiling 0");
+    }
+    Ok((t, v))
+}
+
 impl FromStr for MultiConfig {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> Result<Self> {
-        // 2-group strings use the paper parser for full compatibility.
+        // 2-group even strings use the paper parser for full compatibility.
         if let Ok(m) = s.parse::<MafatConfig>() {
             return Ok(MultiConfig::from_mafat(m));
         }
         let parts: Vec<&str> = s.split('/').collect();
+        // `3v3/NoCut`: a single balanced group (MafatConfig cannot parse it).
+        if let [t, nocut] = parts.as_slice() {
+            if nocut.eq_ignore_ascii_case("nocut") {
+                let (t, v) = parse_tile(t)?;
+                return MultiConfig::with_variants(vec![], vec![t], vec![v]);
+            }
+        }
         if parts.len() % 2 == 0 {
             bail!("cannot parse multi config {s:?} (expected TxT[/cut/TxT]...)");
         }
-        let tile = |p: &str| -> Result<usize> {
-            let t = match p.split_once('x') {
-                Some((a, b)) if a == b => a.parse::<usize>()?,
-                Some(_) => bail!("only square tilings supported in {p:?}"),
-                None => p.parse::<usize>()?,
-            };
-            if t == 0 {
-                bail!("tiling 0");
-            }
-            Ok(t)
-        };
-        let mut tilings = vec![tile(parts[0])?];
+        let first = parse_tile(parts[0])?;
+        let mut tilings = vec![first.0];
+        let mut variants = vec![first.1];
         let mut cuts = Vec::new();
         let mut i = 1;
         while i < parts.len() {
             cuts.push(parts[i].parse::<usize>()?);
-            tilings.push(tile(parts[i + 1])?);
+            let (t, v) = parse_tile(parts[i + 1])?;
+            tilings.push(t);
+            variants.push(v);
             i += 2;
         }
-        MultiConfig::new(cuts, tilings)
+        MultiConfig::with_variants(cuts, tilings, variants)
     }
 }
 
 /// Resolve a multi-group configuration into a [`Plan`]. The returned plan's
 /// `config` field carries the nearest 2-group description (for display,
-/// exact when `n_groups <= 2`).
+/// exact when `n_groups <= 2` and all groups even). Balanced groups plan
+/// through the halo-boundary search (`ftp::variable`), so every consumer —
+/// predictor, simulator, swap estimator, exporter — sees the same geometry
+/// the search planner evaluated.
 pub fn plan_multi(net: &Network, config: &MultiConfig) -> Result<Plan> {
-    // Fast path: the paper's shapes go through the existing constructor so
-    // Plan::config is exact.
-    if config.n_groups() == 1 {
-        return plan_config(net, MafatConfig::no_cut(config.tilings[0]));
-    }
-    if config.n_groups() == 2 {
-        return plan_config(
-            net,
-            MafatConfig::with_cut(config.tilings[0], config.cuts[0], config.tilings[1]),
-        );
+    // Fast path: the paper's even shapes go through the existing
+    // constructor so Plan::config is exact.
+    if config.is_even() {
+        if config.n_groups() == 1 {
+            return plan_config(net, MafatConfig::no_cut(config.tilings[0]));
+        }
+        if config.n_groups() == 2 {
+            return plan_config(
+                net,
+                MafatConfig::with_cut(config.tilings[0], config.cuts[0], config.tilings[1]),
+            );
+        }
     }
     let ranges = config.ranges(net.n_layers())?;
     let groups = ranges
         .iter()
-        .zip(&config.tilings)
-        .map(|(&(top, bottom), &t)| plan_group(net, top, bottom, t, t))
+        .zip(config.tilings.iter().zip(&config.variants))
+        .map(|(&(top, bottom), (&t, &v))| match v {
+            GroupVariant::Even => plan_group(net, top, bottom, t, t),
+            GroupVariant::Balanced => {
+                plan_group_balanced_searched(net, top, bottom, t).map(|(p, _, _)| p)
+            }
+        })
         .collect::<Result<Vec<_>>>()?;
+    let display = if config.n_groups() == 1 {
+        MafatConfig::no_cut(config.tilings[0])
+    } else {
+        MafatConfig::with_cut(config.tilings[0], config.cuts[0], config.tilings[1])
+    };
     Ok(Plan {
-        config: MafatConfig::with_cut(config.tilings[0], config.cuts[0], config.tilings[1]),
+        config: display,
         groups,
     })
 }
@@ -232,6 +305,45 @@ mod tests {
         // Out-of-range cut rejected.
         let bad = MultiConfig::new(vec![20], vec![1, 1]).unwrap();
         assert!(bad.ranges(16).is_err());
+    }
+
+    #[test]
+    fn variant_display_and_parse_round_trip() {
+        for s in ["5v5/12/3v3", "5v5/12/2x2", "3v3/NoCut", "4x4/4/3v3/12/1x1"] {
+            let c: MultiConfig = s.parse().unwrap();
+            assert_eq!(c.to_string(), s, "{s}");
+        }
+        let c: MultiConfig = "5v5/12/3v3".parse().unwrap();
+        assert_eq!(c.variants, vec![GroupVariant::Balanced; 2]);
+        assert!(!c.is_even());
+        // Balanced groups have no MafatConfig description.
+        assert_eq!(c.to_mafat(), None);
+        // Mismatched separators rejected.
+        assert!("3v2/8/2x2".parse::<MultiConfig>().is_err());
+    }
+
+    #[test]
+    fn balanced_plan_differs_from_even_and_partitions() {
+        let net = yolov2_16();
+        let even: MultiConfig = "5x5/12/2x2".parse().unwrap();
+        let bal: MultiConfig = "5v5/12/2x2".parse().unwrap();
+        let pe = plan_multi(&net, &even).unwrap();
+        let pb = plan_multi(&net, &bal).unwrap();
+        assert_ne!(pe, pb, "balanced top group must change the geometry");
+        // Both partition the final output map.
+        let (w, h, _) = net.out_shape(15);
+        for p in [&pe, &pb] {
+            let total: usize = p.groups.last().unwrap().tasks.iter()
+                .map(|t| t.output_rect().area())
+                .sum();
+            assert_eq!(total, w * h);
+        }
+        // The balanced plan's peak task input is no larger than the even
+        // plan's (the point of balancing).
+        let peak = |p: &Plan| {
+            p.groups[0].tasks.iter().map(|t| t.input_rect().area()).max().unwrap()
+        };
+        assert!(peak(&pb) <= peak(&pe));
     }
 
     #[test]

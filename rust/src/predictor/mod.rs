@@ -22,7 +22,7 @@
 
 pub mod swap;
 
-pub use swap::{predict_swap, predict_swap_config, SwapPrediction};
+pub use swap::{predict_swap, predict_swap_config, predict_swap_multi, SwapPrediction};
 
 use crate::ftp::{plan_group, GroupPlan};
 use crate::network::{LayerKind, Network, BYTES_PER_ELEM, MIB};
@@ -171,14 +171,49 @@ pub fn predict_ranges(
     Ok(best.expect("at least one group"))
 }
 
-/// Predict a multi-group configuration (k-group extension).
+/// Predict a multi-group configuration (k-group extension). Balanced
+/// groups are planned through the halo-boundary search of `ftp::variable`,
+/// so the prediction matches the geometry the search planner and exporter
+/// use; even configurations take exactly the [`predict_ranges`] path.
 pub fn predict_multi(
     net: &Network,
     config: &crate::plan::MultiConfig,
     params: &PredictorParams,
 ) -> Result<Prediction> {
-    let ranges = config.ranges_with_tilings(net.n_layers())?;
-    predict_ranges(net, &ranges, params)
+    if config.is_even() {
+        let ranges = config.ranges_with_tilings(net.n_layers())?;
+        return predict_ranges(net, &ranges, params);
+    }
+    use crate::ftp::{plan_group_balanced_searched, GroupVariant};
+    let ranges = config.ranges(net.n_layers())?;
+    let mut best: Option<Prediction> = None;
+    for (gi, (&(top, bottom), (&tiling, &variant))) in ranges
+        .iter()
+        .zip(config.tilings.iter().zip(&config.variants))
+        .enumerate()
+    {
+        let mut peak = match variant {
+            GroupVariant::Even => predict_layer_group(net, top, bottom, tiling, tiling)?,
+            GroupVariant::Balanced => {
+                let (plan, _, _) = plan_group_balanced_searched(net, top, bottom, tiling)?;
+                peak_of_group_plan(net, &plan)
+            }
+        };
+        peak.group_index = gi;
+        let weights = if params.include_weights {
+            net.group_weight_bytes(top, bottom)
+        } else {
+            0
+        };
+        let total = peak.tile_bytes + weights + params.bias_bytes;
+        if best.map_or(true, |b| total > b.total_bytes) {
+            best = Some(Prediction {
+                total_bytes: total,
+                peak,
+            });
+        }
+    }
+    Ok(best.expect("at least one group"))
 }
 
 /// Convenience: predicted MB with default parameters.

@@ -114,6 +114,18 @@ pub fn predict_swap_config(
     Ok(predict_swap(net, &plan, limit_bytes, opts))
 }
 
+/// Predict swap for a k-group (possibly variable-tiled) configuration —
+/// the form the swap-aware frontier and the serving auto-pick consume.
+pub fn predict_swap_multi(
+    net: &Network,
+    config: &crate::plan::MultiConfig,
+    limit_bytes: u64,
+    opts: &SimOptions,
+) -> Result<SwapPrediction> {
+    let plan = crate::plan::plan_multi(net, config)?;
+    Ok(predict_swap(net, &plan, limit_bytes, opts))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -11,14 +11,16 @@
 use crate::ftp::TaskGeom;
 use crate::jsonlite::Json;
 use crate::network::{LayerKind, Network};
-use crate::plan::{plan_config, MafatConfig};
+use crate::plan::{plan_multi, MafatConfig, MultiConfig};
 use anyhow::Result;
 use std::collections::BTreeMap;
 
-/// What to export for one network.
+/// What to export for one network. Configs are k-group forms, so variable
+/// (halo-balanced) tilings like `3v3/8/2x2` export too; the paper's shapes
+/// wrap via [`MultiConfig::from_mafat`].
 pub struct ExportSpec<'a> {
     pub net: &'a Network,
-    pub configs: Vec<MafatConfig>,
+    pub configs: Vec<MultiConfig>,
     /// Also emit the untiled full-network forward (the engine's
     /// verification oracle).
     pub emit_full: bool,
@@ -83,8 +85,8 @@ pub fn export_geometry(specs: &[ExportSpec<'_>]) -> Result<Json> {
     for spec in specs {
         let net = spec.net;
         let mut configs = Vec::new();
-        for &config in &spec.configs {
-            let plan = plan_config(net, config)?;
+        for config in &spec.configs {
+            let plan = plan_multi(net, config)?;
             let mut groups = Vec::new();
             for (gi, group) in plan.groups.iter().enumerate() {
                 // Dedupe tasks into shape classes.
@@ -108,12 +110,21 @@ pub fn export_geometry(specs: &[ExportSpec<'_>]) -> Result<Json> {
                         ("out_rect", rect_json(&task.output_rect())),
                     ]));
                 }
+                let (xs, ys) = group.bounds();
+                let bounds_json = |b: Vec<usize>| {
+                    Json::arr(b.into_iter().map(|v| Json::num(v as f64)).collect())
+                };
                 groups.push(Json::obj(vec![
                     ("gi", Json::num(gi as f64)),
                     ("top", Json::num(group.top as f64)),
                     ("bottom", Json::num(group.bottom as f64)),
                     ("n", Json::num(group.n as f64)),
                     ("m", Json::num(group.m as f64)),
+                    // Explicit boundaries: redundant for even grids, but
+                    // required to rebuild variable (balanced) tilings, so
+                    // aot.py can echo them into the manifest.
+                    ("xs", bounds_json(xs)),
+                    ("ys", bounds_json(ys)),
                     ("classes", Json::Arr(classes.into_values().collect())),
                     ("tasks", Json::Arr(tasks)),
                 ]));
@@ -143,16 +154,21 @@ pub fn export_geometry(specs: &[ExportSpec<'_>]) -> Result<Json> {
 }
 
 /// The default artifact set: the scaled YOLOv2-16 with the configurations
-/// the examples/integration tests exercise.
+/// the examples/integration tests exercise, plus one variable-tiling
+/// bundle (`3v3/8/2x2`) so the balanced-boundary path compiles end to end.
 pub fn default_export() -> Result<Json> {
     let net = crate::network::yolov2::yolov2_16_scaled(160);
-    let configs = vec![
+    let mut configs: Vec<MultiConfig> = [
         MafatConfig::no_cut(1),
         MafatConfig::no_cut(2),
         MafatConfig::with_cut(3, 8, 2),
         MafatConfig::with_cut(5, 8, 2),
         MafatConfig::with_cut(2, 12, 2),
-    ];
+    ]
+    .into_iter()
+    .map(MultiConfig::from_mafat)
+    .collect();
+    configs.push("3v3/8/2x2".parse()?);
     export_geometry(&[ExportSpec {
         net: &net,
         configs,
@@ -174,7 +190,7 @@ mod tests {
         assert_eq!(net.usize_at("in_w").unwrap(), 160);
         assert_eq!(net.get("layers").unwrap().as_arr().unwrap().len(), 16);
         let configs = net.get("configs").unwrap().as_arr().unwrap();
-        assert_eq!(configs.len(), 5);
+        assert_eq!(configs.len(), 6);
         // 5x5/8/2x2 has two groups; classes deduped below task count.
         let c552 = configs
             .iter()
@@ -190,6 +206,36 @@ mod tests {
     }
 
     #[test]
+    fn export_serializes_boundaries() {
+        // Every group carries explicit xs/ys bounds; the balanced config's
+        // top-group bounds differ from the even grid's.
+        let j = default_export().unwrap();
+        let net = &j.get("networks").unwrap().as_arr().unwrap()[0];
+        let configs = net.get("configs").unwrap().as_arr().unwrap();
+        let bounds_of = |name: &str| -> Vec<usize> {
+            let c = configs
+                .iter()
+                .find(|c| c.str_at("config").unwrap() == name)
+                .unwrap();
+            c.get("groups").unwrap().as_arr().unwrap()[0]
+                .get("xs")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect()
+        };
+        let even = bounds_of("3x3/8/2x2");
+        let balanced = bounds_of("3v3/8/2x2");
+        assert_eq!(even.len(), 4);
+        assert_eq!(balanced.len(), 4);
+        assert_eq!(even.first(), balanced.first());
+        assert_eq!(even.last(), balanced.last());
+        assert_ne!(even, balanced, "balancing must move the boundaries");
+    }
+
+    #[test]
     fn export_parses_back() {
         let j = default_export().unwrap();
         let text = j.to_string_pretty();
@@ -201,7 +247,7 @@ mod tests {
     fn every_task_class_is_defined() {
         let j = export_geometry(&[ExportSpec {
             net: &yolov2_16_scaled(160),
-            configs: vec![MafatConfig::with_cut(4, 8, 3)],
+            configs: vec![MultiConfig::from_mafat(MafatConfig::with_cut(4, 8, 3))],
             emit_full: false,
         }])
         .unwrap();

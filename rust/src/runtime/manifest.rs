@@ -4,7 +4,7 @@
 use crate::ftp::Rect;
 use crate::jsonlite::Json;
 use crate::network::{LayerKind, Network};
-use crate::plan::{plan_config, MafatConfig};
+use crate::plan::{plan_multi, MultiConfig};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
@@ -36,14 +36,23 @@ pub struct GroupEntry {
     pub bottom: usize,
     pub n: usize,
     pub m: usize,
+    /// Tile boundaries on the bottom output map (column/row bounds,
+    /// including 0 and the extent). Present in bundles compiled from
+    /// geometry that serializes them — required to rebuild variable
+    /// (halo-balanced) tilings exactly; older even-grid manifests omit
+    /// them.
+    pub xs: Option<Vec<usize>>,
+    pub ys: Option<Vec<usize>>,
     pub classes: HashMap<String, ClassEntry>,
     pub tasks: Vec<TaskEntry>,
 }
 
-/// One compiled configuration.
+/// One compiled configuration. `config` is the k-group form, so bundles can
+/// carry variable-tiling (`5v5/12/3v3`) and multi-cut configurations; the
+/// paper's 2-group shapes parse to the same value they always did.
 #[derive(Debug, Clone)]
 pub struct ConfigEntry {
-    pub config: MafatConfig,
+    pub config: MultiConfig,
     pub groups: Vec<GroupEntry>,
 }
 
@@ -73,10 +82,10 @@ impl ManifestNetwork {
         Network::from_ops(&self.name, self.in_w, self.in_h, self.in_c, &self.ops)
     }
 
-    pub fn find_config(&self, config: MafatConfig) -> Result<&ConfigEntry> {
+    pub fn find_config(&self, config: &MultiConfig) -> Result<&ConfigEntry> {
         self.configs
             .iter()
-            .find(|c| c.config == config)
+            .find(|c| &c.config == config)
             .with_context(|| {
                 format!(
                     "config {config} not in manifest (have: {})",
@@ -91,12 +100,14 @@ impl ManifestNetwork {
 
     /// Cross-check the manifest geometry against a freshly planned
     /// configuration — any drift between the Rust tiler and the artifacts
-    /// is a hard error.
-    pub fn verify_geometry(&self, config: MafatConfig) -> Result<()> {
+    /// is a hard error. Variable-tiling entries are re-planned through the
+    /// same balanced-boundary search the exporter used, and their
+    /// serialized `xs`/`ys` boundaries are checked against the plan.
+    pub fn verify_geometry(&self, config: &MultiConfig) -> Result<()> {
         let net = self.network();
         net.validate()?;
         let entry = self.find_config(config)?;
-        let plan = plan_config(&net, config)?;
+        let plan = plan_multi(&net, config)?;
         if plan.groups.len() != entry.groups.len() {
             bail!("group count mismatch");
         }
@@ -106,6 +117,17 @@ impl ManifestNetwork {
                     "group shape mismatch: planned ({},{},{},{}) manifest ({},{},{},{})",
                     pg.top, pg.bottom, pg.n, pg.m, mg.top, mg.bottom, mg.n, mg.m
                 );
+            }
+            let (bx, by) = pg.bounds();
+            if let Some(xs) = &mg.xs {
+                if *xs != bx {
+                    bail!("group {} x-boundary drift: planned {bx:?} manifest {xs:?}", mg.gi);
+                }
+            }
+            if let Some(ys) = &mg.ys {
+                if *ys != by {
+                    bail!("group {} y-boundary drift: planned {by:?} manifest {ys:?}", mg.gi);
+                }
             }
             if pg.tasks.len() != mg.tasks.len() {
                 bail!("task count mismatch in group {}", mg.gi);
@@ -231,10 +253,22 @@ fn parse_rect(j: &Json) -> Result<Rect> {
     ))
 }
 
+fn parse_bounds(j: Option<&Json>) -> Result<Option<Vec<usize>>> {
+    match j {
+        None => Ok(None),
+        Some(arr) => Ok(Some(
+            arr.as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+        )),
+    }
+}
+
 fn parse_network(n: &Json) -> Result<ManifestNetwork> {
     let mut configs = Vec::new();
     for c in n.get("configs")?.as_arr()? {
-        let config: MafatConfig = c.str_at("config")?.parse()?;
+        let config: MultiConfig = c.str_at("config")?.parse()?;
         let mut groups = Vec::new();
         for g in c.get("groups")?.as_arr()? {
             let mut classes = HashMap::new();
@@ -263,6 +297,8 @@ fn parse_network(n: &Json) -> Result<ManifestNetwork> {
                 bottom: g.usize_at("bottom")?,
                 n: g.usize_at("n")?,
                 m: g.usize_at("m")?,
+                xs: parse_bounds(g.get_opt("xs"))?,
+                ys: parse_bounds(g.get_opt("ys"))?,
                 classes,
                 tasks,
             });
@@ -328,12 +364,14 @@ mod tests {
         assert_eq!(n.name, "tiny");
         assert_eq!(n.ops.len(), 2);
         assert!(n.full.is_some());
-        let cfg = n.find_config("2x2/NoCut".parse().unwrap()).unwrap();
+        let cfg = n.find_config(&"2x2/NoCut".parse().unwrap()).unwrap();
         assert_eq!(cfg.groups[0].tasks.len(), 4);
         assert_eq!(
             cfg.groups[0].classes.get("k0").unwrap().in_shape,
             [5, 5, 3]
         );
+        // Legacy manifests carry no explicit boundaries.
+        assert!(cfg.groups[0].xs.is_none() && cfg.groups[0].ys.is_none());
     }
 
     #[test]
@@ -350,22 +388,21 @@ mod tests {
         let err = m
             .sole_network()
             .unwrap()
-            .find_config("5x5/8/2x2".parse().unwrap())
+            .find_config(&"5x5/8/2x2".parse().unwrap())
             .unwrap_err()
             .to_string();
         assert!(err.contains("2x2/NoCut"), "{err}");
     }
 
-    #[test]
-    fn geometry_verification_against_real_export() {
+    fn verify_round_trip(config: &str) {
         // Round-trip: export geometry from the tiler, fake an aot manifest
         // from it (same echo aot.py performs), and verify.
         use crate::runtime::export::{export_geometry, ExportSpec};
         let net = crate::network::yolov2::yolov2_16_scaled(160);
-        let config: MafatConfig = "3x3/8/2x2".parse().unwrap();
+        let config: MultiConfig = config.parse().unwrap();
         let geo = export_geometry(&[ExportSpec {
             net: &net,
-            configs: vec![config],
+            configs: vec![config.clone()],
             emit_full: false,
         }])
         .unwrap();
@@ -406,7 +443,7 @@ mod tests {
                         ),
                     ]));
                 }
-                groups.push(Json::obj(vec![
+                let mut fields = vec![
                     ("gi", Json::num(g.usize_at("gi").unwrap() as f64)),
                     ("top", Json::num(top as f64)),
                     ("bottom", Json::num(bottom as f64)),
@@ -414,7 +451,15 @@ mod tests {
                     ("m", Json::num(g.usize_at("m").unwrap() as f64)),
                     ("classes", Json::Arr(classes)),
                     ("tasks", g.get("tasks").unwrap().clone()),
-                ]));
+                ];
+                // aot.py echoes the boundary vectors when present.
+                if let Some(xs) = g.get_opt("xs") {
+                    fields.push(("xs", xs.clone()));
+                }
+                if let Some(ys) = g.get_opt("ys") {
+                    fields.push(("ys", ys.clone()));
+                }
+                groups.push(Json::obj(fields));
             }
             mani_cfgs.push(Json::obj(vec![
                 ("config", Json::str(c.str_at("config").unwrap())),
@@ -439,7 +484,20 @@ mod tests {
         parsed
             .sole_network()
             .unwrap()
-            .verify_geometry(config)
+            .verify_geometry(&config)
             .unwrap();
+    }
+
+    #[test]
+    fn geometry_verification_against_real_export() {
+        verify_round_trip("3x3/8/2x2");
+    }
+
+    #[test]
+    fn geometry_verification_of_variable_tiling_export() {
+        // Variable bundles: the balanced boundaries serialize through the
+        // geometry export, echo back through the (simulated) aot manifest,
+        // and verify against a fresh balanced-boundary plan.
+        verify_round_trip("3v3/8/2x2");
     }
 }

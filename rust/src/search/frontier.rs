@@ -1,5 +1,16 @@
 //! Pareto frontier of the k-group configuration space: predicted memory
-//! (Alg. 2) versus cost proxy (task MACs + launch overhead).
+//! (Alg. 2) versus cost proxy (task MACs + launch overhead) — with two
+//! extensions beyond the even grid:
+//!
+//! * [`frontier_variable`] widens the space with halo-balanced variable
+//!   tilings (`ftp::variable`): every per-group evaluation keeps the
+//!   cheaper-fitting of the even grid and the balanced boundaries, which
+//!   pushes the no-swap floor below the best even configuration.
+//! * [`pick_for_limit_swap_aware`] adds a second axis for limits *below*
+//!   the no-swap floor: instead of failing, it returns the frontier point
+//!   with the minimal predicted swap stall at the probed limit
+//!   (`predictor::predict_swap`), so the coordinator can always pick
+//!   something runnable.
 //!
 //! The frontier answers the deployment question the single-limit search
 //! cannot: *what does each additional megabyte buy?* The coordinator uses
@@ -14,9 +25,11 @@
 //! cut-sets are then filtered to the non-dominated set.
 
 use super::planner::{cut_set_ranges, enumerate_cut_sets, GroupCache};
+use crate::ftp::GroupVariant;
 use crate::network::Network;
-use crate::plan::MultiConfig;
-use crate::predictor::PredictorParams;
+use crate::plan::{plan_multi, MultiConfig};
+use crate::predictor::{predict_swap, PredictorParams, SwapPrediction};
+use crate::simulate::SimOptions;
 use anyhow::Result;
 
 /// One non-dominated configuration: strictly less memory than every point
@@ -40,7 +53,28 @@ pub fn frontier(
     max_tiling: usize,
     params: &PredictorParams,
 ) -> Result<Vec<FrontierPoint>> {
-    let cache = GroupCache::new(net);
+    frontier_with_cache(&GroupCache::new(net), max_groups, max_tiling, params)
+}
+
+/// [`frontier`] over the widened space where every group may also use the
+/// halo-balanced variable tiling; per group the cheaper-fitting variant
+/// wins and the point's config records it (`TvT` notation).
+pub fn frontier_variable(
+    net: &Network,
+    max_groups: usize,
+    max_tiling: usize,
+    params: &PredictorParams,
+) -> Result<Vec<FrontierPoint>> {
+    frontier_with_cache(&GroupCache::with_variants(net), max_groups, max_tiling, params)
+}
+
+fn frontier_with_cache(
+    cache: &GroupCache<'_>,
+    max_groups: usize,
+    max_tiling: usize,
+    params: &PredictorParams,
+) -> Result<Vec<FrontierPoint>> {
+    let net = cache.network();
     let n_layers = net.n_layers();
     // (bytes, proxy, seq, config) candidates across all cut-sets.
     let mut candidates: Vec<(u64, u64, usize, MultiConfig)> = Vec::new();
@@ -50,19 +84,20 @@ pub fn frontier(
         .enumerate()
     {
         let ranges = cut_set_ranges(&cut_set, n_layers);
-        // Per group: every plannable tiling's (tiling, total bytes, proxy),
-        // finest-to-coarsest totals. Each group is planned once per tiling
-        // thanks to the shared cache.
-        let mut per_group: Vec<Vec<(usize, u64, u64)>> = Vec::with_capacity(ranges.len());
+        // Per group: every plannable tiling's (tiling, total bytes, proxy,
+        // variant), finest-to-coarsest totals. Each group is planned once
+        // per tiling thanks to the shared cache.
+        let mut per_group: Vec<Vec<(usize, u64, u64, GroupVariant)>> =
+            Vec::with_capacity(ranges.len());
         let mut ok = true;
         for &(top, bottom) in &ranges {
             let (out_w, out_h, _) = net.out_shape(bottom);
             let cap = max_tiling.min(out_w).min(out_h);
-            let evals: Vec<(usize, u64, u64)> = (1..=cap)
+            let evals: Vec<(usize, u64, u64, GroupVariant)> = (1..=cap)
                 .filter_map(|t| {
                     cache
                         .eval(top, bottom, t)
-                        .map(|e| (t, e.total_bytes(params), e.cost_proxy()))
+                        .map(|e| (t, e.total_bytes(params), e.cost_proxy(), e.variant))
                 })
                 .collect();
             if evals.is_empty() {
@@ -78,7 +113,7 @@ pub fn frontier(
         // Candidate byte levels: every achievable per-group total.
         let mut levels: Vec<u64> = per_group
             .iter()
-            .flat_map(|g| g.iter().map(|&(_, b, _)| b))
+            .flat_map(|g| g.iter().map(|&(_, b, _, _)| b))
             .collect();
         levels.sort_unstable();
         levels.dedup();
@@ -88,13 +123,15 @@ pub fn frontier(
             let mut bytes = 0u64;
             let mut proxy = 0u64;
             let mut tilings = Vec::with_capacity(per_group.len());
+            let mut variants = Vec::with_capacity(per_group.len());
             let mut feasible = true;
             for evals in &per_group {
-                match evals.iter().find(|&&(_, b, _)| b <= level) {
-                    Some(&(t, b, p)) => {
+                match evals.iter().find(|&&(_, b, _, _)| b <= level) {
+                    Some(&(t, b, p, v)) => {
                         bytes = bytes.max(b);
                         proxy += p;
                         tilings.push(t);
+                        variants.push(v);
                     }
                     None => {
                         feasible = false;
@@ -105,7 +142,7 @@ pub fn frontier(
             if !feasible {
                 continue;
             }
-            let config = MultiConfig::new(cut_set.clone(), tilings)?;
+            let config = MultiConfig::with_variants(cut_set.clone(), tilings, variants)?;
             candidates.push((bytes, proxy, seq, config));
         }
     }
@@ -139,6 +176,89 @@ pub fn pick_for_limit(points: &[FrontierPoint], limit_bytes: u64) -> Option<&Fro
         .find(|p| p.predicted_bytes < limit_bytes)
 }
 
+/// Predicted swap behaviour of every frontier point at a probed limit —
+/// the frontier's second axis. Indexed like `points`.
+pub fn swap_axis(
+    net: &Network,
+    points: &[FrontierPoint],
+    limit_bytes: u64,
+    opts: &SimOptions,
+) -> Result<Vec<SwapPrediction>> {
+    points
+        .iter()
+        .map(|p| {
+            let plan = plan_multi(net, &p.config)?;
+            Ok(predict_swap(net, &plan, limit_bytes, opts))
+        })
+        .collect()
+}
+
+/// What [`pick_for_limit_swap_aware`] chose.
+#[derive(Debug, Clone, Copy)]
+pub enum SwapAwarePick<'a> {
+    /// The cheapest point that fits without predicted swapping.
+    Fits(&'a FrontierPoint),
+    /// The probed limit is below the no-swap floor: the point with the
+    /// minimal predicted swap stall at that limit.
+    SwapTolerant {
+        point: &'a FrontierPoint,
+        swap: SwapPrediction,
+    },
+}
+
+impl<'a> SwapAwarePick<'a> {
+    pub fn point(&self) -> &'a FrontierPoint {
+        match *self {
+            SwapAwarePick::Fits(p) => p,
+            SwapAwarePick::SwapTolerant { point, .. } => point,
+        }
+    }
+
+    /// The swap prediction, when the pick is swap-tolerant.
+    pub fn swap(&self) -> Option<SwapPrediction> {
+        match *self {
+            SwapAwarePick::Fits(_) => None,
+            SwapAwarePick::SwapTolerant { swap, .. } => Some(swap),
+        }
+    }
+}
+
+/// Swap-aware frontier pick: the cheapest fitting point when one exists;
+/// for limits below the no-swap floor, the point with the minimal predicted
+/// swap stall at the limit (ties broken by cost proxy, then frontier
+/// order). Returns `None` only for an empty frontier.
+pub fn pick_for_limit_swap_aware<'a>(
+    net: &Network,
+    points: &'a [FrontierPoint],
+    limit_bytes: u64,
+    opts: &SimOptions,
+) -> Result<Option<SwapAwarePick<'a>>> {
+    if let Some(p) = pick_for_limit(points, limit_bytes) {
+        return Ok(Some(SwapAwarePick::Fits(p)));
+    }
+    let swaps = swap_axis(net, points, limit_bytes, opts)?;
+    let mut best: Option<(usize, SwapPrediction)> = None;
+    for (ix, swap) in swaps.into_iter().enumerate() {
+        let better = match &best {
+            None => true,
+            Some((bix, bswap)) => {
+                match swap.swap_stall_s.total_cmp(&bswap.swap_stall_s) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => points[ix].cost_proxy < points[*bix].cost_proxy,
+                }
+            }
+        };
+        if better {
+            best = Some((ix, swap));
+        }
+    }
+    Ok(best.map(|(ix, swap)| SwapAwarePick::SwapTolerant {
+        point: &points[ix],
+        swap,
+    }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +290,25 @@ mod tests {
     }
 
     #[test]
+    fn variable_frontier_points_report_true_predictions() {
+        // Balanced-variant points, too, must predict exactly what Alg. 1/2
+        // computes on the balanced geometry (the planner cache, plan_multi,
+        // and predict_multi all share one boundary search).
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let pts = frontier_variable(&net, 3, 5, &params).unwrap();
+        let mut balanced_points = 0;
+        for p in &pts {
+            let pred = predict_multi(&net, &p.config, &params).unwrap();
+            assert_eq!(pred.total_bytes, p.predicted_bytes, "{}", p.config);
+            if !p.config.is_even() {
+                balanced_points += 1;
+            }
+        }
+        assert!(balanced_points > 0, "no balanced point on the frontier");
+    }
+
+    #[test]
     fn frontier_pick_agrees_with_search_multi() {
         let net = yolov2_16();
         let params = PredictorParams::default();
@@ -191,6 +330,20 @@ mod tests {
     }
 
     #[test]
+    fn variable_frontier_pick_agrees_with_variable_search() {
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let pts = frontier_variable(&net, 2, 5, &params).unwrap();
+        for mb in [256u64, 128, 96, 64, 48] {
+            let picked = pick_for_limit(&pts, mb * MIB).unwrap();
+            let searched =
+                super::super::search_multi_variable(&net, mb * MIB, 2, 5, &params).unwrap();
+            assert!(!searched.is_fallback, "{mb} MB");
+            assert_eq!(picked.cost_proxy, searched.cost_proxy, "{mb} MB");
+        }
+    }
+
+    #[test]
     fn nothing_fits_below_the_floor() {
         let net = yolov2_16();
         let params = PredictorParams::default();
@@ -207,6 +360,80 @@ mod tests {
         let three = frontier(&net, 3, 6, &params).unwrap();
         assert!(
             three.first().unwrap().predicted_bytes <= two.first().unwrap().predicted_bytes
+        );
+    }
+
+    #[test]
+    fn variable_tiling_extends_below_the_even_floor() {
+        // Acceptance pin (ISSUE 2): for a YOLOv2 memory limit below the
+        // even-grid no-swap floor, the variable frontier still returns a
+        // fitting configuration — one using balanced boundaries — whose
+        // predicted peak beats every even-grid config (none fit at all).
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let even = frontier(&net, 2, 5, &params).unwrap();
+        let var = frontier_variable(&net, 2, 5, &params).unwrap();
+        let even_floor = even.first().unwrap().predicted_bytes;
+        let var_floor = var.first().unwrap().predicted_bytes;
+        assert!(
+            var_floor < even_floor,
+            "variable floor {var_floor} did not beat even floor {even_floor}"
+        );
+        // A limit exactly at the even floor is unfittable by every even
+        // config (fitting requires strictly fewer bytes)...
+        assert!(pick_for_limit(&even, even_floor).is_none());
+        // ...but the variable frontier fits, with a balanced group.
+        let p = pick_for_limit(&var, even_floor).unwrap();
+        assert!(p.predicted_bytes < even_floor);
+        assert!(
+            p.config.variants.contains(&crate::ftp::GroupVariant::Balanced),
+            "{} fit below the even floor without balancing?",
+            p.config
+        );
+    }
+
+    #[test]
+    fn swap_aware_pick_fits_when_the_limit_allows() {
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let opts = SimOptions::default();
+        let pts = frontier(&net, 2, 5, &params).unwrap();
+        let pick = pick_for_limit_swap_aware(&net, &pts, 96 * MIB, &opts)
+            .unwrap()
+            .unwrap();
+        assert!(matches!(pick, SwapAwarePick::Fits(_)));
+        assert!(pick.swap().is_none());
+        let direct = pick_for_limit(&pts, 96 * MIB).unwrap();
+        assert_eq!(pick.point().cost_proxy, direct.cost_proxy);
+    }
+
+    #[test]
+    fn swap_aware_pick_minimizes_stall_below_the_floor() {
+        // Below the no-swap floor the frontier no longer fails: it returns
+        // the point with minimal predicted swap stall at the probed limit.
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let opts = SimOptions::default();
+        let pts = frontier(&net, 2, 5, &params).unwrap();
+        let limit = 16 * MIB;
+        assert!(pick_for_limit(&pts, limit).is_none());
+        let pick = pick_for_limit_swap_aware(&net, &pts, limit, &opts)
+            .unwrap()
+            .unwrap();
+        let swap = pick.swap().expect("below the floor the pick is swap-tolerant");
+        assert!(swap.swap_in_bytes > 0, "16 MB must predict swapping");
+        // It really is the argmin over the frontier's swap axis.
+        let stalls = swap_axis(&net, &pts, limit, &opts).unwrap();
+        for (ix, s) in stalls.iter().enumerate() {
+            assert!(
+                swap.swap_stall_s <= s.swap_stall_s,
+                "point {ix} ({}) has a smaller stall",
+                pts[ix].config
+            );
+        }
+        assert!(
+            stalls.iter().any(|s| s.swap_stall_s > swap.swap_stall_s),
+            "pick did not strictly beat any frontier point"
         );
     }
 }

@@ -31,7 +31,10 @@
 pub mod frontier;
 pub mod planner;
 
-pub use frontier::{frontier, pick_for_limit, FrontierPoint};
+pub use frontier::{
+    frontier, frontier_variable, pick_for_limit, pick_for_limit_swap_aware, swap_axis,
+    FrontierPoint, SwapAwarePick,
+};
 pub use planner::{GroupCache, PlannerStats};
 
 use crate::network::Network;
@@ -188,6 +191,23 @@ pub fn search_multi(
     search_multi_with_cache(net, memory_limit_bytes, max_groups, max_tiling, params, &cache)
 }
 
+/// [`search_multi`] over the widened space where every group may also use
+/// the halo-balanced variable tiling (`ftp::variable`): each per-group
+/// cache entry evaluates both variants and keeps the cheaper-fitting one,
+/// so limits below the even-grid no-swap floor can still find a fitting
+/// configuration. The even-only [`search_multi`] is untouched and remains
+/// byte-identical to [`search_multi_exhaustive`].
+pub fn search_multi_variable(
+    net: &Network,
+    memory_limit_bytes: u64,
+    max_groups: usize,
+    max_tiling: usize,
+    params: &PredictorParams,
+) -> Result<MultiSearchResult> {
+    let cache = GroupCache::with_variants(net);
+    search_multi_with_cache(net, memory_limit_bytes, max_groups, max_tiling, params, &cache)
+}
+
 /// [`search_multi`] against a caller-provided [`GroupCache`] — lets tests
 /// and benches inspect the planner's plan/hit counters, and lets repeated
 /// searches (e.g. a limit sweep) share one cache.
@@ -209,12 +229,12 @@ pub fn search_multi_with_cache(
 
     // Deterministic reduction: minimum cost proxy, earliest cut-set on ties
     // (matching the sequential reference's "first strictly better wins").
-    let mut best: Option<(usize, &(Vec<usize>, u64, u64))> = None;
+    let mut best: Option<(usize, &planner::CutEval)> = None;
     for (ix, r) in results.iter().enumerate() {
         if let Some(cand) = r {
             let improves = match best {
                 None => true,
-                Some((_, b)) => cand.2 < b.2,
+                Some((_, b)) => cand.proxy < b.proxy,
             };
             if improves {
                 best = Some((ix, cand));
@@ -222,11 +242,15 @@ pub fn search_multi_with_cache(
         }
     }
     let evaluated = cache.stats().group_plans - plans_before;
-    if let Some((ix, (tilings, bytes, proxy))) = best {
+    if let Some((ix, cand)) = best {
         return Ok(MultiSearchResult {
-            config: MultiConfig::new(cut_sets[ix].clone(), tilings.clone())?,
-            predicted_bytes: *bytes,
-            cost_proxy: *proxy,
+            config: MultiConfig::with_variants(
+                cut_sets[ix].clone(),
+                cand.tilings.clone(),
+                cand.variants.clone(),
+            )?,
+            predicted_bytes: cand.bytes,
+            cost_proxy: cand.proxy,
             evaluated,
             is_fallback: false,
         });
@@ -543,6 +567,43 @@ mod tests {
         let two = min_pred(2, 5);
         let three = min_pred(3, 6);
         assert!(three <= two, "3-group floor {three} > 2-group floor {two}");
+    }
+
+    #[test]
+    fn variable_search_beats_even_below_the_no_swap_floor() {
+        // Acceptance pin: at 46 MB — below the even-grid no-swap floor
+        // (~46.4 MB for <= 2 groups, tilings <= 5) — the even search falls
+        // back, while the widened variable search finds a fitting
+        // halo-balanced configuration whose prediction beats every even
+        // config (none of which fit at all).
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let limit = 46 * MIB;
+        let even = search_multi(&net, limit, 2, 5, &params).unwrap();
+        assert!(even.is_fallback, "even search unexpectedly fit at 46 MB");
+        let var = search_multi_variable(&net, limit, 2, 5, &params).unwrap();
+        assert!(!var.is_fallback, "variable search must fit at 46 MB");
+        assert!(var.predicted_bytes < limit);
+        assert_eq!(var.config.to_string(), "5v5/12/3v3");
+        // The reported prediction is the real Alg. 1/2 value on the
+        // balanced geometry.
+        let pred = crate::predictor::predict_multi(&net, &var.config, &params).unwrap();
+        assert_eq!(pred.total_bytes, var.predicted_bytes);
+    }
+
+    #[test]
+    fn variable_search_matches_even_search_at_generous_limits() {
+        // Where the even grid already fits, the widened space changes
+        // nothing: balancing only wins under pressure.
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        for mb in [256u64, 128] {
+            let even = search_multi(&net, mb * MIB, 3, 5, &params).unwrap();
+            let var = search_multi_variable(&net, mb * MIB, 3, 5, &params).unwrap();
+            assert_eq!(even.config, var.config, "{mb} MB");
+            assert_eq!(even.predicted_bytes, var.predicted_bytes, "{mb} MB");
+            assert_eq!(even.cost_proxy, var.cost_proxy, "{mb} MB");
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //!    reduction is deterministic (min cost proxy, earliest cut-set on ties)
 //!    regardless of thread scheduling.
 
-use crate::ftp::plan_group;
+use crate::ftp::{plan_group, plan_group_balanced_searched, GroupVariant};
 use crate::network::Network;
 use crate::predictor::{peak_of_group_plan, PredictorParams};
 use std::collections::HashMap;
@@ -35,7 +35,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 pub const TASK_MACS_EQUIV: u64 = 60_000_000;
 
 /// Everything the search needs to know about one planned layer group,
-/// derived from a single `plan_group` call.
+/// derived from a single `plan_group` call (plus, for a variants-enabled
+/// cache, one balanced-boundary plan the cheaper of which wins).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GroupEval {
     /// Peak tile footprint (bytes, before weights/bias) — Algorithm 1.
@@ -46,6 +47,9 @@ pub struct GroupEval {
     pub macs: u64,
     /// Number of fused tile tasks (`tiling^2`).
     pub n_tasks: u64,
+    /// Which tiling variant won this entry (always `Even` for an even-only
+    /// cache; a variants-enabled cache records the smaller-footprint one).
+    pub variant: GroupVariant,
 }
 
 impl GroupEval {
@@ -88,20 +92,43 @@ pub struct GroupCache<'a> {
     map: Mutex<HashMap<(usize, usize, usize), Arc<OnceLock<Option<GroupEval>>>>>,
     hits: AtomicUsize,
     plans: AtomicUsize,
+    /// When set, each entry also evaluates the halo-balanced variable
+    /// tiling (`ftp::variable`) and keeps the smaller-footprint variant.
+    variants: bool,
 }
 
 impl<'a> GroupCache<'a> {
+    /// An even-only cache: exactly the paper's search space, byte-identical
+    /// to `search_multi_exhaustive`.
     pub fn new(net: &'a Network) -> Self {
+        Self::build(net, false)
+    }
+
+    /// A variants-enabled cache: each `(top, bottom, tiling)` entry
+    /// evaluates both the even grid and the halo-balanced variable tiling
+    /// and keeps the cheaper-fitting (smaller peak footprint) one, with
+    /// [`GroupEval::variant`] recording which won (ties go to `Even`).
+    pub fn with_variants(net: &'a Network) -> Self {
+        Self::build(net, true)
+    }
+
+    fn build(net: &'a Network, variants: bool) -> Self {
         GroupCache {
             net,
             map: Mutex::new(HashMap::new()),
             hits: AtomicUsize::new(0),
             plans: AtomicUsize::new(0),
+            variants,
         }
     }
 
     pub fn network(&self) -> &'a Network {
         self.net
+    }
+
+    /// True when this cache evaluates variable tilings too.
+    pub fn evaluates_variants(&self) -> bool {
+        self.variants
     }
 
     /// Evaluate one group, planning it at most once per cache lifetime.
@@ -120,17 +147,33 @@ impl<'a> GroupCache<'a> {
         // the same key blocks on it, callers of other keys proceed.
         *cell.get_or_init(|| {
             self.plans.fetch_add(1, Ordering::Relaxed);
-            plan_group(self.net, top, bottom, tiling, tiling)
-                .ok()
-                .map(|plan| {
-                    let peak = peak_of_group_plan(self.net, &plan);
-                    GroupEval {
-                        peak_tile_bytes: peak.tile_bytes,
-                        weight_bytes: self.net.group_weight_bytes(top, bottom),
-                        macs: plan.tasks.iter().map(|t| t.macs(self.net)).sum(),
-                        n_tasks: plan.n_tasks() as u64,
+            let even = plan_group(self.net, top, bottom, tiling, tiling).ok()?;
+            let even_peak = peak_of_group_plan(self.net, &even).tile_bytes;
+            let mut plan = even;
+            let mut peak = even_peak;
+            let mut variant = GroupVariant::Even;
+            // Balancing only differs from the even grid when interior tiles
+            // exist (tiling > 2); a strict improvement is required so ties
+            // keep the paper's grid.
+            if self.variants && tiling > 2 {
+                if let Ok((bal, _, _)) =
+                    plan_group_balanced_searched(self.net, top, bottom, tiling)
+                {
+                    let bal_peak = peak_of_group_plan(self.net, &bal).tile_bytes;
+                    if bal_peak < even_peak {
+                        plan = bal;
+                        peak = bal_peak;
+                        variant = GroupVariant::Balanced;
                     }
-                })
+                }
+            }
+            Some(GroupEval {
+                peak_tile_bytes: peak,
+                weight_bytes: self.net.group_weight_bytes(top, bottom),
+                macs: plan.tasks.iter().map(|t| t.macs(self.net)).sum(),
+                n_tasks: plan.n_tasks() as u64,
+                variant,
+            })
         })
     }
 
@@ -178,21 +221,33 @@ pub fn cut_set_ranges(cut_set: &[usize], n_layers: usize) -> Vec<(usize, usize)>
     out
 }
 
+/// The best feasible configuration of one cut-set, as found by
+/// [`best_tilings_for_cut_set`]: per-group tilings and winning variants
+/// plus the combined prediction and cost proxy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CutEval {
+    pub tilings: Vec<usize>,
+    pub variants: Vec<GroupVariant>,
+    pub bytes: u64,
+    pub proxy: u64,
+}
+
 /// The best feasible configuration of one cut-set: per group, the coarsest
 /// tiling whose predicted total fits `limit` (binary search over the
-/// monotone fit predicate). Returns `(tilings, predicted_bytes,
-/// cost_proxy)`, or `None` when some group cannot fit at any tiling
-/// `<= max_tiling`.
+/// monotone fit predicate — monotone for the variant-min evaluations too,
+/// see `variant_fit_is_monotone_in_tiling_on_yolov2`). Returns `None` when
+/// some group cannot fit at any tiling `<= max_tiling`.
 pub fn best_tilings_for_cut_set(
     cache: &GroupCache<'_>,
     cut_set: &[usize],
     limit_bytes: u64,
     max_tiling: usize,
     params: &PredictorParams,
-) -> Option<(Vec<usize>, u64, u64)> {
+) -> Option<CutEval> {
     let net = cache.network();
     let ranges = cut_set_ranges(cut_set, net.n_layers());
     let mut tilings = Vec::with_capacity(ranges.len());
+    let mut variants = Vec::with_capacity(ranges.len());
     let mut bytes = 0u64;
     let mut proxy = 0u64;
     for &(top, bottom) in &ranges {
@@ -226,8 +281,14 @@ pub fn best_tilings_for_cut_set(
         bytes = bytes.max(eval.total_bytes(params));
         proxy += eval.cost_proxy();
         tilings.push(lo);
+        variants.push(eval.variant);
     }
-    Some((tilings, bytes, proxy))
+    Some(CutEval {
+        tilings,
+        variants,
+        bytes,
+        proxy,
+    })
 }
 
 /// Evaluate every cut-set, fanning out over a small std-thread pool when
@@ -240,7 +301,7 @@ pub fn evaluate_cut_sets(
     limit_bytes: u64,
     max_tiling: usize,
     params: &PredictorParams,
-) -> Vec<Option<(Vec<usize>, u64, u64)>> {
+) -> Vec<Option<CutEval>> {
     let n_threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
@@ -252,7 +313,7 @@ pub fn evaluate_cut_sets(
             .map(|cs| best_tilings_for_cut_set(cache, cs, limit_bytes, max_tiling, params))
             .collect();
     }
-    let mut out: Vec<Option<(Vec<usize>, u64, u64)>> = vec![None; cut_sets.len()];
+    let mut out: Vec<Option<CutEval>> = vec![None; cut_sets.len()];
     let chunk = cut_sets.len().div_ceil(n_threads);
     std::thread::scope(|scope| {
         for (ci, slots) in out.chunks_mut(chunk).enumerate() {
@@ -372,20 +433,82 @@ mod tests {
         let cache = GroupCache::new(&net);
         let params = PredictorParams::default();
         // No-cut at a generous limit: the coarsest tiling (1) fits.
-        let (t, bytes, _) =
-            best_tilings_for_cut_set(&cache, &[], 256 * MIB, 5, &params).unwrap();
-        assert_eq!(t, vec![1]);
-        assert!(bytes < 256 * MIB);
+        let e = best_tilings_for_cut_set(&cache, &[], 256 * MIB, 5, &params).unwrap();
+        assert_eq!(e.tilings, vec![1]);
+        assert_eq!(e.variants, vec![GroupVariant::Even]);
+        assert!(e.bytes < 256 * MIB);
         // Tighter limit forces a finer tiling; linear scan cross-check.
         let limit = 120 * MIB;
-        let (t, bytes, _) = best_tilings_for_cut_set(&cache, &[], limit, 5, &params).unwrap();
+        let e = best_tilings_for_cut_set(&cache, &[], limit, 5, &params).unwrap();
         let linear = (1..=5)
             .find(|&x| cache.eval(0, 15, x).unwrap().total_bytes(&params) < limit)
             .unwrap();
-        assert_eq!(t, vec![linear]);
-        assert!(bytes < limit);
+        assert_eq!(e.tilings, vec![linear]);
+        assert!(e.bytes < limit);
         // Impossible limit: infeasible.
         assert!(best_tilings_for_cut_set(&cache, &[], MIB, 5, &params).is_none());
+    }
+
+    #[test]
+    fn even_cache_never_reports_balanced_variants() {
+        let net = yolov2_16();
+        let cache = GroupCache::new(&net);
+        for t in 1..=6 {
+            let e = cache.eval(0, 7, t).unwrap();
+            assert_eq!(e.variant, GroupVariant::Even, "tiling {t}");
+        }
+    }
+
+    #[test]
+    fn variant_cache_keeps_the_smaller_footprint() {
+        // A variants-enabled cache must never report a larger peak than the
+        // even grid, must match it exactly wherever Even wins, and must win
+        // strictly somewhere on YOLOv2 (the balanced grids of the front
+        // groups).
+        let net = yolov2_16();
+        let even = GroupCache::new(&net);
+        let var = GroupCache::with_variants(&net);
+        assert!(var.evaluates_variants() && !even.evaluates_variants());
+        let mut balanced_wins = 0;
+        for (top, bottom) in [(0usize, 7usize), (0, 11), (8, 15), (12, 15), (0, 15)] {
+            for t in 1..=6 {
+                let (Some(e), Some(v)) = (even.eval(top, bottom, t), var.eval(top, bottom, t))
+                else {
+                    continue;
+                };
+                assert!(v.peak_tile_bytes <= e.peak_tile_bytes, "({top},{bottom})@{t}");
+                assert_eq!(v.weight_bytes, e.weight_bytes);
+                assert_eq!(v.n_tasks, e.n_tasks);
+                match v.variant {
+                    GroupVariant::Even => assert_eq!(v, e, "({top},{bottom})@{t}"),
+                    GroupVariant::Balanced => {
+                        assert!(v.peak_tile_bytes < e.peak_tile_bytes);
+                        balanced_wins += 1;
+                    }
+                }
+            }
+        }
+        assert!(balanced_wins > 0, "balancing never won a cache entry");
+    }
+
+    #[test]
+    fn variant_fit_is_monotone_in_tiling_on_yolov2() {
+        // The binary search's premise, re-checked for the variant-min
+        // evaluations: totals never increase as the tiling refines.
+        let net = yolov2_16();
+        let cache = GroupCache::with_variants(&net);
+        let params = PredictorParams::default();
+        for (top, bottom) in [(0usize, 15usize), (0, 7), (0, 11), (4, 15), (8, 15), (12, 15)] {
+            let mut prev_bytes = u64::MAX;
+            for t in 1..=8usize {
+                let Some(e) = cache.eval(top, bottom, t) else { break };
+                assert!(
+                    e.total_bytes(&params) <= prev_bytes,
+                    "group ({top},{bottom}) tiling {t} grew"
+                );
+                prev_bytes = e.total_bytes(&params);
+            }
+        }
     }
 
     #[test]

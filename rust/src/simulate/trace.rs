@@ -89,6 +89,9 @@ pub fn touch_map_region(
 /// price the run. Compute and swap are serialized (single core, synchronous
 /// demand paging — the Pi-3 behaviour the paper measures).
 pub fn run_trace(steps: &[Step], limit_bytes: Option<u64>, cost: &CostModel) -> Result<SimReport> {
+    if limit_bytes == Some(0) {
+        anyhow::bail!("memory limit must be > 0 bytes (omit the limit for an unconstrained run)");
+    }
     let mut sim = MemSim::new(MemSimConfig { limit_bytes });
     let mut regions: HashMap<String, RegionId> = HashMap::new();
     let mut compute_s = 0.0f64;
@@ -187,6 +190,14 @@ mod tests {
     fn unknown_buffer_is_error() {
         let steps = vec![Step::Read { key: "ghost".into() }];
         assert!(run_trace(&steps, None, &CostModel::default()).is_err());
+    }
+
+    #[test]
+    fn zero_limit_is_a_clear_error() {
+        // Regression: a zero limit used to reach the page simulator and
+        // thrash instead of erroring.
+        let err = run_trace(&steps_basic(), Some(0), &CostModel::default()).unwrap_err();
+        assert!(err.to_string().contains("must be > 0"), "{err}");
     }
 
     #[test]

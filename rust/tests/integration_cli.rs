@@ -81,6 +81,63 @@ fn frontier_prints_pareto_points_and_pick() {
 }
 
 #[test]
+fn frontier_json_is_machine_readable() {
+    let (ok, stdout, _) = mafat(&["frontier", "--max-groups", "3", "--limit-mb", "96", "--json"]);
+    assert!(ok, "{stdout}");
+    let j = mafat::jsonlite::Json::parse(&stdout).unwrap();
+    let points = j.get("points").unwrap().as_arr().unwrap();
+    assert!(points.len() >= 3, "only {} points", points.len());
+    // Every point carries its per-group variant + boundaries.
+    for p in points {
+        for g in p.get("groups").unwrap().as_arr().unwrap() {
+            assert!(matches!(g.str_at("variant").unwrap(), "even" | "balanced"));
+            assert!(g.get("xs").unwrap().as_arr().unwrap().len() >= 2);
+        }
+    }
+    let pick = j.get("pick").unwrap();
+    assert!(pick.get("fits").unwrap().as_bool().unwrap());
+}
+
+#[test]
+fn frontier_swap_axis_picks_below_the_floor() {
+    // 32 MB is below the YOLOv2 no-swap floor: without --swap-axis the
+    // frontier reports nothing fits; with it, it returns the minimal
+    // predicted-stall configuration.
+    let (ok, stdout, _) = mafat(&["frontier", "--limit-mb", "32"]);
+    assert!(ok);
+    assert!(stdout.contains("nothing fits"), "{stdout}");
+    let (ok, stdout, _) = mafat(&[
+        "frontier", "--variable", "--swap-axis", "--limit-mb", "32", "--json",
+    ]);
+    assert!(ok, "{stdout}");
+    let j = mafat::jsonlite::Json::parse(&stdout).unwrap();
+    let pick = j.get("pick").unwrap();
+    assert!(!pick.get("fits").unwrap().as_bool().unwrap());
+    assert!(pick.get("swap_stall_s").unwrap().as_f64().unwrap() >= 0.0);
+    // The variable frontier reaches below the even floor: some point uses
+    // balanced (TvT) tilings.
+    let points = j.get("points").unwrap().as_arr().unwrap();
+    assert!(
+        points.iter().any(|p| p.str_at("config").unwrap().contains('v')),
+        "{stdout}"
+    );
+}
+
+#[test]
+fn search_and_frontier_agree_on_variable_win_at_46mb() {
+    // Pinned acceptance scenario: 46 MB sits below the even-grid floor
+    // (~46.4 MB) but above the variable floor (~45.3 MB).
+    let (ok, stdout, _) = mafat(&["frontier", "--max-groups", "2", "--limit-mb", "46"]);
+    assert!(ok);
+    assert!(stdout.contains("nothing fits"), "{stdout}");
+    let (ok, stdout, _) = mafat(&[
+        "frontier", "--max-groups", "2", "--variable", "--limit-mb", "46",
+    ]);
+    assert!(ok);
+    assert!(stdout.contains("pick for 46 MB: 5v5/12/3v3"), "{stdout}");
+}
+
+#[test]
 fn simulate_reports_breakdown() {
     let (ok, stdout, _) = mafat(&["simulate", "--config", "3x3/8/2x2", "--limit-mb", "48"]);
     assert!(ok);
@@ -93,6 +150,15 @@ fn simulate_rejects_bad_config() {
     let (ok, _, stderr) = mafat(&["simulate", "--config", "3x2/8/2x2"]);
     assert!(!ok);
     assert!(stderr.contains("square"), "{stderr}");
+}
+
+#[test]
+fn simulate_rejects_zero_limit() {
+    // Regression: a zero memory limit used to reach the page simulator
+    // and loop instead of erroring.
+    let (ok, _, stderr) = mafat(&["simulate", "--config", "3x3/8/2x2", "--limit-mb", "0"]);
+    assert!(!ok);
+    assert!(stderr.contains("must be > 0"), "{stderr}");
 }
 
 #[test]

@@ -23,7 +23,7 @@ fn manifest_on_disk_matches_tiler_when_present() {
     let net = m.sole_network().unwrap();
     assert_eq!(net.network().layers, yolov2_16_scaled(160).layers);
     for cfg in &net.configs {
-        net.verify_geometry(cfg.config).unwrap();
+        net.verify_geometry(&cfg.config).unwrap();
     }
 }
 

@@ -5,7 +5,7 @@
 //! the seed, and re-running with that seed reproduces the case exactly.
 
 use mafat::data::SplitMix64;
-use mafat::ftp::{down_extent, plan_group};
+use mafat::ftp::{balance_spans, down_extent, plan_group};
 use mafat::network::{LayerKind, Network, MIB};
 use mafat::plan::{plan_config, MafatConfig};
 use mafat::predictor::{predict_mem, PredictorParams};
@@ -181,6 +181,43 @@ fn prop_search_result_fits_or_is_fallback() {
         } else {
             plan_config(&net, r.config).unwrap();
         }
+    });
+}
+
+#[test]
+fn prop_balance_spans_monotone_cover_and_bounded_effective_extent() {
+    // Variable-tiling boundaries must (1) be strictly monotone, (2) cover
+    // exactly [0, extent], and (3) never produce an *effective* extent
+    // (tile width + halo per interior side) larger than the even grid's
+    // worst tile — the balanced grid can only shrink the footprint driver.
+    let effective_max = |bounds: &[usize], halo: usize| -> usize {
+        let n = bounds.len() - 1;
+        (0..n)
+            .map(|i| {
+                let w = bounds[i + 1] - bounds[i];
+                let interior_sides = usize::from(i > 0) + usize::from(i + 1 < n);
+                w + halo * interior_sides
+            })
+            .max()
+            .unwrap()
+    };
+    cases(300, |rng| {
+        let extent = 4 + rng.next_below(400);
+        let n = 1 + rng.next_below(10.min(extent));
+        let halo = rng.next_below(9);
+        let bounds = balance_spans(extent, n, halo);
+        assert_eq!(bounds.len(), n + 1, "extent {extent} n {n} halo {halo}");
+        assert_eq!(bounds[0], 0);
+        assert_eq!(*bounds.last().unwrap(), extent, "must cover the extent");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "boundaries must be strictly monotone: {bounds:?}"
+        );
+        let even: Vec<usize> = (0..=n).map(|k| k * extent / n).collect();
+        assert!(
+            effective_max(&bounds, halo) <= effective_max(&even, halo),
+            "extent {extent} n {n} halo {halo}: balanced {bounds:?} vs even {even:?}"
+        );
     });
 }
 
