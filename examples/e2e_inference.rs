@@ -1,36 +1,57 @@
 //! End-to-end driver (DESIGN.md deliverable): real tiled inference through
-//! all three layers — Rust coordinator -> AOT'd JAX/Pallas HLO -> PJRT —
-//! on a batch of synthetic images, for several MAFAT configurations, with
+//! the engine — for the paper's 2-group shapes *and* the k-group /
+//! variable-tiling extensions — on a batch of synthetic images, with
 //! numerical verification against the untiled oracle and a latency /
 //! throughput / predicted-footprint report.
 //!
-//! Requires `make artifacts`. Run:
+//! Runs against `make artifacts` output when present (PJRT execution);
+//! otherwise exports a geometry-only reference bundle on the fly and runs
+//! it on the pure-Rust executor. Run:
 //!     cargo run --release --example e2e_inference
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
 use mafat::engine::Engine;
 use mafat::network::MIB;
-use mafat::plan::MafatConfig;
-use mafat::predictor::{predict_mem, PredictorParams};
+use mafat::plan::MultiConfig;
+use mafat::predictor::{predict_multi, PredictorParams};
 
 const BATCH: usize = 4;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let configs: Vec<MafatConfig> = vec![
+    let artifacts =
+        mafat::runtime::export::ensure_reference_bundle(&artifacts, "mafat-e2e-example")?;
+    let wanted: Vec<MultiConfig> = vec![
         "1x1/NoCut".parse()?,
         "2x2/NoCut".parse()?,
         "3x3/8/2x2".parse()?,
         "5x5/8/2x2".parse()?,
         "2x2/12/2x2".parse()?,
+        "4x4/4/3x3/12/2x2".parse()?,
+        "5v5/12/3v3".parse()?,
     ];
+    // Stay usable on bundles compiled before the k-group/variable configs
+    // joined the default set: skip what this manifest never compiled.
+    let manifest = mafat::runtime::Manifest::load(std::path::Path::new(&artifacts))?;
+    let mnet = manifest.sole_network()?;
+    let configs: Vec<MultiConfig> = wanted
+        .into_iter()
+        .filter(|c| {
+            let compiled = mnet.find_config(c).is_ok();
+            if !compiled {
+                eprintln!("skipping {c}: not compiled in this bundle (re-run the export to add it)");
+            }
+            compiled
+        })
+        .collect();
     println!(
-        "{:<12} {:>6} {:>9} {:>10} {:>11} {:>12} {:>10}",
+        "{:<18} {:>6} {:>9} {:>10} {:>11} {:>12} {:>10}",
         "config", "tasks", "verify", "mean ms", "img/s", "exec ms", "pred MB"
     );
     let params = PredictorParams::default();
     for config in configs {
-        let mut engine = Engine::load(&artifacts, config)?;
+        let mut engine =
+            Engine::load_network(std::path::Path::new(&artifacts), mnet, config.clone())?;
         let net = engine.network().clone();
 
         // Verify on one image: tiled must equal untiled exactly.
@@ -54,9 +75,9 @@ fn main() -> anyhow::Result<()> {
             checksum += out.data.iter().sum::<f32>();
         }
         let mean = total_ms / BATCH as f64;
-        let pred = predict_mem(&net, config, &params)?.total_bytes as f64 / MIB as f64;
+        let pred = predict_multi(&net, &config, &params)?.total_bytes as f64 / MIB as f64;
         println!(
-            "{:<12} {:>6} {:>9} {:>10.1} {:>11.2} {:>12.1} {:>10.1}",
+            "{:<18} {:>6} {:>9} {:>10.1} {:>11.2} {:>12.1} {:>10.1}",
             config.to_string(),
             tasks,
             "exact",
@@ -68,7 +89,8 @@ fn main() -> anyhow::Result<()> {
         let _ = checksum;
     }
     println!(
-        "\nAll configurations produce bit-identical outputs to the untiled\n\
+        "\nAll configurations — including k-group cuts and halo-balanced\n\
+         variable tilings — produce bit-identical outputs to the untiled\n\
          oracle (paper §2.1.1: tiled computations are mathematically\n\
          equivalent). Predicted MB is Alg. 1/2 applied to the scaled\n\
          (160x160) network the engine runs; paper-scale predictions come\n\

@@ -1,28 +1,40 @@
-//! Serving demo: boots the coordinator, drives it with a small client
-//! load (mixed synthetic-image requests over several connections), prints
-//! per-request latencies and the final metrics snapshot — the
-//! single-device edge-serving scenario the paper's intro motivates.
+//! Serving demo: boots the coordinator with a small worker pool, drives it
+//! with a client load (mixed synthetic-image requests over several
+//! connections), prints per-request latencies and the final metrics
+//! snapshot — the single-device edge-serving scenario the paper's intro
+//! motivates, scaled out to N engines.
 //!
-//! Requires `make artifacts`. Run:
-//!     cargo run --release --example serve
+//! Runs against `make artifacts` output when present; otherwise exports a
+//! geometry-only reference bundle on the fly and serves it with the
+//! pure-Rust executor. Run:
+//!     cargo run --release --example serve [ARTIFACTS_DIR] [WORKERS]
 
 use mafat::coordinator::{Server, ServerConfig};
 use mafat::engine::Engine;
 use mafat::jsonlite::Json;
+use mafat::plan::MultiConfig;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let config = "3x3/8/2x2".parse()?;
+    let workers: usize = std::env::args()
+        .nth(2)
+        .map(|w| w.parse())
+        .transpose()?
+        .unwrap_or(2);
+    let artifacts =
+        mafat::runtime::export::ensure_reference_bundle(&artifacts, "mafat-serve-example")?;
+    let config: MultiConfig = "3x3/8/2x2".parse()?;
 
     let server = Server::start(
-        move || Engine::load(&artifacts, config),
+        move || Engine::load(&artifacts, config.clone()),
         "127.0.0.1:0",
         ServerConfig {
             queue_depth: 32,
             max_batch: 4,
+            workers,
         },
     )?;
     let addr = server.local_addr;
@@ -71,13 +83,13 @@ fn main() -> anyhow::Result<()> {
         println!("{id:<10} {lat:>12.1} {q:>10.1}");
     }
     println!(
-        "\n{} requests in {:.2} s wall ({:.2} req/s, single-device worker)",
+        "\n{} requests in {:.2} s wall ({:.2} req/s over a pool of {workers} worker(s))",
         all.len(),
         wall,
         all.len() as f64 / wall
     );
 
-    // Metrics snapshot.
+    // Metrics snapshot (aggregated across the pool).
     let stream = TcpStream::connect(addr)?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);

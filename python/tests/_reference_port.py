@@ -1,0 +1,440 @@
+"""Line-by-line Python port of the Rust tiler geometry + reference executor
++ predictor peak, used to verify the PR's numerical claims without a Rust
+toolchain in this container.
+
+Mirrors:
+  rust/src/ftp/traversal.rs   up_span / up_tile
+  rust/src/ftp/grid.rs        Grid
+  rust/src/ftp/variable.rs    group_halo / balance_spans / plan_group_balanced_searched
+  rust/src/ftp/mod.rs         plan_group (even)
+  rust/src/runtime/reference.rs conv2d / maxpool2d / run_task / run_full
+  rust/src/predictor/mod.rs   peak_of_group_plan / predict_multi (peak ordering)
+  rust/src/engine/mod.rs      gather / scatter / infer group loop
+  rust/src/data/mod.rs        SplitMix64 hash -> weights/bias/image
+"""
+import math
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+MIB = 1 << 20
+
+# ---------------------------------------------------------------- network
+
+@dataclass
+class Layer:
+    kind: str  # 'conv' | 'max'
+    filters: int = 0
+    size: int = 0
+    stride: int = 1
+    pad: int = 0
+    in_w: int = 0
+    in_h: int = 0
+    in_c: int = 0
+    out_w: int = 0
+    out_h: int = 0
+    out_c: int = 0
+
+    @property
+    def is_conv(self):
+        return self.kind == 'conv'
+
+    def filter(self):
+        return self.size
+
+    def padding(self):
+        return self.pad if self.is_conv else 0
+
+
+def resolve(kind_list, in_w, in_h, in_c):
+    layers = []
+    w, h, c = in_w, in_h, in_c
+    for k in kind_list:
+        l = Layer(**k)
+        l.in_w, l.in_h, l.in_c = w, h, c
+        if l.is_conv:
+            l.out_w = (w + 2 * l.pad - l.size) // l.stride + 1
+            l.out_h = (h + 2 * l.pad - l.size) // l.stride + 1
+            l.out_c = l.filters
+        else:
+            l.out_w = (w + l.stride - 1) // l.stride
+            l.out_h = (h + l.stride - 1) // l.stride
+            l.out_c = c
+        layers.append(l)
+        w, h, c = l.out_w, l.out_h, l.out_c
+    return layers
+
+
+def conv(filters, size):
+    return dict(kind='conv', filters=filters, size=size, stride=1, pad=size // 2)
+
+
+def maxpool():
+    return dict(kind='max', size=2, stride=2)
+
+
+def yolov2_16_ops():
+    return [
+        conv(32, 3), maxpool(), conv(64, 3), maxpool(),
+        conv(128, 3), conv(64, 1), conv(128, 3), maxpool(),
+        conv(256, 3), conv(128, 1), conv(256, 3), maxpool(),
+        conv(512, 3), conv(256, 1), conv(512, 3), conv(256, 1),
+    ]
+
+# ---------------------------------------------------------------- geometry
+
+@dataclass
+class LayerGeom:
+    layer: int
+    in_rect: Tuple[int, int, int, int]   # x0, y0, x1, y1
+    out_rect: Tuple[int, int, int, int]
+    pad: Tuple[int, int, int, int]       # left, right, top, bottom
+
+
+@dataclass
+class Task:
+    grid_i: int
+    grid_j: int
+    layers: List[LayerGeom]
+
+    def input_rect(self):
+        return self.layers[0].in_rect
+
+    def output_rect(self):
+        return self.layers[-1].out_rect
+
+
+def up_span(o0, o1, f, s, p, extent):
+    lo = o0 * s - p
+    hi = (o1 - 1) * s - p + f
+    clo = max(lo, 0)
+    chi = min(hi, extent)
+    return clo, chi, clo - lo, hi - chi
+
+
+def up_tile(layer: Layer, out):
+    x0, y0, x1, y1 = out
+    f = layer.size
+    s = layer.stride
+    p = layer.padding()
+    ax0, ax1, pl, pr = up_span(x0, x1, f, s, p, layer.in_w)
+    ay0, ay1, pt, pb = up_span(y0, y1, f, s, p, layer.in_h)
+    return (ax0, ay0, ax1, ay1), (pl, pr, pt, pb)
+
+
+def plan_from_bounds(layers, top, bottom, xs, ys):
+    tasks = []
+    for j in range(len(ys) - 1):
+        for i in range(len(xs) - 1):
+            out = (xs[i], ys[j], xs[i + 1], ys[j + 1])
+            rev = []
+            for l in range(bottom, top - 1, -1):
+                in_rect, pad = up_tile(layers[l], out)
+                rev.append(LayerGeom(l, in_rect, out, pad))
+                out = in_rect
+            rev.reverse()
+            tasks.append(Task(i, j, rev))
+    return tasks
+
+
+def grid_bounds(n, extent):
+    return [k * extent // n for k in range(n + 1)]
+
+
+def plan_group(layers, top, bottom, n, m):
+    ow, oh = layers[bottom].out_w, layers[bottom].out_h
+    return plan_from_bounds(layers, top, bottom, grid_bounds(n, ow), grid_bounds(m, oh))
+
+
+def group_halo(layers, top, bottom):
+    scale = 1
+    halo = 0.0
+    for l in range(bottom, top - 1, -1):
+        spec = layers[l]
+        if not spec.is_conv:
+            scale *= spec.stride
+        else:
+            halo += (spec.size // 2) / scale
+    return math.ceil(halo)
+
+
+def balance_spans(extent, n, halo):
+    assert 1 <= n <= extent
+    if n <= 2 or extent <= 2 * halo * n:
+        return grid_bounds(n, extent)
+    q = (extent - 2 * halo) // n
+    widths = [q] * n
+    widths[0] += halo
+    widths[n - 1] += halo
+    rem = extent - sum(widths)
+    k = 1
+    while rem > 0:
+        widths[k % n] += 1
+        rem -= 1
+        k += 1
+    bounds = [0]
+    acc = 0
+    for w in widths:
+        acc += w
+        bounds.append(acc)
+    return bounds
+
+
+def peak_tile_bytes(layers, tasks):
+    peak = 0
+    for t in tasks:
+        for lg in t.layers:
+            spec = layers[lg.layer]
+            x0, y0, x1, y1 = lg.in_rect
+            w_in, h_in = x1 - x0, y1 - y0
+            ox0, oy0, ox1, oy1 = lg.out_rect
+            w_out, h_out = ox1 - ox0, oy1 - oy0
+            if spec.is_conv:
+                scratch = w_out * h_out * spec.in_c * spec.size * spec.size // spec.stride
+            else:
+                scratch = 0
+            mem = (scratch + w_out * h_out * spec.out_c + 2 * w_in * h_in * spec.in_c) * 4
+            peak = max(peak, mem)
+    return peak
+
+
+def plan_group_balanced_searched(layers, top, bottom, n):
+    ow, oh = layers[bottom].out_w, layers[bottom].out_h
+    h0 = group_halo(layers, top, bottom)
+    cands = sorted(set([max(h0 - 1, 0), h0, h0 + 1]))
+    best = None
+    for halo in cands:
+        xs = balance_spans(ow, n, halo)
+        ys = balance_spans(oh, n, halo)
+        tasks = plan_from_bounds(layers, top, bottom, xs, ys)
+        peak = peak_tile_bytes(layers, tasks)
+        if best is None or peak < best[0]:
+            best = (peak, tasks, xs, ys)
+    return best[1], best[2], best[3]
+
+
+def group_weight_bytes(layers, top, bottom):
+    total = 0
+    for l in range(top, bottom + 1):
+        spec = layers[l]
+        if spec.is_conv:
+            total += spec.size * spec.size * spec.in_c * spec.filters * 4
+    return total
+
+
+def parse_config(s):
+    """'4v4/2/4x4' -> (cuts, tilings, variants)."""
+    parts = s.split('/')
+    if len(parts) == 2 and parts[1].lower() == 'nocut':
+        parts = [parts[0]]
+    def tile(p):
+        if 'x' in p:
+            a, b = p.split('x')
+            assert a == b
+            return int(a), 'even'
+        if 'v' in p:
+            a, b = p.split('v')
+            assert a == b
+            return int(a), 'balanced'
+        return int(p), 'even'
+    t0, v0 = tile(parts[0])
+    tilings, variants, cuts = [t0], [v0], []
+    i = 1
+    while i < len(parts):
+        cuts.append(int(parts[i]))
+        t, v = tile(parts[i + 1])
+        tilings.append(t)
+        variants.append(v)
+        i += 2
+    return cuts, tilings, variants
+
+
+def ranges(cuts, n_layers):
+    out = []
+    top = 0
+    for c in cuts:
+        out.append((top, c - 1))
+        top = c
+    out.append((top, n_layers - 1))
+    return out
+
+
+def plan_multi(layers, config_str):
+    cuts, tilings, variants = parse_config(config_str)
+    groups = []
+    for (top, bottom), t, v in zip(ranges(cuts, len(layers)), tilings, variants):
+        if v == 'even':
+            groups.append(plan_group(layers, top, bottom, t, t))
+        else:
+            tasks, _, _ = plan_group_balanced_searched(layers, top, bottom, t)
+            groups.append(tasks)
+    return groups
+
+
+def predict_multi_bytes(layers, config_str, bias=31 * MIB):
+    cuts, tilings, variants = parse_config(config_str)
+    best = 0
+    for (top, bottom), t, v in zip(ranges(cuts, len(layers)), tilings, variants):
+        if v == 'even':
+            tasks = plan_group(layers, top, bottom, t, t)
+        else:
+            tasks, _, _ = plan_group_balanced_searched(layers, top, bottom, t)
+        total = peak_tile_bytes(layers, tasks) + group_weight_bytes(layers, top, bottom) + bias
+        best = max(best, total)
+    return best
+
+
+def task_macs(layers, task):
+    total = 0
+    for lg in task.layers:
+        spec = layers[lg.layer]
+        ox0, oy0, ox1, oy1 = lg.out_rect
+        area = (ox1 - ox0) * (oy1 - oy0)
+        if spec.is_conv:
+            total += area * spec.size * spec.size * spec.in_c * spec.out_c
+        else:
+            total += area * spec.out_c * spec.size * spec.size
+    return total
+
+# ---------------------------------------------------------- data (SplitMix)
+
+MASK = (1 << 64) - 1
+
+
+def _mix(z):
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return (z ^ (z >> 31)) & MASK
+
+
+def hash_to_unit_f32(seed, index):
+    h = _mix(seed ^ _mix((index + 0x9E3779B97F4A7C15) & MASK))
+    return np.float32(np.float32(h >> 40) * np.float32(1.0 / (1 << 24)))
+
+
+def gen_weights(seed, layer, count, fan_in):
+    scale = np.float32(np.sqrt(np.float32(2.0) / np.float32(max(fan_in, 1))))
+    layer_seed = seed ^ ((layer * 0xA24BAED4963EE407) & MASK)
+    return np.array(
+        [(hash_to_unit_f32(layer_seed, i) - np.float32(0.5)) * np.float32(2.0) * scale
+         for i in range(count)],
+        dtype=np.float32,
+    )
+
+
+def gen_bias(seed, layer, count):
+    layer_seed = seed ^ ((layer * 0xD6E8FEB86659FD93) & MASK)
+    return np.array(
+        [(hash_to_unit_f32(layer_seed, i) - np.float32(0.5)) * np.float32(0.2)
+         for i in range(count)],
+        dtype=np.float32,
+    )
+
+
+def gen_image(seed, w, h, c):
+    img_seed = seed ^ 0x243F6A8885A308D3
+    return np.array([hash_to_unit_f32(img_seed, i) for i in range(w * h * c)],
+                    dtype=np.float32)
+
+# ------------------------------------------------------- reference executor
+
+LEAKY = np.float32(0.1)
+WEIGHT_SEED = 0x5EED0001
+
+
+def gen_network_weights(layers, seed=WEIGHT_SEED):
+    out = []
+    for l, spec in enumerate(layers):
+        if spec.is_conv:
+            fan_in = spec.size * spec.size * spec.in_c
+            count = fan_in * spec.filters
+            w = gen_weights(seed, l, count, fan_in).reshape(
+                spec.size, spec.size, spec.in_c, spec.filters)
+            b = gen_bias(seed, l, spec.filters)
+            out.append((w, b))
+        else:
+            out.append(None)
+    return out
+
+
+def conv2d(x, w, b, size, stride, pads, oh, ow):
+    """Same loop structure as reference.rs: acc starts at b; for (fy, fx, ci)
+    in order, acc[:] += xv * w[fy,fx,ci,:] elementwise in f32."""
+    pl, pr, pt, pb = pads
+    ih, iw, in_c = x.shape
+    out_c = w.shape[3]
+    out = np.zeros((oh, ow, out_c), dtype=np.float32)
+    for oy in range(oh):
+        for ox in range(ow):
+            acc = b.copy()
+            for fy in range(size):
+                y = oy * stride + fy - pt
+                if y < 0 or y >= ih:
+                    continue
+                for fx in range(size):
+                    xx = ox * stride + fx - pl
+                    if xx < 0 or xx >= iw:
+                        continue
+                    for ci in range(in_c):
+                        acc = acc + x[y, xx, ci] * w[fy, fx, ci, :]
+            out[oy, ox, :] = np.where(acc >= 0, acc, LEAKY * acc)
+    return out
+
+
+def maxpool2d(x, size, stride, oh, ow):
+    ih, iw, c = x.shape
+    out = np.full((oh, ow, c), -np.inf, dtype=np.float32)
+    for oy in range(oh):
+        for ox in range(ow):
+            for fy in range(size):
+                for fx in range(size):
+                    out[oy, ox, :] = np.maximum(out[oy, ox, :],
+                                                x[oy * stride + fy, ox * stride + fx, :])
+    return out
+
+
+def run_task(layers, weights, task, tile):
+    x = tile
+    for lg in task.layers:
+        spec = layers[lg.layer]
+        ox0, oy0, ox1, oy1 = lg.out_rect
+        oh, ow = oy1 - oy0, ox1 - ox0
+        pl, pr, pt, pb = lg.pad
+        if spec.is_conv:
+            w, b = weights[lg.layer]
+            x = conv2d(x, w, b, spec.size, spec.stride, (pl, pr, pt, pb), oh, ow)
+        else:
+            assert pl + pr + pt + pb == 0
+            x = maxpool2d(x, spec.size, spec.stride, oh, ow)
+    return x
+
+
+def run_full(layers, weights, image_hwc):
+    tasks = plan_group(layers, 0, len(layers) - 1, 1, 1)
+    return run_task(layers, weights, tasks[0], image_hwc)
+
+
+def gather(m, rect):
+    x0, y0, x1, y1 = rect
+    return m[y0:y1, x0:x1, :].copy()
+
+
+def infer(layers, weights, groups, image_hwc):
+    """The engine group loop: gather -> run task -> scatter; merge at cuts."""
+    inp = image_hwc
+    for tasks in groups:
+        bottom = tasks[0].layers[-1].layer
+        spec = layers[bottom]
+        out_map = np.zeros((spec.out_h, spec.out_w, spec.out_c), dtype=np.float32)
+        order = sorted(range(len(tasks)),
+                       key=lambda ix: ((tasks[ix].grid_i + tasks[ix].grid_j) % 2,
+                                       tasks[ix].grid_j, tasks[ix].grid_i))
+        for ix in order:
+            t = tasks[ix]
+            tile = gather(inp, t.input_rect())
+            out = run_task(layers, weights, t, tile)
+            x0, y0, x1, y1 = t.output_rect()
+            out_map[y0:y1, x0:x1, :] = out
+        inp = out_map
+    return inp

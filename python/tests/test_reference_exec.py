@@ -1,0 +1,144 @@
+"""Cross-language verification of the Rust reference executor + tiler.
+
+`_reference_port.py` is a line-by-line numpy/float32 port of
+`rust/src/runtime/reference.rs` (conv + bias + leaky ReLU, VALID maxpool),
+the tiler geometry (`ftp::traversal`/`grid`/`variable`), the engine's
+gather/scatter group loop, and the deterministic weight/image generators
+(`data::SplitMix64`). These tests pin the PR's numerical claims in an
+environment with no Rust toolchain:
+
+* tiled execution is **bit-identical** to the untiled oracle — for even
+  grids, k-group cuts, and genuinely uneven balanced boundaries (the
+  paper's §2.1.1 equivalence, checked in f32 with the executor's exact
+  accumulation order);
+* the balanced-boundary search moves boundaries where the halo allows it;
+* the tiny-serve prediction ordering assumed by
+  `rust/tests/integration_serve.rs::auto_pick_serves_variable_config_when_it_wins`
+  holds (the `4v4/2/4x4` entry is the unique predicted floor).
+
+Pure numpy — no jax required. Run: pytest python/tests/test_reference_exec.py
+"""
+
+import numpy as np
+
+from _reference_port import (
+    MIB,
+    balance_spans,
+    conv,
+    gen_image,
+    gen_network_weights,
+    grid_bounds,
+    infer,
+    maxpool,
+    plan_from_bounds,
+    plan_group,
+    plan_group_balanced_searched,
+    plan_multi,
+    predict_multi_bytes,
+    resolve,
+    run_full,
+    run_task,
+    yolov2_16_ops,
+)
+
+
+def tiny_layers():
+    return resolve([conv(4, 3), maxpool(), conv(8, 3)], 16, 16, 3)
+
+
+def oracle_for(layers, seed=11):
+    weights = gen_network_weights(layers)
+    w, h, c = layers[0].in_w, layers[0].in_h, layers[0].in_c
+    img = gen_image(seed, w, h, c).reshape(h, w, c)
+    return weights, img, run_full(layers, weights, img)
+
+
+def test_even_tiling_bit_identical_to_oracle():
+    layers = tiny_layers()
+    weights, img, oracle = oracle_for(layers)
+    tiled = infer(layers, weights, plan_multi(layers, "2x2/NoCut"), img)
+    assert np.array_equal(tiled, oracle)
+
+
+def test_k_group_cut_bit_identical_to_oracle():
+    layers = tiny_layers()
+    weights, img, oracle = oracle_for(layers)
+    tiled = infer(layers, weights, plan_multi(layers, "2x2/1/2x2"), img)
+    assert np.array_equal(tiled, oracle)
+
+
+def test_uneven_balanced_boundaries_bit_identical_to_oracle():
+    # Three SAME convs on 24x24: the halo-balanced search produces truly
+    # uneven spans, and execution from those boundaries still matches the
+    # oracle bit for bit.
+    layers = resolve([conv(8, 3), conv(8, 3), conv(8, 3)], 24, 24, 3)
+    tasks, xs, ys = plan_group_balanced_searched(layers, 0, 2, 3)
+    assert xs != grid_bounds(3, 24), "boundaries must move"
+    assert xs == [0, 8, 15, 24]  # pinned: deterministic search result
+    weights, img, oracle = oracle_for(layers, seed=5)
+    tiled = infer(layers, weights, [tasks], img)
+    assert np.array_equal(tiled, oracle)
+
+
+def test_balance_spans_partitions():
+    for extent, n, halo in [(24, 3, 2), (20, 3, 2), (38, 5, 2), (6, 5, 2)]:
+        b = balance_spans(extent, n, halo)
+        assert b[0] == 0 and b[-1] == extent and len(b) == n + 1
+        assert all(b[i] < b[i + 1] for i in range(n))
+
+
+def test_arbitrary_bounds_partition_and_execute():
+    layers = tiny_layers()
+    weights, img, oracle = oracle_for(layers, seed=3)
+    # A deliberately lopsided partition of the 8x8 output map.
+    tasks = plan_from_bounds(layers, 0, 2, [0, 1, 8], [0, 5, 8])
+    areas = sum(
+        (t.output_rect()[2] - t.output_rect()[0]) * (t.output_rect()[3] - t.output_rect()[1])
+        for t in tasks
+    )
+    assert areas == 8 * 8
+    tiled = infer(layers, weights, [tasks], img)
+    assert np.array_equal(tiled, oracle)
+
+
+def test_yolo_structure_5v5_12_3v3_plans():
+    # The variable search winner's shape on the (narrowed) YOLOv2-16
+    # structure: 25 + 9 tasks, every group's rects partition its map.
+    narrow = [
+        conv(4, 3), maxpool(), conv(8, 3), maxpool(),
+        conv(16, 3), conv(8, 1), conv(16, 3), maxpool(),
+        conv(32, 3), conv(16, 1), conv(32, 3), maxpool(),
+        conv(64, 3), conv(32, 1), conv(64, 3), conv(32, 1),
+    ]
+    layers = resolve(narrow, 80, 80, 3)
+    groups = plan_multi(layers, "5v5/12/3v3")
+    assert [len(g) for g in groups] == [25, 9]
+    weights, img, oracle = oracle_for(layers, seed=7)
+    tiled = infer(layers, weights, groups, img)
+    assert np.array_equal(tiled, oracle)
+
+
+def test_tiny_serve_prediction_ordering():
+    # rust/tests/integration_serve.rs builds its auto-pick scenario on this
+    # ordering: the balanced `4v4/2/4x4` entry is the unique predicted
+    # floor of the tiny-serve bundle.
+    layers = resolve(
+        [conv(8, 3), maxpool(), conv(16, 3), maxpool(), conv(16, 1), conv(16, 3)],
+        32, 32, 3,
+    )
+    preds = {
+        cfg: predict_multi_bytes(layers, cfg)
+        for cfg in ["1x1/NoCut", "2x2/NoCut", "2x2/2/2x2/4/1x1", "4v4/2/4x4"]
+    }
+    floor = min(preds, key=preds.get)
+    assert floor == "4v4/2/4x4", preds
+    others = min(v for k, v in preds.items() if k != floor)
+    assert preds[floor] < others
+    # Bias dominates but the margin is real (> 8 KB of peak difference).
+    assert others - preds[floor] > 8 * 1024
+
+
+def test_wrong_weight_free_layers_are_pools():
+    layers = resolve(yolov2_16_ops(), 48, 48, 3)
+    weights = gen_network_weights(layers)
+    assert [w is None for w in weights] == [not l.is_conv for l in layers]

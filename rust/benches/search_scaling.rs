@@ -13,12 +13,13 @@
 //!   at every probed limit — with a wall-clock speedup.
 //!
 //! Additionally writes a machine-readable `BENCH_search.json` (plan_group
-//! calls and wall clock per `max_groups`) that CI uploads as an artifact
-//! and diffs against the committed baseline
+//! calls, wall clock, and frontier timings/point counts per `max_groups`)
+//! that CI uploads as an artifact and diffs against the committed baseline
 //! (`rust/benches/BENCH_search.baseline.json`, gated by
-//! `ci/bench_diff.py`): a >25% growth in cached plan_group calls fails the
-//! pipeline. The call counts are deterministic — they only depend on the
-//! network and the binary-search probe sequence — so the gate is exact.
+//! `ci/bench_diff.py`): since the call counts are deterministic — they
+//! only depend on the network and the binary-search probe sequence — CI
+//! gates them *exactly* (`--tolerance 1.0`); wall-clock and frontier
+//! fields are informational.
 
 mod harness;
 
@@ -27,7 +28,7 @@ use mafat::jsonlite::Json;
 use mafat::network::yolov2::yolov2_16;
 use mafat::network::MIB;
 use mafat::predictor::PredictorParams;
-use mafat::search::{search_multi, search_multi_exhaustive};
+use mafat::search::{frontier, frontier_variable, search_multi, search_multi_exhaustive};
 use std::sync::atomic::Ordering;
 use std::time::Instant;
 
@@ -103,12 +104,37 @@ fn main() {
         );
         naive_total_ms += naive_ms_total;
         cached_total_ms += cached_ms_total;
+
+        // Frontier timings at this max_groups (even and variable spaces):
+        // wall clock + point counts + plan_group calls, recorded in the
+        // bench JSON (informational — CI gates the search call counts).
+        let tf = Instant::now();
+        let (even_points, frontier_calls) =
+            plan_calls_during(|| frontier(&net, max_groups, MAX_TILING, &params).unwrap());
+        let frontier_ms = tf.elapsed().as_secs_f64() * 1e3;
+        let tv = Instant::now();
+        let (var_points, frontier_var_calls) = plan_calls_during(|| {
+            frontier_variable(&net, max_groups, MAX_TILING, &params).unwrap()
+        });
+        let frontier_var_ms = tv.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "   frontier: {} points in {frontier_ms:.1} ms | variable: {} points in {frontier_var_ms:.1} ms\n",
+            even_points.len(),
+            var_points.len()
+        );
+
         rows.push(Json::obj(vec![
             ("max_groups", Json::num(max_groups as f64)),
             ("cached_plan_group_calls", Json::num(cached_calls_total as f64)),
             ("naive_plan_group_calls", Json::num(naive_calls_total as f64)),
             ("cached_wall_ms", Json::num(cached_ms_total)),
             ("naive_wall_ms", Json::num(naive_ms_total)),
+            ("frontier_points", Json::num(even_points.len() as f64)),
+            ("frontier_wall_ms", Json::num(frontier_ms)),
+            ("frontier_plan_group_calls", Json::num(frontier_calls as f64)),
+            ("frontier_variable_points", Json::num(var_points.len() as f64)),
+            ("frontier_variable_wall_ms", Json::num(frontier_var_ms)),
+            ("frontier_variable_plan_group_calls", Json::num(frontier_var_calls as f64)),
         ]));
     }
 

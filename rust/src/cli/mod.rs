@@ -50,10 +50,18 @@ Tooling:
                                                     included) as JSON
   simulate  --config 5x5/8/2x2 --limit-mb 64        one simulated run
   export-geometry [--out artifacts/geometry.json]   AOT geometry for aot.py
+  export-bundle   [--out DIR]                       geometry-only reference
+                                                    bundle (default
+                                                    artifacts-ref): runs on
+                                                    the pure-Rust executor,
+                                                    no XLA toolchain needed
 
-Real execution (requires `make artifacts`):
-  run       --config 3x3/8/2x2 [--artifacts DIR] [--batch N] [--verify]
+Real execution (against `make artifacts` or an `export-bundle` dir):
+  run       --config 5v5/12/3v3 [--artifacts DIR] [--batch N] [--verify]
+            (--config takes any manifest entry: k-group cuts and
+             variable `TvT` tilings included)
   serve     --addr 127.0.0.1:7077 --config 3x3/8/2x2 [--artifacts DIR]
+            [--workers N]                           engine pool size
             (no --config: auto-picked among the manifest's compiled
              configs from the probed memory budget, or from --limit-mb)
 
@@ -137,6 +145,17 @@ impl Args {
             .get("config")
             .context("missing --config (e.g. --config 5x5/8/2x2)")?;
         s.parse()
+    }
+
+    /// The k-group form the engine and server consume: any cut count,
+    /// even (`TxT`) or balanced (`TvT`) per-group tilings.
+    pub fn multi_config(&self) -> Result<crate::plan::MultiConfig> {
+        let s = self
+            .get("config")
+            .context("missing --config (e.g. --config 5x5/8/2x2 or 5v5/12/3v3)")?;
+        s.parse().with_context(|| {
+            format!("invalid --config {s:?} (expected TxT[/cut/TxT]... or TvT for balanced tilings)")
+        })
     }
 }
 
@@ -534,11 +553,22 @@ pub fn cmd_export_geometry(args: &Args) -> Result<()> {
     Ok(())
 }
 
+pub fn cmd_export_bundle(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("out").unwrap_or("artifacts-ref"));
+    crate::runtime::export::write_default_reference_bundle(&dir)?;
+    eprintln!(
+        "wrote reference bundle to {} (serve it: mafat run --artifacts {} --config 5v5/12/3v3 --verify)",
+        dir.display(),
+        dir.display()
+    );
+    Ok(())
+}
+
 // ----------------------------------------------------------- real execution
 
 pub fn cmd_run(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
-    let config = args.config()?;
+    let config = args.multi_config()?;
     let batch = args.get_u64("batch")?.unwrap_or(1) as usize;
     let verify = args.has("verify");
     crate::engine::run_cli(artifacts, config, batch, verify)
@@ -547,11 +577,15 @@ pub fn cmd_run(args: &Args) -> Result<()> {
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let addr = args.get("addr").unwrap_or("127.0.0.1:7077");
+    let mut server_cfg = crate::coordinator::ServerConfig::default();
+    if let Some(workers) = args.get_u64("workers")? {
+        server_cfg.workers = workers.max(1) as usize;
+    }
     // Without --config, auto-pick among the *compiled* configurations of
     // the artifact manifest against the probed (or --limit-mb overridden)
     // memory budget, predicting on the manifest's own (served) network.
     let config = if args.has("config") {
-        args.config()?
+        args.multi_config()?
     } else {
         let params = args.predictor_params()?;
         let limit = match args.get_u64("limit-mb")? {
@@ -574,7 +608,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         );
         config
     };
-    crate::coordinator::serve_cli(artifacts, config, addr)
+    crate::coordinator::serve_cli(artifacts, config, addr, server_cfg)
 }
 
 #[cfg(test)]
@@ -597,6 +631,25 @@ mod tests {
     fn missing_config_errors() {
         let a = parse(&[]);
         assert!(a.config().is_err());
+        assert!(a.multi_config().is_err());
+    }
+
+    #[test]
+    fn multi_config_accepts_variable_and_k_group() {
+        let a = parse(&["--config", "5v5/12/3v3"]);
+        let c = a.multi_config().unwrap();
+        assert_eq!(c.to_string(), "5v5/12/3v3");
+        let a = parse(&["--config", "4x4/4/3x3/12/2x2"]);
+        assert_eq!(a.multi_config().unwrap().n_groups(), 3);
+    }
+
+    #[test]
+    fn multi_config_rejects_malformed_tvt_with_clear_error() {
+        for bad in ["3v2/8/2x2", "5x5/8", "av a", "0v0/NoCut", "5x5//2x2"] {
+            let a = parse(&["--config", bad]);
+            let err = format!("{:#}", a.multi_config().unwrap_err());
+            assert!(err.contains("invalid --config"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -7,13 +7,22 @@
 //!  TCP conns --> per-conn reader threads --> bounded request queue
 //!                                              | (backpressure: reject
 //!                                              v  when full)
-//!                                     worker thread (owns Engine)
-//!                                       - drains up to `max_batch`
-//!                                       - executes MAFAT plan per image
+//!                              worker pool (N threads, each owns an Engine)
+//!                                - workers race for the shared queue
+//!                                - each drains up to `max_batch / N` per
+//!                                  wake (bursts spread across the pool)
+//!                                - executes the MAFAT plan per image
 //!                                              |
 //!                                              v
 //!                                   per-request response channels
 //! ```
+//!
+//! The pool size is `ServerConfig::workers` (default 1 — the paper's
+//! single-device scenario); every worker constructs its own engine via the
+//! shared factory, so PJRT handles never cross threads, and all workers
+//! record into one shared [`Metrics`] registry. Engines are deterministic,
+//! so responses are byte-identical regardless of which worker serves a
+//! request.
 //!
 //! Protocol: JSON-lines. Requests:
 //!   {"cmd":"infer","id":"r1","seed":123}            synthetic image
@@ -26,13 +35,13 @@
 use crate::engine::Engine;
 use crate::jsonlite::Json;
 use crate::metrics::Metrics;
-use crate::plan::MafatConfig;
+use crate::plan::MultiConfig;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// A queued inference request.
@@ -49,8 +58,14 @@ struct Request {
 pub struct ServerConfig {
     /// Bounded queue depth; senders beyond this are rejected (backpressure).
     pub queue_depth: usize,
-    /// Max requests drained per worker wake-up (batched execution).
+    /// Batch budget per wake-up, shared across the pool: each worker
+    /// drains up to `max(1, max_batch / workers)` requests at once, so a
+    /// burst spreads across engines instead of funneling into whichever
+    /// worker wins the queue lock.
     pub max_batch: usize,
+    /// Worker pool size: engines sharing the request queue. Values < 1 are
+    /// treated as 1.
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +73,26 @@ impl Default for ServerConfig {
         ServerConfig {
             queue_depth: 64,
             max_batch: 8,
+            workers: 1,
+        }
+    }
+}
+
+/// State shared between the worker pool (which records metrics) and the
+/// connection handlers (which serve `metrics` requests and synthesize
+/// seed images). Per-server — multiple servers in one process no longer
+/// share globals.
+pub struct ServerShared {
+    pub metrics: Arc<Metrics>,
+    /// Input dimensions for synthetic-image requests (h, w, c).
+    pub dims: (usize, usize, usize),
+}
+
+impl Default for ServerShared {
+    fn default() -> Self {
+        ServerShared {
+            metrics: Arc::new(Metrics::default()),
+            dims: (160, 160, 3),
         }
     }
 }
@@ -67,61 +102,81 @@ pub struct Server {
     listener: TcpListener,
     queue: SyncSender<Request>,
     shutdown: Arc<AtomicBool>,
+    shared: Arc<ServerShared>,
     pub local_addr: std::net::SocketAddr,
 }
 
 impl Server {
-    /// Bind and start the worker thread. The engine is constructed *inside*
-    /// the worker via `factory` — PJRT handles are not `Send`, so the
-    /// engine must live and die on one thread. `start` waits for the
-    /// engine to load and **fails outright when the factory fails**:
-    /// previously the worker exited silently while the listener kept
-    /// accepting, so every queued client waited on a response that could
-    /// never come.
+    /// Bind and start the worker pool. Engines are constructed *inside*
+    /// the worker threads via `factory` — PJRT handles are not `Send`, so
+    /// each engine must live and die on one thread. `start` waits for
+    /// every worker's engine to load and **fails outright when any factory
+    /// call fails**: previously a dead worker exited silently while the
+    /// listener kept accepting, so every queued client waited on a
+    /// response that could never come.
     pub fn start<F>(factory: F, addr: &str, cfg: ServerConfig) -> Result<Server>
     where
-        F: FnOnce() -> Result<Engine> + Send + 'static,
+        F: Fn() -> Result<Engine> + Send + Sync + 'static,
     {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local_addr = listener.local_addr()?;
+        let workers = cfg.workers.max(1);
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<std::result::Result<(), String>>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) =
+            std::sync::mpsc::channel::<std::result::Result<(usize, usize, usize), String>>();
         let shutdown = Arc::new(AtomicBool::new(false));
-        let worker_shutdown = shutdown.clone();
-        std::thread::Builder::new()
-            .name("mafat-worker".into())
-            .spawn(move || {
-                let engine = match factory() {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(err) => {
-                        eprintln!("engine failed to load: {err:#}");
-                        let _ = ready_tx.send(Err(format!("{err:#}")));
-                        return;
-                    }
-                };
-                let _ = SERVER_METRICS.set(engine.metrics.clone());
-                let net = engine.network();
-                let _ = SERVER_DIMS.set((net.in_h, net.in_w, net.in_c));
-                eprintln!(
-                    "engine ready: {} | config {} | {} executables",
-                    net.name,
-                    engine.config(),
-                    engine.n_executables()
-                );
-                worker_loop(engine, rx, cfg, worker_shutdown);
-            })?;
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(msg)) => anyhow::bail!("engine failed to load: {msg}"),
-            Err(_) => anyhow::bail!("engine worker died during startup"),
+        let metrics = Arc::new(Metrics::default());
+        let factory = Arc::new(factory);
+        for wi in 0..workers {
+            let factory = factory.clone();
+            let rx = rx.clone();
+            let ready_tx = ready_tx.clone();
+            let worker_shutdown = shutdown.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name(format!("mafat-worker-{wi}"))
+                .spawn(move || {
+                    let mut engine = match factory() {
+                        Ok(e) => e,
+                        Err(err) => {
+                            eprintln!("worker {wi}: engine failed to load: {err:#}");
+                            let _ = ready_tx.send(Err(format!("{err:#}")));
+                            return;
+                        }
+                    };
+                    // All workers record into the server's shared registry.
+                    engine.metrics = metrics;
+                    let net = engine.network();
+                    let dims = (net.in_h, net.in_w, net.in_c);
+                    eprintln!(
+                        "worker {wi}: engine ready: {} | config {} | {} executables",
+                        net.name,
+                        engine.config(),
+                        engine.n_executables()
+                    );
+                    let _ = ready_tx.send(Ok(dims));
+                    worker_loop(engine, rx, cfg, worker_shutdown);
+                })?;
         }
+        drop(ready_tx);
+        let mut dims = None;
+        for _ in 0..workers {
+            match ready_rx.recv() {
+                Ok(Ok(d)) => dims = Some(d),
+                Ok(Err(msg)) => anyhow::bail!("engine failed to load: {msg}"),
+                Err(_) => anyhow::bail!("engine worker died during startup"),
+            }
+        }
+        let shared = Arc::new(ServerShared {
+            metrics,
+            dims: dims.expect("at least one worker"),
+        });
         Ok(Server {
             listener,
             queue: tx,
             shutdown,
+            shared,
             local_addr,
         })
     }
@@ -136,8 +191,9 @@ impl Server {
             match conn {
                 Ok(stream) => {
                     let queue = self.queue.clone();
+                    let shared = self.shared.clone();
                     std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, queue) {
+                        if let Err(e) = handle_conn(stream, queue, shared) {
                             eprintln!("connection error: {e:#}");
                         }
                     });
@@ -155,30 +211,39 @@ impl Server {
 
 fn worker_loop(
     mut engine: Engine,
-    rx: Receiver<Request>,
+    rx: Arc<Mutex<Receiver<Request>>>,
     cfg: ServerConfig,
     shutdown: Arc<AtomicBool>,
 ) {
+    // Per-wake drain: the batch budget divided across the pool, so one
+    // worker cannot swallow a whole burst while its peers idle.
+    let drain = (cfg.max_batch / cfg.workers.max(1)).max(1);
     while !shutdown.load(Ordering::Relaxed) {
-        // Block for the first request, then drain a batch.
-        let Ok(first) = rx.recv() else { break };
-        let mut batch = vec![first];
-        while batch.len() < cfg.max_batch {
-            match rx.try_recv() {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
+        // Race for the queue: block for the first request, then drain a
+        // batch while still holding the lock (idle workers park on the
+        // mutex and take the next batch).
+        let batch = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => break, // a worker panicked mid-recv; shut down
+            };
+            let Ok(first) = guard.recv() else { break };
+            let mut batch = vec![first];
+            while batch.len() < drain {
+                match guard.try_recv() {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
             }
-        }
+            batch
+        };
         for req in batch {
             let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
             let t0 = Instant::now();
             let resp = match engine.infer(&req.image) {
                 Ok((out, stats)) => {
                     engine.metrics.requests.inc();
-                    engine
-                        .metrics
-                        .request_latency
-                        .record(t0.elapsed());
+                    engine.metrics.request_latency.record(t0.elapsed());
                     let checksum: f32 = out.data.iter().sum();
                     let mut fields = vec![
                         ("id", Json::str(req.id.clone())),
@@ -218,11 +283,11 @@ fn worker_loop(
     }
 }
 
-/// Metrics registry shared between the worker (which records) and the
-/// connection handlers (which serve `metrics` requests).
-static SERVER_METRICS: std::sync::OnceLock<Arc<Metrics>> = std::sync::OnceLock::new();
-
-fn handle_conn(stream: TcpStream, queue: SyncSender<Request>) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    queue: SyncSender<Request>,
+    shared: Arc<ServerShared>,
+) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -231,7 +296,7 @@ fn handle_conn(stream: TcpStream, queue: SyncSender<Request>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match process_line(&line, &queue) {
+        let reply = match process_line(&line, &queue, &shared) {
             Ok(j) => j,
             Err(e) => Json::obj(vec![
                 ("ok", Json::Bool(false)),
@@ -245,20 +310,14 @@ fn handle_conn(stream: TcpStream, queue: SyncSender<Request>) -> Result<()> {
     Ok(())
 }
 
-fn process_line(line: &str, queue: &SyncSender<Request>) -> Result<Json> {
+fn process_line(line: &str, queue: &SyncSender<Request>, shared: &ServerShared) -> Result<Json> {
     let req = Json::parse(line)?;
     match req.str_at("cmd").unwrap_or("infer") {
         "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
-        "metrics" => {
-            let snapshot = SERVER_METRICS
-                .get()
-                .map(|m| m.snapshot())
-                .unwrap_or_else(|| "no metrics yet\n".into());
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("metrics", Json::str(snapshot)),
-            ]))
-        }
+        "metrics" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", Json::str(shared.metrics.snapshot())),
+        ])),
         "infer" => {
             let id = req
                 .get_opt("id")
@@ -272,18 +331,15 @@ fn process_line(line: &str, queue: &SyncSender<Request>) -> Result<Json> {
                     .map(|v| v.as_f64().map(|f| f as f32))
                     .collect::<Result<_>>()?,
                 None => {
-                    // Synthetic image by seed; dimensions are the engine's.
+                    // Synthetic image by seed, at the served network's
+                    // advertised dimensions.
                     let seed = req
                         .get_opt("seed")
                         .map(|s| s.as_f64())
                         .transpose()?
                         .unwrap_or(0.0) as u64;
-                    // The worker resolves dimensions; pass the seed through
-                    // a marker: an empty image plus the seed field is
-                    // handled below by re-generating in the worker... keep
-                    // it simple: generate here using the advertised dims.
-                    let dims = SERVER_DIMS.get().copied().unwrap_or((160, 160, 3));
-                    crate::data::gen_image(seed, dims.1, dims.0, dims.2)
+                    let (h, w, c) = shared.dims;
+                    crate::data::gen_image(seed, w, h, c)
                 }
             };
             let return_output = req
@@ -317,17 +373,15 @@ fn process_line(line: &str, queue: &SyncSender<Request>) -> Result<Json> {
     }
 }
 
-/// Input dimensions advertised to synthetic-image requests (h, w, c).
-static SERVER_DIMS: std::sync::OnceLock<(usize, usize, usize)> = std::sync::OnceLock::new();
-
-/// CLI entry: load the engine and serve until killed (`mafat serve`).
-pub fn serve_cli(artifacts: &str, config: MafatConfig, addr: &str) -> Result<()> {
+/// CLI entry: load the engine pool and serve until killed (`mafat serve`).
+pub fn serve_cli(
+    artifacts: &str,
+    config: MultiConfig,
+    addr: &str,
+    cfg: ServerConfig,
+) -> Result<()> {
     let artifacts = artifacts.to_string();
-    let server = Server::start(
-        move || Engine::load(&artifacts, config),
-        addr,
-        ServerConfig::default(),
-    )?;
+    let server = Server::start(move || Engine::load(&artifacts, config.clone()), addr, cfg)?;
     server.run()
 }
 
@@ -381,23 +435,19 @@ pub fn auto_config(
     net: &crate::network::Network,
     limit_bytes: u64,
     params: &crate::predictor::PredictorParams,
-) -> Result<(MafatConfig, u64)> {
+) -> Result<(MultiConfig, u64)> {
     let points = crate::search::frontier(net, 2, 5, params)?;
     let opts = crate::simulate::SimOptions::default();
     if let Some(pick) =
         crate::search::pick_for_limit_swap_aware(net, &points, limit_bytes, &opts)?
     {
         let p = pick.point();
-        let config = p
-            .config
-            .to_mafat()
-            .expect("2-group even frontier points are paper-shaped");
-        return Ok((config, p.predicted_bytes));
+        return Ok((p.config.clone(), p.predicted_bytes));
     }
     // Empty frontier (degenerate network): the documented fallback.
     let fb = crate::search::fallback_for(net);
     let pred = crate::predictor::predict_mem(net, fb, params)?;
-    Ok((fb, pred.total_bytes))
+    Ok((MultiConfig::from_mafat(fb), pred.total_bytes))
 }
 
 /// Pick the cheapest *compiled* configuration that fits `limit_bytes`,
@@ -405,24 +455,21 @@ pub fn auto_config(
 /// served, which may be a scaled variant of the analysis network). When
 /// nothing fits, serving degrades to the compiled configuration with the
 /// minimal *predicted swap stall* at the budget (`predictor::predict_swap`)
-/// rather than refusing to start. Entries the 2-group engine cannot name
-/// (k > 2 groups or variable tilings) are skipped.
+/// rather than refusing to start. Every manifest entry is eligible — the
+/// engine loads k-group and variable-tiling configurations natively.
 pub fn auto_config_from_manifest(
     mnet: &crate::runtime::ManifestNetwork,
     limit_bytes: u64,
     params: &crate::predictor::PredictorParams,
-) -> Result<(MafatConfig, u64)> {
+) -> Result<(MultiConfig, u64)> {
     use crate::search::planner::TASK_MACS_EQUIV;
     let net = mnet.network();
     let opts = crate::simulate::SimOptions::default();
     // (config, predicted bytes, cost proxy) of the best fitting entry.
-    let mut best: Option<(MafatConfig, u64, u64)> = None;
+    let mut best: Option<(MultiConfig, u64, u64)> = None;
     // (config, predicted bytes, stall, proxy) of the least-swap entry.
-    let mut least_stall: Option<(MafatConfig, u64, f64, u64)> = None;
+    let mut least_stall: Option<(MultiConfig, u64, f64, u64)> = None;
     for entry in &mnet.configs {
-        let Some(config) = entry.config.to_mafat() else {
-            continue; // the serving engine loads paper-shaped configs only
-        };
         let Ok(pred) = crate::predictor::predict_multi(&net, &entry.config, params) else {
             continue;
         };
@@ -436,7 +483,7 @@ pub fn auto_config_from_manifest(
                 Some((_, _, best_proxy)) => proxy < *best_proxy,
             };
             if better {
-                best = Some((config, pred.total_bytes, proxy));
+                best = Some((entry.config.clone(), pred.total_bytes, proxy));
             }
         }
         let swap = crate::predictor::predict_swap(&net, &plan, limit_bytes, &opts);
@@ -449,7 +496,7 @@ pub fn auto_config_from_manifest(
             },
         };
         if calmer {
-            least_stall = Some((config, pred.total_bytes, swap.swap_stall_s, proxy));
+            least_stall = Some((entry.config.clone(), pred.total_bytes, swap.swap_stall_s, proxy));
         }
     }
     if let Some((config, bytes, _)) = best {
@@ -463,25 +510,38 @@ pub fn auto_config_from_manifest(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::plan::MafatConfig;
 
     #[test]
     fn server_config_defaults_sane() {
         let c = ServerConfig::default();
         assert!(c.queue_depth >= c.max_batch);
+        assert_eq!(c.workers, 1);
     }
 
     #[test]
     fn process_line_rejects_garbage() {
         let (tx, _rx) = sync_channel::<Request>(1);
-        assert!(process_line("not json", &tx).is_err());
-        let r = process_line(r#"{"cmd":"ping"}"#, &tx).unwrap();
+        let shared = ServerShared::default();
+        assert!(process_line("not json", &tx, &shared).is_err());
+        assert!(process_line(r#"{"cmd":"infer","image":["a"]}"#, &tx, &shared).is_err());
+        let r = process_line(r#"{"cmd":"ping"}"#, &tx, &shared).unwrap();
         assert!(r.get("ok").unwrap().as_bool().unwrap());
     }
 
     #[test]
     fn unknown_cmd_is_error() {
         let (tx, _rx) = sync_channel::<Request>(1);
-        assert!(process_line(r#"{"cmd":"reboot"}"#, &tx).is_err());
+        assert!(process_line(r#"{"cmd":"reboot"}"#, &tx, &ServerShared::default()).is_err());
+    }
+
+    #[test]
+    fn metrics_cmd_uses_per_server_registry() {
+        let (tx, _rx) = sync_channel::<Request>(1);
+        let shared = ServerShared::default();
+        shared.metrics.requests.add(7);
+        let r = process_line(r#"{"cmd":"metrics"}"#, &tx, &shared).unwrap();
+        assert!(r.str_at("metrics").unwrap().contains("requests 7"));
     }
 
     // (The factory-failure path of Server::start is covered by the
@@ -499,18 +559,18 @@ mod tests {
     fn auto_config_picks_fitting_paper_shape() {
         use crate::network::yolov2::yolov2_16;
         use crate::network::MIB;
-        use crate::predictor::{predict_mem, PredictorParams};
+        use crate::predictor::{predict_multi, PredictorParams};
         let net = yolov2_16();
         let params = PredictorParams::default();
         // Generous budget: the untiled config wins.
         let (cfg, bytes) = auto_config(&net, 256 * MIB, &params).unwrap();
-        assert_eq!(cfg, MafatConfig::no_cut(1));
+        assert_eq!(cfg, MultiConfig::from_mafat(MafatConfig::no_cut(1)));
         assert!(bytes < 256 * MIB);
         // Mid budget: the pick fits and its reported bytes match Alg. 2.
         let (cfg, bytes) = auto_config(&net, 80 * MIB, &params).unwrap();
         assert!(bytes < 80 * MIB, "{cfg}: {bytes}");
         assert_eq!(
-            predict_mem(&net, cfg, &params).unwrap().total_bytes,
+            predict_multi(&net, &cfg, &params).unwrap().total_bytes,
             bytes
         );
     }
@@ -522,24 +582,24 @@ mod tests {
         // frontier config with the minimal predicted swap stall.
         use crate::network::yolov2::yolov2_16;
         use crate::network::MIB;
-        use crate::predictor::{predict_swap_config, PredictorParams};
+        use crate::predictor::{predict_swap_multi, PredictorParams};
         use crate::simulate::SimOptions;
         let net = yolov2_16();
         let params = PredictorParams::default();
         let opts = SimOptions::default();
         let limit = MIB;
         let (cfg, _) = auto_config(&net, limit, &params).unwrap();
-        let picked_stall = predict_swap_config(&net, cfg, limit, &opts)
+        let picked_stall = predict_swap_multi(&net, &cfg, limit, &opts)
             .unwrap()
             .swap_stall_s;
         for p in crate::search::frontier(&net, 2, 5, &params).unwrap() {
-            let other = p.config.to_mafat().unwrap();
-            let stall = predict_swap_config(&net, other, limit, &opts)
+            let stall = predict_swap_multi(&net, &p.config, limit, &opts)
                 .unwrap()
                 .swap_stall_s;
             assert!(
                 picked_stall <= stall,
-                "{other} stalls less ({stall:.1}s) than the pick {cfg} ({picked_stall:.1}s)"
+                "{} stalls less ({stall:.1}s) than the pick {cfg} ({picked_stall:.1}s)",
+                p.config
             );
         }
     }
@@ -548,11 +608,10 @@ mod tests {
     fn manifest_auto_pick_stays_within_compiled_set() {
         use crate::network::yolov2::yolov2_16_ops;
         use crate::network::MIB;
-        use crate::plan::MultiConfig;
         use crate::predictor::PredictorParams;
-        use crate::runtime::{ConfigEntry, ManifestNetwork};
-        let compiled: Vec<MafatConfig> =
-            ["1x1/NoCut", "2x2/NoCut", "3x3/8/2x2", "5x5/8/2x2", "2x2/12/2x2"]
+        use crate::runtime::{BackendKind, ConfigEntry, ManifestNetwork};
+        let compiled: Vec<MultiConfig> =
+            ["1x1/NoCut", "2x2/NoCut", "3x3/8/2x2", "5x5/8/2x2", "2x2/12/2x2", "5v5/12/3v3"]
                 .iter()
                 .map(|s| s.parse().unwrap())
                 .collect();
@@ -561,12 +620,13 @@ mod tests {
             in_w: 160,
             in_h: 160,
             in_c: 3,
+            backend: BackendKind::Pjrt,
             ops: yolov2_16_ops(),
             full: None,
             configs: compiled
                 .iter()
-                .map(|&config| ConfigEntry {
-                    config: MultiConfig::from_mafat(config),
+                .map(|config| ConfigEntry {
+                    config: config.clone(),
                     groups: vec![],
                 })
                 .collect(),
@@ -574,11 +634,49 @@ mod tests {
         let params = PredictorParams::default();
         // Generous budget: the cheapest compiled config (untiled) wins.
         let (cfg, bytes) = auto_config_from_manifest(&mnet, 512 * MIB, &params).unwrap();
-        assert_eq!(cfg, MafatConfig::no_cut(1));
+        assert_eq!(cfg, MultiConfig::from_mafat(MafatConfig::no_cut(1)));
         assert!(bytes < 512 * MIB);
         // Impossible budget: degrades to the compiled config with the
         // least predicted swap stall — never a shape outside the manifest.
         let (cfg, _) = auto_config_from_manifest(&mnet, MIB, &params).unwrap();
         assert!(compiled.contains(&cfg), "{cfg} not in the compiled set");
+    }
+
+    #[test]
+    fn manifest_auto_pick_can_select_variable_entries() {
+        // A k-group / variable entry is a first-class pick now that the
+        // engine loads MultiConfig natively: between the untiled config
+        // and the variable search winner, a budget that only the variable
+        // plan fits must select it.
+        use crate::network::yolov2::yolov2_16_ops;
+        use crate::predictor::{predict_multi, PredictorParams};
+        use crate::runtime::{BackendKind, ConfigEntry, ManifestNetwork};
+        let untiled: MultiConfig = "1x1/NoCut".parse().unwrap();
+        let variable: MultiConfig = "5v5/12/3v3".parse().unwrap();
+        let mnet = ManifestNetwork {
+            name: "yolov2-16".into(),
+            in_w: 608,
+            in_h: 608,
+            in_c: 3,
+            backend: BackendKind::Pjrt,
+            ops: yolov2_16_ops(),
+            full: None,
+            configs: [&untiled, &variable]
+                .iter()
+                .map(|&c| ConfigEntry {
+                    config: c.clone(),
+                    groups: vec![],
+                })
+                .collect(),
+        };
+        let params = PredictorParams::default();
+        let net = mnet.network();
+        let pv = predict_multi(&net, &variable, &params).unwrap().total_bytes;
+        let pu = predict_multi(&net, &untiled, &params).unwrap().total_bytes;
+        assert!(pv < pu, "variable plan must need less memory ({pv} vs {pu})");
+        let limit = (pv + pu) / 2;
+        let (cfg, bytes) = auto_config_from_manifest(&mnet, limit, &params).unwrap();
+        assert_eq!(cfg, variable);
+        assert_eq!(bytes, pv);
     }
 }

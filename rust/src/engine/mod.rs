@@ -1,26 +1,46 @@
-//! The real inference engine: executes a MAFAT plan tile-by-tile over the
-//! PJRT runtime, entirely in Rust (end-to-end proof that the three layers
-//! compose — see DESIGN.md).
+//! The inference engine: executes a MAFAT plan tile-by-tile, entirely in
+//! Rust (end-to-end proof that the three layers compose — see DESIGN.md).
+//!
+//! [`MultiConfig`] is the engine's *native* configuration type: any number
+//! of layer groups, each either even-grid or halo-balanced (`Balanced`)
+//! tiled. At load time every group's tile rects are resolved from the
+//! manifest's serialized per-group `xs`/`ys` boundaries (falling back to
+//! the even grid when a legacy bundle omits them); any drift between the
+//! manifest and a freshly planned configuration is a hard error
+//! ([`ManifestNetwork::verify_geometry`]).
 //!
 //! For every fused task the engine gathers the input tile from the group's
 //! input map (HWC layout: a tile row is one contiguous memcpy), executes
-//! the task's tile-class executable with the group weights, and scatters
-//! the output tile into the group output map. Tasks run in the data-reuse
-//! checkerboard order ([`crate::reuse::schedule_order`] semantics via the
-//! manifest's task list); at a cut the output map simply becomes the next
-//! group's input map ("merge and re-tile", paper §3.1).
+//! the task, and scatters the output tile into the group output map. Tasks
+//! run in the data-reuse checkerboard order; at every cut the output map
+//! simply becomes the next group's input map ("merge and re-tile", paper
+//! §3.1) — for k groups this repeats k-1 times.
 //!
-//! Verification mode runs the untiled `full.hlo.txt` oracle on the same
-//! image and asserts element-wise agreement — the core correctness claim
-//! of tiling + fusing (outputs are mathematically identical, §2.1.1).
+//! Two executors sit behind one `Engine` API, selected by the bundle's
+//! `backend` field:
+//!
+//! * **PJRT** — one AOT-compiled HLO executable per tile-shape class,
+//!   weights passed as cached literals (`make artifacts` bundles);
+//! * **reference** — the pure-Rust executor ([`crate::runtime::reference`])
+//!   computing every layer directly from task geometry; geometry-only
+//!   bundles (`mafat export-bundle`) need no XLA toolchain at all.
+//!
+//! Verification mode runs the untiled oracle (the `full.hlo.txt` module,
+//! or the reference full forward) on the same image and asserts
+//! element-wise agreement — the core correctness claim of tiling + fusing
+//! (outputs are mathematically identical, §2.1.1) — for any k-group or
+//! variable configuration.
 
 use crate::data;
-use crate::ftp::Rect;
+use crate::ftp::{
+    plan_group, plan_group_balanced_searched, plan_group_from_bounds, GroupVariant, Rect, TaskGeom,
+};
 use crate::metrics::Metrics;
 use crate::network::{LayerKind, Network};
-use crate::plan::MafatConfig;
-use crate::runtime::{xla, ConfigEntry, Manifest, ManifestNetwork, Runtime};
+use crate::plan::MultiConfig;
+use crate::runtime::{reference, xla, BackendKind, ClassEntry, Manifest, ManifestNetwork, Runtime};
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
@@ -108,17 +128,42 @@ pub struct InferStats {
     pub tasks: usize,
 }
 
-/// The engine: a compiled MAFAT configuration ready to serve images.
+/// One layer group, fully resolved for execution: task geometry (from the
+/// manifest boundaries), checkerboard order, and the compiled-class table.
+struct GroupExec {
+    bottom: usize,
+    /// Execution order over `tasks` (data-reuse checkerboard: even parity
+    /// first, column-major within a parity).
+    order: Vec<usize>,
+    tasks: Vec<TaskGeom>,
+    /// Shape-class key per task (indexes `classes`).
+    class_of: Vec<String>,
+    classes: HashMap<String, ClassEntry>,
+}
+
+/// The executor behind the engine, per the bundle's `backend` field.
+enum Executor {
+    /// AOT-compiled HLO per tile class, executed through PJRT.
+    Pjrt {
+        runtime: Runtime,
+        /// Per-group weight literals, in the executables' argument order.
+        group_weights: Vec<Vec<xla::Literal>>,
+        full_weights: Option<Vec<xla::Literal>>,
+        full_path: Option<String>,
+    },
+    /// Pure-Rust reference execution from task geometry.
+    Reference {
+        weights: Vec<Option<LayerWeights>>,
+        has_oracle: bool,
+    },
+}
+
+/// The engine: a loaded MAFAT configuration ready to serve images.
 pub struct Engine {
-    runtime: Runtime,
     net: Network,
-    config: MafatConfig,
-    entry: ConfigEntry,
-    /// Per-group weight literals, in the executables' argument order.
-    group_weights: Vec<Vec<xla::Literal>>,
-    /// Weight literals for the untiled oracle (all layers), if present.
-    full_weights: Option<Vec<xla::Literal>>,
-    full_path: Option<String>,
+    config: MultiConfig,
+    groups: Vec<GroupExec>,
+    executor: Executor,
     pub metrics: Arc<Metrics>,
 }
 
@@ -139,8 +184,10 @@ fn weight_literals(
 }
 
 impl Engine {
-    /// Load a configuration's artifacts and pre-compile every tile class.
-    pub fn load(artifacts_dir: impl AsRef<Path>, config: MafatConfig) -> Result<Engine> {
+    /// Load a configuration's artifacts and prepare every tile class.
+    /// Accepts any manifest [`MultiConfig`] — k groups, `Even` or
+    /// `Balanced` variants.
+    pub fn load(artifacts_dir: impl AsRef<Path>, config: MultiConfig) -> Result<Engine> {
         let artifacts_dir = artifacts_dir.as_ref();
         let manifest = Manifest::load(artifacts_dir)?;
         let mnet = manifest.sole_network()?;
@@ -151,49 +198,108 @@ impl Engine {
     pub fn load_network(
         artifacts_dir: &Path,
         mnet: &ManifestNetwork,
-        config: MafatConfig,
+        config: MultiConfig,
     ) -> Result<Engine> {
         // Clear error first if the config was never compiled, then the
         // stricter geometry cross-check.
-        let multi = crate::plan::MultiConfig::from_mafat(config);
-        let entry = mnet.find_config(&multi)?.clone();
-        mnet.verify_geometry(&multi)
+        let entry = mnet.find_config(&config)?;
+        mnet.verify_geometry(&config)
             .context("manifest geometry does not match the tiler - rebuild artifacts")?;
         let net = mnet.network();
-        let mut runtime = Runtime::cpu(artifacts_dir)?;
 
-        // Pre-compile every class executable.
-        for group in &entry.groups {
-            for class in group.classes.values() {
-                runtime
-                    .load(&class.path)
-                    .with_context(|| format!("loading class {}", class.key))?;
+        // Resolve each group's tile rects from the serialized boundaries
+        // (exact for variable tilings), falling back to the even grid for
+        // legacy bundles. `verify_geometry` above already proved that the
+        // manifest's boundaries and task list match a freshly planned
+        // configuration, and boundary resolution is deterministic in the
+        // bounds, so the resolved geometry needs no second per-task
+        // cross-check — only the class-table lookup.
+        let mut groups = Vec::with_capacity(entry.groups.len());
+        for (mg, &variant) in entry.groups.iter().zip(&config.variants) {
+            let plan = match (&mg.xs, &mg.ys) {
+                (Some(xs), Some(ys)) => plan_group_from_bounds(&net, mg.top, mg.bottom, xs, ys)
+                    .with_context(|| format!("group {}: resolving manifest boundaries", mg.gi))?,
+                // Legacy bundle without serialized boundaries: recompute
+                // them the way the group's variant dictates.
+                _ => match variant {
+                    GroupVariant::Even => plan_group(&net, mg.top, mg.bottom, mg.n, mg.m)
+                        .with_context(|| format!("group {}: resolving even grid", mg.gi))?,
+                    GroupVariant::Balanced => {
+                        plan_group_balanced_searched(&net, mg.top, mg.bottom, mg.n)
+                            .map(|(p, _, _)| p)
+                            .with_context(|| {
+                                format!("group {}: resolving balanced boundaries", mg.gi)
+                            })?
+                    }
+                },
+            };
+            let mut class_of = Vec::with_capacity(plan.tasks.len());
+            for task in &plan.tasks {
+                let key = task.class_key().short_name();
+                if !mg.classes.contains_key(&key) {
+                    bail!("group {}: class {key} missing from manifest", mg.gi);
+                }
+                class_of.push(key);
             }
+            // Checkerboard (data-reuse) order: even parity first.
+            let mut order: Vec<usize> = (0..plan.tasks.len()).collect();
+            order.sort_by_key(|&ix| {
+                let t = &plan.tasks[ix];
+                ((t.grid_i + t.grid_j) % 2, t.grid_j, t.grid_i)
+            });
+            groups.push(GroupExec {
+                bottom: mg.bottom,
+                order,
+                tasks: plan.tasks,
+                class_of,
+                classes: mg.classes.clone(),
+            });
         }
+
         let weights = gen_network_weights(&net, WEIGHT_SEED);
-        let group_weights = entry
-            .groups
-            .iter()
-            .map(|g| weight_literals(&weights, g.top, g.bottom))
-            .collect::<Result<Vec<_>>>()?;
-        let (full_weights, full_path) = match &mnet.full {
-            Some(f) => {
-                runtime.load(&f.path)?;
-                (
-                    Some(weight_literals(&weights, 0, net.n_layers() - 1)?),
-                    Some(f.path.clone()),
-                )
+        let executor = match mnet.backend {
+            BackendKind::Reference => Executor::Reference {
+                weights,
+                has_oracle: mnet.full.is_some(),
+            },
+            BackendKind::Pjrt => {
+                let mut runtime = Runtime::cpu(artifacts_dir)?;
+                // Pre-compile every class executable.
+                for group in &entry.groups {
+                    for class in group.classes.values() {
+                        runtime
+                            .load(&class.path)
+                            .with_context(|| format!("loading class {}", class.key))?;
+                    }
+                }
+                let group_weights = entry
+                    .groups
+                    .iter()
+                    .map(|g| weight_literals(&weights, g.top, g.bottom))
+                    .collect::<Result<Vec<_>>>()?;
+                let (full_weights, full_path) = match &mnet.full {
+                    Some(f) => {
+                        runtime.load(&f.path)?;
+                        (
+                            Some(weight_literals(&weights, 0, net.n_layers() - 1)?),
+                            Some(f.path.clone()),
+                        )
+                    }
+                    None => (None, None),
+                };
+                Executor::Pjrt {
+                    runtime,
+                    group_weights,
+                    full_weights,
+                    full_path,
+                }
             }
-            None => (None, None),
         };
         Ok(Engine {
-            runtime,
             net,
             config,
-            entry,
-            group_weights,
-            full_weights,
-            full_path,
+            groups,
+            executor,
             metrics: Arc::new(Metrics::default()),
         })
     }
@@ -202,17 +308,25 @@ impl Engine {
         &self.net
     }
 
-    pub fn config(&self) -> MafatConfig {
-        self.config
+    pub fn config(&self) -> &MultiConfig {
+        &self.config
     }
 
+    /// Executables behind this engine: compiled-and-cached modules (PJRT)
+    /// or distinct tile-shape classes (reference).
     pub fn n_executables(&self) -> usize {
-        self.runtime.cached()
+        match &self.executor {
+            Executor::Pjrt { runtime, .. } => runtime.cached(),
+            Executor::Reference { has_oracle, .. } => {
+                self.groups.iter().map(|g| g.classes.len()).sum::<usize>()
+                    + usize::from(*has_oracle)
+            }
+        }
     }
 
     /// Output shape (h, w, c) of the final group.
     pub fn output_shape(&self) -> (usize, usize, usize) {
-        let bottom = self.entry.groups.last().unwrap().bottom;
+        let bottom = self.groups.last().unwrap().bottom;
         let (w, h, c) = self.net.out_shape(bottom);
         (h, w, c)
     }
@@ -241,36 +355,40 @@ impl Engine {
             c: self.net.in_c,
             data: image.to_vec(),
         };
-        for (gi, group) in self.entry.groups.iter().enumerate() {
+        for (gi, group) in self.groups.iter().enumerate() {
             let bottom_spec = &self.net.layers[group.bottom];
-            let mut output = FeatureMap::zeros(bottom_spec.out_h, bottom_spec.out_w, bottom_spec.out_c);
-            // Checkerboard (data-reuse) order: even parity first.
-            let mut order: Vec<usize> = (0..group.tasks.len()).collect();
-            order.sort_by_key(|&ix| {
-                let t = &group.tasks[ix];
-                ((t.i + t.j) % 2, t.j, t.i)
-            });
-            for ix in order {
+            let mut output =
+                FeatureMap::zeros(bottom_spec.out_h, bottom_spec.out_w, bottom_spec.out_c);
+            for &ix in &group.order {
                 let task = &group.tasks[ix];
-                let class = &group.classes[&task.class];
                 let tg = Instant::now();
-                let tile = input.gather(&task.in_rect);
+                let tile = input.gather(&task.input_rect());
                 stats.gather_scatter_ms += tg.elapsed().as_secs_f64() * 1e3;
 
                 let te = Instant::now();
-                let lit = Runtime::literal_hwc(
-                    &tile,
-                    class.in_shape[0],
-                    class.in_shape[1],
-                    class.in_shape[2],
-                )?;
-                // Weights are passed by borrow (execute accepts
-                // Borrow<Literal>), so per-task cost is just the input tile.
-                let exe = self.runtime.load(&class.path)?;
-                let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.group_weights[gi].len());
-                args.push(&lit);
-                args.extend(self.group_weights[gi].iter());
-                let out = exe.run_f32(&args)?;
+                let out = match &mut self.executor {
+                    Executor::Pjrt { runtime, group_weights, .. } => {
+                        let class = &group.classes[&group.class_of[ix]];
+                        let lit = Runtime::literal_hwc(
+                            &tile,
+                            class.in_shape[0],
+                            class.in_shape[1],
+                            class.in_shape[2],
+                        )?;
+                        // Weights are passed by borrow (execute accepts
+                        // Borrow<Literal>), so per-task cost is just the
+                        // input tile.
+                        let exe = runtime.load(&class.path)?;
+                        let mut args: Vec<&xla::Literal> =
+                            Vec::with_capacity(1 + group_weights[gi].len());
+                        args.push(&lit);
+                        args.extend(group_weights[gi].iter());
+                        exe.run_f32(&args)?
+                    }
+                    Executor::Reference { weights, .. } => {
+                        reference::run_task(&self.net, weights, task, &tile)?
+                    }
+                };
                 let dt = te.elapsed();
                 stats.execute_ms += dt.as_secs_f64() * 1e3;
                 self.metrics.task_latency.record(dt);
@@ -278,7 +396,7 @@ impl Engine {
                 stats.tasks += 1;
 
                 let ts = Instant::now();
-                output.scatter(&task.out_rect, &out);
+                output.scatter(&task.output_rect(), &out);
                 stats.gather_scatter_ms += ts.elapsed().as_secs_f64() * 1e3;
             }
             input = output; // merge + re-tile at the cut
@@ -289,16 +407,26 @@ impl Engine {
 
     /// Run the untiled full-network oracle on the same image.
     pub fn infer_untiled(&mut self, image: &[f32]) -> Result<FeatureMap> {
-        let Some(path) = self.full_path.clone() else {
-            bail!("manifest has no full-network oracle (emit_full=false)");
+        let out = match &mut self.executor {
+            Executor::Pjrt { runtime, full_weights, full_path, .. } => {
+                let Some(path) = full_path.clone() else {
+                    bail!("manifest has no full-network oracle (emit_full=false)");
+                };
+                let lit = Runtime::literal_hwc(image, self.net.in_h, self.net.in_w, self.net.in_c)?;
+                let exe = runtime.load(&path)?;
+                let weights = full_weights.as_ref().unwrap();
+                let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + weights.len());
+                args.push(&lit);
+                args.extend(weights.iter());
+                exe.run_f32(&args)?
+            }
+            Executor::Reference { weights, has_oracle } => {
+                if !*has_oracle {
+                    bail!("manifest has no full-network oracle (emit_full=false)");
+                }
+                reference::run_full(&self.net, weights, image)?
+            }
         };
-        let lit = Runtime::literal_hwc(image, self.net.in_h, self.net.in_w, self.net.in_c)?;
-        let exe = self.runtime.load(&path)?;
-        let weights = self.full_weights.as_ref().unwrap();
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + weights.len());
-        args.push(&lit);
-        args.extend(weights.iter());
-        let out = exe.run_f32(&args)?;
         let (h, w, c) = self.output_shape();
         Ok(FeatureMap { h, w, c, data: out })
     }
@@ -327,12 +455,13 @@ impl Engine {
 
 /// CLI entry: run `batch` inferences, optionally verifying each against the
 /// untiled oracle, and print a summary (used by `mafat run`).
-pub fn run_cli(artifacts: &str, config: MafatConfig, batch: usize, verify: bool) -> Result<()> {
+pub fn run_cli(artifacts: &str, config: MultiConfig, batch: usize, verify: bool) -> Result<()> {
     let mut engine = Engine::load(artifacts, config)?;
     let (h, w, c) = engine.output_shape();
     println!(
-        "engine: {} | config {config} | {} executables | output {h}x{w}x{c}",
+        "engine: {} | config {} | {} executables | output {h}x{w}x{c}",
         engine.network().name,
+        engine.config(),
         engine.n_executables()
     );
     let mut total_ms = 0.0;

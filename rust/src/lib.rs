@@ -17,9 +17,11 @@
 //!   ([`search::frontier`]), the data-reuse scheduler ([`reuse`]), the
 //!   memory/swap simulator substrate ([`memsim`]), the Darknet baseline
 //!   ([`baseline`]), end-to-end latency simulation ([`simulate`]), the real
-//!   PJRT inference engine ([`engine`] over [`runtime`]), and the serving
-//!   loop ([`coordinator`], which auto-picks a config from the probed
-//!   memory budget via the frontier when none is given).
+//!   inference engine ([`engine`] over [`runtime`]; k-group and
+//!   variable-tiling configs natively, through PJRT or the pure-Rust
+//!   reference executor [`runtime::reference`]), and the serving loop
+//!   ([`coordinator`]: a worker pool of engines, auto-picking a config from
+//!   the probed memory budget via the frontier when none is given).
 //! * **L2 (build-time JAX)** — `python/compile/model.py` emits one HLO
 //!   module per fused tile-shape class.
 //! * **L1 (build-time Pallas)** — `python/compile/kernels/` holds the conv /

@@ -43,6 +43,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "frontier" => cli::cmd_frontier(&args),
         "simulate" => cli::cmd_simulate(&args),
         "export-geometry" => cli::cmd_export_geometry(&args),
+        "export-bundle" => cli::cmd_export_bundle(&args),
         "run" => cli::cmd_run(&args),
         "serve" => cli::cmd_serve(&args),
         other => bail!("unknown command '{other}' (run `mafat help`)"),

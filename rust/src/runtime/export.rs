@@ -8,7 +8,7 @@
 //! planned configuration (any drift is a hard error, not a silent wrong
 //! answer).
 
-use crate::ftp::TaskGeom;
+use crate::ftp::{GroupPlan, TaskGeom};
 use crate::jsonlite::Json;
 use crate::network::{LayerKind, Network};
 use crate::plan::{plan_multi, MafatConfig, MultiConfig};
@@ -79,6 +79,90 @@ fn task_layers_json(task: &TaskGeom) -> Json {
     )
 }
 
+fn shape3_json(h: usize, w: usize, c: usize) -> Json {
+    Json::arr(vec![Json::num(h as f64), Json::num(w as f64), Json::num(c as f64)])
+}
+
+/// How a bundle describes one tile-shape class.
+enum ClassPayload {
+    /// Per-layer tile geometry — `aot.py` lowers one kernel per class.
+    Layers,
+    /// Dense I/O shapes plus a `ref:` marker path — the reference executor
+    /// recomputes every layer from task geometry; no kernels exist.
+    Shapes,
+}
+
+fn class_json(
+    net: &Network,
+    group: &GroupPlan,
+    task: &TaskGeom,
+    key: &str,
+    payload: &ClassPayload,
+) -> Json {
+    match payload {
+        ClassPayload::Layers => Json::obj(vec![
+            ("key", Json::str(key)),
+            ("layers", task_layers_json(task)),
+        ]),
+        ClassPayload::Shapes => {
+            let in_c = net.layers[group.top].in_c;
+            let out_c = net.layers[group.bottom].out_c;
+            let (ir, or) = (task.input_rect(), task.output_rect());
+            Json::obj(vec![
+                ("key", Json::str(key)),
+                ("path", Json::str(format!("ref:{key}"))),
+                ("in", shape3_json(ir.h(), ir.w(), in_c)),
+                ("out", shape3_json(or.h(), or.w(), out_c)),
+            ])
+        }
+    }
+}
+
+/// Serialize one configuration's planned geometry — groups with deduped
+/// shape classes, tasks, and explicit `xs`/`ys` boundaries (redundant for
+/// even grids, required to rebuild variable tilings exactly). Shared by
+/// the AOT geometry export and the reference-bundle manifest, which
+/// differ only in the per-class payload.
+fn config_json(net: &Network, config: &MultiConfig, payload: &ClassPayload) -> Result<Json> {
+    let plan = plan_multi(net, config)?;
+    let mut groups = Vec::new();
+    for (gi, group) in plan.groups.iter().enumerate() {
+        let mut classes: BTreeMap<String, Json> = BTreeMap::new();
+        let mut tasks = Vec::new();
+        for task in &group.tasks {
+            let key = task.class_key().short_name();
+            classes
+                .entry(key.clone())
+                .or_insert_with(|| class_json(net, group, task, &key, payload));
+            tasks.push(Json::obj(vec![
+                ("i", Json::num(task.grid_i as f64)),
+                ("j", Json::num(task.grid_j as f64)),
+                ("class", Json::str(key)),
+                ("in_rect", rect_json(&task.input_rect())),
+                ("out_rect", rect_json(&task.output_rect())),
+            ]));
+        }
+        let (xs, ys) = group.bounds();
+        let bounds_json =
+            |b: Vec<usize>| Json::arr(b.into_iter().map(|v| Json::num(v as f64)).collect());
+        groups.push(Json::obj(vec![
+            ("gi", Json::num(gi as f64)),
+            ("top", Json::num(group.top as f64)),
+            ("bottom", Json::num(group.bottom as f64)),
+            ("n", Json::num(group.n as f64)),
+            ("m", Json::num(group.m as f64)),
+            ("xs", bounds_json(xs)),
+            ("ys", bounds_json(ys)),
+            ("classes", Json::Arr(classes.into_values().collect())),
+            ("tasks", Json::Arr(tasks)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("config", Json::str(config.to_string())),
+        ("groups", Json::Arr(groups)),
+    ]))
+}
+
 /// Build the export JSON for a set of networks/configs.
 pub fn export_geometry(specs: &[ExportSpec<'_>]) -> Result<Json> {
     let mut networks = Vec::new();
@@ -86,53 +170,7 @@ pub fn export_geometry(specs: &[ExportSpec<'_>]) -> Result<Json> {
         let net = spec.net;
         let mut configs = Vec::new();
         for config in &spec.configs {
-            let plan = plan_multi(net, config)?;
-            let mut groups = Vec::new();
-            for (gi, group) in plan.groups.iter().enumerate() {
-                // Dedupe tasks into shape classes.
-                let mut classes: BTreeMap<String, Json> = BTreeMap::new();
-                let mut tasks = Vec::new();
-                for task in &group.tasks {
-                    let key = task.class_key().short_name();
-                    classes
-                        .entry(key.clone())
-                        .or_insert_with(|| {
-                            Json::obj(vec![
-                                ("key", Json::str(key.clone())),
-                                ("layers", task_layers_json(task)),
-                            ])
-                        });
-                    tasks.push(Json::obj(vec![
-                        ("i", Json::num(task.grid_i as f64)),
-                        ("j", Json::num(task.grid_j as f64)),
-                        ("class", Json::str(key)),
-                        ("in_rect", rect_json(&task.input_rect())),
-                        ("out_rect", rect_json(&task.output_rect())),
-                    ]));
-                }
-                let (xs, ys) = group.bounds();
-                let bounds_json = |b: Vec<usize>| {
-                    Json::arr(b.into_iter().map(|v| Json::num(v as f64)).collect())
-                };
-                groups.push(Json::obj(vec![
-                    ("gi", Json::num(gi as f64)),
-                    ("top", Json::num(group.top as f64)),
-                    ("bottom", Json::num(group.bottom as f64)),
-                    ("n", Json::num(group.n as f64)),
-                    ("m", Json::num(group.m as f64)),
-                    // Explicit boundaries: redundant for even grids, but
-                    // required to rebuild variable (balanced) tilings, so
-                    // aot.py can echo them into the manifest.
-                    ("xs", bounds_json(xs)),
-                    ("ys", bounds_json(ys)),
-                    ("classes", Json::Arr(classes.into_values().collect())),
-                    ("tasks", Json::Arr(tasks)),
-                ]));
-            }
-            configs.push(Json::obj(vec![
-                ("config", Json::str(config.to_string())),
-                ("groups", Json::Arr(groups)),
-            ]));
+            configs.push(config_json(net, config, &ClassPayload::Layers)?);
         }
         networks.push(Json::obj(vec![
             ("name", Json::str(net.name.clone())),
@@ -153,11 +191,18 @@ pub fn export_geometry(specs: &[ExportSpec<'_>]) -> Result<Json> {
     ]))
 }
 
-/// The default artifact set: the scaled YOLOv2-16 with the configurations
-/// the examples/integration tests exercise, plus one variable-tiling
-/// bundle (`3v3/8/2x2`) so the balanced-boundary path compiles end to end.
-pub fn default_export() -> Result<Json> {
-    let net = crate::network::yolov2::yolov2_16_scaled(160);
+/// The network the default artifact set compiles for.
+pub fn default_network() -> crate::network::Network {
+    crate::network::yolov2::yolov2_16_scaled(160)
+}
+
+/// Configurations of the default artifact set: the paper shapes the
+/// examples/integration tests exercise, one variable-tiling bundle
+/// (`3v3/8/2x2`) so the balanced-boundary path compiles end to end, a
+/// 3-group configuration, and the variable search winner's shape
+/// (`5v5/12/3v3`) so k-group and variable serving run against the default
+/// bundle.
+pub fn default_configs() -> Result<Vec<MultiConfig>> {
     let mut configs: Vec<MultiConfig> = [
         MafatConfig::no_cut(1),
         MafatConfig::no_cut(2),
@@ -169,11 +214,102 @@ pub fn default_export() -> Result<Json> {
     .map(MultiConfig::from_mafat)
     .collect();
     configs.push("3v3/8/2x2".parse()?);
+    configs.push("4x4/4/3x3/12/2x2".parse()?);
+    configs.push("5v5/12/3v3".parse()?);
+    Ok(configs)
+}
+
+/// The default artifact set (see [`default_configs`]).
+pub fn default_export() -> Result<Json> {
+    let net = default_network();
     export_geometry(&[ExportSpec {
         net: &net,
-        configs,
+        configs: default_configs()?,
         emit_full: true,
     }])
+}
+
+/// Build a *reference bundle* manifest: the same schema `aot.py` writes,
+/// but geometry-only — `backend` is `"reference"`, class/oracle paths are
+/// `ref:` markers, and no HLO files exist. [`crate::engine::Engine`] loads
+/// such bundles with the pure-Rust executor ([`super::reference`]), so any
+/// exported configuration runs and verifies end to end offline.
+pub fn reference_manifest(specs: &[ExportSpec<'_>]) -> Result<Json> {
+    let mut networks = Vec::new();
+    for spec in specs {
+        let net = spec.net;
+        let mut configs = Vec::new();
+        for config in &spec.configs {
+            configs.push(config_json(net, config, &ClassPayload::Shapes)?);
+        }
+        let mut fields = vec![
+            ("name", Json::str(net.name.clone())),
+            ("in_w", Json::num(net.in_w as f64)),
+            ("in_h", Json::num(net.in_h as f64)),
+            ("in_c", Json::num(net.in_c as f64)),
+            ("backend", Json::str("reference")),
+            (
+                "layers",
+                Json::arr(net.layers.iter().map(|l| layer_kind_json(&l.kind)).collect()),
+            ),
+            ("configs", Json::Arr(configs)),
+        ];
+        if spec.emit_full {
+            let (ow, oh, oc) = net.out_shape(net.n_layers() - 1);
+            fields.push((
+                "full",
+                Json::obj(vec![
+                    ("path", Json::str("ref:full")),
+                    ("in", shape3_json(net.in_h, net.in_w, net.in_c)),
+                    ("out", shape3_json(oh, ow, oc)),
+                ]),
+            ));
+        }
+        networks.push(Json::obj(fields));
+    }
+    Ok(Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("networks", Json::Arr(networks)),
+    ]))
+}
+
+/// Write a reference bundle (`manifest.json` only) to `dir`.
+pub fn write_reference_bundle(dir: &std::path::Path, specs: &[ExportSpec<'_>]) -> Result<()> {
+    let manifest = reference_manifest(specs)?;
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty())?;
+    Ok(())
+}
+
+/// Use `artifacts` when it already holds a manifest; otherwise export the
+/// default reference bundle into a per-process temp dir named after `tag`
+/// and return that path — the offline fallback the examples run on.
+pub fn ensure_reference_bundle(artifacts: &str, tag: &str) -> Result<String> {
+    if std::path::Path::new(artifacts).join("manifest.json").exists() {
+        return Ok(artifacts.to_string());
+    }
+    let dir = std::env::temp_dir().join(format!("{tag}-{}", std::process::id()));
+    eprintln!(
+        "no artifacts at {artifacts}; exporting a reference bundle to {}",
+        dir.display()
+    );
+    write_default_reference_bundle(&dir)?;
+    Ok(dir.to_string_lossy().into_owned())
+}
+
+/// Write the *default* reference bundle ([`default_configs`] on the scaled
+/// YOLOv2-16) to `dir` — what `mafat export-bundle` and the CI smoke job
+/// serve from.
+pub fn write_default_reference_bundle(dir: &std::path::Path) -> Result<()> {
+    let net = default_network();
+    write_reference_bundle(
+        dir,
+        &[ExportSpec {
+            net: &net,
+            configs: default_configs()?,
+            emit_full: true,
+        }],
+    )
 }
 
 #[cfg(test)]
@@ -190,7 +326,7 @@ mod tests {
         assert_eq!(net.usize_at("in_w").unwrap(), 160);
         assert_eq!(net.get("layers").unwrap().as_arr().unwrap().len(), 16);
         let configs = net.get("configs").unwrap().as_arr().unwrap();
-        assert_eq!(configs.len(), 6);
+        assert_eq!(configs.len(), 8);
         // 5x5/8/2x2 has two groups; classes deduped below task count.
         let c552 = configs
             .iter()
@@ -233,6 +369,34 @@ mod tests {
         assert_eq!(even.first(), balanced.first());
         assert_eq!(even.last(), balanced.last());
         assert_ne!(even, balanced, "balancing must move the boundaries");
+    }
+
+    #[test]
+    fn reference_manifest_parses_and_verifies() {
+        // The reference bundle is a valid manifest: it parses, declares
+        // the reference backend, carries the oracle entry, and every
+        // config's geometry cross-checks against a fresh plan — including
+        // the k=3 and variable (`5v5/12/3v3`) entries.
+        let net = default_network();
+        let j = reference_manifest(&[ExportSpec {
+            net: &net,
+            configs: default_configs().unwrap(),
+            emit_full: true,
+        }])
+        .unwrap();
+        let m = crate::runtime::Manifest::parse(&j.to_string_pretty()).unwrap();
+        let mnet = m.sole_network().unwrap();
+        assert_eq!(mnet.backend, crate::runtime::BackendKind::Reference);
+        let full = mnet.full.as_ref().expect("oracle entry");
+        assert_eq!(full.path, "ref:full");
+        assert_eq!(full.in_shape, [160, 160, 3]);
+        assert_eq!(mnet.configs.len(), 8);
+        for entry in &mnet.configs {
+            mnet.verify_geometry(&entry.config).unwrap();
+            for g in &entry.groups {
+                assert!(g.xs.is_some() && g.ys.is_some(), "{}", entry.config);
+            }
+        }
     }
 
     #[test]

@@ -64,6 +64,18 @@ pub struct FullEntry {
     pub out_shape: [usize; 3],
 }
 
+/// Which executor a bundle's artifacts target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// AOT-compiled HLO modules executed through the PJRT runtime (the
+    /// default; what `python/compile/aot.py` emits).
+    #[default]
+    Pjrt,
+    /// Geometry-only bundle executed by the pure-Rust reference executor
+    /// ([`super::reference`]); no HLO files on disk.
+    Reference,
+}
+
 /// One network of the manifest.
 #[derive(Debug, Clone)]
 pub struct ManifestNetwork {
@@ -71,6 +83,7 @@ pub struct ManifestNetwork {
     pub in_w: usize,
     pub in_h: usize,
     pub in_c: usize,
+    pub backend: BackendKind,
     pub ops: Vec<LayerKind>,
     pub full: Option<FullEntry>,
     pub configs: Vec<ConfigEntry>,
@@ -313,11 +326,17 @@ fn parse_network(n: &Json) -> Result<ManifestNetwork> {
         }),
         None => None,
     };
+    let backend = match n.get_opt("backend").map(|b| b.as_str()).transpose()? {
+        None | Some("pjrt") => BackendKind::Pjrt,
+        Some("reference") => BackendKind::Reference,
+        Some(other) => bail!("unknown manifest backend {other:?}"),
+    };
     Ok(ManifestNetwork {
         name: n.str_at("name")?.to_string(),
         in_w: n.usize_at("in_w")?,
         in_h: n.usize_at("in_h")?,
         in_c: n.usize_at("in_c")?,
+        backend,
         ops: parse_ops(n.get("layers")?)?,
         full,
         configs,
@@ -356,6 +375,22 @@ mod tests {
         }]
       }]
     }"#;
+
+    #[test]
+    fn backend_field_parses_and_defaults() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.sole_network().unwrap().backend, BackendKind::Pjrt);
+        let refd = SAMPLE.replacen(
+            "\"name\": \"tiny\"",
+            "\"name\": \"tiny\", \"backend\": \"reference\"",
+            1,
+        );
+        let m = Manifest::parse(&refd).unwrap();
+        assert_eq!(m.sole_network().unwrap().backend, BackendKind::Reference);
+        let bad =
+            SAMPLE.replacen("\"name\": \"tiny\"", "\"name\": \"tiny\", \"backend\": \"tpu\"", 1);
+        assert!(Manifest::parse(&bad).is_err());
+    }
 
     #[test]
     fn parses_sample() {

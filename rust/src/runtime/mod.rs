@@ -8,12 +8,15 @@
 
 pub mod export;
 pub mod manifest;
+// Pure-Rust executor for geometry-only (reference) bundles.
+pub mod reference;
 // The PJRT binding: the offline build ships an API-compatible stub (see its
 // module docs for how to swap in the real `xla` crate).
 pub mod xla;
 
 pub use manifest::{
-    ClassEntry, ConfigEntry, FullEntry, GroupEntry, Manifest, ManifestNetwork, TaskEntry,
+    BackendKind, ClassEntry, ConfigEntry, FullEntry, GroupEntry, Manifest, ManifestNetwork,
+    TaskEntry,
 };
 
 use anyhow::{anyhow, Context, Result};

@@ -1,0 +1,295 @@
+//! Pure-Rust reference executor: runs fused tile tasks (and the untiled
+//! oracle) directly from the tiler's [`TaskGeom`] geometry, with no PJRT,
+//! no HLO artifacts, and no Python — the same conv + bias + leaky-ReLU /
+//! max-pool semantics as `python/compile/kernels/ref.py`.
+//!
+//! This is what lets the engine, the serving loop, and the integration
+//! test suite *execute* any exported bundle offline: a reference bundle
+//! (see [`super::export::write_reference_bundle`]) carries geometry only,
+//! and the executor recomputes every layer from the deterministic engine
+//! weights. Because the tiled path and the untiled oracle run the exact
+//! same per-output-cell accumulation (bias first, then the `(fy, fx, ci)`
+//! window scan in a fixed order), tiled and untiled outputs are
+//! bit-identical — the paper's §2.1.1 equivalence claim, checkable without
+//! an XLA toolchain.
+
+use crate::engine::LayerWeights;
+use crate::ftp::TaskGeom;
+use crate::network::{LayerKind, Network};
+use anyhow::{bail, Result};
+
+/// Leaky-ReLU slope, matching Darknet and `kernels/ref.py`.
+pub const LEAKY_SLOPE: f32 = 0.1;
+
+/// Execute one fused task on a dense HWC input tile (halo included, border
+/// sides unpadded — exactly what [`crate::engine::FeatureMap::gather`]
+/// produces). Returns the dense HWC output tile of the task's grid tile.
+///
+/// `weights` is indexed by *absolute* layer index (`None` for pools), as
+/// produced by [`crate::engine::gen_network_weights`].
+pub fn run_task(
+    net: &Network,
+    weights: &[Option<LayerWeights>],
+    task: &TaskGeom,
+    tile: &[f32],
+) -> Result<Vec<f32>> {
+    let first = task.layers.first().expect("task has layers");
+    let in_c = net.layers[first.layer].in_c;
+    if tile.len() != first.in_rect.w() * first.in_rect.h() * in_c {
+        bail!(
+            "task ({},{}): input tile has {} elems, geometry wants {}x{}x{}",
+            task.grid_i,
+            task.grid_j,
+            tile.len(),
+            first.in_rect.h(),
+            first.in_rect.w(),
+            in_c
+        );
+    }
+    let mut x = tile.to_vec();
+    for lg in &task.layers {
+        let spec = &net.layers[lg.layer];
+        let (ih, iw) = (lg.in_rect.h(), lg.in_rect.w());
+        let (oh, ow) = (lg.out_rect.h(), lg.out_rect.w());
+        x = match spec.kind {
+            LayerKind::Conv { size, stride, .. } => {
+                let lw = weights[lg.layer]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("layer {} has no weights", lg.layer))?;
+                conv2d(
+                    &x,
+                    ih,
+                    iw,
+                    spec.in_c,
+                    &lw.w,
+                    &lw.b,
+                    size,
+                    stride,
+                    spec.out_c,
+                    [lg.pad.top, lg.pad.bottom, lg.pad.left, lg.pad.right],
+                    oh,
+                    ow,
+                )?
+            }
+            LayerKind::MaxPool { size, stride } => {
+                if lg.pad.any() {
+                    bail!("layer {}: padded max-pool regions are not plannable", lg.layer);
+                }
+                maxpool2d(&x, ih, iw, spec.in_c, size, stride, oh, ow)?
+            }
+        };
+    }
+    Ok(x)
+}
+
+/// The untiled full-network forward — the verification oracle. Runs the
+/// whole image through a single 1x1-tiled fused task, so every output cell
+/// goes through the identical accumulation path as tiled execution.
+pub fn run_full(
+    net: &Network,
+    weights: &[Option<LayerWeights>],
+    image: &[f32],
+) -> Result<Vec<f32>> {
+    let plan = crate::ftp::plan_group(net, 0, net.n_layers() - 1, 1, 1)?;
+    run_task(net, weights, &plan.tasks[0], image)
+}
+
+/// Explicit-padding conv + bias + leaky ReLU over a dense HWC tile.
+/// `pads` is `[top, bottom, left, right]`; window positions falling into
+/// the zero-pad region contribute nothing (adding an exact 0.0 and
+/// skipping the add are value-identical in f32).
+#[allow(clippy::too_many_arguments)]
+fn conv2d(
+    x: &[f32],
+    ih: usize,
+    iw: usize,
+    in_c: usize,
+    w: &[f32],
+    b: &[f32],
+    size: usize,
+    stride: usize,
+    out_c: usize,
+    pads: [usize; 4],
+    oh: usize,
+    ow: usize,
+) -> Result<Vec<f32>> {
+    let [pt, pb, pl, pr] = pads;
+    // The geometry invariant the tiler guarantees (down_extent).
+    if (ih + pt + pb).saturating_sub(size) / stride + 1 != oh
+        || (iw + pl + pr).saturating_sub(size) / stride + 1 != ow
+    {
+        bail!("conv geometry mismatch: {ih}x{iw} + pads {pads:?} -/-> {oh}x{ow}");
+    }
+    if w.len() != size * size * in_c * out_c || b.len() != out_c {
+        bail!("conv weight shape mismatch");
+    }
+    let mut out = vec![0.0f32; oh * ow * out_c];
+    let mut acc = vec![0.0f32; out_c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            acc.copy_from_slice(b);
+            for fy in 0..size {
+                let y = (oy * stride + fy) as isize - pt as isize;
+                if y < 0 || y >= ih as isize {
+                    continue;
+                }
+                for fx in 0..size {
+                    let xx = (ox * stride + fx) as isize - pl as isize;
+                    if xx < 0 || xx >= iw as isize {
+                        continue;
+                    }
+                    let in_base = (y as usize * iw + xx as usize) * in_c;
+                    let w_base = (fy * size + fx) * in_c;
+                    for (ci, &xv) in x[in_base..in_base + in_c].iter().enumerate() {
+                        let wrow = &w[(w_base + ci) * out_c..(w_base + ci + 1) * out_c];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+            let dst = (oy * ow + ox) * out_c;
+            for (o, &v) in out[dst..dst + out_c].iter_mut().zip(acc.iter()) {
+                *o = if v >= 0.0 { v } else { LEAKY_SLOPE * v };
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// VALID max-pool over a dense HWC tile (pool regions are always
+/// window-aligned by the tiler, so every window is fully in bounds).
+#[allow(clippy::too_many_arguments)]
+fn maxpool2d(
+    x: &[f32],
+    ih: usize,
+    iw: usize,
+    c: usize,
+    size: usize,
+    stride: usize,
+    oh: usize,
+    ow: usize,
+) -> Result<Vec<f32>> {
+    if (ih.saturating_sub(size)) / stride + 1 != oh || (iw.saturating_sub(size)) / stride + 1 != ow
+    {
+        bail!("pool geometry mismatch: {ih}x{iw} -/-> {oh}x{ow} (window {size}/{stride})");
+    }
+    let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let dst = (oy * ow + ox) * c;
+            for fy in 0..size {
+                let y = oy * stride + fy;
+                for fx in 0..size {
+                    let xx = ox * stride + fx;
+                    let src = (y * iw + xx) * c;
+                    for (o, &v) in out[dst..dst + c].iter_mut().zip(&x[src..src + c]) {
+                        if v > *o {
+                            *o = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{gen_network_weights, WEIGHT_SEED};
+    use crate::ftp::plan_group;
+    use crate::network::Network;
+
+    fn conv(filters: usize, size: usize) -> LayerKind {
+        LayerKind::Conv {
+            filters,
+            size,
+            stride: 1,
+            pad: size / 2,
+        }
+    }
+
+    fn tiny_net() -> Network {
+        Network::from_ops(
+            "ref-tiny",
+            16,
+            16,
+            3,
+            &[conv(4, 3), LayerKind::MaxPool { size: 2, stride: 2 }, conv(8, 3)],
+        )
+    }
+
+    #[test]
+    fn conv_identity_kernel_passes_positive_input_through() {
+        // A 1x1 conv with an identity weight matrix and zero bias is a
+        // per-pixel copy for non-negative inputs (leaky ReLU is identity).
+        let (h, w, c) = (4, 5, 3);
+        let x: Vec<f32> = (0..h * w * c).map(|i| i as f32).collect();
+        let mut wts = vec![0.0f32; c * c];
+        for i in 0..c {
+            wts[i * c + i] = 1.0;
+        }
+        let out = conv2d(&x, h, w, c, &wts, &[0.0; 3], 1, 1, c, [0; 4], h, w).unwrap();
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn leaky_relu_applied_to_negative_sums() {
+        // One input pixel, 1x1 conv with weight -1: output = leaky(-x).
+        let out = conv2d(&[2.0], 1, 1, 1, &[-1.0], &[0.0], 1, 1, 1, [0; 4], 1, 1).unwrap();
+        assert_eq!(out, vec![-0.2]);
+    }
+
+    #[test]
+    fn maxpool_picks_window_max_per_channel() {
+        // 2x2 map, 2 channels, one 2x2 window.
+        let x = vec![1.0, -8.0, 2.0, 7.0, 3.0, 0.5, 0.0, 6.0];
+        let out = maxpool2d(&x, 2, 2, 2, 2, 2, 1, 1).unwrap();
+        assert_eq!(out, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn tiled_equals_untiled_bit_exact() {
+        // The §2.1.1 equivalence on the reference executor itself: run a
+        // 2x2 tiling of a conv/pool/conv net and compare the stitched
+        // output against the single-task full forward, bit for bit.
+        let net = tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let image = crate::data::gen_image(11, net.in_w, net.in_h, net.in_c);
+        let oracle = run_full(&net, &weights, &image).unwrap();
+
+        let plan = plan_group(&net, 0, net.n_layers() - 1, 2, 2).unwrap();
+        let (ow, oh, oc) = net.out_shape(net.n_layers() - 1);
+        let mut stitched = vec![0.0f32; ow * oh * oc];
+        let in_map = crate::engine::FeatureMap {
+            h: net.in_h,
+            w: net.in_w,
+            c: net.in_c,
+            data: image,
+        };
+        for task in &plan.tasks {
+            let tile = in_map.gather(&task.input_rect());
+            let out = run_task(&net, &weights, task, &tile).unwrap();
+            let r = task.output_rect();
+            for (ty, y) in (r.y0..r.y1).enumerate() {
+                let dst = (y * ow + r.x0) * oc;
+                let src = ty * r.w() * oc;
+                stitched[dst..dst + r.w() * oc].copy_from_slice(&out[src..src + r.w() * oc]);
+            }
+        }
+        assert_eq!(stitched, oracle, "tiled and untiled must be bit-identical");
+    }
+
+    #[test]
+    fn wrong_tile_size_is_a_clear_error() {
+        let net = tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let plan = plan_group(&net, 0, 2, 1, 1).unwrap();
+        let err = run_task(&net, &weights, &plan.tasks[0], &[0.0; 3])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("elems"), "{err}");
+    }
+}

@@ -193,3 +193,70 @@ fn export_geometry_to_stdout_parses() {
     let j = mafat::jsonlite::Json::parse(&stdout).unwrap();
     assert!(j.get("networks").unwrap().as_arr().unwrap().len() == 1);
 }
+
+#[test]
+fn export_bundle_writes_a_loadable_manifest() {
+    let dir = std::env::temp_dir().join(format!("mafat_cli_bundle_{}", std::process::id()));
+    let (ok, _, stderr) = mafat(&["export-bundle", "--out", dir.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    let manifest = mafat::runtime::Manifest::load(&dir).unwrap();
+    let mnet = manifest.sole_network().unwrap();
+    assert_eq!(mnet.backend, mafat::runtime::BackendKind::Reference);
+    assert!(mnet
+        .configs
+        .iter()
+        .any(|c| c.config.to_string() == "5v5/12/3v3"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn run_and_serve_reject_malformed_tvt_configs_cleanly() {
+    // Regression: malformed `TvT` strings must produce a clear parse error
+    // (nonzero exit + message), never a panic, on both subcommands —
+    // before any artifacts are touched.
+    for bad in ["3v2/8/2x2", "5x5/8", "0v0/NoCut", "5x5//2x2"] {
+        for cmd in ["run", "serve"] {
+            let (ok, _, stderr) = mafat(&[cmd, "--config", bad]);
+            assert!(!ok, "{cmd} --config {bad} must fail");
+            assert!(
+                stderr.contains("invalid --config"),
+                "{cmd} --config {bad}: {stderr}"
+            );
+            assert!(
+                !stderr.contains("panicked"),
+                "{cmd} --config {bad} panicked: {stderr}"
+            );
+        }
+    }
+}
+
+#[test]
+fn run_executes_a_reference_bundle_end_to_end() {
+    // The full CLI path on a geometry-only bundle: export, then run a
+    // k-group config with oracle verification on the pure-Rust executor.
+    // (A small scaled net keeps this fast in debug builds; CI smoke runs
+    // the default 160x160 bundle in release.)
+    let dir = std::env::temp_dir().join(format!("mafat_cli_run_{}", std::process::id()));
+    let net = mafat::network::yolov2::yolov2_16_scaled(48);
+    mafat::runtime::export::write_reference_bundle(
+        &dir,
+        &[mafat::runtime::export::ExportSpec {
+            net: &net,
+            configs: vec!["2x2/4/2x2/12/2x2".parse().unwrap()],
+            emit_full: true,
+        }],
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = mafat(&[
+        "run",
+        "--artifacts",
+        dir.to_str().unwrap(),
+        "--config",
+        "2x2/4/2x2/12/2x2",
+        "--verify",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("config 2x2/4/2x2/12/2x2"), "{stdout}");
+    assert!(stdout.contains("max |err| = 0.000e0"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

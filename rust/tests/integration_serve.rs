@@ -1,20 +1,86 @@
 //! Serving-loop integration: boot the coordinator on an ephemeral port and
-//! speak the JSON-lines protocol over real TCP.
+//! speak the JSON-lines protocol over real TCP — against a geometry-only
+//! reference bundle, so the full request path (TCP -> queue -> worker pool
+//! -> engine -> response) executes on every `cargo test` with no XLA
+//! toolchain and no `make artifacts`.
 
-use mafat::coordinator::{Server, ServerConfig};
+use mafat::coordinator::{auto_config_from_manifest, Server, ServerConfig};
 use mafat::engine::Engine;
 use mafat::jsonlite::Json;
+use mafat::network::{LayerKind, Network};
+use mafat::plan::MultiConfig;
+use mafat::predictor::{predict_multi, PredictorParams};
+use mafat::runtime::export::{write_reference_bundle, ExportSpec};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::path::Path;
+use std::path::PathBuf;
+use std::sync::OnceLock;
 use std::time::Duration;
 
-fn artifacts_ok() -> bool {
-    let ok = Path::new("artifacts/manifest.json").exists();
-    if !ok {
-        eprintln!("SKIP: artifacts missing - run `make artifacts`");
+fn conv(filters: usize, size: usize) -> LayerKind {
+    LayerKind::Conv {
+        filters,
+        size,
+        stride: 1,
+        pad: size / 2,
     }
-    ok
+}
+
+fn maxpool() -> LayerKind {
+    LayerKind::MaxPool { size: 2, stride: 2 }
+}
+
+/// A small conv/pool net (32x32x3 -> 8x8x16) that keeps per-request work
+/// in the low-millisecond range, so pool/concurrency tests stay fast.
+fn tiny_net() -> Network {
+    Network::from_ops(
+        "tiny-serve",
+        32,
+        32,
+        3,
+        &[conv(8, 3), maxpool(), conv(16, 3), maxpool(), conv(16, 1), conv(16, 3)],
+    )
+}
+
+fn tiny_configs() -> Vec<MultiConfig> {
+    vec![
+        "1x1/NoCut".parse().unwrap(),
+        "2x2/NoCut".parse().unwrap(),
+        "2x2/2/2x2/4/1x1".parse().unwrap(), // k = 3 groups
+        "4v4/2/4x4".parse().unwrap(),       // balanced-variant top group (the predicted floor)
+    ]
+}
+
+/// Export the tiny-serve reference bundle once per test binary.
+fn tiny_bundle() -> &'static str {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("mafat-test-serve-{}", std::process::id()));
+        let net = tiny_net();
+        write_reference_bundle(
+            &dir,
+            &[ExportSpec {
+                net: &net,
+                configs: tiny_configs(),
+                emit_full: true,
+            }],
+        )
+        .expect("export reference bundle");
+        dir
+    })
+    .to_str()
+    .unwrap()
+}
+
+fn start_server(config: &str, cfg: ServerConfig) -> Server {
+    let dir = tiny_bundle().to_string();
+    let config: MultiConfig = config.parse().unwrap();
+    Server::start(
+        move || Engine::load(&dir, config.clone()),
+        "127.0.0.1:0",
+        cfg,
+    )
+    .unwrap()
 }
 
 struct Client {
@@ -47,11 +113,15 @@ impl Client {
 fn engine_load_failure_surfaces_from_start() {
     // No artifacts needed: a factory that fails must fail Server::start
     // itself (previously the worker died silently and queued clients hung
-    // forever waiting on a response nobody would send).
+    // forever waiting on a response nobody would send). With a pool, any
+    // failed worker fails startup.
     let result = Server::start(
         || anyhow::bail!("synthetic engine load failure"),
         "127.0.0.1:0",
-        ServerConfig::default(),
+        ServerConfig {
+            workers: 3,
+            ..ServerConfig::default()
+        },
     );
     let err = match result {
         Ok(_) => panic!("start must surface the load error"),
@@ -63,15 +133,7 @@ fn engine_load_failure_surfaces_from_start() {
 
 #[test]
 fn serve_end_to_end() {
-    if !artifacts_ok() {
-        return;
-    }
-    let server = Server::start(
-        || Engine::load("artifacts", "2x2/NoCut".parse().unwrap()),
-        "127.0.0.1:0",
-        ServerConfig::default(),
-    )
-    .unwrap();
+    let server = start_server("2x2/NoCut", ServerConfig::default());
     let addr = server.local_addr;
     let accept = std::thread::spawn(move || {
         let _ = server.run();
@@ -83,8 +145,7 @@ fn serve_end_to_end() {
     let pong = c.call(r#"{"cmd":"ping"}"#);
     assert!(pong.get("ok").unwrap().as_bool().unwrap());
 
-    // Synthetic-image inference (engine may still be compiling: the queue
-    // holds the request until the worker is ready).
+    // Synthetic-image inference.
     let r = c.call(r#"{"cmd":"infer","id":"r1","seed":7}"#);
     assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
     assert_eq!(r.str_at("id").unwrap(), "r1");
@@ -115,6 +176,9 @@ fn serve_end_to_end() {
     // Malformed request -> structured error, connection stays usable.
     let e = c.call(r#"{"cmd":"nonsense"}"#);
     assert!(!e.get("ok").unwrap().as_bool().unwrap());
+    // Malformed image payload (strings instead of numbers) likewise.
+    let e2 = c.call(r#"{"cmd":"infer","id":"bad-img","image":["x","y"]}"#);
+    assert!(!e2.get("ok").unwrap().as_bool().unwrap());
     let pong2 = c.call(r#"{"cmd":"ping"}"#);
     assert!(pong2.get("ok").unwrap().as_bool().unwrap());
 
@@ -122,10 +186,7 @@ fn serve_end_to_end() {
     // back as a structured per-request error, not kill the worker.
     let bad = c.call(r#"{"cmd":"infer","id":"bad","image":[1.0,2.0,3.0]}"#);
     assert!(!bad.get("ok").unwrap().as_bool().unwrap());
-    assert!(bad
-        .str_at("error")
-        .unwrap()
-        .contains("elems"), "{bad:?}");
+    assert!(bad.str_at("error").unwrap().contains("elems"), "{bad:?}");
     // The worker survives and keeps serving.
     let after = c.call(r#"{"cmd":"infer","id":"after-bad","seed":7}"#);
     assert!(after.get("ok").unwrap().as_bool().unwrap());
@@ -145,4 +206,150 @@ fn serve_end_to_end() {
     }
 
     drop(accept); // listener thread keeps running; process exit reaps it
+}
+
+/// Collect `output` arrays for a fixed set of seeds from a server.
+fn outputs_for_seeds(addr: std::net::SocketAddr, seeds: &[u64]) -> Vec<Vec<f64>> {
+    let mut c = Client::connect(addr);
+    seeds
+        .iter()
+        .map(|seed| {
+            let r = c.call(&format!(
+                r#"{{"cmd":"infer","id":"s{seed}","seed":{seed},"return_output":true}}"#
+            ));
+            assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+            r.get("output")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn worker_pool_matches_single_worker_byte_for_byte() {
+    // N workers must be an invisible optimization: the same requests get
+    // byte-identical responses from a pool of 3 as from a single engine.
+    let seeds: Vec<u64> = (0..6).collect();
+    let single = start_server("2x2/2/2x2/4/1x1", ServerConfig::default());
+    let addr1 = single.local_addr;
+    std::thread::spawn(move || {
+        let _ = single.run();
+    });
+    let pool = start_server(
+        "2x2/2/2x2/4/1x1",
+        ServerConfig {
+            workers: 3,
+            ..ServerConfig::default()
+        },
+    );
+    let addr3 = pool.local_addr;
+    std::thread::spawn(move || {
+        let _ = pool.run();
+    });
+
+    let a = outputs_for_seeds(addr1, &seeds);
+    let b = outputs_for_seeds(addr3, &seeds);
+    assert_eq!(a, b, "pooled responses must equal single-worker responses");
+}
+
+#[test]
+fn worker_pool_serves_concurrent_load_and_aggregates_metrics() {
+    let server = start_server(
+        "2x2/NoCut",
+        ServerConfig {
+            workers: 3,
+            max_batch: 2,
+            ..ServerConfig::default()
+        },
+    );
+    let addr = server.local_addr;
+    std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    let n_clients = 4;
+    let per_client = 5;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|ci| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                for i in 0..per_client {
+                    let r = c.call(&format!(
+                        r#"{{"cmd":"infer","id":"c{ci}-{i}","seed":{}}}"#,
+                        ci * 100 + i
+                    ));
+                    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+                    assert_eq!(r.str_at("id").unwrap(), format!("c{ci}-{i}"));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // All workers record into one shared registry.
+    let mut c = Client::connect(addr);
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    let snapshot = m.str_at("metrics").unwrap();
+    let requests: u64 = snapshot
+        .lines()
+        .find_map(|l| l.strip_prefix("requests "))
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap();
+    assert_eq!(requests, (n_clients * per_client) as u64, "{snapshot}");
+}
+
+#[test]
+fn auto_pick_serves_variable_config_when_it_wins() {
+    // A budget only the balanced-variant entry fits: the manifest
+    // auto-pick must hand back the `TvT` config, and serving it returns
+    // exactly what a directly loaded engine computes.
+    let manifest = mafat::runtime::Manifest::load(std::path::Path::new(tiny_bundle())).unwrap();
+    let mnet = manifest.sole_network().unwrap().clone();
+    let net = mnet.network();
+    let params = PredictorParams::default();
+    let variable: MultiConfig = "4v4/2/4x4".parse().unwrap();
+    let pv = predict_multi(&net, &variable, &params).unwrap().total_bytes;
+    // Every *other* compiled entry must predict above the chosen limit.
+    let others_floor = mnet
+        .configs
+        .iter()
+        .filter(|e| e.config != variable)
+        .map(|e| predict_multi(&net, &e.config, &params).unwrap().total_bytes)
+        .min()
+        .unwrap();
+    assert!(
+        pv < others_floor,
+        "balanced entry must be the unique floor ({pv} vs {others_floor})"
+    );
+    let limit = (pv + others_floor) / 2;
+    let (picked, bytes) = auto_config_from_manifest(&mnet, limit, &params).unwrap();
+    assert_eq!(picked, variable, "auto-pick must select the variable entry");
+    assert_eq!(bytes, pv);
+
+    // Serve the pick and compare against a direct engine.
+    let server = start_server(
+        &picked.to_string(),
+        ServerConfig {
+            workers: 2,
+            ..ServerConfig::default()
+        },
+    );
+    let addr = server.local_addr;
+    std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    let served = outputs_for_seeds(addr, &[7]);
+    let mut direct = Engine::load(tiny_bundle(), picked).unwrap();
+    let image = direct.synthetic_image(7);
+    let (out, _) = direct.infer(&image).unwrap();
+    let direct_out: Vec<f64> = out.data.iter().map(|&v| v as f64).collect();
+    assert_eq!(served[0], direct_out);
 }

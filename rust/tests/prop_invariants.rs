@@ -5,7 +5,8 @@
 //! the seed, and re-running with that seed reproduces the case exactly.
 
 use mafat::data::SplitMix64;
-use mafat::ftp::{balance_spans, down_extent, plan_group};
+use mafat::engine::FeatureMap;
+use mafat::ftp::{balance_spans, down_extent, plan_group, plan_group_from_bounds, Rect};
 use mafat::network::{LayerKind, Network, MIB};
 use mafat::plan::{plan_config, MafatConfig};
 use mafat::predictor::{predict_mem, PredictorParams};
@@ -218,6 +219,80 @@ fn prop_balance_spans_monotone_cover_and_bounded_effective_extent() {
             effective_max(&bounds, halo) <= effective_max(&even, halo),
             "extent {extent} n {n} halo {halo}: balanced {bounds:?} vs even {even:?}"
         );
+    });
+}
+
+/// Random strictly increasing boundary vector `0 = b0 < ... < bn = extent`
+/// with up to `max_parts` spans.
+fn random_bounds(rng: &mut SplitMix64, extent: usize, max_parts: usize) -> Vec<usize> {
+    let n = 1 + rng.next_below(max_parts.min(extent));
+    let mut interior = std::collections::BTreeSet::new();
+    while interior.len() < n - 1 {
+        interior.insert(1 + rng.next_below(extent - 1));
+    }
+    let mut b = vec![0];
+    b.extend(interior);
+    b.push(extent);
+    b
+}
+
+#[test]
+fn prop_gather_scatter_round_trip_over_arbitrary_partitions() {
+    // FeatureMap::gather/scatter must be exact inverses over any rect
+    // partition of a map: gathering every rect of a random boundary grid
+    // and scattering the tiles into a fresh map reconstructs the original
+    // map bit for bit (the engine's "merge and re-tile" correctness core).
+    cases(120, |rng| {
+        let h = 2 + rng.next_below(24);
+        let w = 2 + rng.next_below(24);
+        let c = 1 + rng.next_below(5);
+        let mut map = FeatureMap::zeros(h, w, c);
+        for (i, v) in map.data.iter_mut().enumerate() {
+            *v = i as f32 + 0.5;
+        }
+        let xs = random_bounds(rng, w, 5);
+        let ys = random_bounds(rng, h, 5);
+        let mut rebuilt = FeatureMap::zeros(h, w, c);
+        for j in 0..ys.len() - 1 {
+            for i in 0..xs.len() - 1 {
+                let rect = Rect::new(xs[i], ys[j], xs[i + 1], ys[j + 1]);
+                let tile = map.gather(&rect);
+                assert_eq!(tile.len(), rect.area() * c);
+                rebuilt.scatter(&rect, &tile);
+                // Per-rect inverse: gathering right back returns the tile.
+                assert_eq!(rebuilt.gather(&rect), tile);
+            }
+        }
+        assert_eq!(rebuilt.data, map.data, "partition must reconstruct the map");
+    });
+}
+
+#[test]
+fn prop_tiling_rects_cover_map_disjointly() {
+    // Any full tiling built from explicit boundaries — the form manifests
+    // serialize for variable configs — partitions the bottom output map:
+    // output rects are pairwise disjoint and their areas sum to the map.
+    cases(60, |rng| {
+        let net = random_network(rng);
+        let bottom = net.n_layers() - 1;
+        let (w, h, _) = net.out_shape(bottom);
+        let xs = random_bounds(rng, w, 4);
+        let ys = random_bounds(rng, h, 4);
+        let g = plan_group_from_bounds(&net, 0, bottom, &xs, &ys).unwrap();
+        assert_eq!(g.n_tasks(), (xs.len() - 1) * (ys.len() - 1));
+        let total: usize = g.tasks.iter().map(|t| t.output_rect().area()).sum();
+        assert_eq!(total, w * h, "rects must cover the map");
+        for (a, ta) in g.tasks.iter().enumerate() {
+            for tb in g.tasks.iter().skip(a + 1) {
+                assert_eq!(
+                    ta.output_rect().overlap_area(&tb.output_rect()),
+                    0,
+                    "rects must be disjoint"
+                );
+            }
+        }
+        // Boundaries recovered from the plan are the ones we asked for.
+        assert_eq!(g.bounds(), (xs, ys));
     });
 }
 
