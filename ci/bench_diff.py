@@ -1,15 +1,42 @@
 #!/usr/bin/env python3
-"""Gate the search-scaling bench against its committed baseline.
+"""Gate machine-readable bench JSON against a committed baseline.
 
-Usage: bench_diff.py CURRENT.json BASELINE.json [--tolerance 1.0]
+Usage:
+    bench_diff.py CURRENT.json BASELINE.json
+        [--rows per_max_groups] [--row-key max_groups]
+        [--metric NAME[:TOLERANCE[:DIRECTION]]]... [--tolerance 1.0]
+        [--info KEY]...
 
-Fails (exit 1) when the cached planner performs more than `tolerance` times
-the baseline's `plan_group` calls at any `max_groups` — the planner's
-memoization guarantee regressing. Call counts are deterministic (they depend
-only on the network and the binary-search probe sequence, never on timing),
-so CI gates them exactly (`--tolerance 1.0`: any growth fails; a drop below
-the baseline prints a tightening note). Wall-clock and frontier fields are
-reported but never gated.
+Both bench files share one shape: a top-level array of row objects (the
+`--rows` field), each identified by `--row-key`, carrying numeric metrics.
+Every `--metric` gates one metric in every row that the baseline also has:
+
+* DIRECTION `max` (default): FAIL when current > baseline * TOLERANCE.
+  For metrics where bigger is worse — call counts, wall-clock ms.
+  With TOLERANCE 1.0 the gate is exact (any growth fails), which is right
+  for deterministic counters like the planner's `plan_group` calls.
+* DIRECTION `min`: FAIL when current < baseline / TOLERANCE.
+  For metrics where smaller is worse — speedup ratios. A wall-clock
+  *ratio* is hardware-normalized, so it can be tolerance-gated in CI
+  where absolute milliseconds cannot.
+
+TOLERANCE defaults to `--tolerance` (default 1.0). Rows present in the
+current file but absent from the baseline are reported and skipped, so
+informational rows need no baseline entry. `--info KEY` prints extra
+numeric fields per row without gating them.
+
+CI invocations (see .github/workflows/ci.yml):
+
+    # Search bench: deterministic plan_group call counts, gated exactly.
+    bench_diff.py BENCH_search.json rust/benches/BENCH_search.baseline.json \
+        --info cached_wall_ms --info frontier_wall_ms
+    # (defaults: --rows per_max_groups --row-key max_groups
+    #            --metric cached_plan_group_calls:1.0:max)
+
+    # Exec bench: blocked-vs-scalar speedup, tolerance-gated.
+    bench_diff.py BENCH_exec.json rust/benches/BENCH_exec.baseline.json \
+        --rows per_config --row-key config --metric speedup:1.5:min \
+        --info scalar_ms --info blocked_ms
 """
 
 import argparse
@@ -17,52 +44,108 @@ import json
 import sys
 
 
+def parse_metric(spec: str, default_tolerance: float):
+    """'name[:tolerance[:direction]]' -> (name, tolerance, direction)."""
+    parts = spec.split(":")
+    name = parts[0]
+    tolerance = float(parts[1]) if len(parts) > 1 else default_tolerance
+    direction = parts[2] if len(parts) > 2 else "max"
+    if direction not in ("max", "min"):
+        raise SystemExit(f"bad --metric direction {direction!r} (want max|min)")
+    if tolerance < 1.0:
+        raise SystemExit(f"--metric tolerance must be >= 1.0, got {tolerance}")
+    return name, tolerance, direction
+
+
 def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
     ap.add_argument("current")
     ap.add_argument("baseline")
+    ap.add_argument("--rows", default="per_max_groups",
+                    help="top-level field holding the row array")
+    ap.add_argument("--row-key", default="max_groups",
+                    help="field identifying a row within the array")
+    ap.add_argument("--metric", action="append", default=[],
+                    help="NAME[:TOLERANCE[:DIRECTION]] to gate "
+                         "(default: cached_plan_group_calls, direction max)")
     ap.add_argument("--tolerance", type=float, default=1.0,
-                    help="fail when current > baseline * tolerance "
-                         "(default 1.0: call counts are deterministic, any growth fails)")
+                    help="default tolerance for --metric entries without one "
+                         "(1.0 = exact: any regression fails)")
+    ap.add_argument("--info", action="append", default=[],
+                    help="extra per-row numeric fields to print, ungated")
     args = ap.parse_args()
+
+    metrics = [parse_metric(m, args.tolerance) for m in args.metric] or [
+        ("cached_plan_group_calls", args.tolerance, "max")
+    ]
 
     with open(args.current) as f:
         cur = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
 
-    base_rows = {r["max_groups"]: r for r in base["per_max_groups"]}
+    base_rows = {r[args.row_key]: r for r in base[args.rows]}
     failed = False
-    for row in cur["per_max_groups"]:
-        mg = row["max_groups"]
-        got = row["cached_plan_group_calls"]
-        ref = base_rows.get(mg)
+    compared = 0
+    seen = set()
+    for row in cur[args.rows]:
+        rid = row[args.row_key]
+        ref = base_rows.get(rid)
         if ref is None:
-            print(f"max_groups={mg}: no baseline row, skipping")
+            print(f"{args.row_key}={rid}: no baseline row, skipping (informational)")
             continue
-        want = ref["cached_plan_group_calls"]
-        limit = want * args.tolerance
-        status = "REGRESSION" if got > limit else "ok"
-        if got > limit:
+        seen.add(rid)
+        for name, tolerance, direction in metrics:
+            got = row.get(name)
+            want = ref.get(name)
+            if got is None or want is None:
+                # A baseline row names this metric but one side lacks it:
+                # that's a broken gate (renamed field / typoed --metric),
+                # not an informational skip.
+                print(f"{args.row_key}={rid}: metric {name} MISSING "
+                      f"({'current' if got is None else 'baseline'})")
+                failed = True
+                continue
+            compared += 1
+            if direction == "max":
+                limit = want * tolerance
+                bad = got > limit
+                bound = f"limit {limit:.2f}"
+            else:
+                limit = want / tolerance
+                bad = got < limit
+                bound = f"floor {limit:.2f}"
+            status = "REGRESSION" if bad else "ok"
+            failed = failed or bad
+            info = "".join(
+                f", {k} {row[k]:.1f}" for k in args.info
+                if isinstance(row.get(k), (int, float))
+            )
+            print(f"{args.row_key}={rid}: {name} {got:g} vs baseline {want:g} "
+                  f"({bound}) -> {status}{info}")
+            if direction == "max" and got < want:
+                print(f"  note: improved below baseline; consider tightening "
+                      f"{args.baseline} to {got:g}")
+            if direction == "min" and got > want:
+                print(f"  note: improved above baseline; consider raising "
+                      f"{args.baseline} to {got:g}")
+    for rid in base_rows:
+        if rid not in seen:
+            # A baseline row the current file no longer emits: its gate
+            # would silently vanish — treat as a regression, not a skip.
+            print(f"{args.row_key}={rid}: baseline row MISSING from current file")
             failed = True
-        wall = row.get("cached_wall_ms")
-        wall_s = f", wall {wall:.1f} ms" if isinstance(wall, (int, float)) else ""
-        print(f"max_groups={mg}: cached plan_group calls {got} vs baseline {want} "
-              f"(limit {limit:.0f}) -> {status}{wall_s}")
-        fr = row.get("frontier_wall_ms")
-        fv = row.get("frontier_variable_wall_ms")
-        if isinstance(fr, (int, float)) and isinstance(fv, (int, float)):
-            print(f"  frontier: {row.get('frontier_points')} points in {fr:.1f} ms | "
-                  f"variable: {row.get('frontier_variable_points')} points in {fv:.1f} ms "
-                  f"(informational)")
-        if got < want:
-            print(f"  note: improved below baseline; tighten "
-                  f"rust/benches/BENCH_search.baseline.json to {got}")
-    if failed:
-        print(f"bench regression gate FAILED "
-              f"(plan_group calls grew past baseline * {args.tolerance})")
+    if compared == 0:
+        # Nothing was actually gated (baseline rows all absent from the
+        # current file, or vice versa): a vacuous pass is a disabled gate.
+        print("bench regression gate FAILED: no metric was compared")
         return 1
-    print("bench regression gate passed")
+    if failed:
+        print("bench regression gate FAILED")
+        return 1
+    print(f"bench regression gate passed ({compared} comparison(s))")
     return 0
 
 

@@ -5,8 +5,10 @@
 //! throughput / predicted-footprint report.
 //!
 //! Runs against `make artifacts` output when present (PJRT execution);
-//! otherwise exports a geometry-only reference bundle on the fly and runs
-//! it on the pure-Rust executor. Run:
+//! otherwise falls back through the shared
+//! `runtime::export::ensure_reference_bundle` helper, which exports a
+//! geometry-only reference bundle on the fly for the pure-Rust blocked
+//! executor (`examples/serve.rs` uses the same helper). Run:
 //!     cargo run --release --example e2e_inference
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 

@@ -4,9 +4,11 @@
 //! snapshot — the single-device edge-serving scenario the paper's intro
 //! motivates, scaled out to N engines.
 //!
-//! Runs against `make artifacts` output when present; otherwise exports a
+//! Runs against `make artifacts` output when present; otherwise falls
+//! back through the shared `runtime::export::ensure_reference_bundle`
+//! helper (same as `examples/e2e_inference.rs`), which exports a
 //! geometry-only reference bundle on the fly and serves it with the
-//! pure-Rust executor. Run:
+//! pure-Rust blocked executor. Run:
 //!     cargo run --release --example serve [ARTIFACTS_DIR] [WORKERS]
 
 use mafat::coordinator::{Server, ServerConfig};

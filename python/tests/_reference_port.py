@@ -6,11 +6,20 @@ Mirrors:
   rust/src/ftp/traversal.rs   up_span / up_tile
   rust/src/ftp/grid.rs        Grid
   rust/src/ftp/variable.rs    group_halo / balance_spans / plan_group_balanced_searched
-  rust/src/ftp/mod.rs         plan_group (even)
+  rust/src/ftp/mod.rs         plan_group (even), TaskGeom.class_key
   rust/src/runtime/reference.rs conv2d / maxpool2d / run_task / run_full
+                              + the blocked fast path: pack_weights /
+                              conv2d_blocked / run_task_batch_blocked
   rust/src/predictor/mod.rs   peak_of_group_plan / predict_multi (peak ordering)
   rust/src/engine/mod.rs      gather / scatter / infer group loop
+                              + the class-batched infer_batch loop
   rust/src/data/mod.rs        SplitMix64 hash -> weights/bias/image
+
+The blocked port repeats the Rust loop nest exactly — bias-seeded
+accumulator per BLOCK_W-pixel block, (fy, fx, ci)-ordered rank-1 updates
+over an OC_LANES-padded out-channel axis, leaky-ReLU store — so
+`test_reference_exec.py` can pin that the blocked layout's arithmetic is
+bit-identical to the scalar path (same per-element f32 op order).
 """
 import math
 from dataclasses import dataclass
@@ -413,6 +422,144 @@ def run_task(layers, weights, task, tile):
 def run_full(layers, weights, image_hwc):
     tasks = plan_group(layers, 0, len(layers) - 1, 1, 1)
     return run_task(layers, weights, tasks[0], image_hwc)
+
+# ------------------------------------------- blocked fast path (reference.rs)
+
+OC_LANES = 8
+BLOCK_W = 8
+
+
+def class_key(task):
+    """TaskGeom::class_key: per-layer (in_w, in_h, pad4) signature."""
+    sig = []
+    for lg in task.layers:
+        x0, y0, x1, y1 = lg.in_rect
+        sig.append((x1 - x0, y1 - y0, lg.pad))
+    return tuple(sig)
+
+
+def pack_weights(layers, weights):
+    """reference::pack_weights: zero-pad the out_c axis to an OC_LANES
+    multiple; same (fy, fx, ci)-major row order, values untouched."""
+    packed = []
+    for spec, lw in zip(layers, weights):
+        if lw is None:
+            packed.append(None)
+            continue
+        w, b = lw
+        out_c = w.shape[3]
+        ocp = -(-out_c // OC_LANES) * OC_LANES
+        wp = np.zeros((spec.size, spec.size, spec.in_c, ocp), dtype=np.float32)
+        wp[:, :, :, :out_c] = w
+        bp = np.zeros(ocp, dtype=np.float32)
+        bp[:out_c] = b
+        packed.append((wp, bp, out_c))
+    return packed
+
+
+def conv2d_blocked(x, wp, bp, out_c, size, stride, pads, oh, ow):
+    """reference::conv2d_blocked_into, loop for loop: per output element
+    the accumulation is still `bias, then += x*w in (fy, fx, ci) order` —
+    only the loop nest is rearranged (BLOCK_W output pixels share each
+    weight row, padded lanes ride along and are dropped at the store)."""
+    pl, pr, pt, pb = pads
+    ih, iw, in_c = x.shape
+    ocp = wp.shape[3]
+    out = np.zeros((oh, ow, out_c), dtype=np.float32)
+    for oy in range(oh):
+        y0 = oy * stride - pt
+        ox0 = 0
+        while ox0 < ow:
+            bw = min(BLOCK_W, ow - ox0)
+            acc = np.tile(bp, (bw, 1))  # bias-seeded, padded lanes included
+            for fy in range(size):
+                y = y0 + fy
+                if y < 0 or y >= ih:
+                    continue
+                for fx in range(size):
+                    base = ox0 * stride + fx - pl
+                    # ceil(-base / stride) for negative base (Rust div_ceil)
+                    p_lo = 0 if base >= 0 else -(base // stride)
+                    if base >= iw:
+                        p_hi = 0
+                    else:
+                        p_hi = (iw - 1 - base) // stride + 1
+                    p_hi = min(p_hi, bw)
+                    if p_lo >= p_hi:
+                        continue
+                    for ci in range(in_c):
+                        wrow = wp[fy, fx, ci, :]
+                        for p in range(p_lo, p_hi):
+                            xv = x[y, base + p * stride, ci]
+                            acc[p, :] = acc[p, :] + xv * wrow
+            for p in range(bw):
+                v = acc[p, :out_c]
+                out[oy, ox0 + p, :] = np.where(v >= 0, v, LEAKY * v)
+            ox0 += bw
+    return out
+
+
+def run_task_batch_blocked(layers, packed, task, tiles):
+    """reference::run_task_batch_blocked: one call for a batch of
+    same-class tiles; each layer's weights stay hot across the batch."""
+    xs = [t for t in tiles]
+    for lg in task.layers:
+        spec = layers[lg.layer]
+        ox0, oy0, ox1, oy1 = lg.out_rect
+        oh, ow = oy1 - oy0, ox1 - ox0
+        pl, pr, pt, pb = lg.pad
+        if spec.is_conv:
+            wp, bp, out_c = packed[lg.layer]
+            xs = [
+                conv2d_blocked(x, wp, bp, out_c, spec.size, spec.stride,
+                               (pl, pr, pt, pb), oh, ow)
+                for x in xs
+            ]
+        else:
+            assert pl + pr + pt + pb == 0
+            xs = [maxpool2d(x, spec.size, spec.stride, oh, ow) for x in xs]
+    return xs
+
+
+def run_task_blocked(layers, packed, task, tile):
+    return run_task_batch_blocked(layers, packed, task, [tile])[0]
+
+
+def infer_batched(layers, weights, groups, images):
+    """engine::infer_batch: per group, gather every (image, task) tile of a
+    shape class and execute the class in ONE blocked call, then scatter
+    back per image; merge and re-tile at every cut."""
+    packed = pack_weights(layers, weights)
+    inps = list(images)
+    for tasks in groups:
+        bottom = tasks[0].layers[-1].layer
+        spec = layers[bottom]
+        outs = [np.zeros((spec.out_h, spec.out_w, spec.out_c), dtype=np.float32)
+                for _ in inps]
+        order = sorted(range(len(tasks)),
+                       key=lambda ix: ((tasks[ix].grid_i + tasks[ix].grid_j) % 2,
+                                       tasks[ix].grid_j, tasks[ix].grid_i))
+        class_order = []
+        by_class = {}
+        for ix in order:
+            key = class_key(tasks[ix])
+            if key not in by_class:
+                by_class[key] = []
+                class_order.append(key)
+            by_class[key].append(ix)
+        for key in class_order:
+            ixs = by_class[key]
+            tiles, pairs = [], []
+            for img_i, inp in enumerate(inps):
+                for ix in ixs:
+                    tiles.append(gather(inp, tasks[ix].input_rect()))
+                    pairs.append((img_i, ix))
+            results = run_task_batch_blocked(layers, packed, tasks[ixs[0]], tiles)
+            for (img_i, ix), res in zip(pairs, results):
+                x0, y0, x1, y1 = tasks[ix].output_rect()
+                outs[img_i][y0:y1, x0:x1, :] = res
+        inps = outs
+    return inps
 
 
 def gather(m, rect):

@@ -11,6 +11,10 @@ environment with no Rust toolchain:
   grids, k-group cuts, and genuinely uneven balanced boundaries (the
   paper's §2.1.1 equivalence, checked in f32 with the executor's exact
   accumulation order);
+* the **blocked** fast path (packed OC_LANES-padded weights, BLOCK_W-pixel
+  microkernel) and the **class-batched** engine loop are bit-identical to
+  the scalar sequential path — the PR 4 layout/batching change never
+  touches any output element's f32 op order;
 * the balanced-boundary search moves boundaries where the halo allows it;
 * the tiny-serve prediction ordering assumed by
   `rust/tests/integration_serve.rs::auto_pick_serves_variable_config_when_it_wins`
@@ -24,12 +28,16 @@ import numpy as np
 from _reference_port import (
     MIB,
     balance_spans,
+    class_key,
     conv,
+    gather,
     gen_image,
     gen_network_weights,
     grid_bounds,
     infer,
+    infer_batched,
     maxpool,
+    pack_weights,
     plan_from_bounds,
     plan_group,
     plan_group_balanced_searched,
@@ -38,6 +46,8 @@ from _reference_port import (
     resolve,
     run_full,
     run_task,
+    run_task_batch_blocked,
+    run_task_blocked,
     yolov2_16_ops,
 )
 
@@ -142,3 +152,81 @@ def test_wrong_weight_free_layers_are_pools():
     layers = resolve(yolov2_16_ops(), 48, 48, 3)
     weights = gen_network_weights(layers)
     assert [w is None for w in weights] == [not l.is_conv for l in layers]
+
+
+# ---------------------------------------------------- blocked fast path pins
+
+
+def test_blocked_task_bit_identical_to_scalar_every_pad_combo():
+    # All 9 tiles of a 3x3 tiling hit every corner/edge/center padding
+    # combination; the blocked layout must reproduce the scalar path bit
+    # for bit on each (the arithmetic-order claim the Rust fast path
+    # relies on).
+    layers = tiny_layers()
+    weights = gen_network_weights(layers)
+    packed = pack_weights(layers, weights)
+    img = gen_image(13, 16, 16, 3).reshape(16, 16, 3)
+    tasks = plan_group(layers, 0, 2, 3, 3)
+    for t in tasks:
+        tile = gather(img, t.input_rect())
+        scalar = run_task(layers, weights, t, tile)
+        blocked = run_task_blocked(layers, packed, t, tile)
+        assert np.array_equal(scalar, blocked), (t.grid_i, t.grid_j)
+
+
+def test_blocked_full_forward_bit_identical_to_scalar_oracle():
+    layers = tiny_layers()
+    weights, img, oracle = oracle_for(layers, seed=19)
+    packed = pack_weights(layers, weights)
+    tasks = plan_group(layers, 0, 2, 1, 1)
+    blocked = run_task_blocked(layers, packed, tasks[0], img)
+    assert np.array_equal(blocked, oracle)
+
+
+def test_batched_class_call_equals_per_tile_calls():
+    # One batched call over all tiles of a class == per-tile calls,
+    # element for element (the engine's single-call-per-class shape).
+    layers = tiny_layers()
+    weights = gen_network_weights(layers)
+    packed = pack_weights(layers, weights)
+    img = gen_image(23, 16, 16, 3).reshape(16, 16, 3)
+    tasks = plan_group(layers, 0, 2, 4, 4)
+    by_class = {}
+    for t in tasks:
+        by_class.setdefault(class_key(t), []).append(t)
+    multi = max(by_class.values(), key=len)
+    assert len(multi) > 1, "want a real multi-tile class"
+    tiles = [gather(img, t.input_rect()) for t in multi]
+    batched = run_task_batch_blocked(layers, packed, multi[0], tiles)
+    for t, tile, out in zip(multi, tiles, batched):
+        single = run_task_blocked(layers, packed, t, tile)
+        assert np.array_equal(out, single), (t.grid_i, t.grid_j)
+
+
+def test_batched_infer_bit_identical_to_sequential_k_group_and_variable():
+    # The engine-loop equivalence: class-batched batched inference over a
+    # batch of images equals the per-image sequential scalar loop bitwise,
+    # for a k-group cut AND a variable (balanced) config — and batch = 1.
+    layers = tiny_layers()
+    weights = gen_network_weights(layers)
+    images = [gen_image(100 + i, 16, 16, 3).reshape(16, 16, 3) for i in range(3)]
+    for cfg in ["2x2/1/2x2", "3v3/NoCut"]:
+        groups = plan_multi(layers, cfg)
+        expected = [infer(layers, weights, groups, img) for img in images]
+        got = infer_batched(layers, weights, groups, images)
+        for e, g in zip(expected, got):
+            assert np.array_equal(e, g), cfg
+        one = infer_batched(layers, weights, groups, images[:1])
+        assert np.array_equal(one[0], expected[0]), cfg
+
+
+def test_batched_infer_on_uneven_balanced_boundaries():
+    # Genuinely uneven balanced spans (the [0, 8, 15, 24] pin above), run
+    # through the blocked batched path: still bit-identical to the scalar
+    # oracle.
+    layers = resolve([conv(8, 3), conv(8, 3), conv(8, 3)], 24, 24, 3)
+    tasks, xs, _ = plan_group_balanced_searched(layers, 0, 2, 3)
+    assert xs == [0, 8, 15, 24]
+    weights, img, oracle = oracle_for(layers, seed=5)
+    got = infer_batched(layers, weights, [tasks], [img])
+    assert np.array_equal(got[0], oracle)

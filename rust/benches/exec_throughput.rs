@@ -1,0 +1,202 @@
+//! Executor-throughput bench: the blocked, class-batched reference
+//! executor versus the scalar per-tile executor on the YOLOv2-16 default
+//! bundle network (160x160), single-threaded.
+//!
+//! Proves the blocked-executor refactor's two claims and fails loudly if
+//! either regresses:
+//!
+//! * **bit-identical outputs** — for every measured configuration the
+//!   blocked class-batched path must equal the scalar per-tile path
+//!   exactly (the §2.1.1 equivalence survives the layout change);
+//! * **>= 2x single-thread speedup** in aggregate across the measured
+//!   configurations — the blocked layout (one weight-row load per
+//!   [`BLOCK_W`]-pixel block instead of per pixel, `out_c` padded to
+//!   [`OC_LANES`] for fixed-width SIMD, fused bias + leaky-ReLU store)
+//!   must actually pay off.
+//!
+//! Writes a machine-readable `BENCH_exec.json` (per-config scalar/blocked
+//! wall clock, speedups, task/executor-call counts, plus an `overall`
+//! row) that CI uploads and diffs against the committed baseline
+//! (`rust/benches/BENCH_exec.baseline.json`) via `ci/bench_diff.py
+//! --rows per_config --row-key config --metric speedup:1.5:min`. The gate
+//! is on the *speedup ratio* — wall-clock derived but hardware-normalized
+//! — with the committed baseline's floor matching the >= 2x claim;
+//! absolute millisecond fields are informational.
+//!
+//! [`BLOCK_W`]: mafat::runtime::reference::BLOCK_W
+//! [`OC_LANES`]: mafat::runtime::reference::OC_LANES
+
+use mafat::engine::{gen_network_weights, FeatureMap, LayerWeights, WEIGHT_SEED};
+use mafat::jsonlite::Json;
+use mafat::network::Network;
+use mafat::plan::{plan_multi, MultiConfig, Plan};
+use mafat::runtime::reference::{self, PackedWeights};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// The default-bundle configurations measured: untiled-ish, the paper's
+/// 2-group shape, and the variable search winner.
+const CONFIGS: [&str; 3] = ["2x2/NoCut", "3x3/8/2x2", "5v5/12/3v3"];
+/// Best-of-N wall clock: the min over iterations discards scheduling
+/// noise on shared CI runners before the >= 2x assertion below.
+const ITERS: usize = 3;
+
+/// Scalar per-tile execution: the engine's pre-batching group loop.
+fn exec_scalar(
+    net: &Network,
+    weights: &[Option<LayerWeights>],
+    plan: &Plan,
+    image: &[f32],
+) -> Vec<f32> {
+    let mut input = FeatureMap {
+        h: net.in_h,
+        w: net.in_w,
+        c: net.in_c,
+        data: image.to_vec(),
+    };
+    for group in &plan.groups {
+        let spec = &net.layers[group.bottom];
+        let mut output = FeatureMap::zeros(spec.out_h, spec.out_w, spec.out_c);
+        for task in &group.tasks {
+            let tile = input.gather(&task.input_rect());
+            let out = reference::run_task(net, weights, task, &tile).unwrap();
+            output.scatter(&task.output_rect(), &out);
+        }
+        input = output;
+    }
+    input.data
+}
+
+/// Blocked class-batched execution: one executor call per tile class.
+/// Returns the final map and the number of executor calls issued.
+fn exec_blocked(
+    net: &Network,
+    packed: &PackedWeights,
+    plan: &Plan,
+    image: &[f32],
+) -> (Vec<f32>, usize) {
+    let mut calls = 0;
+    let mut input = FeatureMap {
+        h: net.in_h,
+        w: net.in_w,
+        c: net.in_c,
+        data: image.to_vec(),
+    };
+    for group in &plan.groups {
+        let spec = &net.layers[group.bottom];
+        let mut output = FeatureMap::zeros(spec.out_h, spec.out_w, spec.out_c);
+        let mut class_order: Vec<String> = Vec::new();
+        let mut by_class: HashMap<String, Vec<usize>> = HashMap::new();
+        for (ix, task) in group.tasks.iter().enumerate() {
+            let key = task.class_key().short_name();
+            by_class
+                .entry(key.clone())
+                .or_insert_with(|| {
+                    class_order.push(key);
+                    Vec::new()
+                })
+                .push(ix);
+        }
+        for key in &class_order {
+            let ixs = &by_class[key];
+            let mut batch = Vec::new();
+            for &ix in ixs {
+                batch.extend_from_slice(&input.gather(&group.tasks[ix].input_rect()));
+            }
+            let out = reference::run_task_batch_blocked(
+                net,
+                packed,
+                &group.tasks[ixs[0]],
+                &batch,
+                ixs.len(),
+            )
+            .unwrap();
+            calls += 1;
+            let stride = out.len() / ixs.len();
+            for (slot, &ix) in ixs.iter().enumerate() {
+                let rect = group.tasks[ix].output_rect();
+                output.scatter(&rect, &out[slot * stride..][..stride]);
+            }
+        }
+        input = output;
+    }
+    (input.data, calls)
+}
+
+fn best_ms<R>(iters: usize, mut f: impl FnMut() -> R) -> (R, f64) {
+    let mut best = f64::INFINITY;
+    let mut last = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        last = Some(f());
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    (last.unwrap(), best)
+}
+
+fn main() {
+    let net = mafat::runtime::export::default_network();
+    let weights = gen_network_weights(&net, WEIGHT_SEED);
+    let packed = reference::pack_weights(&net, &weights);
+    let image = mafat::data::gen_image(42, net.in_w, net.in_h, net.in_c);
+
+    println!("exec throughput on {} ({}x{}), single thread\n", net.name, net.in_w, net.in_h);
+    println!(
+        "{:<16} {:>6} {:>7} {:>12} {:>12} {:>9}",
+        "config", "tasks", "calls", "scalar ms", "blocked ms", "speedup"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut scalar_total = 0.0;
+    let mut blocked_total = 0.0;
+    for config in CONFIGS {
+        let mc: MultiConfig = config.parse().unwrap();
+        let plan = plan_multi(&net, &mc).unwrap();
+        let (scalar_out, scalar_ms) = best_ms(ITERS, || exec_scalar(&net, &weights, &plan, &image));
+        let ((blocked_out, calls), blocked_ms) =
+            best_ms(ITERS, || exec_blocked(&net, &packed, &plan, &image));
+        assert_eq!(
+            scalar_out, blocked_out,
+            "{config}: blocked executor must be bit-identical to scalar"
+        );
+        let speedup = scalar_ms / blocked_ms;
+        println!(
+            "{config:<16} {:>6} {calls:>7} {scalar_ms:>12.1} {blocked_ms:>12.1} {speedup:>8.2}x",
+            plan.n_tasks()
+        );
+        scalar_total += scalar_ms;
+        blocked_total += blocked_ms;
+        rows.push(Json::obj(vec![
+            ("config", Json::str(config)),
+            ("tasks", Json::num(plan.n_tasks() as f64)),
+            ("exec_calls", Json::num(calls as f64)),
+            ("scalar_ms", Json::num(scalar_ms)),
+            ("blocked_ms", Json::num(blocked_ms)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    let overall = scalar_total / blocked_total;
+    println!(
+        "\noverall: {scalar_total:.1} ms scalar vs {blocked_total:.1} ms blocked ({overall:.2}x)"
+    );
+    rows.push(Json::obj(vec![
+        ("config", Json::str("overall")),
+        ("scalar_ms", Json::num(scalar_total)),
+        ("blocked_ms", Json::num(blocked_total)),
+        ("speedup", Json::num(overall)),
+    ]));
+    assert!(
+        overall >= 2.0,
+        "blocked executor must be >= 2x the scalar executor (got {overall:.2}x)"
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("exec_throughput")),
+        ("network", Json::str(net.name.clone())),
+        ("iters", Json::num(ITERS as f64)),
+        ("per_config", Json::Arr(rows)),
+    ]);
+    let out = "BENCH_exec.json";
+    std::fs::write(out, doc.to_string_pretty()).expect("write BENCH_exec.json");
+    println!("wrote {out}");
+}

@@ -11,7 +11,10 @@
 //!                                - workers race for the shared queue
 //!                                - each drains up to `max_batch / N` per
 //!                                  wake (bursts spread across the pool)
-//!                                - executes the MAFAT plan per image
+//!                                - the drained batch runs as ONE
+//!                                  `Engine::infer_batch` call: tiles are
+//!                                  class-batched across requests, one
+//!                                  executor call per tile class
 //!                                              |
 //!                                              v
 //!                                   per-request response channels
@@ -62,6 +65,13 @@ pub struct ServerConfig {
     /// drains up to `max(1, max_batch / workers)` requests at once, so a
     /// burst spreads across engines instead of funneling into whichever
     /// worker wins the queue lock.
+    ///
+    /// A drained batch executes as **one** class-batched engine call, so a
+    /// worker's peak activation memory scales with its per-wake drain
+    /// (roughly `drain x` the predicted single-image footprint the
+    /// auto-pick fits to the budget). On a genuinely memory-constrained
+    /// deployment, size `max_batch / workers` so that multiple stays
+    /// inside the budget — batching trades memory for throughput.
     pub max_batch: usize,
     /// Worker pool size: engines sharing the request queue. Values < 1 are
     /// treated as 1.
@@ -209,6 +219,47 @@ impl Server {
     }
 }
 
+/// Build the success response for one served request.
+fn ok_response(
+    req: &Request,
+    out: &crate::engine::FeatureMap,
+    stats: &crate::engine::InferStats,
+    queue_ms: f64,
+) -> Json {
+    let checksum: f32 = out.data.iter().sum();
+    let mut fields = vec![
+        ("id", Json::str(req.id.clone())),
+        ("ok", Json::Bool(true)),
+        (
+            "shape",
+            Json::arr(vec![
+                Json::num(out.h as f64),
+                Json::num(out.w as f64),
+                Json::num(out.c as f64),
+            ]),
+        ),
+        ("checksum", Json::num(checksum as f64)),
+        ("latency_ms", Json::num(stats.total_ms)),
+        ("queue_ms", Json::num(queue_ms)),
+        ("tasks", Json::num(stats.tasks as f64)),
+    ];
+    if req.return_output {
+        fields.push((
+            "output",
+            Json::arr(out.data.iter().map(|&v| Json::num(v as f64)).collect()),
+        ));
+    }
+    Json::obj(fields)
+}
+
+fn err_response(req: &Request, e: &anyhow::Error) -> Json {
+    Json::obj(vec![
+        ("id", Json::str(req.id.clone())),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(format!("{e:#}"))),
+    ])
+}
+
 fn worker_loop(
     mut engine: Engine,
     rx: Arc<Mutex<Receiver<Request>>>,
@@ -237,48 +288,54 @@ fn worker_loop(
             }
             batch
         };
-        for req in batch {
-            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-            let t0 = Instant::now();
-            let resp = match engine.infer(&req.image) {
-                Ok((out, stats)) => {
+        // Split out requests whose image cannot run BEFORE batching, using
+        // the engine's own validation predicate (the same check
+        // `infer_batch` enforces — one rule, no drift): each gets its
+        // structured error immediately, so a bad request can neither
+        // poison its batchmates nor force a re-execution of work that
+        // already ran.
+        let (valid, invalid): (Vec<Request>, Vec<Request>) = batch
+            .into_iter()
+            .partition(|r| engine.validate_image(&r.image).is_ok());
+        for req in invalid {
+            let e = engine
+                .validate_image(&req.image)
+                .expect_err("partitioned as invalid");
+            engine.metrics.errors.inc();
+            let _ = req.respond.send(err_response(&req, &e));
+        }
+        if valid.is_empty() {
+            continue;
+        }
+        // The validated batch goes through the engine's class-batched
+        // execution path in ONE call: tiles of the same shape class are
+        // gathered across requests and executed together (the intra-worker
+        // batching the PJRT backend wants), with byte-identical outputs.
+        let queue_ms: Vec<f64> =
+            valid.iter().map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3).collect();
+        let images: Vec<&[f32]> = valid.iter().map(|r| r.image.as_slice()).collect();
+        let t0 = Instant::now();
+        match engine.infer_batch(&images) {
+            Ok(results) => {
+                let elapsed = t0.elapsed();
+                for ((req, (out, stats)), q_ms) in valid.iter().zip(&results).zip(&queue_ms) {
                     engine.metrics.requests.inc();
-                    engine.metrics.request_latency.record(t0.elapsed());
-                    let checksum: f32 = out.data.iter().sum();
-                    let mut fields = vec![
-                        ("id", Json::str(req.id.clone())),
-                        ("ok", Json::Bool(true)),
-                        (
-                            "shape",
-                            Json::arr(vec![
-                                Json::num(out.h as f64),
-                                Json::num(out.w as f64),
-                                Json::num(out.c as f64),
-                            ]),
-                        ),
-                        ("checksum", Json::num(checksum as f64)),
-                        ("latency_ms", Json::num(stats.total_ms)),
-                        ("queue_ms", Json::num(queue_ms)),
-                        ("tasks", Json::num(stats.tasks as f64)),
-                    ];
-                    if req.return_output {
-                        fields.push((
-                            "output",
-                            Json::arr(out.data.iter().map(|&v| Json::num(v as f64)).collect()),
-                        ));
-                    }
-                    Json::obj(fields)
+                    engine.metrics.request_latency.record(elapsed);
+                    let _ = req.respond.send(ok_response(req, out, stats, *q_ms));
                 }
-                Err(e) => {
+            }
+            Err(e) => {
+                // Images were pre-validated, so this is an engine/artifact
+                // level failure (e.g. a PJRT class failing to load
+                // mid-batch) that would hit every request alike: answer
+                // each with the error rather than re-executing the batch
+                // per request, which would double-run — and double-count
+                // in the metrics — the classes that already succeeded.
+                for req in &valid {
                     engine.metrics.errors.inc();
-                    Json::obj(vec![
-                        ("id", Json::str(req.id.clone())),
-                        ("ok", Json::Bool(false)),
-                        ("error", Json::str(format!("{e:#}"))),
-                    ])
+                    let _ = req.respond.send(err_response(req, &e));
                 }
-            };
-            let _ = req.respond.send(resp);
+            }
         }
     }
 }

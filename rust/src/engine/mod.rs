@@ -9,12 +9,16 @@
 //! manifest and a freshly planned configuration is a hard error
 //! ([`ManifestNetwork::verify_geometry`]).
 //!
-//! For every fused task the engine gathers the input tile from the group's
-//! input map (HWC layout: a tile row is one contiguous memcpy), executes
-//! the task, and scatters the output tile into the group output map. Tasks
-//! run in the data-reuse checkerboard order; at every cut the output map
+//! Execution is **class-batched**: per layer group, the engine gathers
+//! every tile of a shape class — across all tasks of the request and every
+//! image of a drained server batch — into one contiguous HWC buffer (a
+//! tile row is one contiguous memcpy) and issues a *single executor call
+//! per class* ([`Engine::infer_batch`]), scattering the results back into
+//! each image's output map. Classes run in first-occurrence order along
+//! the data-reuse checkerboard schedule; at every cut the output map
 //! simply becomes the next group's input map ("merge and re-tile", paper
-//! §3.1) — for k groups this repeats k-1 times.
+//! §3.1) — for k groups this repeats k-1 times. Batching never changes a
+//! tile's arithmetic, so outputs are byte-identical to per-tile execution.
 //!
 //! Two executors sit behind one `Engine` API, selected by the bundle's
 //! `backend` field:
@@ -23,7 +27,10 @@
 //!   weights passed as cached literals (`make artifacts` bundles);
 //! * **reference** — the pure-Rust executor ([`crate::runtime::reference`])
 //!   computing every layer directly from task geometry; geometry-only
-//!   bundles (`mafat export-bundle`) need no XLA toolchain at all.
+//!   bundles (`mafat export-bundle`) need no XLA toolchain at all. The
+//!   tiled path runs the blocked, batch-aware fast executor (weights
+//!   preconverted once per load); the untiled oracle runs the scalar
+//!   executor, so `verify` pins blocked == scalar bit for bit.
 //!
 //! Verification mode runs the untiled oracle (the `full.hlo.txt` module,
 //! or the reference full forward) on the same image and asserts
@@ -97,13 +104,21 @@ impl FeatureMap {
 
     /// Copy the rect (in x/y map coordinates) into a dense HWC tile.
     pub fn gather(&self, rect: &Rect) -> Vec<f32> {
-        let (tw, th) = (rect.w(), rect.h());
-        let mut out = Vec::with_capacity(tw * th * self.c);
+        let mut out = Vec::with_capacity(rect.area() * self.c);
+        self.gather_into(rect, &mut out);
+        out
+    }
+
+    /// Append the rect's rows onto `out` — the allocation-free form the
+    /// engine's class-batch gather loop uses to build one contiguous
+    /// buffer straight from the feature map (no per-tile temporary).
+    pub fn gather_into(&self, rect: &Rect, out: &mut Vec<f32>) {
+        let tw = rect.w();
+        out.reserve(rect.area() * self.c);
         for y in rect.y0..rect.y1 {
             let start = (y * self.w + rect.x0) * self.c;
             out.extend_from_slice(&self.data[start..start + tw * self.c]);
         }
-        out
     }
 
     /// Scatter a dense HWC tile into the rect.
@@ -126,18 +141,24 @@ pub struct InferStats {
     pub gather_scatter_ms: f64,
     pub execute_ms: f64,
     pub tasks: usize,
+    /// Executor invocations charged to this inference: one per tile-class
+    /// batch, so `exec_calls <= tasks` (equality only when every class has
+    /// one member).
+    pub exec_calls: usize,
 }
 
 /// One layer group, fully resolved for execution: task geometry (from the
 /// manifest boundaries), checkerboard order, and the compiled-class table.
 struct GroupExec {
     bottom: usize,
-    /// Execution order over `tasks` (data-reuse checkerboard: even parity
-    /// first, column-major within a parity).
-    order: Vec<usize>,
+    /// Tile-class batches: `(class key, task indices)` — classes in
+    /// first-occurrence order along the data-reuse checkerboard schedule
+    /// (even parity first, column-major within a parity), tasks within a
+    /// class in that same schedule order. The engine gathers every listed
+    /// tile into one contiguous buffer and issues a **single executor call
+    /// per class** (the call shape a batched PJRT executable wants).
+    class_batches: Vec<(String, Vec<usize>)>,
     tasks: Vec<TaskGeom>,
-    /// Shape-class key per task (indexes `classes`).
-    class_of: Vec<String>,
     classes: HashMap<String, ClassEntry>,
 }
 
@@ -151,9 +172,14 @@ enum Executor {
         full_weights: Option<Vec<xla::Literal>>,
         full_path: Option<String>,
     },
-    /// Pure-Rust reference execution from task geometry.
+    /// Pure-Rust reference execution from task geometry: the blocked,
+    /// batch-aware executor for the tiled path, the scalar executor as the
+    /// untiled oracle (so every `verify` cross-checks blocked against
+    /// scalar arithmetic bit for bit). `packed` is the per-layer
+    /// preconverted-weights cache, built once here rather than per tile.
     Reference {
         weights: Vec<Option<LayerWeights>>,
+        packed: reference::PackedWeights,
         has_oracle: bool,
     },
 }
@@ -187,6 +213,35 @@ impl Engine {
     /// Load a configuration's artifacts and prepare every tile class.
     /// Accepts any manifest [`MultiConfig`] — k groups, `Even` or
     /// `Balanced` variants.
+    ///
+    /// A geometry-only reference bundle is all it takes to run offline:
+    ///
+    /// ```
+    /// use mafat::engine::Engine;
+    /// use mafat::network::{LayerKind, Network};
+    /// use mafat::runtime::export::{write_reference_bundle, ExportSpec};
+    ///
+    /// let net = Network::from_ops(
+    ///     "doc-tiny",
+    ///     16,
+    ///     16,
+    ///     3,
+    ///     &[
+    ///         LayerKind::Conv { filters: 4, size: 3, stride: 1, pad: 1 },
+    ///         LayerKind::MaxPool { size: 2, stride: 2 },
+    ///     ],
+    /// );
+    /// let dir = std::env::temp_dir().join(format!("mafat-doc-engine-{}", std::process::id()));
+    /// let configs = vec!["2x2/NoCut".parse().unwrap()];
+    /// write_reference_bundle(&dir, &[ExportSpec { net: &net, configs, emit_full: true }])
+    ///     .unwrap();
+    ///
+    /// let mut engine = Engine::load(&dir, "2x2/NoCut".parse().unwrap()).unwrap();
+    /// let image = engine.synthetic_image(7);
+    /// // Tiled (blocked, class-batched) equals untiled (scalar oracle), bit for bit.
+    /// assert_eq!(engine.verify(&image).unwrap(), 0.0);
+    /// # std::fs::remove_dir_all(&dir).ok();
+    /// ```
     pub fn load(artifacts_dir: impl AsRef<Path>, config: MultiConfig) -> Result<Engine> {
         let artifacts_dir = artifacts_dir.as_ref();
         let manifest = Manifest::load(artifacts_dir)?;
@@ -247,11 +302,20 @@ impl Engine {
                 let t = &plan.tasks[ix];
                 ((t.grid_i + t.grid_j) % 2, t.grid_j, t.grid_i)
             });
+            // Static per-group batching plan: tasks grouped by shape class,
+            // classes in first-occurrence (checkerboard) order.
+            let mut class_batches: Vec<(String, Vec<usize>)> = Vec::new();
+            for &ix in &order {
+                let key = &class_of[ix];
+                match class_batches.iter().position(|(k, _)| k == key) {
+                    Some(p) => class_batches[p].1.push(ix),
+                    None => class_batches.push((key.clone(), vec![ix])),
+                }
+            }
             groups.push(GroupExec {
                 bottom: mg.bottom,
-                order,
+                class_batches,
                 tasks: plan.tasks,
-                class_of,
                 classes: mg.classes.clone(),
             });
         }
@@ -259,6 +323,7 @@ impl Engine {
         let weights = gen_network_weights(&net, WEIGHT_SEED);
         let executor = match mnet.backend {
             BackendKind::Reference => Executor::Reference {
+                packed: reference::pack_weights(&net, &weights),
                 weights,
                 has_oracle: mnet.full.is_some(),
             },
@@ -336,10 +401,11 @@ impl Engine {
         data::gen_image(seed, self.net.in_w, self.net.in_h, self.net.in_c)
     }
 
-    /// Run one tiled inference. Returns the final feature map and timing.
-    pub fn infer(&mut self, image: &[f32]) -> Result<(FeatureMap, InferStats)> {
-        let t0 = Instant::now();
-        let mut stats = InferStats::default();
+    /// Check an image buffer against the loaded network's input shape —
+    /// the exact predicate [`Engine::infer_batch`] enforces, exposed so
+    /// the serving loop can pre-filter a drained batch without duplicating
+    /// (and risking drift from) the rule.
+    pub fn validate_image(&self, image: &[f32]) -> Result<()> {
         if image.len() != self.net.in_w * self.net.in_h * self.net.in_c {
             bail!(
                 "image has {} elems, expected {}x{}x{}",
@@ -349,60 +415,141 @@ impl Engine {
                 self.net.in_c
             );
         }
-        let mut input = FeatureMap {
-            h: self.net.in_h,
-            w: self.net.in_w,
-            c: self.net.in_c,
-            data: image.to_vec(),
-        };
+        Ok(())
+    }
+
+    /// Run one tiled inference. Returns the final feature map and timing.
+    /// Sugar for [`Engine::infer_batch`] on a batch of one.
+    pub fn infer(&mut self, image: &[f32]) -> Result<(FeatureMap, InferStats)> {
+        let mut out = self.infer_batch(&[image])?;
+        Ok(out.pop().expect("batch of one"))
+    }
+
+    /// Run a batch of tiled inferences through the class-batched execution
+    /// path: per layer group, the engine gathers every `(image, task)`
+    /// tile of a shape class into one contiguous buffer and issues a
+    /// **single executor call per class**, then scatters the results back
+    /// into each image's output map. Outputs are byte-identical to calling
+    /// [`Engine::infer`] per image (pinned by the batching property test
+    /// and `tests/integration_engine.rs`): batching changes which tiles
+    /// are in flight together, never any tile's arithmetic.
+    pub fn infer_batch(&mut self, images: &[&[f32]]) -> Result<Vec<(FeatureMap, InferStats)>> {
+        let t0 = Instant::now();
+        let n = images.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        for image in images {
+            self.validate_image(image)?;
+        }
+        let mut stats = vec![InferStats::default(); n];
+        let mut inputs: Vec<FeatureMap> = images
+            .iter()
+            .map(|image| FeatureMap {
+                h: self.net.in_h,
+                w: self.net.in_w,
+                c: self.net.in_c,
+                data: image.to_vec(),
+            })
+            .collect();
         for (gi, group) in self.groups.iter().enumerate() {
             let bottom_spec = &self.net.layers[group.bottom];
-            let mut output =
-                FeatureMap::zeros(bottom_spec.out_h, bottom_spec.out_w, bottom_spec.out_c);
-            for &ix in &group.order {
-                let task = &group.tasks[ix];
+            let in_c = self.net.layers[group.tasks[0].layers[0].layer].in_c;
+            let mut outputs: Vec<FeatureMap> = (0..n)
+                .map(|_| FeatureMap::zeros(bottom_spec.out_h, bottom_spec.out_w, bottom_spec.out_c))
+                .collect();
+            for (key, ixs) in &group.class_batches {
+                // Gather: one contiguous buffer of all (image, task) tiles
+                // of this class, image-major.
                 let tg = Instant::now();
-                let tile = input.gather(&task.input_rect());
-                stats.gather_scatter_ms += tg.elapsed().as_secs_f64() * 1e3;
+                let tile_elems = group.tasks[ixs[0]].input_rect().area() * in_c;
+                let mut batch = Vec::with_capacity(n * ixs.len() * tile_elems);
+                let mut pairs = Vec::with_capacity(n * ixs.len());
+                for (img_i, input) in inputs.iter().enumerate() {
+                    for &ix in ixs {
+                        input.gather_into(&group.tasks[ix].input_rect(), &mut batch);
+                        pairs.push((img_i, ix));
+                    }
+                }
+                let gather_ms = tg.elapsed().as_secs_f64() * 1e3;
 
+                // Execute: one call per class.
                 let te = Instant::now();
                 let out = match &mut self.executor {
+                    Executor::Reference { packed, .. } => reference::run_task_batch_blocked(
+                        &self.net,
+                        packed,
+                        &group.tasks[ixs[0]],
+                        &batch,
+                        pairs.len(),
+                    )?,
                     Executor::Pjrt { runtime, group_weights, .. } => {
-                        let class = &group.classes[&group.class_of[ix]];
-                        let lit = Runtime::literal_hwc(
-                            &tile,
-                            class.in_shape[0],
-                            class.in_shape[1],
-                            class.in_shape[2],
-                        )?;
-                        // Weights are passed by borrow (execute accepts
-                        // Borrow<Literal>), so per-task cost is just the
-                        // input tile.
+                        // The PJRT stub has no batched executable yet: run
+                        // the class's module per tile, concatenating — the
+                        // call shape upstream is already the batched one.
+                        let class = &group.classes[key];
                         let exe = runtime.load(&class.path)?;
-                        let mut args: Vec<&xla::Literal> =
-                            Vec::with_capacity(1 + group_weights[gi].len());
-                        args.push(&lit);
-                        args.extend(group_weights[gi].iter());
-                        exe.run_f32(&args)?
-                    }
-                    Executor::Reference { weights, .. } => {
-                        reference::run_task(&self.net, weights, task, &tile)?
+                        let mut out = Vec::new();
+                        for slot in 0..pairs.len() {
+                            let tile = &batch[slot * tile_elems..][..tile_elems];
+                            let lit = Runtime::literal_hwc(
+                                tile,
+                                class.in_shape[0],
+                                class.in_shape[1],
+                                class.in_shape[2],
+                            )?;
+                            // Weights are passed by borrow (execute accepts
+                            // Borrow<Literal>), so per-tile cost is just
+                            // the input tile.
+                            let mut args: Vec<&xla::Literal> =
+                                Vec::with_capacity(1 + group_weights[gi].len());
+                            args.push(&lit);
+                            args.extend(group_weights[gi].iter());
+                            out.extend_from_slice(&exe.run_f32(&args)?);
+                        }
+                        out
                     }
                 };
                 let dt = te.elapsed();
-                stats.execute_ms += dt.as_secs_f64() * 1e3;
+                self.metrics.exec_calls.inc();
+                self.metrics.class_tiles.add(key, pairs.len() as u64);
+                self.metrics.tasks_executed.add(pairs.len() as u64);
+                // One real measured duration per executor call — batching
+                // makes per-tile timing unobservable, and recording a
+                // synthetic per-tile average N times would flatten the
+                // percentiles this histogram exists to expose.
                 self.metrics.task_latency.record(dt);
-                self.metrics.tasks_executed.inc();
-                stats.tasks += 1;
 
+                // Scatter back per (image, task).
                 let ts = Instant::now();
-                output.scatter(&task.output_rect(), &out);
-                stats.gather_scatter_ms += ts.elapsed().as_secs_f64() * 1e3;
+                let out_stride = out.len() / pairs.len();
+                for (slot, &(img_i, ix)) in pairs.iter().enumerate() {
+                    let rect = group.tasks[ix].output_rect();
+                    outputs[img_i].scatter(&rect, &out[slot * out_stride..][..out_stride]);
+                    stats[img_i].tasks += 1;
+                }
+                let scatter_ms = ts.elapsed().as_secs_f64() * 1e3;
+
+                // Attribute shared batch time evenly across the images
+                // (every image contributes the same tile count per class).
+                let exec_ms = dt.as_secs_f64() * 1e3;
+                for s in stats.iter_mut() {
+                    s.gather_scatter_ms += (gather_ms + scatter_ms) / n as f64;
+                    s.execute_ms += exec_ms / n as f64;
+                    s.exec_calls += 1;
+                }
             }
-            input = output; // merge + re-tile at the cut
+            inputs = outputs; // merge + re-tile at the cut
         }
-        stats.total_ms = t0.elapsed().as_secs_f64() * 1e3;
-        Ok((input, stats))
+        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(inputs
+            .into_iter()
+            .zip(stats)
+            .map(|(map, mut s)| {
+                s.total_ms = total_ms;
+                (map, s)
+            })
+            .collect())
     }
 
     /// Run the untiled full-network oracle on the same image.
@@ -420,7 +567,10 @@ impl Engine {
                 args.extend(weights.iter());
                 exe.run_f32(&args)?
             }
-            Executor::Reference { weights, has_oracle } => {
+            Executor::Reference { weights, has_oracle, .. } => {
+                // The oracle deliberately runs the *scalar* executor: every
+                // `verify` therefore cross-checks the blocked tiled path
+                // against the scalar arithmetic bit for bit.
                 if !*has_oracle {
                     bail!("manifest has no full-network oracle (emit_full=false)");
                 }
@@ -479,8 +629,10 @@ pub fn run_cli(artifacts: &str, config: MultiConfig, batch: usize, verify: bool)
         total_ms += stats.total_ms;
         let checksum: f32 = out.data.iter().sum();
         println!(
-            "image {i}: {:.1} ms ({} tasks; exec {:.1} ms, gather/scatter {:.2} ms) checksum {checksum:.4}",
-            stats.total_ms, stats.tasks, stats.execute_ms, stats.gather_scatter_ms
+            "image {i}: {:.1} ms ({} tasks in {} executor calls; exec {:.1} ms, \
+             gather/scatter {:.2} ms) checksum {checksum:.4}",
+            stats.total_ms, stats.tasks, stats.exec_calls, stats.execute_ms,
+            stats.gather_scatter_ms
         );
     }
     println!(

@@ -38,7 +38,20 @@ impl GroupVariant {
 
 /// Build a group plan from explicit boundary vectors (`xs`/`ys` include 0
 /// and the map extent; tile (i, j) spans `xs[i]..xs[i+1]` x `ys[j]..ys[j+1]`
-/// on the bottom layer's output).
+/// on the bottom layer's output). This is how the engine rebuilds variable
+/// tilings exactly from a manifest's serialized boundaries.
+///
+/// ```
+/// use mafat::ftp::plan_group_from_bounds;
+/// use mafat::network::yolov2::yolov2_16;
+///
+/// let net = yolov2_16();
+/// // Layers 0..=7 output a 76x76 map; a deliberately uneven partition.
+/// let g = plan_group_from_bounds(&net, 0, 7, &[0, 30, 76], &[0, 40, 76]).unwrap();
+/// assert_eq!(g.n_tasks(), 4);
+/// // The boundaries recovered from the plan are the ones requested.
+/// assert_eq!(g.bounds(), (vec![0, 30, 76], vec![0, 40, 76]));
+/// ```
 pub fn plan_group_from_bounds(
     net: &Network,
     top: usize,

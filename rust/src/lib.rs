@@ -19,9 +19,15 @@
 //!   ([`baseline`]), end-to-end latency simulation ([`simulate`]), the real
 //!   inference engine ([`engine`] over [`runtime`]; k-group and
 //!   variable-tiling configs natively, through PJRT or the pure-Rust
-//!   reference executor [`runtime::reference`]), and the serving loop
-//!   ([`coordinator`]: a worker pool of engines, auto-picking a config from
-//!   the probed memory budget via the frontier when none is given).
+//!   reference executor [`runtime::reference`] — a scalar oracle plus a
+//!   blocked, class-batched fast path that stays bit-identical to it), and
+//!   the serving loop ([`coordinator`]: a worker pool of engines, each
+//!   drained request batch executed as one class-batched engine call,
+//!   auto-picking a config from the probed memory budget via the frontier
+//!   when none is given).
+//!
+//! The end-to-end module map, the `TvT` configuration grammar, and the
+//! bundle/manifest format live in `docs/ARCHITECTURE.md`.
 //! * **L2 (build-time JAX)** — `python/compile/model.py` emits one HLO
 //!   module per fused tile-shape class.
 //! * **L1 (build-time Pallas)** — `python/compile/kernels/` holds the conv /

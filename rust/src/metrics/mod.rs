@@ -61,6 +61,27 @@ impl Histogram {
     }
 }
 
+/// Per-tile-class execution counters: how many tiles each shape class has
+/// executed (the engine batches same-class tiles into one executor call,
+/// so `exec_calls` grows per *class batch* while these grow per tile).
+#[derive(Debug, Default)]
+pub struct ClassCounters(Mutex<BTreeMap<String, u64>>);
+
+impl ClassCounters {
+    pub fn add(&self, key: &str, n: u64) {
+        *self.0.lock().unwrap().entry(key.to_string()).or_insert(0) += n;
+    }
+
+    pub fn get(&self, key: &str) -> u64 {
+        self.0.lock().unwrap().get(key).copied().unwrap_or(0)
+    }
+
+    /// Sorted `(class key, tiles executed)` snapshot.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.0.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+}
+
 /// Registry of named metrics for one engine/server instance.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -70,7 +91,14 @@ pub struct Metrics {
     pub bytes_in: Counter,
     pub bytes_out: Counter,
     pub errors: Counter,
+    /// Executor invocations (one per tile-class batch, not per tile).
+    pub exec_calls: Counter,
+    /// Tiles executed per shape class.
+    pub class_tiles: ClassCounters,
     pub request_latency: Histogram,
+    /// Per-executor-call latency (one sample per tile-class batch — real
+    /// measured durations, so percentiles expose slow classes; per-tile
+    /// time inside one batched call is not separately observable).
     pub task_latency: Histogram,
 }
 
@@ -84,6 +112,13 @@ impl Metrics {
         kv.insert("bytes_in", self.bytes_in.get().to_string());
         kv.insert("bytes_out", self.bytes_out.get().to_string());
         kv.insert("errors", self.errors.get().to_string());
+        kv.insert("exec_calls", self.exec_calls.get().to_string());
+        let class_lines: String = self
+            .class_tiles
+            .snapshot()
+            .iter()
+            .map(|(k, v)| format!("class_tiles{{{k}}} {v}\n"))
+            .collect();
         for (name, h) in [
             ("request_latency", &self.request_latency),
             ("task_latency", &self.task_latency),
@@ -105,9 +140,12 @@ impl Metrics {
                 );
             }
         }
-        kv.iter()
+        let mut out = kv
+            .iter()
             .map(|(k, v)| format!("{k} {v}\n"))
-            .collect::<String>()
+            .collect::<String>();
+        out.push_str(&class_lines);
+        out
     }
 }
 
@@ -143,5 +181,20 @@ mod tests {
         m.requests.add(3);
         let s = m.snapshot();
         assert!(s.contains("requests 3"));
+    }
+
+    #[test]
+    fn class_counters_accumulate_and_snapshot() {
+        let m = Metrics::default();
+        m.exec_calls.inc();
+        m.class_tiles.add("aabb", 4);
+        m.class_tiles.add("aabb", 2);
+        m.class_tiles.add("ccdd", 1);
+        assert_eq!(m.class_tiles.get("aabb"), 6);
+        assert_eq!(m.class_tiles.get("missing"), 0);
+        let s = m.snapshot();
+        assert!(s.contains("exec_calls 1"), "{s}");
+        assert!(s.contains("class_tiles{aabb} 6"), "{s}");
+        assert!(s.contains("class_tiles{ccdd} 1"), "{s}");
     }
 }

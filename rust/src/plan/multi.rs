@@ -17,6 +17,27 @@ use std::str::FromStr;
 /// tiling, and `variants[i]` records whether group i uses the paper's even
 /// grid or the halo-balanced variable boundaries (`ftp::variable`);
 /// `tilings.len() == variants.len() == cuts.len() + 1`.
+///
+/// The printed form is the `TvT` notation the CLI, manifests, and docs
+/// use (grammar in `docs/ARCHITECTURE.md`), and it round-trips:
+///
+/// ```
+/// use mafat::ftp::GroupVariant;
+/// use mafat::plan::MultiConfig;
+///
+/// // Three groups cut at layers 4 and 12; `v` marks a halo-balanced group.
+/// let c: MultiConfig = "4x4/4/3x3/12/2v2".parse().unwrap();
+/// assert_eq!(c.cuts, vec![4, 12]);
+/// assert_eq!(c.tilings, vec![4, 3, 2]);
+/// assert_eq!(c.variants[2], GroupVariant::Balanced);
+/// assert_eq!(c.to_string(), "4x4/4/3x3/12/2v2");
+///
+/// // The paper's 2-group notation and the untiled form still parse.
+/// assert!("5x5/8/2x2".parse::<MultiConfig>().is_ok());
+/// assert!("1x1/NoCut".parse::<MultiConfig>().is_ok());
+/// // Malformed strings are rejected, not guessed at.
+/// assert!("3v2/8/2x2".parse::<MultiConfig>().is_err());
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct MultiConfig {
     pub cuts: Vec<usize>,

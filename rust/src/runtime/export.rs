@@ -283,7 +283,14 @@ pub fn write_reference_bundle(dir: &std::path::Path, specs: &[ExportSpec<'_>]) -
 
 /// Use `artifacts` when it already holds a manifest; otherwise export the
 /// default reference bundle into a per-process temp dir named after `tag`
-/// and return that path — the offline fallback the examples run on.
+/// and return that path. This is the **one** on-the-fly fallback helper —
+/// `examples/e2e_inference.rs` and `examples/serve.rs` both route through
+/// it rather than duplicating the export-and-point-at-a-temp-dir logic.
+///
+/// Bundles stay geometry-only on purpose: weights are regenerated
+/// deterministically at `Engine::load` and preconverted there into the
+/// blocked executor's layout ([`super::reference::pack_weights`]) — once
+/// per load, never per tile, and never serialized.
 pub fn ensure_reference_bundle(artifacts: &str, tag: &str) -> Result<String> {
     if std::path::Path::new(artifacts).join("manifest.json").exists() {
         return Ok(artifacts.to_string());

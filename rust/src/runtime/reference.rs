@@ -12,6 +12,31 @@
 //! window scan in a fixed order), tiled and untiled outputs are
 //! bit-identical — the paper's §2.1.1 equivalence claim, checkable without
 //! an XLA toolchain.
+//!
+//! ## Two paths, one arithmetic
+//!
+//! * **Scalar** ([`run_task`] / [`run_full`]) — the original per-pixel
+//!   triple loop. Kept as the executable specification and as the untiled
+//!   verification oracle.
+//! * **Blocked** ([`run_task_blocked`] / [`run_task_batch_blocked`]) — the
+//!   fast path the engine serves from. Tiles stay channels-last (HWC);
+//!   weights are repacked **once per `Engine::load`** into
+//!   [`PackedWeights`] (output channels zero-padded to an [`OC_LANES`]
+//!   multiple so the innermost loop is a fixed-width SIMD-friendly
+//!   rank-1 update); the microkernel processes [`BLOCK_W`] output pixels
+//!   at a time so each weight row is loaded once per block instead of
+//!   once per pixel; bias seeding and the leaky-ReLU store are fused
+//!   around the accumulation.
+//!
+//! The blocked path reorders *which output cells* are in flight, never the
+//! floating-point op sequence *within* a cell: every output element still
+//! starts from its bias and accumulates `x * w` in the exact `(fy, fx,
+//! ci)` order of the scalar loop, so scalar and blocked results are
+//! **bit-identical** (pinned by the unit tests below, the batching
+//! property test, and the numpy port in
+//! `python/tests/test_reference_exec.py`). Zero-padded weight/bias lanes
+//! only ever accumulate `x * 0.0` into lanes that are never stored, so
+//! padding cannot perturb real channels.
 
 use crate::engine::LayerWeights;
 use crate::ftp::TaskGeom;
@@ -92,6 +117,262 @@ pub fn run_full(
 ) -> Result<Vec<f32>> {
     let plan = crate::ftp::plan_group(net, 0, net.n_layers() - 1, 1, 1)?;
     run_task(net, weights, &plan.tasks[0], image)
+}
+
+// --------------------------------------------------------- blocked fast path
+
+/// Output channels per SIMD lane group: [`PackedLayer`] zero-pads `out_c`
+/// up to a multiple of this so the microkernel's innermost loop runs over
+/// fixed-width chunks the autovectorizer reliably lowers to vector FMAs.
+pub const OC_LANES: usize = 8;
+
+/// Output pixels per microkernel block: each weight row is loaded once and
+/// applied to up to this many output positions, cutting weight-streaming
+/// traffic (the scalar path's bottleneck — it re-reads the whole filter
+/// tensor per output pixel) by the block width.
+pub const BLOCK_W: usize = 8;
+
+/// One conv layer's weights repacked for the blocked executor: the same
+/// `(fy, fx, ci)`-major row order as [`crate::engine::LayerWeights`], with
+/// each `out_c` row zero-padded to `oc_pad` lanes.
+pub struct PackedLayer {
+    pub size: usize,
+    pub stride: usize,
+    pub in_c: usize,
+    pub out_c: usize,
+    /// `out_c` rounded up to an [`OC_LANES`] multiple.
+    pub oc_pad: usize,
+    /// `size * size * in_c` rows of `oc_pad` weights.
+    pub w: Vec<f32>,
+    /// Bias, zero-padded to `oc_pad`.
+    pub b: Vec<f32>,
+}
+
+/// Preconverted weights for a whole network, keyed by absolute layer index
+/// (`None` for pools) — built **once per `Engine::load`** by
+/// [`pack_weights`] so the per-tile path never repacks.
+pub struct PackedWeights {
+    pub layers: Vec<Option<PackedLayer>>,
+}
+
+/// Repack [`crate::engine::gen_network_weights`] output into the blocked
+/// executor's layout. Pure data movement: no value changes, only zero
+/// padding of the `out_c` axis.
+pub fn pack_weights(net: &Network, weights: &[Option<LayerWeights>]) -> PackedWeights {
+    let layers = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(l, spec)| match (spec.kind, weights.get(l).and_then(|w| w.as_ref())) {
+            (LayerKind::Conv { size, stride, .. }, Some(lw)) => {
+                let rows = size * size * spec.in_c;
+                let oc_pad = spec.out_c.div_ceil(OC_LANES) * OC_LANES;
+                let mut w = vec![0.0f32; rows * oc_pad];
+                for r in 0..rows {
+                    w[r * oc_pad..r * oc_pad + spec.out_c]
+                        .copy_from_slice(&lw.w[r * spec.out_c..(r + 1) * spec.out_c]);
+                }
+                let mut b = vec![0.0f32; oc_pad];
+                b[..spec.out_c].copy_from_slice(&lw.b);
+                Some(PackedLayer {
+                    size,
+                    stride,
+                    in_c: spec.in_c,
+                    out_c: spec.out_c,
+                    oc_pad,
+                    w,
+                    b,
+                })
+            }
+            _ => None,
+        })
+        .collect();
+    PackedWeights { layers }
+}
+
+/// `acc[i] += x * w[i]` over one padded accumulator row — the innermost
+/// microkernel. `acc` and `w` have equal length, a multiple of
+/// [`OC_LANES`]; fixed-width chunks keep the loop branch-free and
+/// vectorizable.
+#[inline]
+fn axpy_lanes(acc: &mut [f32], x: f32, w: &[f32]) {
+    for (acc, w) in acc.chunks_exact_mut(OC_LANES).zip(w.chunks_exact(OC_LANES)) {
+        for (a, &wv) in acc.iter_mut().zip(w) {
+            *a += x * wv;
+        }
+    }
+}
+
+/// Blocked conv + bias + leaky ReLU, bit-identical to [`conv2d`]: per
+/// output element the accumulation is still `bias, then += x*w in (fy,
+/// fx, ci) order` — only the loop nest is rearranged so one weight row
+/// serves a whole block of output pixels.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_blocked_into(
+    x: &[f32],
+    ih: usize,
+    iw: usize,
+    pk: &PackedLayer,
+    pads: [usize; 4],
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    let [pt, pb, pl, pr] = pads;
+    let (size, stride, in_c, out_c, ocp) = (pk.size, pk.stride, pk.in_c, pk.out_c, pk.oc_pad);
+    if (ih + pt + pb).saturating_sub(size) / stride + 1 != oh
+        || (iw + pl + pr).saturating_sub(size) / stride + 1 != ow
+    {
+        bail!("conv geometry mismatch: {ih}x{iw} + pads {pads:?} -/-> {oh}x{ow}");
+    }
+    if x.len() != ih * iw * in_c || out.len() != oh * ow * out_c {
+        bail!("conv buffer size mismatch");
+    }
+    let mut acc = vec![0.0f32; BLOCK_W * ocp];
+    for oy in 0..oh {
+        let y0 = (oy * stride) as isize - pt as isize;
+        let mut ox0 = 0;
+        while ox0 < ow {
+            let bw = BLOCK_W.min(ow - ox0);
+            for p in 0..bw {
+                acc[p * ocp..(p + 1) * ocp].copy_from_slice(&pk.b);
+            }
+            for fy in 0..size {
+                let y = y0 + fy as isize;
+                if y < 0 || y >= ih as isize {
+                    continue;
+                }
+                let row = &x[(y as usize * iw) * in_c..][..iw * in_c];
+                for fx in 0..size {
+                    // xx(p) = base + p*stride; valid p form one contiguous
+                    // range inside the block.
+                    let base = (ox0 * stride + fx) as isize - pl as isize;
+                    let p_lo = if base >= 0 {
+                        0
+                    } else {
+                        ((-base) as usize).div_ceil(stride)
+                    };
+                    let p_hi_raw = if base >= iw as isize {
+                        0
+                    } else {
+                        ((iw as isize - 1 - base) / stride as isize + 1) as usize
+                    };
+                    let p_hi = p_hi_raw.min(bw);
+                    if p_lo >= p_hi {
+                        continue;
+                    }
+                    let w_base = (fy * size + fx) * in_c;
+                    for ci in 0..in_c {
+                        let wrow = &pk.w[(w_base + ci) * ocp..][..ocp];
+                        for p in p_lo..p_hi {
+                            let xx = (base + (p * stride) as isize) as usize;
+                            let xv = row[xx * in_c + ci];
+                            axpy_lanes(&mut acc[p * ocp..][..ocp], xv, wrow);
+                        }
+                    }
+                }
+            }
+            // Fused store: leaky ReLU straight out of the accumulator,
+            // dropping the padded lanes.
+            for p in 0..bw {
+                let dst = (oy * ow + ox0 + p) * out_c;
+                for (o, &v) in out[dst..dst + out_c].iter_mut().zip(&acc[p * ocp..]) {
+                    *o = if v >= 0.0 { v } else { LEAKY_SLOPE * v };
+                }
+            }
+            ox0 += bw;
+        }
+    }
+    Ok(())
+}
+
+/// Execute one fused task on a contiguous batch of `n_tiles` same-class
+/// tiles (each `first.in_rect * in_c` dense HWC elements, back to back).
+/// Returns the contiguous batch of output tiles. This is the call shape
+/// the engine issues **once per tile class**: all tiles of a class share
+/// identical per-layer shapes and paddings (`TaskGeom::class_key`), so a
+/// single `task` describes the whole batch and each layer's weights stay
+/// hot across the batch — the same signature a batched PJRT executable
+/// will take.
+///
+/// Bit-identical to running [`run_task`] on each tile separately.
+pub fn run_task_batch_blocked(
+    net: &Network,
+    packed: &PackedWeights,
+    task: &TaskGeom,
+    batch: &[f32],
+    n_tiles: usize,
+) -> Result<Vec<f32>> {
+    let first = task.layers.first().expect("task has layers");
+    let in_c = net.layers[first.layer].in_c;
+    let tile_elems = first.in_rect.w() * first.in_rect.h() * in_c;
+    if batch.len() != n_tiles * tile_elems {
+        bail!(
+            "task ({},{}): batch has {} elems, geometry wants {n_tiles} x {}x{}x{}",
+            task.grid_i,
+            task.grid_j,
+            batch.len(),
+            first.in_rect.h(),
+            first.in_rect.w(),
+            in_c
+        );
+    }
+    // Layer 0 reads straight from the caller's buffer — no upfront copy of
+    // the (potentially large) gathered batch.
+    let mut x: Option<Vec<f32>> = None;
+    let mut x_stride = tile_elems;
+    for lg in &task.layers {
+        let src: &[f32] = x.as_deref().unwrap_or(batch);
+        let spec = &net.layers[lg.layer];
+        let (ih, iw) = (lg.in_rect.h(), lg.in_rect.w());
+        let (oh, ow) = (lg.out_rect.h(), lg.out_rect.w());
+        let out_stride = oh * ow * spec.out_c;
+        let mut next = vec![0.0f32; n_tiles * out_stride];
+        match spec.kind {
+            LayerKind::Conv { .. } => {
+                let pk = packed.layers[lg.layer]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("layer {} has no packed weights", lg.layer))?;
+                for t in 0..n_tiles {
+                    conv2d_blocked_into(
+                        &src[t * x_stride..][..x_stride],
+                        ih,
+                        iw,
+                        pk,
+                        [lg.pad.top, lg.pad.bottom, lg.pad.left, lg.pad.right],
+                        oh,
+                        ow,
+                        &mut next[t * out_stride..][..out_stride],
+                    )?;
+                }
+            }
+            LayerKind::MaxPool { size, stride } => {
+                if lg.pad.any() {
+                    bail!("layer {}: padded max-pool regions are not plannable", lg.layer);
+                }
+                for t in 0..n_tiles {
+                    let tile = &src[t * x_stride..][..x_stride];
+                    let o = maxpool2d(tile, ih, iw, spec.in_c, size, stride, oh, ow)?;
+                    next[t * out_stride..][..out_stride].copy_from_slice(&o);
+                }
+            }
+        }
+        x = Some(next);
+        x_stride = out_stride;
+    }
+    // `first()` above guarantees at least one layer, so `x` is set.
+    Ok(x.expect("task has layers"))
+}
+
+/// Single-tile convenience wrapper over [`run_task_batch_blocked`] —
+/// bit-identical to [`run_task`], just faster.
+pub fn run_task_blocked(
+    net: &Network,
+    packed: &PackedWeights,
+    task: &TaskGeom,
+    tile: &[f32],
+) -> Result<Vec<f32>> {
+    run_task_batch_blocked(net, packed, task, tile, 1)
 }
 
 /// Explicit-padding conv + bias + leaky ReLU over a dense HWC tile.
@@ -288,6 +569,119 @@ mod tests {
         let weights = gen_network_weights(&net, WEIGHT_SEED);
         let plan = plan_group(&net, 0, 2, 1, 1).unwrap();
         let err = run_task(&net, &weights, &plan.tasks[0], &[0.0; 3])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("elems"), "{err}");
+    }
+
+    #[test]
+    fn packing_pads_lanes_and_preserves_values() {
+        let net = tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = pack_weights(&net, &weights);
+        assert!(packed.layers[1].is_none(), "pool has no weights");
+        for (l, pk) in packed.layers.iter().enumerate() {
+            let Some(pk) = pk else { continue };
+            let lw = weights[l].as_ref().unwrap();
+            assert_eq!(pk.oc_pad % OC_LANES, 0);
+            assert!(pk.oc_pad >= pk.out_c && pk.oc_pad < pk.out_c + OC_LANES);
+            let rows = pk.size * pk.size * pk.in_c;
+            for r in 0..rows {
+                let packed_row = &pk.w[r * pk.oc_pad..][..pk.oc_pad];
+                assert_eq!(
+                    &packed_row[..pk.out_c],
+                    &lw.w[r * pk.out_c..(r + 1) * pk.out_c]
+                );
+                assert!(packed_row[pk.out_c..].iter().all(|&v| v == 0.0));
+            }
+            assert_eq!(&pk.b[..pk.out_c], &lw.b[..]);
+        }
+    }
+
+    #[test]
+    fn blocked_task_is_bit_identical_to_scalar_task() {
+        // Every tile of a 3x3 tiling — corners, edges, center, so all pad
+        // combinations — through the blocked path must equal the scalar
+        // path bit for bit.
+        let net = tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = pack_weights(&net, &weights);
+        let image = crate::data::gen_image(17, net.in_w, net.in_h, net.in_c);
+        let in_map = crate::engine::FeatureMap {
+            h: net.in_h,
+            w: net.in_w,
+            c: net.in_c,
+            data: image,
+        };
+        let plan = plan_group(&net, 0, net.n_layers() - 1, 3, 3).unwrap();
+        for task in &plan.tasks {
+            let tile = in_map.gather(&task.input_rect());
+            let scalar = run_task(&net, &weights, task, &tile).unwrap();
+            let blocked = run_task_blocked(&net, &packed, task, &tile).unwrap();
+            assert_eq!(
+                scalar, blocked,
+                "task ({},{}) diverged",
+                task.grid_i, task.grid_j
+            );
+        }
+    }
+
+    #[test]
+    fn batched_blocked_equals_per_tile_blocked() {
+        // Gathering all tiles of one class into a contiguous batch and
+        // issuing one call must equal per-tile calls exactly.
+        let net = tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = pack_weights(&net, &weights);
+        let image = crate::data::gen_image(23, net.in_w, net.in_h, net.in_c);
+        let in_map = crate::engine::FeatureMap {
+            h: net.in_h,
+            w: net.in_w,
+            c: net.in_c,
+            data: image,
+        };
+        // A 4x4 grid has multi-member classes (e.g. the two interior
+        // top-edge tiles share shape and padding).
+        let plan = plan_group(&net, 0, net.n_layers() - 1, 4, 4).unwrap();
+        let mut by_class: std::collections::HashMap<_, Vec<&TaskGeom>> =
+            std::collections::HashMap::new();
+        for t in &plan.tasks {
+            by_class.entry(t.class_key()).or_default().push(t);
+        }
+        let tasks = by_class.into_values().max_by_key(|v| v.len()).unwrap();
+        assert!(tasks.len() > 1, "want a real batch");
+        let mut batch = Vec::new();
+        for t in &tasks {
+            batch.extend_from_slice(&in_map.gather(&t.input_rect()));
+        }
+        let out = run_task_batch_blocked(&net, &packed, tasks[0], &batch, tasks.len()).unwrap();
+        let out_stride = out.len() / tasks.len();
+        for (i, t) in tasks.iter().enumerate() {
+            let single =
+                run_task_blocked(&net, &packed, t, &in_map.gather(&t.input_rect())).unwrap();
+            assert_eq!(&out[i * out_stride..][..out_stride], &single[..]);
+        }
+    }
+
+    #[test]
+    fn blocked_full_forward_matches_scalar_oracle_bit_exact() {
+        let net = tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = pack_weights(&net, &weights);
+        let image = crate::data::gen_image(29, net.in_w, net.in_h, net.in_c);
+        let oracle = run_full(&net, &weights, &image).unwrap();
+        let plan = plan_group(&net, 0, net.n_layers() - 1, 1, 1).unwrap();
+        let blocked = run_task_blocked(&net, &packed, &plan.tasks[0], &image).unwrap();
+        assert_eq!(blocked, oracle);
+    }
+
+    #[test]
+    fn batch_size_mismatch_is_a_clear_error() {
+        let net = tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = pack_weights(&net, &weights);
+        let plan = plan_group(&net, 0, 2, 1, 1).unwrap();
+        let err = run_task_batch_blocked(&net, &packed, &plan.tasks[0], &[0.0; 7], 2)
             .unwrap_err()
             .to_string();
         assert!(err.contains("elems"), "{err}");

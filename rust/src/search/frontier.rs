@@ -227,6 +227,28 @@ impl<'a> SwapAwarePick<'a> {
 /// for limits below the no-swap floor, the point with the minimal predicted
 /// swap stall at the limit (ties broken by cost proxy, then frontier
 /// order). Returns `None` only for an empty frontier.
+///
+/// ```
+/// use mafat::network::{yolov2::yolov2_16, MIB};
+/// use mafat::predictor::PredictorParams;
+/// use mafat::search::{frontier, pick_for_limit_swap_aware};
+/// use mafat::simulate::SimOptions;
+///
+/// let net = yolov2_16();
+/// let points = frontier(&net, 2, 3, &PredictorParams::default()).unwrap();
+/// let opts = SimOptions::default();
+/// // A generous budget: the pick fits without predicted swapping.
+/// let pick = pick_for_limit_swap_aware(&net, &points, 256 * MIB, &opts)
+///     .unwrap()
+///     .expect("non-empty frontier");
+/// assert!(pick.swap().is_none());
+/// // Below the no-swap floor the pick degrades to least predicted stall
+/// // instead of failing.
+/// let tight = pick_for_limit_swap_aware(&net, &points, MIB, &opts)
+///     .unwrap()
+///     .expect("non-empty frontier");
+/// assert!(tight.swap().is_some());
+/// ```
 pub fn pick_for_limit_swap_aware<'a>(
     net: &Network,
     points: &'a [FrontierPoint],

@@ -31,6 +31,7 @@ fn yolo48_configs() -> Vec<MultiConfig> {
         "3x3/8/2x2".parse().unwrap(),        // paper 2-group shape
         "2x2/4/2x2/12/2x2".parse().unwrap(), // k = 3 groups
         "3v3/8/2x2".parse().unwrap(),        // variable (balanced) top group
+        "4x4/4/2x2".parse().unwrap(),        // shallow 4x4 group: multi-tile classes
     ]
 }
 
@@ -155,6 +156,60 @@ fn genuinely_uneven_boundaries_execute_and_verify() {
     let err = engine.verify(&image).unwrap();
     assert_eq!(err, 0.0);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batched_infer_is_byte_identical_to_sequential() {
+    // Intra-worker batching (one executor call per tile class over the
+    // gathered tiles of the whole image batch) must be invisible: for a
+    // k-group AND a variable (balanced) config, infer_batch over several
+    // images equals per-image infer byte for byte — including batch = 1.
+    for config in ["2x2/4/2x2/12/2x2", "3v3/8/2x2"] {
+        let mut engine = Engine::load(yolo48_bundle(), config.parse().unwrap()).unwrap();
+        let images: Vec<Vec<f32>> = (0..3).map(|i| engine.synthetic_image(50 + i)).collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let batched = engine.infer_batch(&refs).unwrap();
+        assert_eq!(batched.len(), images.len());
+        for (i, image) in images.iter().enumerate() {
+            let (seq, stats) = engine.infer(image).unwrap();
+            assert_eq!(batched[i].0.data, seq.data, "{config}: image {i} diverged");
+            assert_eq!(batched[i].1.tasks, stats.tasks);
+        }
+        // Batch of one through the same path.
+        let one = engine.infer_batch(&refs[..1]).unwrap();
+        assert_eq!(one[0].0.data, batched[0].0.data, "{config}: batch=1 diverged");
+    }
+}
+
+#[test]
+fn class_batching_collapses_executor_calls() {
+    // One inference issues one executor call per distinct tile class. On a
+    // deeply fused group every tile position is its own class (each
+    // corner/edge/center has a unique pad signature), so collapse needs a
+    // grid with repeated interior positions: `4x4/4/2x2`'s shallow top
+    // group runs 16 tasks in 9 classes (20 tasks vs 13 classes overall —
+    // cross-checked by the numpy port).
+    let mut engine = Engine::load(yolo48_bundle(), "4x4/4/2x2".parse().unwrap()).unwrap();
+    let image = engine.synthetic_image(5);
+    let (_, stats) = engine.infer(&image).unwrap();
+    let calls = engine.metrics.exec_calls.get();
+    let tasks = engine.metrics.tasks_executed.get();
+    assert_eq!(stats.exec_calls as u64, calls);
+    assert_eq!(tasks, 20);
+    assert!(
+        calls < tasks,
+        "batching must issue fewer executor calls ({calls}) than tasks ({tasks})"
+    );
+    // Distinct classes (n_executables minus the untiled oracle) == calls.
+    assert_eq!(calls as usize, engine.n_executables() - 1);
+    let class_total: u64 = engine
+        .metrics
+        .class_tiles
+        .snapshot()
+        .iter()
+        .map(|(_, n)| n)
+        .sum();
+    assert_eq!(class_total, tasks, "class counters must cover every task");
 }
 
 #[test]

@@ -5,12 +5,13 @@
 //! the seed, and re-running with that seed reproduces the case exactly.
 
 use mafat::data::SplitMix64;
-use mafat::engine::FeatureMap;
+use mafat::engine::{gen_network_weights, FeatureMap, WEIGHT_SEED};
 use mafat::ftp::{balance_spans, down_extent, plan_group, plan_group_from_bounds, Rect};
 use mafat::network::{LayerKind, Network, MIB};
 use mafat::plan::{plan_config, MafatConfig};
 use mafat::predictor::{predict_mem, PredictorParams};
 use mafat::reuse::{reuse_analysis, schedule_order};
+use mafat::runtime::reference;
 use mafat::search::get_config;
 
 const CASES: u64 = 60;
@@ -28,28 +29,43 @@ fn cases(n: u64, f: impl Fn(&mut SplitMix64)) {
 }
 
 /// A random conv/maxpool prefix with valid (even, large-enough) dims.
-fn random_network(rng: &mut SplitMix64) -> Network {
+/// All sizes are knobs so geometry props can range wide while *executing*
+/// props stay debug-build fast ([`random_small_network`]).
+#[allow(clippy::too_many_arguments)]
+fn random_network_sized(
+    rng: &mut SplitMix64,
+    layer_spread: usize,
+    max_pools: usize,
+    filter_shift_base: usize,
+    filter_shift_spread: usize,
+    wh_base: usize,
+    wh_spread: usize,
+) -> Network {
     let mut ops = Vec::new();
-    let n_layers = 2 + rng.next_below(8);
+    let n_layers = 2 + rng.next_below(layer_spread);
     let mut pools = 0;
     for _ in 0..n_layers {
-        // Bias toward convs; at most 3 pools to keep maps >= 8.
-        if pools < 3 && rng.next_below(4) == 0 {
+        // Bias toward convs; cap pools so maps stay large enough.
+        if pools < max_pools && rng.next_below(4) == 0 {
             ops.push(LayerKind::MaxPool { size: 2, stride: 2 });
             pools += 1;
         } else {
             let size = if rng.next_below(3) == 0 { 1 } else { 3 };
             ops.push(LayerKind::Conv {
-                filters: 1 << (2 + rng.next_below(4)),
+                filters: 1 << (filter_shift_base + rng.next_below(filter_shift_spread)),
                 size,
                 stride: 1,
                 pad: size / 2,
             });
         }
     }
-    // Input extent: multiple of 8 so 3 pools stay even.
-    let wh = 8 * (8 + rng.next_below(9)); // 64..136
+    // Input extent: multiple of 8 so the pools stay even.
+    let wh = 8 * (wh_base + rng.next_below(wh_spread));
     Network::from_ops("prop", wh, wh, 3, &ops)
+}
+
+fn random_network(rng: &mut SplitMix64) -> Network {
+    random_network_sized(rng, 8, 3, 2, 4, 8, 9) // 64..136, filters 4..32
 }
 
 fn random_config(rng: &mut SplitMix64, net: &Network) -> MafatConfig {
@@ -293,6 +309,111 @@ fn prop_tiling_rects_cover_map_disjointly() {
         }
         // Boundaries recovered from the plan are the ones we asked for.
         assert_eq!(g.bounds(), (xs, ys));
+    });
+}
+
+/// A small random conv/pool net that keeps *executing* property tests fast
+/// in debug builds (the geometry props above never run convs; the batched
+/// execution prop below does).
+fn random_small_network(rng: &mut SplitMix64) -> Network {
+    random_network_sized(rng, 4, 2, 1, 3, 1, 3) // 8..24, filters 2..8
+}
+
+#[test]
+fn prop_class_batched_blocked_execution_matches_scalar_sequential() {
+    // The tentpole equivalence: grouping tiles by shape class — across an
+    // arbitrary rect partition AND an arbitrary image batch — gathering
+    // each class into one contiguous buffer, and executing it with a
+    // single blocked-executor call per class must reproduce the scalar
+    // per-tile sequential path byte for byte. Covers batch = 1 and uneven
+    // (variable-style) boundary grids; pools included.
+    cases(25, |rng| {
+        let net = random_small_network(rng);
+        let bottom = net.n_layers() - 1;
+        let (w, h, _) = net.out_shape(bottom);
+        let xs = random_bounds(rng, w, 4);
+        let ys = random_bounds(rng, h, 4);
+        let g = plan_group_from_bounds(&net, 0, bottom, &xs, &ys).unwrap();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = reference::pack_weights(&net, &weights);
+        let n_images = 1 + rng.next_below(3);
+        let images: Vec<Vec<f32>> = (0..n_images)
+            .map(|i| mafat::data::gen_image(9000 + i as u64, net.in_w, net.in_h, net.in_c))
+            .collect();
+        let (ow, oh, oc) = net.out_shape(bottom);
+
+        // Scalar sequential reference: per image, per task.
+        let mut expected: Vec<FeatureMap> = Vec::new();
+        for image in &images {
+            let input = FeatureMap {
+                h: net.in_h,
+                w: net.in_w,
+                c: net.in_c,
+                data: image.clone(),
+            };
+            let mut out_map = FeatureMap::zeros(oh, ow, oc);
+            for task in &g.tasks {
+                let tile = input.gather(&task.input_rect());
+                let out = reference::run_task(&net, &weights, task, &tile).unwrap();
+                out_map.scatter(&task.output_rect(), &out);
+            }
+            expected.push(out_map);
+        }
+
+        // Class-batched blocked path: one executor call per class over
+        // the (image x task) tiles of that class.
+        let inputs: Vec<FeatureMap> = images
+            .iter()
+            .map(|image| FeatureMap {
+                h: net.in_h,
+                w: net.in_w,
+                c: net.in_c,
+                data: image.clone(),
+            })
+            .collect();
+        let mut got: Vec<FeatureMap> =
+            (0..n_images).map(|_| FeatureMap::zeros(oh, ow, oc)).collect();
+        let mut class_order = Vec::new();
+        let mut by_class: std::collections::HashMap<String, Vec<usize>> =
+            std::collections::HashMap::new();
+        for (ix, task) in g.tasks.iter().enumerate() {
+            let key = task.class_key().short_name();
+            by_class
+                .entry(key.clone())
+                .or_insert_with(|| {
+                    class_order.push(key);
+                    Vec::new()
+                })
+                .push(ix);
+        }
+        for key in &class_order {
+            let ixs = &by_class[key];
+            let mut batch = Vec::new();
+            let mut pairs = Vec::new();
+            for (img_i, input) in inputs.iter().enumerate() {
+                for &ix in ixs {
+                    batch.extend_from_slice(&input.gather(&g.tasks[ix].input_rect()));
+                    pairs.push((img_i, ix));
+                }
+            }
+            let out = reference::run_task_batch_blocked(
+                &net,
+                &packed,
+                &g.tasks[ixs[0]],
+                &batch,
+                pairs.len(),
+            )
+            .unwrap();
+            let stride = out.len() / pairs.len();
+            for (slot, &(img_i, ix)) in pairs.iter().enumerate() {
+                let rect = g.tasks[ix].output_rect();
+                got[img_i].scatter(&rect, &out[slot * stride..][..stride]);
+            }
+        }
+
+        for (e, g2) in expected.iter().zip(&got) {
+            assert_eq!(e.data, g2.data, "batched blocked != scalar sequential");
+        }
     });
 }
 
