@@ -438,9 +438,17 @@ def class_key(task):
     return tuple(sig)
 
 
+PACK_WEIGHTS_CALLS = 0  # mirrors reference::pack_weights_calls (test counter)
+
+
 def pack_weights(layers, weights):
     """reference::pack_weights: zero-pad the out_c axis to an OC_LANES
-    multiple; same (fy, fx, ci)-major row order, values untouched."""
+    multiple; same (fy, fx, ci)-major row order, values untouched.
+
+    Called once per engine_shared() — the Rust engine packs once per
+    bundle and every reconfigure reuses the shared PackedWeights."""
+    global PACK_WEIGHTS_CALLS
+    PACK_WEIGHTS_CALLS += 1
     packed = []
     for spec, lw in zip(layers, weights):
         if lw is None:
@@ -526,10 +534,17 @@ def run_task_blocked(layers, packed, task, tile):
 
 
 def infer_batched(layers, weights, groups, images):
+    """engine::infer_batch with a throwaway weight stage (packs on every
+    call — fine for one-shot tests; engines share a stage via
+    engine_shared/engine_with_shared below, like the Rust EngineShared)."""
+    return infer_batched_packed(layers, pack_weights(layers, weights), groups, images)
+
+
+def infer_batched_packed(layers, packed, groups, images):
     """engine::infer_batch: per group, gather every (image, task) tile of a
     shape class and execute the class in ONE blocked call, then scatter
-    back per image; merge and re-tile at every cut."""
-    packed = pack_weights(layers, weights)
+    back per image; merge and re-tile at every cut. Weights arrive
+    pre-packed (the shared weight stage) and are never repacked here."""
     inps = list(images)
     for tasks in groups:
         bottom = tasks[0].layers[-1].layer
@@ -585,3 +600,46 @@ def infer(layers, weights, groups, image_hwc):
             out_map[y0:y1, x0:x1, :] = out
         inp = out_map
     return inp
+
+# ------------------------------------- engine load/plan split (engine.rs)
+
+
+def engine_shared(layers):
+    """engine::EngineShared — the config-independent *weight stage*:
+    weights generated and packed exactly once per bundle, shared by every
+    engine and every reconfigure."""
+    weights = gen_network_weights(layers)
+    return {
+        'layers': layers,
+        'weights': weights,
+        'packed': pack_weights(layers, weights),
+    }
+
+
+def engine_with_shared(shared, config_str):
+    """engine::Engine::with_shared — the cheap per-config *plan stage*:
+    only group geometry is built; the weight stage is reused."""
+    return {
+        'shared': shared,
+        'config': config_str,
+        'groups': plan_multi(shared['layers'], config_str),
+    }
+
+
+def engine_load(layers, config_str):
+    """engine::Engine::load — weight stage + plan stage."""
+    return engine_with_shared(engine_shared(layers), config_str)
+
+
+def engine_reconfigure(engine, config_str):
+    """engine::Engine::reconfigure — hot-swap the config by rebuilding ONLY
+    the plan stage; packed weights are untouched (no pack_weights call)."""
+    engine['groups'] = plan_multi(engine['shared']['layers'], config_str)
+    engine['config'] = config_str
+
+
+def engine_infer_batched(engine, images):
+    """engine::Engine::infer_batch on a load/plan-split engine."""
+    shared = engine['shared']
+    return infer_batched_packed(
+        shared['layers'], shared['packed'], engine['groups'], images)

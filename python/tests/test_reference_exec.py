@@ -25,11 +25,16 @@ Pure numpy — no jax required. Run: pytest python/tests/test_reference_exec.py
 
 import numpy as np
 
+import _reference_port as port
 from _reference_port import (
     MIB,
     balance_spans,
     class_key,
     conv,
+    engine_infer_batched,
+    engine_load,
+    engine_reconfigure,
+    engine_with_shared,
     gather,
     gen_image,
     gen_network_weights,
@@ -218,6 +223,43 @@ def test_batched_infer_bit_identical_to_sequential_k_group_and_variable():
             assert np.array_equal(e, g), cfg
         one = infer_batched(layers, weights, groups, images[:1])
         assert np.array_equal(one[0], expected[0]), cfg
+
+
+def test_reconfigure_then_infer_matches_fresh_load_k_group_and_variable():
+    # The PR 5 load/plan split: an engine hot-swapped onto another config
+    # (plan stage only, shared weight stage) must produce bit-identical
+    # output to a freshly loaded engine of that config — for a k-group cut
+    # AND a variable (TvT) config.
+    layers = tiny_layers()
+    img = gen_image(31, 16, 16, 3).reshape(16, 16, 3)
+    packs_before = port.PACK_WEIGHTS_CALLS
+    eng = engine_load(layers, "2x2/NoCut")
+    assert port.PACK_WEIGHTS_CALLS - packs_before == 1, "load packs once"
+    packs_loaded = port.PACK_WEIGHTS_CALLS
+    for cfg in ["2x2/1/2x2", "3v3/NoCut"]:
+        engine_reconfigure(eng, cfg)
+        assert eng['config'] == cfg
+        got = engine_infer_batched(eng, [img])[0]
+        fresh = engine_load(layers, cfg)  # its own weight stage: packs once
+        want = engine_infer_batched(fresh, [img])[0]
+        assert np.array_equal(got, want), cfg
+    # Only the two fresh loads packed; reconfigure itself never does.
+    assert port.PACK_WEIGHTS_CALLS - packs_loaded == 2
+
+
+def test_shared_weight_stage_packs_once_across_engines():
+    # Two engines on one shared stage (the worker-pool shape) pack once
+    # total, and agree bit for bit with each other.
+    layers = tiny_layers()
+    img = gen_image(37, 16, 16, 3).reshape(16, 16, 3)
+    packs_before = port.PACK_WEIGHTS_CALLS
+    shared = port.engine_shared(layers)
+    a = engine_with_shared(shared, "2x2/NoCut")
+    b = engine_with_shared(shared, "2x2/1/2x2")
+    assert port.PACK_WEIGHTS_CALLS - packs_before == 1
+    out_a = engine_infer_batched(a, [img])[0]
+    out_b = engine_infer_batched(b, [img])[0]
+    assert np.array_equal(out_a, out_b)
 
 
 def test_batched_infer_on_uneven_balanced_boundaries():

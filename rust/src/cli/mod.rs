@@ -62,8 +62,17 @@ Real execution (against `make artifacts` or an `export-bundle` dir):
              variable `TvT` tilings included)
   serve     --addr 127.0.0.1:7077 --config 3x3/8/2x2 [--artifacts DIR]
             [--workers N]                           engine pool size
+            [--mem-limit-mb N]                      memory budget override
+                                                    (precedence: flag >
+                                                    MAFAT_MEM_LIMIT_MB env >
+                                                    --limit-mb > probed host
+                                                    limit)
             (no --config: auto-picked among the manifest's compiled
-             configs from the probed memory budget, or from --limit-mb)
+             configs for the budget. A known budget arms the memory
+             governor: per-wake batch drain derived from the predictor,
+             live RSS sampled each wake, and — without --config — the
+             active config steps down/up the bundle's footprint ladder
+             under sustained pressure/headroom)
 
 Common flags:
   --cfg FILE        Darknet-style .cfg network (default: built-in YOLOv2-16)
@@ -581,34 +590,25 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(workers) = args.get_u64("workers")? {
         server_cfg.workers = workers.max(1) as usize;
     }
-    // Without --config, auto-pick among the *compiled* configurations of
-    // the artifact manifest against the probed (or --limit-mb overridden)
-    // memory budget, predicting on the manifest's own (served) network.
-    let config = if args.has("config") {
-        args.multi_config()?
-    } else {
-        let params = args.predictor_params()?;
-        let limit = match args.get_u64("limit-mb")? {
-            Some(mb) => mb * MIB,
-            None => crate::coordinator::probe_memory_limit_bytes().context(
-                "cannot probe the memory budget on this host; pass --config or --limit-mb",
-            )?,
-        };
-        let manifest = crate::runtime::Manifest::load(&PathBuf::from(artifacts))?;
-        let mnet = manifest.sole_network()?;
-        let (config, predicted) =
-            crate::coordinator::auto_config_from_manifest(mnet, limit, &params)?;
-        eprintln!(
-            "auto-selected {config} (of {} compiled configs) for a {:.0} MB budget \
-             (predicted {:.1} MB on {})",
-            mnet.configs.len(),
-            limit as f64 / MIB as f64,
-            predicted as f64 / MIB as f64,
-            mnet.name
-        );
-        config
-    };
-    crate::coordinator::serve_cli(artifacts, config, addr, server_cfg)
+    // Parse --config first so a malformed TvT string fails before any
+    // artifact or budget work.
+    let config = args.has("config").then(|| args.multi_config()).transpose()?;
+    // The memory budget the governor owns: --mem-limit-mb, then the
+    // MAFAT_MEM_LIMIT_MB env, then the legacy --limit-mb, then the probed
+    // host limit. `serve_cli` auto-picks the config (no --config) and arms
+    // the governor whenever a budget is known.
+    let budget = crate::coordinator::resolve_budget_bytes(
+        args.get_u64("mem-limit-mb")?,
+        args.get_u64("limit-mb")?,
+    )?;
+    crate::coordinator::serve_cli(
+        artifacts,
+        config,
+        addr,
+        server_cfg,
+        budget,
+        &args.predictor_params()?,
+    )
 }
 
 #[cfg(test)]

@@ -1,0 +1,474 @@
+//! The **memory governor**: the serving loop's runtime owner of the memory
+//! budget.
+//!
+//! MAFAT's compile-time story picks a fused/tiled configuration whose
+//! *predicted* footprint fits a probed limit — but a budget is not a
+//! constant. Co-located processes grow, cgroup limits get re-written, and
+//! the prediction itself carries a fitted bias. The governor closes the
+//! loop at runtime, re-deciding two things at every worker wake-up:
+//!
+//! * **Drain** — how many queued requests a worker may batch into one
+//!   engine call. Derived from the predictor instead of operator
+//!   arithmetic: `clamp(budget_headroom / activation_bytes, 1,
+//!   max_batch/workers)`, where `budget_headroom` is the budget minus the
+//!   active configuration's resident base (weights + bias) and
+//!   `activation_bytes` is the Alg. 1 peak tile footprint — the marginal
+//!   memory of one more in-flight image ([`derive_drain`]).
+//! * **Configuration** — which rung of the [`ConfigLadder`] (the Pareto
+//!   frontier ordered by predicted footprint) the pool serves. Live RSS is
+//!   sampled each wake ([`sample_rss_bytes`]); *sustained* residency above
+//!   the high watermark steps the active config down a rung (smaller
+//!   footprint, more tiling overhead), sustained residency below the low
+//!   watermark steps back up — but only onto a rung whose prediction still
+//!   fits the budget. Hysteresis (a streak of consecutive wakes, reset on
+//!   any reading between the watermarks) keeps the governor silent while
+//!   memory is steady, so a steady-state governed server is byte-identical
+//!   to the static path. Workers swap engines only at batch boundaries via
+//!   the cheap [`crate::engine::Engine::reconfigure`] plan stage.
+//!
+//! State machine (per [`MemoryGovernor::on_wake`], shared by the pool):
+//!
+//! ```text
+//!            rss > high*budget for W wakes            rss < low*budget for W wakes
+//!                AND rung > 0                       AND rung+1 fits the budget
+//!   [rung r] ────────────────────────> [rung r-1]  ────────────────────> [rung r+1]
+//!       ^                                                                    |
+//!       '───── any wake with low <= rss <= high resets both streaks ─────────'
+//! ```
+
+use crate::plan::MultiConfig;
+use crate::predictor::{predict_multi, PredictorParams};
+use crate::runtime::ManifestNetwork;
+use crate::search::planner::TASK_MACS_EQUIV;
+use crate::search::{ConfigLadder, LadderRung};
+use anyhow::{Context, Result};
+use std::sync::Mutex;
+
+/// Governor tuning knobs (fractions of the budget, streak length).
+#[derive(Debug, Clone, Copy)]
+pub struct GovernorConfig {
+    /// RSS above `high_watermark * budget` counts as memory pressure.
+    pub high_watermark: f64,
+    /// RSS below `low_watermark * budget` counts as reclaimable headroom.
+    pub low_watermark: f64,
+    /// Consecutive pressured (resp. headroomed) wakes before a step — the
+    /// hysteresis that keeps steady-state serving identical to the static
+    /// path.
+    pub hysteresis_wakes: u32,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            high_watermark: 0.85,
+            low_watermark: 0.60,
+            hysteresis_wakes: 3,
+        }
+    }
+}
+
+/// Predictor-derived per-wake batch drain:
+/// `clamp(budget_headroom / predicted_per_image, 1, max(1, max_batch/workers))`.
+///
+/// A drained batch executes as ONE class-batched engine call, so its peak
+/// activation memory is ~`drain x predicted_per_image` on top of the
+/// resident base — this inverts that relation. Guarantees: result is
+/// `>= 1`, `<= max(1, max_batch / workers)`, and monotone non-decreasing
+/// in `budget_headroom` (pinned by `tests/prop_invariants.rs`). A zero
+/// `predicted_per_image` (no prediction available) falls back to the cap.
+pub fn derive_drain(
+    budget_headroom: u64,
+    predicted_per_image: u64,
+    max_batch: usize,
+    workers: usize,
+) -> usize {
+    let cap = (max_batch / workers.max(1)).max(1);
+    if predicted_per_image == 0 {
+        return cap;
+    }
+    usize::try_from(budget_headroom / predicted_per_image).unwrap_or(usize::MAX).clamp(1, cap)
+}
+
+/// Sample this process's live resident set, in bytes. Prefers
+/// `/proc/self/status` `VmRSS` (unit-explicit kB); falls back to the
+/// second field of `/proc/self/statm` (pages, assumed 4 KiB — the common
+/// Linux page size). `None` when procfs is unavailable (non-Linux), in
+/// which case the governor holds its rung and keeps the derived drain.
+pub fn sample_rss_bytes() -> Option<u64> {
+    if let Ok(text) = std::fs::read_to_string("/proc/self/status") {
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("VmRSS:") {
+                if let Some(kb) = rest.split_whitespace().next().and_then(|v| v.parse::<u64>().ok())
+                {
+                    return Some(kb * 1024);
+                }
+            }
+        }
+    }
+    if let Ok(text) = std::fs::read_to_string("/proc/self/statm") {
+        if let Some(pages) = text.split_whitespace().nth(1).and_then(|v| v.parse::<u64>().ok()) {
+            return Some(pages * 4096);
+        }
+    }
+    None
+}
+
+/// What a wake's state transition was (logged by the worker that woke).
+#[derive(Debug, Clone)]
+pub enum GovernorAction {
+    /// No transition this wake.
+    Hold,
+    /// Sustained pressure: stepped to the next-smaller-footprint rung.
+    StepDown { from: MultiConfig, to: MultiConfig },
+    /// Sustained headroom: stepped back toward a cheaper configuration.
+    StepUp { from: MultiConfig, to: MultiConfig },
+}
+
+/// The governor's verdict for one worker wake-up.
+#[derive(Debug, Clone)]
+pub struct WakeDecision {
+    /// How many requests this worker may drain into one engine call.
+    pub drain: usize,
+    /// Active ladder rung index after any transition.
+    pub active: usize,
+    /// The configuration workers should serve with; a worker whose engine
+    /// differs reconfigures at the batch boundary.
+    pub config: MultiConfig,
+    /// The RSS sample driving this wake (`None` off-procfs).
+    pub rss_bytes: Option<u64>,
+    pub action: GovernorAction,
+}
+
+/// Internal hysteresis state, shared by every worker of the pool.
+#[derive(Debug)]
+struct GovState {
+    active: usize,
+    pressure_streak: u32,
+    headroom_streak: u32,
+}
+
+/// The memory governor: owns the budget and the config ladder, and is
+/// consulted by every worker at every wake (cheap: one procfs read + one
+/// short mutex). One instance per server, shared across the pool so the
+/// hysteresis streaks and the active rung are global.
+pub struct MemoryGovernor {
+    budget_bytes: u64,
+    ladder: ConfigLadder,
+    max_batch: usize,
+    workers: usize,
+    cfg: GovernorConfig,
+    state: Mutex<GovState>,
+}
+
+impl MemoryGovernor {
+    /// Govern `ladder` under `budget_bytes`, starting at `start_rung`
+    /// (clamped into the ladder). `max_batch`/`workers` bound the derived
+    /// drain exactly like the static path's `max_batch / workers`.
+    pub fn new(
+        ladder: ConfigLadder,
+        budget_bytes: u64,
+        start_rung: usize,
+        max_batch: usize,
+        workers: usize,
+        cfg: GovernorConfig,
+    ) -> Result<MemoryGovernor> {
+        if ladder.is_empty() {
+            anyhow::bail!("memory governor needs a non-empty config ladder");
+        }
+        if budget_bytes == 0 {
+            anyhow::bail!("memory governor needs a non-zero budget");
+        }
+        let active = start_rung.min(ladder.len() - 1);
+        Ok(MemoryGovernor {
+            budget_bytes,
+            ladder,
+            max_batch,
+            workers,
+            cfg,
+            state: Mutex::new(GovState {
+                active,
+                pressure_streak: 0,
+                headroom_streak: 0,
+            }),
+        })
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    pub fn ladder(&self) -> &ConfigLadder {
+        &self.ladder
+    }
+
+    /// The configuration the pool is currently governed onto.
+    pub fn active_config(&self) -> MultiConfig {
+        let st = self.state.lock().unwrap();
+        self.ladder.rungs()[st.active].config.clone()
+    }
+
+    /// One wake of the state machine (module docs): update the pressure /
+    /// headroom streaks from `rss_bytes`, possibly step the active rung,
+    /// and derive this wake's drain from the (post-step) active rung's
+    /// prediction.
+    pub fn on_wake(&self, rss_bytes: Option<u64>) -> WakeDecision {
+        let rungs = self.ladder.rungs();
+        let mut st = self.state.lock().unwrap();
+        let mut action = GovernorAction::Hold;
+        if let Some(rss) = rss_bytes {
+            let high = (self.budget_bytes as f64 * self.cfg.high_watermark) as u64;
+            let low = (self.budget_bytes as f64 * self.cfg.low_watermark) as u64;
+            if rss > high {
+                st.pressure_streak += 1;
+                st.headroom_streak = 0;
+                if st.pressure_streak >= self.cfg.hysteresis_wakes && st.active > 0 {
+                    let from = rungs[st.active].config.clone();
+                    st.active -= 1;
+                    st.pressure_streak = 0;
+                    action = GovernorAction::StepDown {
+                        from,
+                        to: rungs[st.active].config.clone(),
+                    };
+                }
+            } else if rss < low {
+                st.headroom_streak += 1;
+                st.pressure_streak = 0;
+                let next_fits = st.active + 1 < rungs.len()
+                    && rungs[st.active + 1].predicted_bytes < self.budget_bytes;
+                if st.headroom_streak >= self.cfg.hysteresis_wakes && next_fits {
+                    let from = rungs[st.active].config.clone();
+                    st.active += 1;
+                    st.headroom_streak = 0;
+                    action = GovernorAction::StepUp {
+                        from,
+                        to: rungs[st.active].config.clone(),
+                    };
+                }
+            } else {
+                // Between the watermarks: memory is steady; any step needs
+                // a fresh uninterrupted streak.
+                st.pressure_streak = 0;
+                st.headroom_streak = 0;
+            }
+        }
+        let rung = &rungs[st.active];
+        let base = rung.predicted_bytes.saturating_sub(rung.activation_bytes);
+        let headroom = self.budget_bytes.saturating_sub(base);
+        let drain = derive_drain(headroom, rung.activation_bytes, self.max_batch, self.workers);
+        WakeDecision {
+            drain,
+            active: st.active,
+            config: rung.config.clone(),
+            rss_bytes,
+            action,
+        }
+    }
+}
+
+/// Build the [`ConfigLadder`] of a bundle's *compiled* configurations —
+/// the rungs a governed server may actually serve. Predictions run against
+/// the manifest's own network; entries the predictor or planner cannot
+/// evaluate are skipped (same rule as the auto-pick).
+pub fn ladder_from_manifest(
+    mnet: &ManifestNetwork,
+    params: &PredictorParams,
+) -> Result<ConfigLadder> {
+    let net = mnet.network();
+    let mut entries = Vec::with_capacity(mnet.configs.len());
+    for entry in &mnet.configs {
+        let Ok(pred) = predict_multi(&net, &entry.config, params) else {
+            continue;
+        };
+        let Ok(plan) = crate::plan::plan_multi(&net, &entry.config) else {
+            continue;
+        };
+        entries.push(LadderRung {
+            config: entry.config.clone(),
+            predicted_bytes: pred.total_bytes,
+            activation_bytes: pred.activation_bytes(),
+            cost_proxy: plan.total_macs(&net) + plan.n_tasks() as u64 * TASK_MACS_EQUIV,
+        });
+    }
+    let ladder = ConfigLadder::new(entries);
+    if ladder.is_empty() {
+        anyhow::bail!("manifest has no predictable configurations to govern");
+    }
+    Ok(ladder)
+}
+
+/// Resolve the budget a governed `serve` runs under, in precedence order:
+/// an explicit `--mem-limit-mb`, the `MAFAT_MEM_LIMIT_MB` environment
+/// variable, the legacy `--limit-mb`, then the probed host limit
+/// ([`super::probe_memory_limit_bytes`]).
+pub fn resolve_budget_bytes(
+    mem_limit_mb: Option<u64>,
+    legacy_limit_mb: Option<u64>,
+) -> Result<Option<u64>> {
+    use crate::network::MIB;
+    if let Some(mb) = mem_limit_mb {
+        return Ok(Some(mb * MIB));
+    }
+    if let Ok(v) = std::env::var("MAFAT_MEM_LIMIT_MB") {
+        let mb: u64 = v
+            .trim()
+            .parse()
+            .with_context(|| format!("MAFAT_MEM_LIMIT_MB={v:?} is not a number of MiB"))?;
+        return Ok(Some(mb * MIB));
+    }
+    if let Some(mb) = legacy_limit_mb {
+        return Ok(Some(mb * MIB));
+    }
+    Ok(super::probe_memory_limit_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rung(config: &str, predicted: u64, activation: u64, proxy: u64) -> LadderRung {
+        LadderRung {
+            config: config.parse().unwrap(),
+            predicted_bytes: predicted,
+            activation_bytes: activation,
+            cost_proxy: proxy,
+        }
+    }
+
+    /// 3-rung ladder: 40 / 70 / 100 predicted bytes.
+    fn test_ladder() -> ConfigLadder {
+        ConfigLadder::new(vec![
+            rung("3x3/8/2x2", 40, 10, 30),
+            rung("2x2/NoCut", 70, 40, 20),
+            rung("1x1/NoCut", 100, 70, 10),
+        ])
+    }
+
+    fn governor(budget: u64, start: usize) -> MemoryGovernor {
+        let cfg = GovernorConfig::default();
+        MemoryGovernor::new(test_ladder(), budget, start, 8, 1, cfg).unwrap()
+    }
+
+    #[test]
+    fn drain_bounds_and_fallbacks() {
+        assert_eq!(derive_drain(0, 10, 8, 1), 1);
+        assert_eq!(derive_drain(1 << 40, 10, 8, 1), 8);
+        assert_eq!(derive_drain(35, 10, 8, 1), 3);
+        // Pool split: cap is max_batch / workers.
+        assert_eq!(derive_drain(1 << 40, 10, 8, 4), 2);
+        assert_eq!(derive_drain(1 << 40, 10, 3, 8), 1);
+        // Degenerate prediction: legacy cap.
+        assert_eq!(derive_drain(123, 0, 8, 2), 4);
+    }
+
+    #[test]
+    fn steady_memory_never_steps() {
+        // Readings between the watermarks (and missing readings) hold the
+        // rung forever — the byte-identity-to-static-path guarantee.
+        let g = governor(100, 1);
+        for rss in [70u64, 72, 75, 80, 84] {
+            let d = g.on_wake(Some(rss));
+            assert!(matches!(d.action, GovernorAction::Hold));
+            assert_eq!(d.active, 1);
+        }
+        let d = g.on_wake(None);
+        assert!(matches!(d.action, GovernorAction::Hold));
+        assert_eq!(d.active, 1);
+    }
+
+    #[test]
+    fn sustained_pressure_steps_down_with_hysteresis() {
+        let g = governor(100, 2);
+        // Two pressured wakes: not yet (hysteresis_wakes = 3).
+        for _ in 0..2 {
+            assert!(matches!(g.on_wake(Some(95)).action, GovernorAction::Hold));
+        }
+        // A steady wake resets the streak...
+        assert!(matches!(g.on_wake(Some(80)).action, GovernorAction::Hold));
+        for _ in 0..2 {
+            assert!(matches!(g.on_wake(Some(95)).action, GovernorAction::Hold));
+        }
+        // ...so the step lands on the 3rd consecutive pressured wake.
+        let d = g.on_wake(Some(95));
+        match d.action {
+            GovernorAction::StepDown { from, to } => {
+                assert_eq!(from.to_string(), "1x1/NoCut");
+                assert_eq!(to.to_string(), "2x2/NoCut");
+            }
+            other => panic!("expected step down, got {other:?}"),
+        }
+        assert_eq!(d.active, 1);
+        assert_eq!(g.active_config().to_string(), "2x2/NoCut");
+    }
+
+    #[test]
+    fn pressure_at_the_floor_holds_without_stepping() {
+        let g = governor(100, 0);
+        for _ in 0..10 {
+            let d = g.on_wake(Some(99));
+            assert!(matches!(d.action, GovernorAction::Hold));
+            assert_eq!(d.active, 0);
+            // Drain derives from the rung's prediction, not from the RSS
+            // sample: rung 0 has base 30, activation 10 => (100-30)/10.
+            assert_eq!(d.drain, 7);
+        }
+    }
+
+    #[test]
+    fn sustained_headroom_steps_up_only_onto_fitting_rungs() {
+        // Budget 80: rung 1 (70) fits, rung 2 (100) never does.
+        let g = governor(80, 0);
+        for _ in 0..2 {
+            assert!(matches!(g.on_wake(Some(10)).action, GovernorAction::Hold));
+        }
+        let d = g.on_wake(Some(10));
+        assert!(matches!(d.action, GovernorAction::StepUp { .. }), "{:?}", d.action);
+        assert_eq!(d.active, 1);
+        // Rung 2 predicts 100 >= 80: headroom can accrue forever, no step.
+        for _ in 0..10 {
+            let d = g.on_wake(Some(10));
+            assert!(matches!(d.action, GovernorAction::Hold));
+            assert_eq!(d.active, 1);
+        }
+    }
+
+    #[test]
+    fn drain_follows_the_active_rung() {
+        // Rung 1: predicted 70, activation 40 => base 30; budget 150 =>
+        // headroom 120 => drain 3 (120/40), capped at 8.
+        let g = governor(150, 1);
+        assert_eq!(g.on_wake(None).drain, 3);
+        // After stepping down to rung 0 (predicted 40, activation 10 =>
+        // base 30; headroom 120 => 12, capped at 8).
+        for _ in 0..3 {
+            g.on_wake(Some(149));
+        }
+        assert_eq!(g.active_config().to_string(), "3x3/8/2x2");
+        assert_eq!(g.on_wake(None).drain, 8);
+    }
+
+    #[test]
+    fn rss_sampling_works_on_linux() {
+        if let Some(rss) = sample_rss_bytes() {
+            // The test binary is comfortably over a megabyte resident.
+            assert!(rss > 1 << 20, "rss {rss}");
+        }
+    }
+
+    #[test]
+    fn resolve_budget_precedence() {
+        use crate::network::MIB;
+        // Explicit flag wins over everything (env untouched: avoid
+        // cross-test races by only exercising the non-env paths here).
+        assert_eq!(
+            resolve_budget_bytes(Some(64), Some(32)).unwrap(),
+            Some(64 * MIB)
+        );
+    }
+
+    #[test]
+    fn empty_ladder_and_zero_budget_rejected() {
+        let cfg = GovernorConfig::default();
+        assert!(MemoryGovernor::new(ConfigLadder::default(), 100, 0, 8, 1, cfg).is_err());
+        assert!(MemoryGovernor::new(test_ladder(), 0, 0, 8, 1, cfg).is_err());
+    }
+}

@@ -9,14 +9,19 @@
 //!                                              v  when full)
 //!                              worker pool (N threads, each owns an Engine)
 //!                                - workers race for the shared queue
-//!                                - each drains up to `max_batch / N` per
-//!                                  wake (bursts spread across the pool)
+//!                                - per wake, each drains a batch: the
+//!                                  governor-derived drain when serving
+//!                                  governed, else `max_batch / N`
 //!                                - the drained batch runs as ONE
 //!                                  `Engine::infer_batch` call: tiles are
 //!                                  class-batched across requests, one
 //!                                  executor call per tile class
-//!                                              |
-//!                                              v
+//!                                              |            ^
+//!                                              |   MemoryGovernor (shared):
+//!                                              |   budget + config ladder,
+//!                                              |   RSS sampled per wake,
+//!                                              |   engine hot-swap at batch
+//!                                              v   boundaries
 //!                                   per-request response channels
 //! ```
 //!
@@ -25,7 +30,10 @@
 //! shared factory, so PJRT handles never cross threads, and all workers
 //! record into one shared [`Metrics`] registry. Engines are deterministic,
 //! so responses are byte-identical regardless of which worker serves a
-//! request.
+//! request — and regardless of batch drain, so the [`governor`]'s adaptive
+//! drain is response-invisible too; only a ladder step (config swap under
+//! sustained memory pressure) changes outputs, and hysteresis guarantees
+//! that never happens while memory is steady.
 //!
 //! Protocol: JSON-lines. Requests:
 //!   {"cmd":"infer","id":"r1","seed":123}            synthetic image
@@ -35,10 +43,20 @@
 //!   {"cmd":"ping"}                                  liveness
 //! Responses: {"id","ok",...} one line each.
 
-use crate::engine::Engine;
+pub mod governor;
+
+pub use governor::{
+    derive_drain, ladder_from_manifest, resolve_budget_bytes, sample_rss_bytes, GovernorAction,
+    GovernorConfig, MemoryGovernor, WakeDecision,
+};
+
+use crate::engine::{Engine, EngineShared};
 use crate::jsonlite::Json;
 use crate::metrics::Metrics;
+use crate::network::MIB;
 use crate::plan::MultiConfig;
+use crate::predictor::{predict_multi, PredictorParams};
+use crate::search::{ConfigLadder, LadderRung};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -61,17 +79,21 @@ struct Request {
 pub struct ServerConfig {
     /// Bounded queue depth; senders beyond this are rejected (backpressure).
     pub queue_depth: usize,
-    /// Batch budget per wake-up, shared across the pool: each worker
-    /// drains up to `max(1, max_batch / workers)` requests at once, so a
-    /// burst spreads across engines instead of funneling into whichever
-    /// worker wins the queue lock.
+    /// The **hard cap** on the per-wake batch, shared across the pool: no
+    /// worker ever drains more than `max(1, max_batch / workers)` requests
+    /// at once, so a burst spreads across engines instead of funneling
+    /// into whichever worker wins the queue lock.
     ///
-    /// A drained batch executes as **one** class-batched engine call, so a
-    /// worker's peak activation memory scales with its per-wake drain
-    /// (roughly `drain x` the predicted single-image footprint the
-    /// auto-pick fits to the budget). On a genuinely memory-constrained
-    /// deployment, size `max_batch / workers` so that multiple stays
-    /// inside the budget — batching trades memory for throughput.
+    /// This is a cap only — how many requests a wake *actually* drains is
+    /// derived by the [`governor`] from the memory budget and the active
+    /// configuration's predicted per-image activation footprint
+    /// ([`governor::derive_drain`]): a drained batch executes as **one**
+    /// class-batched engine call, and the governor sizes it so the batch's
+    /// predicted peak stays inside the budget. Operators no longer
+    /// hand-size drain against per-image predictions; set `max_batch` for
+    /// throughput/latency policy (largest batch ever worth forming) and
+    /// let the budget bound memory. Ungoverned servers (no budget, e.g.
+    /// [`Server::start`] in tests) fall back to draining the cap itself.
     pub max_batch: usize,
     /// Worker pool size: engines sharing the request queue. Values < 1 are
     /// treated as 1.
@@ -128,6 +150,23 @@ impl Server {
     where
         F: Fn() -> Result<Engine> + Send + Sync + 'static,
     {
+        Self::start_governed(factory, addr, cfg, None)
+    }
+
+    /// [`Server::start`] with an optional shared [`MemoryGovernor`]: every
+    /// worker consults it once per wake for the derived drain and the
+    /// active ladder rung, hot-swapping its engine (plan stage only) at
+    /// the batch boundary when the rung stepped. `None` serves statically
+    /// with the fixed `max_batch / workers` drain.
+    pub fn start_governed<F>(
+        factory: F,
+        addr: &str,
+        cfg: ServerConfig,
+        governor: Option<Arc<MemoryGovernor>>,
+    ) -> Result<Server>
+    where
+        F: Fn() -> Result<Engine> + Send + Sync + 'static,
+    {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local_addr = listener.local_addr()?;
         let workers = cfg.workers.max(1);
@@ -144,6 +183,7 @@ impl Server {
             let ready_tx = ready_tx.clone();
             let worker_shutdown = shutdown.clone();
             let metrics = metrics.clone();
+            let governor = governor.clone();
             std::thread::Builder::new()
                 .name(format!("mafat-worker-{wi}"))
                 .spawn(move || {
@@ -166,7 +206,7 @@ impl Server {
                         engine.n_executables()
                     );
                     let _ = ready_tx.send(Ok(dims));
-                    worker_loop(engine, rx, cfg, worker_shutdown);
+                    worker_loop(engine, rx, cfg, worker_shutdown, governor);
                 })?;
         }
         drop(ready_tx);
@@ -265,10 +305,21 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Request>>>,
     cfg: ServerConfig,
     shutdown: Arc<AtomicBool>,
+    governor: Option<Arc<MemoryGovernor>>,
 ) {
-    // Per-wake drain: the batch budget divided across the pool, so one
-    // worker cannot swallow a whole burst while its peers idle.
-    let drain = (cfg.max_batch / cfg.workers.max(1)).max(1);
+    // Ungoverned fallback drain: the batch cap divided across the pool, so
+    // one worker cannot swallow a whole burst while its peers idle. A
+    // governed worker derives its drain from the budget instead (same
+    // cap), seeded here from the predictor alone (no RSS sample yet) and
+    // refreshed after every wake *outside* the queue lock — procfs I/O and
+    // the governor mutex never extend the pool's shared critical section,
+    // and one wake of drain staleness is harmless against the governor's
+    // multi-wake hysteresis.
+    let fixed_drain = (cfg.max_batch / cfg.workers.max(1)).max(1);
+    let mut drain = match &governor {
+        Some(g) => g.on_wake(None).drain,
+        None => fixed_drain,
+    };
     while !shutdown.load(Ordering::Relaxed) {
         // Race for the queue: block for the first request, then drain a
         // batch while still holding the lock (idle workers park on the
@@ -288,6 +339,54 @@ fn worker_loop(
             }
             batch
         };
+        // Consult the governor at the batch boundary (the only place
+        // engines may swap), with the queue lock released: sample live
+        // RSS, record the observability gauges, log a ladder step once
+        // (only the wake that transitioned carries the action), update the
+        // next wake's drain, and hot-swap this worker's engine when its
+        // config lags the active rung — a plan-stage-only rebuild on the
+        // shared weight stage, so the swap is cheap and the queue keeps
+        // moving.
+        if let Some(g) = &governor {
+            let d = g.on_wake(sample_rss_bytes());
+            drain = d.drain;
+            let mb = |b: u64| b as f64 / MIB as f64;
+            engine.metrics.rss_bytes.set(d.rss_bytes.unwrap_or(0));
+            engine.metrics.governor_drain.set(d.drain as u64);
+            match &d.action {
+                GovernorAction::Hold => {}
+                GovernorAction::StepDown { from, to } => {
+                    engine.metrics.governor_swaps_down.inc();
+                    eprintln!(
+                        "governor: step down {from} -> {to} (rss {:.1} MB sustained above \
+                         the high watermark of a {:.1} MB budget; drain {})",
+                        mb(d.rss_bytes.unwrap_or(0)),
+                        mb(g.budget_bytes()),
+                        d.drain
+                    );
+                }
+                GovernorAction::StepUp { from, to } => {
+                    engine.metrics.governor_swaps_up.inc();
+                    eprintln!(
+                        "governor: step up {from} -> {to} (rss {:.1} MB sustained below \
+                         the low watermark of a {:.1} MB budget; drain {})",
+                        mb(d.rss_bytes.unwrap_or(0)),
+                        mb(g.budget_bytes()),
+                        d.drain
+                    );
+                }
+            }
+            if engine.config() != &d.config {
+                match engine.reconfigure(&d.config) {
+                    Ok(()) => eprintln!("worker: engine reconfigured to {}", d.config),
+                    Err(e) => eprintln!(
+                        "worker: reconfigure to {} failed ({e:#}); serving {} unchanged",
+                        d.config,
+                        engine.config()
+                    ),
+                }
+            }
+        }
         // Split out requests whose image cannot run BEFORE batching, using
         // the engine's own validation predicate (the same check
         // `infer_batch` enforces — one rule, no drift): each gets its
@@ -430,15 +529,106 @@ fn process_line(line: &str, queue: &SyncSender<Request>, shared: &ServerShared) 
     }
 }
 
-/// CLI entry: load the engine pool and serve until killed (`mafat serve`).
+/// CLI entry: load the bundle's weight stage **once**, resolve the serving
+/// configuration and the memory governor, then serve until killed
+/// (`mafat serve`).
+///
+/// * `config: Some(_)` pins the shape — the governor (if a budget is
+///   known) only derives the drain, never swaps configs.
+/// * `config: None` auto-picks from the bundle's compiled set for the
+///   budget and hands the governor the full manifest ladder to walk.
+/// * `budget_bytes: None` with an explicit config serves statically (the
+///   pre-governor behaviour); with no config it is an error — there is
+///   nothing to pick against.
 pub fn serve_cli(
     artifacts: &str,
-    config: MultiConfig,
+    config: Option<MultiConfig>,
     addr: &str,
     cfg: ServerConfig,
+    budget_bytes: Option<u64>,
+    params: &PredictorParams,
 ) -> Result<()> {
-    let artifacts = artifacts.to_string();
-    let server = Server::start(move || Engine::load(&artifacts, config.clone()), addr, cfg)?;
+    // The weight stage runs once here; every worker's engine and every
+    // governor hot-swap share it (weights packed once per bundle).
+    let shared = EngineShared::load(artifacts)?;
+    let workers = cfg.workers.max(1);
+    let (initial, gov) = match (config, budget_bytes) {
+        (Some(c), None) => (c, None),
+        (Some(c), Some(budget)) => {
+            // Operator-pinned shape: a single-rung ladder governs drain
+            // only. An unpredictable shape (degenerate net) serves static.
+            let gov = match predict_multi(shared.network(), &c, params) {
+                Ok(pred) => {
+                    let ladder = ConfigLadder::new(vec![LadderRung {
+                        config: c.clone(),
+                        predicted_bytes: pred.total_bytes,
+                        activation_bytes: pred.activation_bytes(),
+                        cost_proxy: 0,
+                    }]);
+                    Some(MemoryGovernor::new(
+                        ladder,
+                        budget,
+                        0,
+                        cfg.max_batch,
+                        workers,
+                        GovernorConfig::default(),
+                    )?)
+                }
+                Err(_) => None,
+            };
+            (c, gov)
+        }
+        (None, None) => anyhow::bail!(
+            "cannot probe the memory budget on this host; pass --config or --mem-limit-mb"
+        ),
+        (None, Some(budget)) => {
+            let mnet = shared.manifest_network();
+            let (picked, predicted) = auto_config_from_manifest(mnet, budget, params)?;
+            eprintln!(
+                "auto-selected {picked} (of {} compiled configs) for a {:.0} MB budget \
+                 (predicted {:.1} MB on {})",
+                mnet.configs.len(),
+                budget as f64 / MIB as f64,
+                predicted as f64 / MIB as f64,
+                mnet.name
+            );
+            let ladder = ladder_from_manifest(mnet, params)?;
+            // Start the governor at the picked rung. Below the no-swap
+            // floor the least-stall pick can be absent from the ladder
+            // (dominated at its byte level); start at the floor rung then.
+            let (start, initial) = match ladder.position_of(&picked) {
+                Some(ix) => (ix, picked),
+                None => {
+                    let ix = ladder.rung_for_limit(budget).unwrap_or(0);
+                    (ix, ladder.rungs()[ix].config.clone())
+                }
+            };
+            let gov = MemoryGovernor::new(
+                ladder,
+                budget,
+                start,
+                cfg.max_batch,
+                workers,
+                GovernorConfig::default(),
+            )?;
+            eprintln!(
+                "governor: budget {:.1} MB, ladder of {} rung(s), starting at rung {} ({})",
+                budget as f64 / MIB as f64,
+                gov.ladder().len(),
+                start,
+                initial
+            );
+            (initial, Some(gov))
+        }
+    };
+    let factory_shared = shared.clone();
+    let factory_config = initial;
+    let server = Server::start_governed(
+        move || Engine::with_shared(factory_shared.clone(), factory_config.clone()),
+        addr,
+        cfg,
+        gov.map(Arc::new),
+    )?;
     server.run()
 }
 

@@ -48,7 +48,7 @@ use crate::plan::MultiConfig;
 use crate::runtime::{reference, xla, BackendKind, ClassEntry, Manifest, ManifestNetwork, Runtime};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -163,8 +163,12 @@ struct GroupExec {
 }
 
 /// The executor behind the engine, per the bundle's `backend` field.
+/// Weight data lives in the shared weight stage ([`EngineShared`]); the
+/// executor holds only per-config / per-thread state.
 enum Executor {
-    /// AOT-compiled HLO per tile class, executed through PJRT.
+    /// AOT-compiled HLO per tile class, executed through PJRT. The runtime
+    /// (executable cache) persists across reconfigures; the weight
+    /// literals are per-config views built from the shared weights.
     Pjrt {
         runtime: Runtime,
         /// Per-group weight literals, in the executables' argument order.
@@ -173,24 +177,148 @@ enum Executor {
         full_path: Option<String>,
     },
     /// Pure-Rust reference execution from task geometry: the blocked,
-    /// batch-aware executor for the tiled path, the scalar executor as the
-    /// untiled oracle (so every `verify` cross-checks blocked against
-    /// scalar arithmetic bit for bit). `packed` is the per-layer
-    /// preconverted-weights cache, built once here rather than per tile.
-    Reference {
-        weights: Vec<Option<LayerWeights>>,
-        packed: reference::PackedWeights,
-        has_oracle: bool,
-    },
+    /// batch-aware executor for the tiled path (packed weights shared via
+    /// [`EngineShared`]), the scalar executor as the untiled oracle (so
+    /// every `verify` cross-checks blocked against scalar arithmetic bit
+    /// for bit).
+    Reference { has_oracle: bool },
 }
 
-/// The engine: a loaded MAFAT configuration ready to serve images.
-pub struct Engine {
+/// The config-independent **weight stage** of a loaded bundle: manifest,
+/// resolved network, deterministic weights, and (reference backend) the
+/// blocked executor's preconverted [`reference::PackedWeights`]. Held in an
+/// `Arc` and shared by every [`Engine`] of a worker pool *and* every
+/// [`Engine::reconfigure`]: weights are generated and packed **exactly once
+/// per bundle** (pinned by [`reference::pack_weights_calls`]), so
+/// hot-swapping a configuration never re-reads or re-packs the bundle.
+pub struct EngineShared {
+    artifacts_dir: PathBuf,
+    mnet: ManifestNetwork,
     net: Network,
+    weights: Vec<Option<LayerWeights>>,
+    /// Blocked-executor weights (reference backend only; the PJRT backend
+    /// builds per-group literals from `weights` instead).
+    packed: Option<reference::PackedWeights>,
+}
+
+impl EngineShared {
+    /// Load a bundle's sole network and run the weight stage once.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Arc<EngineShared>> {
+        let artifacts_dir = artifacts_dir.as_ref();
+        let manifest = Manifest::load(artifacts_dir)?;
+        let mnet = manifest.sole_network()?.clone();
+        Self::from_manifest_network(artifacts_dir, mnet)
+    }
+
+    /// Weight stage for a specific manifest network.
+    pub fn from_manifest_network(
+        artifacts_dir: &Path,
+        mnet: ManifestNetwork,
+    ) -> Result<Arc<EngineShared>> {
+        let net = mnet.network();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = match mnet.backend {
+            BackendKind::Reference => Some(reference::pack_weights(&net, &weights)),
+            BackendKind::Pjrt => None,
+        };
+        Ok(Arc::new(EngineShared {
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            mnet,
+            net,
+            weights,
+            packed,
+        }))
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn manifest_network(&self) -> &ManifestNetwork {
+        &self.mnet
+    }
+}
+
+/// The engine: a loaded MAFAT configuration ready to serve images. The
+/// heavy, config-independent weight stage lives in [`EngineShared`]; the
+/// per-config *plan stage* (group geometry, class batches) is cheap to
+/// rebuild, which is what makes [`Engine::reconfigure`] a hot swap.
+pub struct Engine {
+    shared: Arc<EngineShared>,
     config: MultiConfig,
     groups: Vec<GroupExec>,
     executor: Executor,
     pub metrics: Arc<Metrics>,
+}
+
+/// The cheap per-config **plan stage**: resolve one configuration's group
+/// geometry (manifest boundaries → tile rects → checkerboard class
+/// batches) against a loaded weight stage. Pure geometry — no weight work,
+/// no disk reads beyond what [`EngineShared`] already holds.
+fn plan_stage(shared: &EngineShared, config: &MultiConfig) -> Result<Vec<GroupExec>> {
+    // Clear error first if the config was never compiled, then the
+    // stricter geometry cross-check.
+    let entry = shared.mnet.find_config(config)?;
+    shared
+        .mnet
+        .verify_geometry(config)
+        .context("manifest geometry does not match the tiler - rebuild artifacts")?;
+    let net = &shared.net;
+
+    // Resolve each group's tile rects from the serialized boundaries
+    // (exact for variable tilings), falling back to the even grid for
+    // legacy bundles. `verify_geometry` above already proved that the
+    // manifest's boundaries and task list match a freshly planned
+    // configuration, and boundary resolution is deterministic in the
+    // bounds, so the resolved geometry needs no second per-task
+    // cross-check — only the class-table lookup.
+    let mut groups = Vec::with_capacity(entry.groups.len());
+    for (mg, &variant) in entry.groups.iter().zip(&config.variants) {
+        let plan = match (&mg.xs, &mg.ys) {
+            (Some(xs), Some(ys)) => plan_group_from_bounds(net, mg.top, mg.bottom, xs, ys)
+                .with_context(|| format!("group {}: resolving manifest boundaries", mg.gi))?,
+            // Legacy bundle without serialized boundaries: recompute
+            // them the way the group's variant dictates.
+            _ => match variant {
+                GroupVariant::Even => plan_group(net, mg.top, mg.bottom, mg.n, mg.m)
+                    .with_context(|| format!("group {}: resolving even grid", mg.gi))?,
+                GroupVariant::Balanced => plan_group_balanced_searched(net, mg.top, mg.bottom, mg.n)
+                    .map(|(p, _, _)| p)
+                    .with_context(|| format!("group {}: resolving balanced boundaries", mg.gi))?,
+            },
+        };
+        let mut class_of = Vec::with_capacity(plan.tasks.len());
+        for task in &plan.tasks {
+            let key = task.class_key().short_name();
+            if !mg.classes.contains_key(&key) {
+                bail!("group {}: class {key} missing from manifest", mg.gi);
+            }
+            class_of.push(key);
+        }
+        // Checkerboard (data-reuse) order: even parity first.
+        let mut order: Vec<usize> = (0..plan.tasks.len()).collect();
+        order.sort_by_key(|&ix| {
+            let t = &plan.tasks[ix];
+            ((t.grid_i + t.grid_j) % 2, t.grid_j, t.grid_i)
+        });
+        // Static per-group batching plan: tasks grouped by shape class,
+        // classes in first-occurrence (checkerboard) order.
+        let mut class_batches: Vec<(String, Vec<usize>)> = Vec::new();
+        for &ix in &order {
+            let key = &class_of[ix];
+            match class_batches.iter().position(|(k, _)| k == key) {
+                Some(p) => class_batches[p].1.push(ix),
+                None => class_batches.push((key.clone(), vec![ix])),
+            }
+        }
+        groups.push(GroupExec {
+            bottom: mg.bottom,
+            class_batches,
+            tasks: plan.tasks,
+            classes: mg.classes.clone(),
+        });
+    }
+    Ok(groups)
 }
 
 fn weight_literals(
@@ -207,6 +335,30 @@ fn weight_literals(
         out.push(Runtime::literal(&lw.b, &[lw.b.len()])?);
     }
     Ok(out)
+}
+
+/// The PJRT executor's per-config state: pre-compile every class
+/// executable of `entry` into the runtime's cache and build the per-group
+/// weight-literal views over the shared weights. One definition shared by
+/// [`Engine::with_shared`] and [`Engine::reconfigure`], so the load and
+/// hot-swap paths cannot drift.
+fn pjrt_config_state(
+    runtime: &mut Runtime,
+    entry: &crate::runtime::ConfigEntry,
+    weights: &[Option<LayerWeights>],
+) -> Result<Vec<Vec<xla::Literal>>> {
+    for group in &entry.groups {
+        for class in group.classes.values() {
+            runtime
+                .load(&class.path)
+                .with_context(|| format!("loading class {}", class.key))?;
+        }
+    }
+    entry
+        .groups
+        .iter()
+        .map(|g| weight_literals(weights, g.top, g.bottom))
+        .collect()
 }
 
 impl Engine {
@@ -243,110 +395,38 @@ impl Engine {
     /// # std::fs::remove_dir_all(&dir).ok();
     /// ```
     pub fn load(artifacts_dir: impl AsRef<Path>, config: MultiConfig) -> Result<Engine> {
-        let artifacts_dir = artifacts_dir.as_ref();
-        let manifest = Manifest::load(artifacts_dir)?;
-        let mnet = manifest.sole_network()?;
-        Self::load_network(artifacts_dir, mnet, config)
+        Self::with_shared(EngineShared::load(artifacts_dir)?, config)
     }
 
-    /// Load a specific manifest network.
+    /// Load a specific manifest network (runs its own weight stage; share
+    /// an [`EngineShared`] via [`Engine::with_shared`] to amortize it).
     pub fn load_network(
         artifacts_dir: &Path,
         mnet: &ManifestNetwork,
         config: MultiConfig,
     ) -> Result<Engine> {
-        // Clear error first if the config was never compiled, then the
-        // stricter geometry cross-check.
-        let entry = mnet.find_config(&config)?;
-        mnet.verify_geometry(&config)
-            .context("manifest geometry does not match the tiler - rebuild artifacts")?;
-        let net = mnet.network();
+        Self::with_shared(EngineShared::from_manifest_network(artifacts_dir, mnet.clone())?, config)
+    }
 
-        // Resolve each group's tile rects from the serialized boundaries
-        // (exact for variable tilings), falling back to the even grid for
-        // legacy bundles. `verify_geometry` above already proved that the
-        // manifest's boundaries and task list match a freshly planned
-        // configuration, and boundary resolution is deterministic in the
-        // bounds, so the resolved geometry needs no second per-task
-        // cross-check — only the class-table lookup.
-        let mut groups = Vec::with_capacity(entry.groups.len());
-        for (mg, &variant) in entry.groups.iter().zip(&config.variants) {
-            let plan = match (&mg.xs, &mg.ys) {
-                (Some(xs), Some(ys)) => plan_group_from_bounds(&net, mg.top, mg.bottom, xs, ys)
-                    .with_context(|| format!("group {}: resolving manifest boundaries", mg.gi))?,
-                // Legacy bundle without serialized boundaries: recompute
-                // them the way the group's variant dictates.
-                _ => match variant {
-                    GroupVariant::Even => plan_group(&net, mg.top, mg.bottom, mg.n, mg.m)
-                        .with_context(|| format!("group {}: resolving even grid", mg.gi))?,
-                    GroupVariant::Balanced => {
-                        plan_group_balanced_searched(&net, mg.top, mg.bottom, mg.n)
-                            .map(|(p, _, _)| p)
-                            .with_context(|| {
-                                format!("group {}: resolving balanced boundaries", mg.gi)
-                            })?
-                    }
-                },
-            };
-            let mut class_of = Vec::with_capacity(plan.tasks.len());
-            for task in &plan.tasks {
-                let key = task.class_key().short_name();
-                if !mg.classes.contains_key(&key) {
-                    bail!("group {}: class {key} missing from manifest", mg.gi);
-                }
-                class_of.push(key);
-            }
-            // Checkerboard (data-reuse) order: even parity first.
-            let mut order: Vec<usize> = (0..plan.tasks.len()).collect();
-            order.sort_by_key(|&ix| {
-                let t = &plan.tasks[ix];
-                ((t.grid_i + t.grid_j) % 2, t.grid_j, t.grid_i)
-            });
-            // Static per-group batching plan: tasks grouped by shape class,
-            // classes in first-occurrence (checkerboard) order.
-            let mut class_batches: Vec<(String, Vec<usize>)> = Vec::new();
-            for &ix in &order {
-                let key = &class_of[ix];
-                match class_batches.iter().position(|(k, _)| k == key) {
-                    Some(p) => class_batches[p].1.push(ix),
-                    None => class_batches.push((key.clone(), vec![ix])),
-                }
-            }
-            groups.push(GroupExec {
-                bottom: mg.bottom,
-                class_batches,
-                tasks: plan.tasks,
-                classes: mg.classes.clone(),
-            });
-        }
-
-        let weights = gen_network_weights(&net, WEIGHT_SEED);
-        let executor = match mnet.backend {
+    /// Build an engine for `config` on an already-loaded weight stage —
+    /// only the cheap plan stage runs. A worker pool calls this with one
+    /// shared `Arc` so [`reference::PackedWeights`] exist once per bundle,
+    /// not once per worker.
+    pub fn with_shared(shared: Arc<EngineShared>, config: MultiConfig) -> Result<Engine> {
+        let groups = plan_stage(&shared, &config)?;
+        let executor = match shared.mnet.backend {
             BackendKind::Reference => Executor::Reference {
-                packed: reference::pack_weights(&net, &weights),
-                weights,
-                has_oracle: mnet.full.is_some(),
+                has_oracle: shared.mnet.full.is_some(),
             },
             BackendKind::Pjrt => {
-                let mut runtime = Runtime::cpu(artifacts_dir)?;
-                // Pre-compile every class executable.
-                for group in &entry.groups {
-                    for class in group.classes.values() {
-                        runtime
-                            .load(&class.path)
-                            .with_context(|| format!("loading class {}", class.key))?;
-                    }
-                }
-                let group_weights = entry
-                    .groups
-                    .iter()
-                    .map(|g| weight_literals(&weights, g.top, g.bottom))
-                    .collect::<Result<Vec<_>>>()?;
-                let (full_weights, full_path) = match &mnet.full {
+                let entry = shared.mnet.find_config(&config)?;
+                let mut runtime = Runtime::cpu(&shared.artifacts_dir)?;
+                let group_weights = pjrt_config_state(&mut runtime, entry, &shared.weights)?;
+                let (full_weights, full_path) = match &shared.mnet.full {
                     Some(f) => {
                         runtime.load(&f.path)?;
                         (
-                            Some(weight_literals(&weights, 0, net.n_layers() - 1)?),
+                            Some(weight_literals(&shared.weights, 0, shared.net.n_layers() - 1)?),
                             Some(f.path.clone()),
                         )
                     }
@@ -361,7 +441,7 @@ impl Engine {
             }
         };
         Ok(Engine {
-            net,
+            shared,
             config,
             groups,
             executor,
@@ -369,8 +449,37 @@ impl Engine {
         })
     }
 
+    /// Hot-swap this engine onto another compiled configuration of the
+    /// same bundle. Re-runs **only the plan stage** (group geometry +
+    /// class batches; for PJRT also the per-group weight-literal views and
+    /// executable cache fill) — the weight stage is untouched, so nothing
+    /// is re-read from disk and [`reference::PackedWeights`] are reused
+    /// as-is. Output after a reconfigure is byte-identical to a fresh
+    /// [`Engine::load`] of the same configuration (pinned by
+    /// `tests/integration_engine.rs`). Metrics keep accumulating across
+    /// the swap. On error the engine is left serving its previous
+    /// configuration.
+    pub fn reconfigure(&mut self, config: &MultiConfig) -> Result<()> {
+        if &self.config == config {
+            return Ok(());
+        }
+        let groups = plan_stage(&self.shared, config)?;
+        if let Executor::Pjrt { runtime, group_weights, .. } = &mut self.executor {
+            let entry = self.shared.mnet.find_config(config)?;
+            *group_weights = pjrt_config_state(runtime, entry, &self.shared.weights)?;
+        }
+        self.groups = groups;
+        self.config = config.clone();
+        Ok(())
+    }
+
+    /// The shared weight stage behind this engine.
+    pub fn shared_state(&self) -> &Arc<EngineShared> {
+        &self.shared
+    }
+
     pub fn network(&self) -> &Network {
-        &self.net
+        &self.shared.net
     }
 
     pub fn config(&self) -> &MultiConfig {
@@ -392,13 +501,14 @@ impl Engine {
     /// Output shape (h, w, c) of the final group.
     pub fn output_shape(&self) -> (usize, usize, usize) {
         let bottom = self.groups.last().unwrap().bottom;
-        let (w, h, c) = self.net.out_shape(bottom);
+        let (w, h, c) = self.shared.net.out_shape(bottom);
         (h, w, c)
     }
 
     /// A deterministic synthetic input image (HWC).
     pub fn synthetic_image(&self, seed: u64) -> Vec<f32> {
-        data::gen_image(seed, self.net.in_w, self.net.in_h, self.net.in_c)
+        let net = &self.shared.net;
+        data::gen_image(seed, net.in_w, net.in_h, net.in_c)
     }
 
     /// Check an image buffer against the loaded network's input shape —
@@ -406,13 +516,14 @@ impl Engine {
     /// the serving loop can pre-filter a drained batch without duplicating
     /// (and risking drift from) the rule.
     pub fn validate_image(&self, image: &[f32]) -> Result<()> {
-        if image.len() != self.net.in_w * self.net.in_h * self.net.in_c {
+        let net = &self.shared.net;
+        if image.len() != net.in_w * net.in_h * net.in_c {
             bail!(
                 "image has {} elems, expected {}x{}x{}",
                 image.len(),
-                self.net.in_h,
-                self.net.in_w,
-                self.net.in_c
+                net.in_h,
+                net.in_w,
+                net.in_c
             );
         }
         Ok(())
@@ -443,18 +554,22 @@ impl Engine {
             self.validate_image(image)?;
         }
         let mut stats = vec![InferStats::default(); n];
+        let net = &self.shared.net;
+        // Blocked-executor weights from the shared weight stage (reference
+        // backend only), resolved once per batch.
+        let packed = self.shared.packed.as_ref();
         let mut inputs: Vec<FeatureMap> = images
             .iter()
             .map(|image| FeatureMap {
-                h: self.net.in_h,
-                w: self.net.in_w,
-                c: self.net.in_c,
+                h: net.in_h,
+                w: net.in_w,
+                c: net.in_c,
                 data: image.to_vec(),
             })
             .collect();
         for (gi, group) in self.groups.iter().enumerate() {
-            let bottom_spec = &self.net.layers[group.bottom];
-            let in_c = self.net.layers[group.tasks[0].layers[0].layer].in_c;
+            let bottom_spec = &net.layers[group.bottom];
+            let in_c = net.layers[group.tasks[0].layers[0].layer].in_c;
             let mut outputs: Vec<FeatureMap> = (0..n)
                 .map(|_| FeatureMap::zeros(bottom_spec.out_h, bottom_spec.out_w, bottom_spec.out_c))
                 .collect();
@@ -476,9 +591,9 @@ impl Engine {
                 // Execute: one call per class.
                 let te = Instant::now();
                 let out = match &mut self.executor {
-                    Executor::Reference { packed, .. } => reference::run_task_batch_blocked(
-                        &self.net,
-                        packed,
+                    Executor::Reference { .. } => reference::run_task_batch_blocked(
+                        net,
+                        packed.expect("reference backend packs weights in the weight stage"),
                         &group.tasks[ixs[0]],
                         &batch,
                         pairs.len(),
@@ -554,12 +669,13 @@ impl Engine {
 
     /// Run the untiled full-network oracle on the same image.
     pub fn infer_untiled(&mut self, image: &[f32]) -> Result<FeatureMap> {
+        let net = &self.shared.net;
         let out = match &mut self.executor {
             Executor::Pjrt { runtime, full_weights, full_path, .. } => {
                 let Some(path) = full_path.clone() else {
                     bail!("manifest has no full-network oracle (emit_full=false)");
                 };
-                let lit = Runtime::literal_hwc(image, self.net.in_h, self.net.in_w, self.net.in_c)?;
+                let lit = Runtime::literal_hwc(image, net.in_h, net.in_w, net.in_c)?;
                 let exe = runtime.load(&path)?;
                 let weights = full_weights.as_ref().unwrap();
                 let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + weights.len());
@@ -567,14 +683,14 @@ impl Engine {
                 args.extend(weights.iter());
                 exe.run_f32(&args)?
             }
-            Executor::Reference { weights, has_oracle, .. } => {
+            Executor::Reference { has_oracle } => {
                 // The oracle deliberately runs the *scalar* executor: every
                 // `verify` therefore cross-checks the blocked tiled path
                 // against the scalar arithmetic bit for bit.
                 if !*has_oracle {
                     bail!("manifest has no full-network oracle (emit_full=false)");
                 }
-                reference::run_full(&self.net, weights, image)?
+                reference::run_full(net, &self.shared.weights, image)?
             }
         };
         let (h, w, c) = self.output_shape();

@@ -20,11 +20,15 @@
 //!   inference engine ([`engine`] over [`runtime`]; k-group and
 //!   variable-tiling configs natively, through PJRT or the pure-Rust
 //!   reference executor [`runtime::reference`] — a scalar oracle plus a
-//!   blocked, class-batched fast path that stays bit-identical to it), and
-//!   the serving loop ([`coordinator`]: a worker pool of engines, each
-//!   drained request batch executed as one class-batched engine call,
-//!   auto-picking a config from the probed memory budget via the frontier
-//!   when none is given).
+//!   blocked, class-batched fast path that stays bit-identical to it; the
+//!   weight stage is loaded once per bundle in [`engine::EngineShared`]
+//!   and any compiled config is a cheap [`engine::Engine::reconfigure`]
+//!   away), and the serving loop ([`coordinator`]: a worker pool of
+//!   engines, each drained request batch executed as one class-batched
+//!   engine call, auto-picking a config from the probed memory budget via
+//!   the frontier when none is given, governed at runtime by
+//!   [`coordinator::governor`] — predictor-derived batch drain, live-RSS
+//!   adaptation down/up the footprint ladder).
 //!
 //! The end-to-end module map, the `TvT` configuration grammar, and the
 //! bundle/manifest format live in `docs/ARCHITECTURE.md`.

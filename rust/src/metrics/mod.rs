@@ -25,6 +25,20 @@ impl Counter {
     }
 }
 
+/// A last-value gauge (e.g. sampled RSS, the governor's current drain).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Fixed-bucket log-scale latency histogram (microsecond granularity,
 /// ~2 significant digits — plenty for serving percentiles).
 #[derive(Debug, Default)]
@@ -95,6 +109,16 @@ pub struct Metrics {
     pub exec_calls: Counter,
     /// Tiles executed per shape class.
     pub class_tiles: ClassCounters,
+    /// Live resident-set sample from the memory governor's last wake,
+    /// bytes (0 until a governed worker wakes).
+    pub rss_bytes: Gauge,
+    /// The governor-derived per-wake batch drain of the last wake (0 when
+    /// serving ungoverned with the fixed `max_batch / workers` drain).
+    pub governor_drain: Gauge,
+    /// Governor config swaps toward a smaller footprint (memory pressure).
+    pub governor_swaps_down: Counter,
+    /// Governor config swaps back toward a cheaper config (headroom).
+    pub governor_swaps_up: Counter,
     pub request_latency: Histogram,
     /// Per-executor-call latency (one sample per tile-class batch — real
     /// measured durations, so percentiles expose slow classes; per-tile
@@ -113,6 +137,13 @@ impl Metrics {
         kv.insert("bytes_out", self.bytes_out.get().to_string());
         kv.insert("errors", self.errors.get().to_string());
         kv.insert("exec_calls", self.exec_calls.get().to_string());
+        kv.insert("rss_bytes", self.rss_bytes.get().to_string());
+        kv.insert("governor_drain", self.governor_drain.get().to_string());
+        let governor_lines = format!(
+            "governor_swaps{{dir=down}} {}\ngovernor_swaps{{dir=up}} {}\n",
+            self.governor_swaps_down.get(),
+            self.governor_swaps_up.get()
+        );
         let class_lines: String = self
             .class_tiles
             .snapshot()
@@ -144,6 +175,7 @@ impl Metrics {
             .iter()
             .map(|(k, v)| format!("{k} {v}\n"))
             .collect::<String>();
+        out.push_str(&governor_lines);
         out.push_str(&class_lines);
         out
     }
@@ -181,6 +213,37 @@ mod tests {
         m.requests.add(3);
         let s = m.snapshot();
         assert!(s.contains("requests 3"));
+    }
+
+    #[test]
+    fn gauge_holds_last_value() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0);
+        g.set(42);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn snapshot_renders_governor_metrics() {
+        let m = Metrics::default();
+        // Present (zeroed) even before any governed wake, so dashboards
+        // and tests can rely on the lines existing.
+        let s = m.snapshot();
+        assert!(s.contains("rss_bytes 0"), "{s}");
+        assert!(s.contains("governor_drain 0"), "{s}");
+        assert!(s.contains("governor_swaps{dir=down} 0"), "{s}");
+        assert!(s.contains("governor_swaps{dir=up} 0"), "{s}");
+        m.rss_bytes.set(12_345_678);
+        m.governor_drain.set(3);
+        m.governor_swaps_down.inc();
+        m.governor_swaps_down.inc();
+        m.governor_swaps_up.inc();
+        let s = m.snapshot();
+        assert!(s.contains("rss_bytes 12345678"), "{s}");
+        assert!(s.contains("governor_drain 3"), "{s}");
+        assert!(s.contains("governor_swaps{dir=down} 2"), "{s}");
+        assert!(s.contains("governor_swaps{dir=up} 1"), "{s}");
     }
 
     #[test]

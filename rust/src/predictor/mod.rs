@@ -73,6 +73,16 @@ impl Prediction {
     pub fn total_mb(&self) -> f64 {
         self.total_bytes as f64 / MIB as f64
     }
+
+    /// The per-image *activation* share of the prediction: the peak tile
+    /// footprint (Alg. 1), the marginal cost of one more image in flight.
+    /// The rest of the prediction (`total - activation`) is the resident,
+    /// image-count-independent base (weights + bias): executing a batch of
+    /// `n` images peaks at roughly `base + n * activation`, which is the
+    /// relation the serving governor inverts to derive a batch drain.
+    pub fn activation_bytes(&self) -> u64 {
+        self.peak.tile_bytes
+    }
 }
 
 /// Paper Algorithm 1: predict the peak tile footprint (bytes, before

@@ -20,7 +20,7 @@
 //!   verification oracle.
 //! * **Blocked** ([`run_task_blocked`] / [`run_task_batch_blocked`]) — the
 //!   fast path the engine serves from. Tiles stay channels-last (HWC);
-//!   weights are repacked **once per `Engine::load`** into
+//!   weights are repacked **once per bundle** (`engine::EngineShared`) into
 //!   [`PackedWeights`] (output channels zero-padded to an [`OC_LANES`]
 //!   multiple so the innermost loop is a fixed-width SIMD-friendly
 //!   rank-1 update); the microkernel processes [`BLOCK_W`] output pixels
@@ -149,16 +149,39 @@ pub struct PackedLayer {
 }
 
 /// Preconverted weights for a whole network, keyed by absolute layer index
-/// (`None` for pools) — built **once per `Engine::load`** by
-/// [`pack_weights`] so the per-tile path never repacks.
+/// (`None` for pools) — built **once per bundle** by [`pack_weights`]
+/// inside the shared weight stage (`engine::EngineShared`), so neither the
+/// per-tile path nor a config hot-swap (`Engine::reconfigure`) ever
+/// repacks.
 pub struct PackedWeights {
     pub layers: Vec<Option<PackedLayer>>,
+}
+
+thread_local! {
+    /// Calls to [`pack_weights`] made by *this thread* — thread-local (not
+    /// a process-global atomic) so the pack-once-per-bundle pin in
+    /// `tests/integration_engine.rs` cannot race with other tests loading
+    /// engines concurrently. Packing always happens on the thread that
+    /// constructs the shared weight stage (`engine::EngineShared`), so a
+    /// single-threaded call sequence observes an exact count.
+    static PACK_WEIGHTS_CALLS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// The calling thread's lifetime [`pack_weights`] call count (see
+/// `PACK_WEIGHTS_CALLS`).
+pub fn pack_weights_calls() -> u64 {
+    PACK_WEIGHTS_CALLS.with(|c| c.get())
 }
 
 /// Repack [`crate::engine::gen_network_weights`] output into the blocked
 /// executor's layout. Pure data movement: no value changes, only zero
 /// padding of the `out_c` axis.
+///
+/// Called **once per bundle** by `engine::EngineShared` — every engine and
+/// every `Engine::reconfigure` on that bundle reuses the same
+/// [`PackedWeights`] behind an `Arc` (pinned via [`pack_weights_calls`]).
 pub fn pack_weights(net: &Network, weights: &[Option<LayerWeights>]) -> PackedWeights {
+    PACK_WEIGHTS_CALLS.with(|c| c.set(c.get() + 1));
     let layers = net
         .layers
         .iter()

@@ -28,7 +28,7 @@ use super::planner::{cut_set_ranges, enumerate_cut_sets, GroupCache};
 use crate::ftp::GroupVariant;
 use crate::network::Network;
 use crate::plan::{plan_multi, MultiConfig};
-use crate::predictor::{predict_swap, PredictorParams, SwapPrediction};
+use crate::predictor::{predict_multi, predict_swap, PredictorParams, SwapPrediction};
 use crate::simulate::SimOptions;
 use anyhow::Result;
 
@@ -281,6 +281,100 @@ pub fn pick_for_limit_swap_aware<'a>(
     }))
 }
 
+// ----------------------------------------------------------- config ladder
+
+/// One rung of a [`ConfigLadder`]: a configuration with its full Alg. 2
+/// prediction split into the per-image activation share and everything the
+/// memory governor needs to reason about a step.
+#[derive(Debug, Clone)]
+pub struct LadderRung {
+    pub config: MultiConfig,
+    /// Predicted maximum memory of one in-flight image (Alg. 2), bytes.
+    pub predicted_bytes: u64,
+    /// The per-image activation share (peak tile footprint) — the marginal
+    /// cost of one more image in a drained batch.
+    pub activation_bytes: u64,
+    /// Cost proxy (task MACs + launch equivalent); lower = faster.
+    pub cost_proxy: u64,
+}
+
+/// The frontier (or any config set) as an **ordered footprint ladder**:
+/// rungs sorted by `predicted_bytes` strictly ascending — per byte level
+/// only the cheapest (lowest cost proxy) configuration is kept. This is
+/// the structure the serving governor walks at runtime: sustained memory
+/// pressure steps the active rung *down* (smaller footprint, more
+/// overhead), sustained headroom steps back *up*.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigLadder {
+    rungs: Vec<LadderRung>,
+}
+
+impl ConfigLadder {
+    /// Build a ladder from arbitrary rung candidates (e.g. a bundle's
+    /// compiled configs): sort ascending by predicted bytes and keep, per
+    /// distinct byte level, the config with the lowest cost proxy — so
+    /// stepping down always strictly shrinks the predicted footprint.
+    pub fn new(mut entries: Vec<LadderRung>) -> ConfigLadder {
+        entries.sort_by(|a, b| {
+            (a.predicted_bytes, a.cost_proxy).cmp(&(b.predicted_bytes, b.cost_proxy))
+        });
+        let mut rungs: Vec<LadderRung> = Vec::with_capacity(entries.len());
+        for e in entries {
+            match rungs.last() {
+                Some(last) if last.predicted_bytes == e.predicted_bytes => {} // dominated tie
+                _ => rungs.push(e),
+            }
+        }
+        ConfigLadder { rungs }
+    }
+
+    /// The Pareto frontier as a ladder (the frontier is already strictly
+    /// ascending in bytes); activation shares come from [`predict_multi`].
+    pub fn from_frontier(
+        net: &Network,
+        points: &[FrontierPoint],
+        params: &PredictorParams,
+    ) -> Result<ConfigLadder> {
+        let entries = points
+            .iter()
+            .map(|p| {
+                let pred = predict_multi(net, &p.config, params)?;
+                Ok(LadderRung {
+                    config: p.config.clone(),
+                    predicted_bytes: p.predicted_bytes,
+                    activation_bytes: pred.activation_bytes(),
+                    cost_proxy: p.cost_proxy,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ConfigLadder::new(entries))
+    }
+
+    pub fn rungs(&self) -> &[LadderRung] {
+        &self.rungs
+    }
+
+    pub fn len(&self) -> usize {
+        self.rungs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rungs.is_empty()
+    }
+
+    /// Index of the highest rung whose predicted bytes fit strictly under
+    /// `limit_bytes` — the rung a limit-driven pick starts at. `None` when
+    /// nothing fits (the caller starts at rung 0, the footprint floor).
+    pub fn rung_for_limit(&self, limit_bytes: u64) -> Option<usize> {
+        self.rungs.iter().rposition(|r| r.predicted_bytes < limit_bytes)
+    }
+
+    /// Index of the rung holding `config`, if present.
+    pub fn position_of(&self, config: &MultiConfig) -> Option<usize> {
+        self.rungs.iter().position(|r| &r.config == config)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -412,6 +506,72 @@ mod tests {
             "{} fit below the even floor without balancing?",
             p.config
         );
+    }
+
+    #[test]
+    fn ladder_is_strictly_ascending_and_keeps_cheapest_per_level() {
+        let net = yolov2_16();
+        let params = PredictorParams::default();
+        let pts = frontier(&net, 3, 5, &params).unwrap();
+        let ladder = ConfigLadder::from_frontier(&net, &pts, &params).unwrap();
+        assert!(!ladder.is_empty());
+        for w in ladder.rungs().windows(2) {
+            assert!(w[0].predicted_bytes < w[1].predicted_bytes);
+        }
+        // Every rung's activation share is the real Alg. 1 peak, below the
+        // full prediction (which adds weights + bias on top).
+        for r in ladder.rungs() {
+            let pred = predict_multi(&net, &r.config, &params).unwrap();
+            assert_eq!(r.activation_bytes, pred.activation_bytes());
+            assert!(r.activation_bytes < r.predicted_bytes, "{}", r.config);
+        }
+        // Duplicate byte levels collapse to the cheaper config.
+        let dup = ConfigLadder::new(vec![
+            LadderRung {
+                config: "1x1/NoCut".parse().unwrap(),
+                predicted_bytes: 100,
+                activation_bytes: 10,
+                cost_proxy: 5,
+            },
+            LadderRung {
+                config: "2x2/NoCut".parse().unwrap(),
+                predicted_bytes: 100,
+                activation_bytes: 10,
+                cost_proxy: 9,
+            },
+            LadderRung {
+                config: "3x3/8/2x2".parse().unwrap(),
+                predicted_bytes: 60,
+                activation_bytes: 6,
+                cost_proxy: 20,
+            },
+        ]);
+        assert_eq!(dup.len(), 2);
+        assert_eq!(dup.rungs()[0].config.to_string(), "3x3/8/2x2");
+        assert_eq!(dup.rungs()[1].config.to_string(), "1x1/NoCut");
+    }
+
+    #[test]
+    fn ladder_limit_and_position_lookups() {
+        let ladder = ConfigLadder::new(vec![
+            LadderRung {
+                config: "2x2/NoCut".parse().unwrap(),
+                predicted_bytes: 100,
+                activation_bytes: 10,
+                cost_proxy: 5,
+            },
+            LadderRung {
+                config: "3x3/8/2x2".parse().unwrap(),
+                predicted_bytes: 60,
+                activation_bytes: 6,
+                cost_proxy: 20,
+            },
+        ]);
+        assert_eq!(ladder.rung_for_limit(101), Some(1));
+        assert_eq!(ladder.rung_for_limit(100), Some(0)); // strict fit
+        assert_eq!(ladder.rung_for_limit(60), None);
+        assert_eq!(ladder.position_of(&"2x2/NoCut".parse().unwrap()), Some(1));
+        assert_eq!(ladder.position_of(&"1x1/NoCut".parse().unwrap()), None);
     }
 
     #[test]

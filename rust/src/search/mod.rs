@@ -33,7 +33,7 @@ pub mod planner;
 
 pub use frontier::{
     frontier, frontier_variable, pick_for_limit, pick_for_limit_swap_aware, swap_axis,
-    FrontierPoint, SwapAwarePick,
+    ConfigLadder, FrontierPoint, LadderRung, SwapAwarePick,
 };
 pub use planner::{GroupCache, PlannerStats};
 

@@ -8,12 +8,13 @@
 //! default bundle (`MAFAT_ARTIFACTS` env) are additionally covered by the
 //! gated tests at the bottom.
 
-use mafat::engine::Engine;
+use mafat::engine::{Engine, EngineShared};
 use mafat::network::{LayerKind, Network};
 use mafat::plan::MultiConfig;
 use mafat::runtime::export::{write_reference_bundle, ExportSpec};
+use mafat::runtime::reference;
 use std::path::PathBuf;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 fn conv(filters: usize, size: usize) -> LayerKind {
     LayerKind::Conv {
@@ -210,6 +211,82 @@ fn class_batching_collapses_executor_calls() {
         .map(|(_, n)| n)
         .sum();
     assert_eq!(class_total, tasks, "class counters must cover every task");
+}
+
+#[test]
+fn reconfigure_reuses_packed_weights_and_matches_fresh_load() {
+    // The load/plan split's two acceptance pins in one sequence:
+    //
+    // 1. Weights are packed EXACTLY once per bundle — the shared weight
+    //    stage packs at `EngineShared::load`; building engines on it and
+    //    hot-swapping configs packs zero more times. (The counter is
+    //    thread-local, so concurrent tests loading their own engines
+    //    cannot inflate this thread's count.)
+    // 2. A reconfigured engine's output is byte-identical to a fresh
+    //    `Engine::load` of the same configuration — for a k-group AND a
+    //    variable (balanced) config.
+    let packs_before = reference::pack_weights_calls();
+    let shared = EngineShared::load(yolo48_bundle()).unwrap();
+    assert_eq!(
+        reference::pack_weights_calls() - packs_before,
+        1,
+        "weight stage must pack exactly once"
+    );
+    let packs_loaded = reference::pack_weights_calls();
+
+    let start: MultiConfig = "3x3/8/2x2".parse().unwrap();
+    let mut engine = Engine::with_shared(shared.clone(), start.clone()).unwrap();
+    let mut sibling = Engine::with_shared(shared.clone(), start.clone()).unwrap();
+    assert!(
+        Arc::ptr_eq(engine.shared_state(), sibling.shared_state()),
+        "pool engines must share one weight stage"
+    );
+    let image = engine.synthetic_image(41);
+    let (before, _) = engine.infer(&image).unwrap();
+
+    for target in ["2x2/4/2x2/12/2x2", "3v3/8/2x2"] {
+        let config: MultiConfig = target.parse().unwrap();
+        engine.reconfigure(&config).unwrap();
+        assert_eq!(engine.config(), &config);
+        let (swapped, _) = engine.infer(&image).unwrap();
+        let mut fresh = Engine::load(yolo48_bundle(), config.clone()).unwrap();
+        let (direct, _) = fresh.infer(&image).unwrap();
+        assert_eq!(swapped.data, direct.data, "{target}: reconfigure diverged from a fresh load");
+        // Different tilings of one network agree on the final map anyway
+        // (the §2.1.1 equivalence) — so also pin against the first config.
+        assert_eq!(swapped.data, before.data, "{target}");
+    }
+    // Swapping back works and still matches the original run bit for bit.
+    engine.reconfigure(&start).unwrap();
+    let (back, _) = engine.infer(&image).unwrap();
+    assert_eq!(back.data, before.data);
+
+    // The entire sequence — two engines, three reconfigures, one fresh
+    // load per target — repacked only for the two fresh `Engine::load`s
+    // (each runs its own weight stage); the shared stage never repacked.
+    drop(sibling);
+    assert_eq!(
+        reference::pack_weights_calls() - packs_loaded,
+        2,
+        "reconfigure must never repack weights"
+    );
+}
+
+#[test]
+fn reconfigure_to_unknown_config_is_an_error_and_keeps_serving() {
+    let start: MultiConfig = "3x3/8/2x2".parse().unwrap();
+    let mut engine = Engine::load(yolo48_bundle(), start.clone()).unwrap();
+    let image = engine.synthetic_image(43);
+    let (before, _) = engine.infer(&image).unwrap();
+    let err = engine
+        .reconfigure(&"9x9/NoCut".parse::<MultiConfig>().unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("not in manifest"), "{err}");
+    // The failed swap left the engine on its previous config, still good.
+    assert_eq!(engine.config(), &start);
+    let (after, _) = engine.infer(&image).unwrap();
+    assert_eq!(before.data, after.data);
 }
 
 #[test]

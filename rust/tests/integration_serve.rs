@@ -4,17 +4,20 @@
 //! -> engine -> response) executes on every `cargo test` with no XLA
 //! toolchain and no `make artifacts`.
 
-use mafat::coordinator::{auto_config_from_manifest, Server, ServerConfig};
+use mafat::coordinator::{
+    auto_config_from_manifest, ladder_from_manifest, sample_rss_bytes, GovernorConfig,
+    MemoryGovernor, Server, ServerConfig,
+};
 use mafat::engine::Engine;
 use mafat::jsonlite::Json;
-use mafat::network::{LayerKind, Network};
+use mafat::network::{LayerKind, Network, MIB};
 use mafat::plan::MultiConfig;
 use mafat::predictor::{predict_multi, PredictorParams};
 use mafat::runtime::export::{write_reference_bundle, ExportSpec};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 fn conv(filters: usize, size: usize) -> LayerKind {
@@ -304,6 +307,175 @@ fn worker_pool_serves_concurrent_load_and_aggregates_metrics() {
         .parse()
         .unwrap();
     assert_eq!(requests, (n_clients * per_client) as u64, "{snapshot}");
+}
+
+/// Start a governed server over the tiny bundle's full manifest ladder.
+/// Returns the server and the governor handle (for state assertions).
+fn start_governed(
+    budget_bytes: u64,
+    params: &PredictorParams,
+    cfg: ServerConfig,
+) -> (Server, Arc<MemoryGovernor>, MultiConfig) {
+    let dir = tiny_bundle().to_string();
+    let manifest = mafat::runtime::Manifest::load(std::path::Path::new(&dir)).unwrap();
+    let mnet = manifest.sole_network().unwrap();
+    let ladder = ladder_from_manifest(mnet, params).unwrap();
+    let (picked, _) = auto_config_from_manifest(mnet, budget_bytes, params).unwrap();
+    let start = ladder.position_of(&picked).unwrap();
+    let workers = cfg.workers.max(1);
+    let gcfg = GovernorConfig::default();
+    let gov = MemoryGovernor::new(ladder, budget_bytes, start, cfg.max_batch, workers, gcfg);
+    let governor = Arc::new(gov.unwrap());
+    let factory_config = picked.clone();
+    let server = Server::start_governed(
+        move || Engine::load(&dir, factory_config.clone()),
+        "127.0.0.1:0",
+        cfg,
+        Some(governor.clone()),
+    )
+    .unwrap();
+    (server, governor, picked)
+}
+
+#[test]
+fn governed_server_with_steady_budget_is_byte_identical_to_static_server() {
+    // Acceptance pin: with a steady budget the governed server's responses
+    // are byte-identical to the fixed-drain server's. "Steady" is made
+    // deterministic by giving the budget ample headroom over the test
+    // process's real RSS: the auto-pick then starts at the ladder's TOP
+    // rung (the cheapest compiled config), where the only conceivable
+    // transition — a step UP out of sustained headroom — has no rung to
+    // land on, so the governor provably holds for the whole test.
+    let Some(rss) = sample_rss_bytes() else {
+        eprintln!("SKIP: no procfs RSS on this host");
+        return;
+    };
+    // Budget such that rss < low_watermark * budget: pure headroom, and
+    // the start rung (top of the ladder) has nowhere to step up to.
+    let budget = (rss * 4).max(1 << 30);
+    let params = PredictorParams::default();
+    let (governed, governor, picked) = start_governed(
+        budget,
+        &params,
+        ServerConfig {
+            workers: 2,
+            ..ServerConfig::default()
+        },
+    );
+    // A huge budget picks the cheapest (largest-footprint) compiled
+    // config — the ladder's top rung.
+    assert_eq!(
+        governor.ladder().position_of(&picked).unwrap(),
+        governor.ladder().len() - 1,
+        "{picked} is not the top rung"
+    );
+    let gaddr = governed.local_addr;
+    std::thread::spawn(move || {
+        let _ = governed.run();
+    });
+    let fixed = start_server(
+        &picked.to_string(),
+        ServerConfig {
+            workers: 2,
+            ..ServerConfig::default()
+        },
+    );
+    let faddr = fixed.local_addr;
+    std::thread::spawn(move || {
+        let _ = fixed.run();
+    });
+
+    let seeds: Vec<u64> = (0..8).collect();
+    let a = outputs_for_seeds(gaddr, &seeds);
+    let b = outputs_for_seeds(faddr, &seeds);
+    assert_eq!(a, b, "governed responses must equal fixed-drain responses");
+    // And the governor really never stepped.
+    assert_eq!(governor.active_config(), picked);
+
+    // Observability: the governed wakes exported RSS + drain gauges.
+    let mut c = Client::connect(gaddr);
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    let snapshot = m.str_at("metrics").unwrap();
+    let field = |name: &str| -> u64 {
+        snapshot
+            .lines()
+            .find_map(|l| l.strip_prefix(&format!("{name} ")))
+            .unwrap_or_else(|| panic!("{name} missing from {snapshot}"))
+            .trim()
+            .parse()
+            .unwrap()
+    };
+    assert!(field("rss_bytes") > MIB, "{snapshot}");
+    assert!(field("governor_drain") >= 1, "{snapshot}");
+    assert!(snapshot.contains("governor_swaps{dir=down} 0"), "{snapshot}");
+    assert!(snapshot.contains("governor_swaps{dir=up} 0"), "{snapshot}");
+}
+
+#[test]
+fn governed_server_under_tight_budget_steps_down_and_keeps_serving() {
+    // Acceptance pin: a tight injected budget (every compiled config still
+    // *predicts* as fitting under bias 0, but the live process RSS dwarfs
+    // the watermarks) forces sustained pressure -> the governor walks the
+    // ladder down to the smallest-footprint rung, workers hot-swap their
+    // engines at batch boundaries, and every request keeps succeeding.
+    let Some(rss) = sample_rss_bytes() else {
+        eprintln!("SKIP: no procfs RSS on this host");
+        return;
+    };
+    // Bias 0 makes the tiny net's predictions ~1-2 hundred KiB; a 2 MiB
+    // budget fits them all (so the pick starts at the top rung) while the
+    // multi-MB test process RSS sits far above the high watermark.
+    let params = PredictorParams {
+        bias_bytes: 0,
+        ..PredictorParams::default()
+    };
+    let budget = 2 * MIB;
+    assert!(rss > budget, "test process RSS must dwarf the budget");
+    let (server, governor, picked) = start_governed(budget, &params, ServerConfig::default());
+    let ladder_len = governor.ladder().len();
+    assert!(ladder_len >= 2, "need rungs to step through");
+    assert_eq!(governor.ladder().position_of(&picked).unwrap(), ladder_len - 1);
+    let floor = governor.ladder().rungs()[0].config.clone();
+    let addr = server.local_addr;
+    std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    // Sequential requests: each is one worker wake. With hysteresis 3 and
+    // a single worker, 3 wakes per step walk the whole ladder down well
+    // within this many requests.
+    let mut c = Client::connect(addr);
+    let wakes = 3 * ladder_len + 4;
+    let mut checksums = std::collections::HashMap::new();
+    for i in 0..wakes {
+        let seed = i % 2; // revisit seeds across swaps
+        let r = c.call(&format!(r#"{{"cmd":"infer","id":"g{i}","seed":{seed}}}"#));
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "wake {i}: {r:?}");
+        // Different configs of one network produce the same map (§2.1.1),
+        // so responses stay consistent ACROSS governor swaps too.
+        let sum = r.get("checksum").unwrap().as_f64().unwrap();
+        if let Some(prev) = checksums.insert(seed, sum) {
+            assert_eq!(prev, sum, "wake {i}: checksum drifted across swaps");
+        }
+    }
+    assert_eq!(
+        governor.active_config(),
+        floor,
+        "sustained pressure must land on the footprint floor"
+    );
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    let snapshot = m.str_at("metrics").unwrap();
+    let downs: u64 = snapshot
+        .lines()
+        .find_map(|l| l.strip_prefix("governor_swaps{dir=down} "))
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap();
+    assert_eq!(downs, (ladder_len - 1) as u64, "one step per rung walked: {snapshot}");
+    // Still serving after landing on the floor.
+    let r = c.call(r#"{"cmd":"infer","id":"after","seed":9}"#);
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
 }
 
 #[test]

@@ -4,6 +4,7 @@
 //! deterministic driver over the crate's SplitMix64 — every failure prints
 //! the seed, and re-running with that seed reproduces the case exactly.
 
+use mafat::coordinator::derive_drain;
 use mafat::data::SplitMix64;
 use mafat::engine::{gen_network_weights, FeatureMap, WEIGHT_SEED};
 use mafat::ftp::{balance_spans, down_extent, plan_group, plan_group_from_bounds, Rect};
@@ -491,5 +492,37 @@ fn prop_config_display_parse_round_trip() {
             assert_eq!(back.top_tiling, config.top_tiling);
             assert_eq!(back.cut, None);
         }
+    });
+}
+
+#[test]
+fn prop_governor_drain_bounded_and_monotone_in_budget() {
+    // The governor's drain derivation (ISSUE 5 satellite): for arbitrary
+    // per-image predictions, batch caps, and worker counts, the derived
+    // drain is >= 1, never exceeds max(1, max_batch / workers), and is
+    // monotone non-decreasing as the budget headroom grows.
+    cases(CASES, |rng| {
+        let predicted = 1 + rng.next_below(1 << 24) as u64;
+        let max_batch = rng.next_below(64);
+        let workers = rng.next_below(8);
+        let cap = (max_batch / workers.max(1)).max(1);
+        let mut budget = 0u64;
+        let mut prev = 0usize;
+        for step in 0..24 {
+            budget += rng.next_below(1 << 26) as u64;
+            let drain = derive_drain(budget, predicted, max_batch, workers);
+            assert!(drain >= 1, "drain {drain} at budget {budget}");
+            assert!(
+                drain <= cap,
+                "drain {drain} > cap {cap} (max_batch {max_batch}, workers {workers})"
+            );
+            assert!(
+                drain >= prev,
+                "step {step}: drain {drain} < {prev} though the budget only grew"
+            );
+            prev = drain;
+        }
+        // Degenerate prediction (0 bytes/image) falls back to the cap.
+        assert_eq!(derive_drain(budget, 0, max_batch, workers), cap);
     });
 }
