@@ -7,9 +7,11 @@ Mirrors:
   rust/src/ftp/grid.rs        Grid
   rust/src/ftp/variable.rs    group_halo / balance_spans / plan_group_balanced_searched
   rust/src/ftp/mod.rs         plan_group (even), TaskGeom.class_key
-  rust/src/runtime/reference.rs conv2d / maxpool2d / run_task / run_full
+  rust/src/runtime/reference.rs conv2d / depthwise_conv2d / maxpool2d /
+                              run_task / run_full
                               + the blocked fast path: pack_weights /
-                              conv2d_blocked / run_task_batch_blocked
+                              conv2d_blocked / depthwise_conv2d_blocked /
+                              run_task_batch_blocked
   rust/src/predictor/mod.rs   peak_of_group_plan / predict_multi (peak ordering)
   rust/src/engine/mod.rs      gather / scatter / infer group loop
                               + the class-batched infer_batch loop
@@ -33,7 +35,7 @@ MIB = 1 << 20
 
 @dataclass
 class Layer:
-    kind: str  # 'conv' | 'max'
+    kind: str  # 'conv' | 'dw' | 'max'
     filters: int = 0
     size: int = 0
     stride: int = 1
@@ -49,11 +51,16 @@ class Layer:
     def is_conv(self):
         return self.kind == 'conv'
 
+    @property
+    def is_dw(self):
+        return self.kind == 'dw'
+
     def filter(self):
         return self.size
 
     def padding(self):
-        return self.pad if self.is_conv else 0
+        # Both conv kinds pad; pools never do (LayerKind::padding()).
+        return 0 if self.kind == 'max' else self.pad
 
 
 def resolve(kind_list, in_w, in_h, in_c):
@@ -62,10 +69,15 @@ def resolve(kind_list, in_w, in_h, in_c):
     for k in kind_list:
         l = Layer(**k)
         l.in_w, l.in_h, l.in_c = w, h, c
-        if l.is_conv:
+        if l.kind == 'conv':
             l.out_w = (w + 2 * l.pad - l.size) // l.stride + 1
             l.out_h = (h + 2 * l.pad - l.size) // l.stride + 1
             l.out_c = l.filters
+        elif l.kind == 'dw':
+            # Depthwise: conv spatial arithmetic, channels preserved.
+            l.out_w = (w + 2 * l.pad - l.size) // l.stride + 1
+            l.out_h = (h + 2 * l.pad - l.size) // l.stride + 1
+            l.out_c = c
         else:
             l.out_w = (w + l.stride - 1) // l.stride
             l.out_h = (h + l.stride - 1) // l.stride
@@ -79,6 +91,10 @@ def conv(filters, size):
     return dict(kind='conv', filters=filters, size=size, stride=1, pad=size // 2)
 
 
+def dw(size):
+    return dict(kind='dw', size=size, stride=1, pad=size // 2)
+
+
 def maxpool():
     return dict(kind='max', size=2, stride=2)
 
@@ -89,6 +105,14 @@ def yolov2_16_ops():
         conv(128, 3), conv(64, 1), conv(128, 3), maxpool(),
         conv(256, 3), conv(128, 1), conv(256, 3), maxpool(),
         conv(512, 3), conv(256, 1), conv(512, 3), conv(256, 1),
+    ]
+
+
+def mobilenet_tiny_ops():
+    """Mirror of network::mobilenet::mobilenet_tiny (16x16x3 input):
+    stem conv, then depthwise-separable pairs around one pool."""
+    return [
+        conv(4, 3), dw(3), conv(8, 1), maxpool(), dw(3), conv(16, 1),
     ]
 
 # ---------------------------------------------------------------- geometry
@@ -157,11 +181,14 @@ def plan_group(layers, top, bottom, n, m):
 
 
 def group_halo(layers, top, bottom):
+    # Kind-explicit (ftp::variable::group_halo): only pools rescale the
+    # walk; both conv kinds contribute their halo. A kind-boolean here
+    # would silently misclassify depthwise layers as pools.
     scale = 1
     halo = 0.0
     for l in range(bottom, top - 1, -1):
         spec = layers[l]
-        if not spec.is_conv:
+        if spec.kind == 'max':
             scale *= spec.stride
         else:
             halo += (spec.size // 2) / scale
@@ -201,6 +228,10 @@ def peak_tile_bytes(layers, tasks):
             w_out, h_out = ox1 - ox0, oy1 - oy0
             if spec.is_conv:
                 scratch = w_out * h_out * spec.in_c * spec.size * spec.size // spec.stride
+            elif spec.is_dw:
+                # One per-channel im2col buffer reused across channels:
+                # the channel factor drops from Eq. 2.1's scratch term.
+                scratch = w_out * h_out * spec.size * spec.size // spec.stride
             else:
                 scratch = 0
             mem = (scratch + w_out * h_out * spec.out_c + 2 * w_in * h_in * spec.in_c) * 4
@@ -229,6 +260,9 @@ def group_weight_bytes(layers, top, bottom):
         spec = layers[l]
         if spec.is_conv:
             total += spec.size * spec.size * spec.in_c * spec.filters * 4
+        elif spec.is_dw:
+            # One k x k filter per channel: C * k * k, not C * k * k * F.
+            total += spec.size * spec.size * spec.in_c * 4
     return total
 
 
@@ -303,6 +337,7 @@ def task_macs(layers, task):
         if spec.is_conv:
             total += area * spec.size * spec.size * spec.in_c * spec.out_c
         else:
+            # Depthwise and pool: no channel reduction.
             total += area * spec.out_c * spec.size * spec.size
     return total
 
@@ -362,6 +397,16 @@ def gen_network_weights(layers, seed=WEIGHT_SEED):
                 spec.size, spec.size, spec.in_c, spec.filters)
             b = gen_bias(seed, l, spec.filters)
             out.append((w, b))
+        elif spec.is_dw:
+            # engine::gen_network_weights depthwise arm: fan-in is the
+            # k x k window (no channel reduction), row order
+            # (fy*size+fx)*in_c + ci, one bias per channel.
+            fan_in = spec.size * spec.size
+            count = fan_in * spec.in_c
+            w = gen_weights(seed, l, count, fan_in).reshape(
+                spec.size, spec.size, spec.in_c)
+            b = gen_bias(seed, l, spec.in_c)
+            out.append((w, b))
         else:
             out.append(None)
     return out
@@ -391,6 +436,29 @@ def conv2d(x, w, b, size, stride, pads, oh, ow):
     return out
 
 
+def depthwise_conv2d(x, w, b, size, stride, pads, oh, ow):
+    """reference::depthwise_conv2d: per output element the accumulation is
+    still `bias, then += x*w in (fy, fx, ci) order`, but each channel sees
+    only its own k x k filter — no reduction across channels."""
+    pl, pr, pt, pb = pads
+    ih, iw, in_c = x.shape
+    out = np.zeros((oh, ow, in_c), dtype=np.float32)
+    for oy in range(oh):
+        for ox in range(ow):
+            acc = b.copy()
+            for fy in range(size):
+                y = oy * stride + fy - pt
+                if y < 0 or y >= ih:
+                    continue
+                for fx in range(size):
+                    xx = ox * stride + fx - pl
+                    if xx < 0 or xx >= iw:
+                        continue
+                    acc = acc + x[y, xx, :] * w[fy, fx, :]
+            out[oy, ox, :] = np.where(acc >= 0, acc, LEAKY * acc)
+    return out
+
+
 def maxpool2d(x, size, stride, oh, ow):
     ih, iw, c = x.shape
     out = np.full((oh, ow, c), -np.inf, dtype=np.float32)
@@ -413,6 +481,10 @@ def run_task(layers, weights, task, tile):
         if spec.is_conv:
             w, b = weights[lg.layer]
             x = conv2d(x, w, b, spec.size, spec.stride, (pl, pr, pt, pb), oh, ow)
+        elif spec.is_dw:
+            w, b = weights[lg.layer]
+            x = depthwise_conv2d(x, w, b, spec.size, spec.stride,
+                                 (pl, pr, pt, pb), oh, ow)
         else:
             assert pl + pr + pt + pb == 0
             x = maxpool2d(x, spec.size, spec.stride, oh, ow)
@@ -455,10 +527,18 @@ def pack_weights(layers, weights):
             packed.append(None)
             continue
         w, b = lw
-        out_c = w.shape[3]
-        ocp = -(-out_c // OC_LANES) * OC_LANES
-        wp = np.zeros((spec.size, spec.size, spec.in_c, ocp), dtype=np.float32)
-        wp[:, :, :, :out_c] = w
+        if spec.is_dw:
+            # PackedLayer { depthwise: true }: k*k rows of lane-padded
+            # per-channel weights (no input-channel axis).
+            out_c = spec.in_c
+            ocp = -(-out_c // OC_LANES) * OC_LANES
+            wp = np.zeros((spec.size, spec.size, ocp), dtype=np.float32)
+            wp[:, :, :out_c] = w
+        else:
+            out_c = w.shape[3]
+            ocp = -(-out_c // OC_LANES) * OC_LANES
+            wp = np.zeros((spec.size, spec.size, spec.in_c, ocp), dtype=np.float32)
+            wp[:, :, :, :out_c] = w
         bp = np.zeros(ocp, dtype=np.float32)
         bp[:out_c] = b
         packed.append((wp, bp, out_c))
@@ -507,6 +587,45 @@ def conv2d_blocked(x, wp, bp, out_c, size, stride, pads, oh, ow):
     return out
 
 
+def depthwise_conv2d_blocked(x, wp, bp, out_c, size, stride, pads, oh, ow):
+    """reference::depthwise_conv2d_blocked_into: the conv blocked skeleton
+    (bias-seeded BLOCK_W accumulator, p_lo/p_hi edge clipping, fused leaky
+    store) with an element-wise per-channel multiply instead of the
+    cross-channel rank-1 update. Padded lanes are never touched by the
+    accumulate (x has only in_c channels) and are dropped at the store."""
+    pl, pr, pt, pb = pads
+    ih, iw, in_c = x.shape
+    out = np.zeros((oh, ow, out_c), dtype=np.float32)
+    for oy in range(oh):
+        y0 = oy * stride - pt
+        ox0 = 0
+        while ox0 < ow:
+            bw = min(BLOCK_W, ow - ox0)
+            acc = np.tile(bp, (bw, 1))
+            for fy in range(size):
+                y = y0 + fy
+                if y < 0 or y >= ih:
+                    continue
+                for fx in range(size):
+                    base = ox0 * stride + fx - pl
+                    p_lo = 0 if base >= 0 else -(base // stride)
+                    if base >= iw:
+                        p_hi = 0
+                    else:
+                        p_hi = (iw - 1 - base) // stride + 1
+                    p_hi = min(p_hi, bw)
+                    if p_lo >= p_hi:
+                        continue
+                    wrow = wp[fy, fx, :in_c]
+                    for p in range(p_lo, p_hi):
+                        acc[p, :in_c] = acc[p, :in_c] + x[y, base + p * stride, :] * wrow
+            for p in range(bw):
+                v = acc[p, :out_c]
+                out[oy, ox0 + p, :] = np.where(v >= 0, v, LEAKY * v)
+            ox0 += bw
+    return out
+
+
 def run_task_batch_blocked(layers, packed, task, tiles):
     """reference::run_task_batch_blocked: one call for a batch of
     same-class tiles; each layer's weights stay hot across the batch."""
@@ -521,6 +640,13 @@ def run_task_batch_blocked(layers, packed, task, tiles):
             xs = [
                 conv2d_blocked(x, wp, bp, out_c, spec.size, spec.stride,
                                (pl, pr, pt, pb), oh, ow)
+                for x in xs
+            ]
+        elif spec.is_dw:
+            wp, bp, out_c = packed[lg.layer]
+            xs = [
+                depthwise_conv2d_blocked(x, wp, bp, out_c, spec.size, spec.stride,
+                                         (pl, pr, pt, pb), oh, ow)
                 for x in xs
             ]
         else:

@@ -18,7 +18,13 @@ environment with no Rust toolchain:
 * the balanced-boundary search moves boundaries where the halo allows it;
 * the tiny-serve prediction ordering assumed by
   `rust/tests/integration_serve.rs::auto_pick_serves_variable_config_when_it_wins`
-  holds (the `4v4/2/4x4` entry is the unique predicted floor).
+  holds (the `4v4/2/4x4` entry is the unique predicted floor);
+* **depthwise convs** (the PR 6 `LayerKind::DepthwiseConv` kind) thread
+  through the same claims: scalar == blocked bit-exact on every padding
+  combination, fused+tiled == untiled on a MobileNet-style stack (scalar
+  and class-batched blocked), per-channel weight/scratch accounting
+  matches hand-computed bytes, packed lanes pad without perturbing values,
+  and no output channel ever reads another channel's input.
 
 Pure numpy — no jax required. Run: pytest python/tests/test_reference_exec.py
 """
@@ -31,6 +37,7 @@ from _reference_port import (
     balance_spans,
     class_key,
     conv,
+    dw,
     engine_infer_batched,
     engine_load,
     engine_reconfigure,
@@ -39,10 +46,13 @@ from _reference_port import (
     gen_image,
     gen_network_weights,
     grid_bounds,
+    group_weight_bytes,
     infer,
     infer_batched,
     maxpool,
+    mobilenet_tiny_ops,
     pack_weights,
+    peak_tile_bytes,
     plan_from_bounds,
     plan_group,
     plan_group_balanced_searched,
@@ -272,3 +282,88 @@ def test_batched_infer_on_uneven_balanced_boundaries():
     weights, img, oracle = oracle_for(layers, seed=5)
     got = infer_batched(layers, weights, [tasks], [img])
     assert np.array_equal(got[0], oracle)
+
+
+# ------------------------------------------------------------ depthwise pins
+
+
+def mobilenet_tiny_layers():
+    return resolve(mobilenet_tiny_ops(), 16, 16, 3)
+
+
+def test_depthwise_blocked_bit_identical_to_scalar_every_pad_combo():
+    # All 9 tiles of a 3x3 tiling over the full MobileNet-tiny stack hit
+    # every corner/edge/center padding combination through both depthwise
+    # and pointwise layers; blocked must equal scalar bit for bit.
+    layers = mobilenet_tiny_layers()
+    weights = gen_network_weights(layers)
+    packed = pack_weights(layers, weights)
+    img = gen_image(41, 16, 16, 3).reshape(16, 16, 3)
+    tasks = plan_group(layers, 0, len(layers) - 1, 3, 3)
+    for t in tasks:
+        tile = gather(img, t.input_rect())
+        scalar = run_task(layers, weights, t, tile)
+        blocked = run_task_blocked(layers, packed, t, tile)
+        assert np.array_equal(scalar, blocked), (t.grid_i, t.grid_j)
+
+
+def test_depthwise_fused_tiled_bit_identical_to_untiled():
+    # Fused configs cutting through the depthwise-separable stack — the
+    # even 2x2 cut and an uneven balanced 3v3 top group — both equal the
+    # untiled scalar oracle bit for bit, scalar and class-batched blocked.
+    layers = mobilenet_tiny_layers()
+    weights, img, oracle = oracle_for(layers, seed=43)
+    for cfg in ["2x2/4/2x2", "3v3/4/2x2"]:
+        groups = plan_multi(layers, cfg)
+        tiled = infer(layers, weights, groups, img)
+        assert np.array_equal(tiled, oracle), cfg
+        batched = infer_batched(layers, weights, groups, [img, img])
+        for got in batched:
+            assert np.array_equal(got, oracle), cfg
+
+
+def test_depthwise_peak_and_weight_accounting_hand_computed():
+    # Mirror of rust predictor::depthwise_peak_accounting_matches_hand_
+    # computation: one 3x3 depthwise on 8x8x4, untiled. Scratch drops the
+    # channel factor (8*8*9 floats), weights are C*k*k (4*9 floats):
+    #   peak  = (576 + 256 + 2*256) * 4 = 5376 bytes
+    #   weights = 4 * 9 * 4           =  144 bytes
+    layers = resolve([dw(3)], 8, 8, 4)
+    tasks = plan_group(layers, 0, 0, 1, 1)
+    assert peak_tile_bytes(layers, tasks) == 5376
+    assert group_weight_bytes(layers, 0, 0) == 144
+
+
+def test_depthwise_does_not_mix_channels():
+    # A center-tap identity filter on channel 0 and a doubling tap on
+    # channel 1: each output channel sees only its own input channel, and
+    # the leaky ReLU applies per channel (0.1 * -3.0 rounds exactly to
+    # -0.3 in f32, so the comparison is exact).
+    layers = resolve([dw(3)], 1, 1, 2)
+    w = np.zeros((3, 3, 2), dtype=np.float32)
+    w[1, 1, 0] = 1.0
+    w[1, 1, 1] = 2.0
+    b = np.zeros(2, dtype=np.float32)
+    weights = [(w, b)]
+    img = np.array([[[500.0, -1.5]]], dtype=np.float32)
+    out = run_full(layers, weights, img)
+    assert out.shape == (1, 1, 2)
+    assert np.array_equal(out[0, 0], np.float32([500.0, -0.3]))
+    blocked = run_task_blocked(
+        layers, pack_weights(layers, weights), plan_group(layers, 0, 0, 1, 1)[0], img)
+    assert np.array_equal(blocked, out)
+
+
+def test_depthwise_packing_pads_lanes_and_preserves_values():
+    # in_c = 3 is not a lane multiple: the packed depthwise layer pads the
+    # channel axis to OC_LANES with zeros and copies values untouched.
+    layers = resolve([dw(3)], 4, 4, 3)
+    weights = gen_network_weights(layers)
+    wp, bp, out_c = pack_weights(layers, weights)[0]
+    w, b = weights[0]
+    assert out_c == 3
+    assert wp.shape == (3, 3, port.OC_LANES)
+    assert np.array_equal(wp[:, :, :3], w)
+    assert not wp[:, :, 3:].any()
+    assert np.array_equal(bp[:3], b)
+    assert not bp[3:].any()

@@ -48,7 +48,10 @@ pub fn darknet_trace(net: &Network, opts: &SimOptions) -> Vec<Step> {
         steps.push(Step::Read { key: "sys.hot".into() });
         steps.push(Step::Overhead { seconds: opts.cost.layer_overhead_s });
         match spec.kind {
-            LayerKind::Conv { .. } => {
+            // Depthwise convs run the same im2col + GEMM pipeline as full
+            // convs in Darknet (grouped conv with groups == channels); only
+            // the workspace extent from `scratch_bytes()` differs.
+            LayerKind::Conv { .. } | LayerKind::DepthwiseConv { .. } => {
                 steps.push(Step::Read { key: format!("w{l}") });
                 // im2col: input -> workspace; GEMM: workspace -> output.
                 // Only the *prefix* of the shared workspace this layer's

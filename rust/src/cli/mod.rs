@@ -4,7 +4,7 @@
 //! implements one subcommand. Paper-artifact commands print the same rows
 //! or series the paper reports (see [`crate::report`]).
 
-use crate::network::{cfg, yolov2, Network, MIB};
+use crate::network::{cfg, mobilenet, yolov2, Network, MIB};
 use crate::plan::MafatConfig;
 use crate::predictor::{predict_mem, PredictorParams};
 use crate::report;
@@ -51,10 +51,13 @@ Tooling:
   simulate  --config 5x5/8/2x2 --limit-mb 64        one simulated run
   export-geometry [--out artifacts/geometry.json]   AOT geometry for aot.py
   export-bundle   [--out DIR]                       geometry-only reference
-                                                    bundle (default
-                                                    artifacts-ref): runs on
-                                                    the pure-Rust executor,
-                                                    no XLA toolchain needed
+                  [--network yolov2|mobilenet]      bundle (default
+                                                    artifacts-ref, or
+                                                    artifacts-mobilenet for
+                                                    the depthwise network):
+                                                    runs on the pure-Rust
+                                                    executor, no XLA
+                                                    toolchain needed
 
 Real execution (against `make artifacts` or an `export-bundle` dir):
   run       --config 5v5/12/3v3 [--artifacts DIR] [--batch N] [--verify]
@@ -76,6 +79,8 @@ Real execution (against `make artifacts` or an `export-bundle` dir):
 
 Common flags:
   --cfg FILE        Darknet-style .cfg network (default: built-in YOLOv2-16)
+  --network NAME    built-in network: yolov2 (default) or mobilenet (the
+                    depthwise-separable MobileNet-16 prefix)
   --bias-mb N       predictor bias constant (default 31)
   --no-reuse        disable data reuse in simulation
 ";
@@ -122,11 +127,19 @@ impl Args {
         self.kv.contains_key(key)
     }
 
-    /// The network: `--cfg file.cfg` or the built-in YOLOv2-16.
+    /// The network: `--cfg file.cfg`, a built-in `--network` name
+    /// (`yolov2` / `mobilenet`), or the default YOLOv2-16.
     pub fn network(&self) -> Result<Network> {
-        match self.get("cfg") {
-            Some(path) => cfg::load_cfg(&PathBuf::from(path)),
-            None => Ok(yolov2::yolov2_16()),
+        if let Some(path) = self.get("cfg") {
+            if self.has("network") {
+                bail!("--cfg and --network are mutually exclusive");
+            }
+            return cfg::load_cfg(&PathBuf::from(path));
+        }
+        match self.get("network") {
+            None | Some("yolov2") => Ok(yolov2::yolov2_16()),
+            Some("mobilenet") => Ok(mobilenet::mobilenet_16()),
+            Some(other) => bail!("unknown --network {other:?} (expected yolov2 or mobilenet)"),
         }
     }
 
@@ -563,10 +576,23 @@ pub fn cmd_export_geometry(args: &Args) -> Result<()> {
 }
 
 pub fn cmd_export_bundle(args: &Args) -> Result<()> {
-    let dir = PathBuf::from(args.get("out").unwrap_or("artifacts-ref"));
-    crate::runtime::export::write_default_reference_bundle(&dir)?;
+    // Bundles are one network per directory (`Manifest::sole_network`), so
+    // the MobileNet bundle gets its own default dir next to the YOLOv2 one.
+    let (dir, example) = match args.get("network") {
+        None | Some("yolov2") => {
+            let dir = PathBuf::from(args.get("out").unwrap_or("artifacts-ref"));
+            crate::runtime::export::write_default_reference_bundle(&dir)?;
+            (dir, "5v5/12/3v3")
+        }
+        Some("mobilenet") => {
+            let dir = PathBuf::from(args.get("out").unwrap_or("artifacts-mobilenet"));
+            crate::runtime::export::write_mobilenet_reference_bundle(&dir)?;
+            (dir, "3x3/9/2x2")
+        }
+        Some(other) => bail!("unknown --network {other:?} (expected yolov2 or mobilenet)"),
+    };
     eprintln!(
-        "wrote reference bundle to {} (serve it: mafat run --artifacts {} --config 5v5/12/3v3 --verify)",
+        "wrote reference bundle to {} (serve it: mafat run --artifacts {} --config {example} --verify)",
         dir.display(),
         dir.display()
     );
@@ -662,5 +688,18 @@ mod tests {
     fn default_network_is_yolov2() {
         let a = parse(&[]);
         assert_eq!(a.network().unwrap().n_layers(), 16);
+    }
+
+    #[test]
+    fn network_flag_selects_mobilenet() {
+        let a = parse(&["--network", "mobilenet"]);
+        let net = a.network().unwrap();
+        assert_eq!(net.name, "mobilenet-16");
+        assert!(net
+            .layers
+            .iter()
+            .any(|l| matches!(l.kind, crate::network::LayerKind::DepthwiseConv { .. })));
+        let a = parse(&["--network", "yolov3"]);
+        assert!(a.network().is_err());
     }
 }

@@ -79,6 +79,19 @@ pub fn gen_network_weights(net: &Network, seed: u64) -> Vec<Option<LayerWeights>
                     b: data::gen_bias(seed, l, filters),
                 })
             }
+            LayerKind::DepthwiseConv { size, .. } => {
+                // HWIO with channel multiplier 1: one k x k filter per
+                // channel, `C * k * k` parameters. Row order stays
+                // `(fy * size + fx) * c + ci`, matching the executors.
+                let fan_in = size * size;
+                let count = size * size * spec.in_c;
+                Some(LayerWeights {
+                    layer: l,
+                    w: data::gen_weights(seed, l, count, fan_in),
+                    w_dims: [size, size, 1, spec.in_c],
+                    b: data::gen_bias(seed, l, spec.in_c),
+                })
+            }
             LayerKind::MaxPool { .. } => None,
         })
         .collect()
@@ -793,9 +806,31 @@ mod tests {
                     assert_eq!(lw.w.len(), size * size * spec.in_c * filters);
                     assert_eq!(lw.b.len(), filters);
                 }
+                LayerKind::DepthwiseConv { size, .. } => {
+                    let lw = ws[l].as_ref().unwrap();
+                    assert_eq!(lw.w.len(), size * size * spec.in_c);
+                    assert_eq!(lw.w_dims, [size, size, 1, spec.in_c]);
+                    assert_eq!(lw.b.len(), spec.in_c);
+                }
                 LayerKind::MaxPool { .. } => assert!(ws[l].is_none()),
             }
         }
+    }
+
+    #[test]
+    fn depthwise_weights_match_layer_shapes() {
+        let net = crate::network::mobilenet::mobilenet_tiny();
+        let ws = gen_network_weights(&net, WEIGHT_SEED);
+        let mut saw_dw = false;
+        for (l, spec) in net.layers.iter().enumerate() {
+            if let LayerKind::DepthwiseConv { size, .. } = spec.kind {
+                saw_dw = true;
+                let lw = ws[l].as_ref().unwrap();
+                assert_eq!(lw.w.len(), size * size * spec.in_c);
+                assert_eq!(lw.b.len(), spec.in_c);
+            }
+        }
+        assert!(saw_dw, "mobilenet_tiny must contain depthwise layers");
     }
 
     #[test]

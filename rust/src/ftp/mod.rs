@@ -94,6 +94,9 @@ impl TaskGeom {
                     crate::network::LayerKind::Conv { size, .. } => {
                         (size * size * spec.in_c * spec.out_c) as u64
                     }
+                    crate::network::LayerKind::DepthwiseConv { size, .. } => {
+                        (size * size * spec.out_c) as u64
+                    }
                     crate::network::LayerKind::MaxPool { size, .. } => {
                         (size * size * spec.out_c) as u64
                     }

@@ -145,6 +145,28 @@ mod tests {
     }
 
     #[test]
+    fn depthwise_traversal_matches_conv_geometry() {
+        // A depthwise layer propagates tile geometry exactly like a full
+        // conv of the same filter/stride/pad — only channel mixing differs.
+        let dw = LayerSpec::resolve(
+            LayerKind::DepthwiseConv {
+                size: 3,
+                stride: 1,
+                pad: 1,
+            },
+            64,
+            64,
+            8,
+        );
+        let out = Rect::new(10, 10, 20, 20);
+        let (r, pad) = up_tile(&dw, &out);
+        assert_eq!(r, Rect::new(9, 9, 21, 21));
+        assert!(!pad.any());
+        let full = conv3(64, 64, 8);
+        assert_eq!(up_tile(&full, &out), (r, pad));
+    }
+
+    #[test]
     fn full_map_round_trip() {
         // The whole output requires the whole input with SAME padding.
         let l = conv3(608, 608, 3);

@@ -116,11 +116,16 @@ pub fn group_halo(net: &Network, top: usize, bottom: usize) -> usize {
     let mut halo = 0f64;
     for l in (top..=bottom).rev() {
         let spec = &net.layers[l];
-        let s = spec.kind.stride();
-        if spec.kind.is_pool() {
-            scale *= s;
-        } else {
-            halo += (spec.kind.filter() / 2) as f64 / scale as f64;
+        use crate::network::LayerKind;
+        match spec.kind {
+            // Pools downsample: everything above them is worth 1/stride
+            // bottom pixels per input pixel.
+            LayerKind::MaxPool { stride, .. } => scale *= stride,
+            // Convs (full or depthwise — tile geometry is identical, only
+            // channel mixing differs) add their one-sided receptive halo.
+            LayerKind::Conv { size, .. } | LayerKind::DepthwiseConv { size, .. } => {
+                halo += (size / 2) as f64 / scale as f64;
+            }
         }
     }
     halo.ceil() as usize

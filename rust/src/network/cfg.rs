@@ -2,7 +2,8 @@
 //! can be fed to MAFAT (the paper's tooling is built on Darknet configs).
 //!
 //! Supported sections: `[net]` (width/height/channels), `[convolutional]`
-//! (filters/size/stride/pad/padding), `[maxpool]` (size/stride). Unknown
+//! (filters/size/stride/pad/padding, plus `depthwise=1` or
+//! `groups=filters` for depthwise convs), `[maxpool]` (size/stride). Unknown
 //! keys are ignored (Darknet configs carry training hyperparameters we do
 //! not need); unknown *sections* are an error, because silently dropping a
 //! layer would corrupt all downstream geometry.
@@ -77,6 +78,9 @@ pub fn parse_cfg(name: &str, text: &str) -> Result<Network> {
     let in_c = get_usize(net_sec, "channels", Some(3))?;
 
     let mut ops: Vec<LayerKind> = Vec::new();
+    // Track the running channel count so grouped-conv sections can be
+    // checked against the channels they would actually see.
+    let mut cur_c = in_c;
     for sec in &sections[1..] {
         match sec.name.as_str() {
             "convolutional" | "conv" => {
@@ -90,12 +94,41 @@ pub fn parse_cfg(name: &str, text: &str) -> Result<Network> {
                 } else {
                     0
                 };
-                ops.push(LayerKind::Conv {
-                    filters: get_usize(sec, "filters", Some(1))?,
-                    size,
-                    stride: get_usize(sec, "stride", Some(1))?,
-                    pad,
-                });
+                let stride = get_usize(sec, "stride", Some(1))?;
+                let filters = get_usize(sec, "filters", Some(1))?;
+                // Depthwise forms: `depthwise=1`, or Darknet grouped convs
+                // with `groups == filters == channels` (one filter per
+                // channel). Any other grouping is not expressible.
+                let depthwise = get_usize(sec, "depthwise", Some(0))? != 0;
+                let groups = get_usize(sec, "groups", Some(1))?;
+                if depthwise || groups > 1 {
+                    if sec.kv.contains_key("filters") && filters != cur_c {
+                        bail!(
+                            "section [{}] line {}: depthwise conv needs filters == \
+                             input channels ({cur_c}), got filters={filters}",
+                            sec.name,
+                            sec.line
+                        );
+                    }
+                    if groups > 1 && groups != cur_c {
+                        bail!(
+                            "section [{}] line {}: only depthwise grouping is supported \
+                             (groups == filters == input channels, here {cur_c}); \
+                             got groups={groups}",
+                            sec.name,
+                            sec.line
+                        );
+                    }
+                    ops.push(LayerKind::DepthwiseConv { size, stride, pad });
+                } else {
+                    ops.push(LayerKind::Conv {
+                        filters,
+                        size,
+                        stride,
+                        pad,
+                    });
+                    cur_c = filters;
+                }
             }
             "maxpool" | "max" => {
                 let stride = get_usize(sec, "stride", Some(2))?;
@@ -268,5 +301,72 @@ mod tests {
     #[test]
     fn missing_required_key_fails() {
         assert!(parse_cfg("t", "[net]\nheight=8\n").is_err());
+    }
+
+    #[test]
+    fn depthwise_flag_accepted() {
+        let net = parse_cfg(
+            "t",
+            "[net]\nwidth=16\nheight=16\nchannels=3\n\
+             [convolutional]\nfilters=8\nsize=3\npad=1\n\
+             [convolutional]\ndepthwise=1\nsize=3\npad=1\n\
+             [convolutional]\nfilters=16\nsize=1\n",
+        )
+        .unwrap();
+        assert_eq!(
+            net.layers[1].kind,
+            LayerKind::DepthwiseConv {
+                size: 3,
+                stride: 1,
+                pad: 1
+            }
+        );
+        assert_eq!(net.out_shape(1), (16, 16, 8));
+        assert_eq!(net.out_shape(2), (16, 16, 16));
+    }
+
+    #[test]
+    fn darknet_groups_equal_filters_accepted() {
+        // Darknet expresses depthwise as groups == filters == channels.
+        let net = parse_cfg(
+            "t",
+            "[net]\nwidth=16\nheight=16\nchannels=4\n\
+             [convolutional]\nfilters=4\ngroups=4\nsize=3\npad=1\n",
+        )
+        .unwrap();
+        assert_eq!(
+            net.layers[0].kind,
+            LayerKind::DepthwiseConv {
+                size: 3,
+                stride: 1,
+                pad: 1
+            }
+        );
+    }
+
+    #[test]
+    fn unsupported_group_count_rejected_with_clear_error() {
+        let err = parse_cfg(
+            "t",
+            "[net]\nwidth=16\nheight=16\nchannels=8\n\
+             [convolutional]\nfilters=8\ngroups=2\nsize=3\npad=1\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("groups=2"), "{err}");
+        assert!(err.contains("depthwise"), "{err}");
+    }
+
+    #[test]
+    fn depthwise_filter_mismatch_rejected() {
+        let err = parse_cfg(
+            "t",
+            "[net]\nwidth=16\nheight=16\nchannels=8\n\
+             [convolutional]\ndepthwise=1\nfilters=16\nsize=3\npad=1\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("filters == "), "{err}");
+        assert!(err.contains("(8)"), "{err}");
     }
 }

@@ -1,9 +1,19 @@
 //! Layer specifications for the feature-heavy CNN prefix that MAFAT targets.
 //!
 //! MAFAT (paper §3.1) operates on "any set of n convolutional and maxpool
-//! layers". We model exactly those two kinds, with the Darknet semantics the
-//! paper measures: convolutions are SAME-padded (pad = F/2) with bias and
-//! leaky-ReLU activation, maxpools are non-overlapping 2x2/2 windows.
+//! layers". We model those two kinds with the Darknet semantics the paper
+//! measures — convolutions are SAME-padded (pad = F/2) with bias and
+//! leaky-ReLU activation, maxpools are non-overlapping 2x2/2 windows — plus
+//! the depthwise convolution of the MobileNet family (arXiv 2303.17878
+//! shows MAFAT's fusing/tiling formulation extends directly to
+//! depthwise/pointwise stacks): one k x k filter *per channel*, no channel
+//! mixing, `out_c == in_c`, same bias + leaky-ReLU epilogue. Pointwise
+//! convs are just the existing 1x1 [`LayerKind::Conv`].
+//!
+//! Every kind-dependent quantity in the crate dispatches through an
+//! exhaustive `match` on [`LayerKind`] (not a boolean predicate), so adding
+//! a future kind is a compile error at every consumer rather than a silent
+//! wrong default.
 
 
 /// Number of bytes per feature-map element (Darknet uses f32 throughout).
@@ -26,6 +36,16 @@ pub enum LayerKind {
         stride: usize,
         pad: usize,
     },
+    /// Depthwise 2-D convolution (MobileNet-style): one `size`x`size`
+    /// filter per input channel, `out_c == in_c`, no channel mixing.
+    /// Same SAME-pad / bias / leaky-ReLU conventions as [`LayerKind::Conv`];
+    /// weight count is `C * k * k` (vs `C * k * k * F` for a full conv),
+    /// which materially shifts where a fused group's memory peak lands.
+    DepthwiseConv {
+        size: usize,
+        stride: usize,
+        pad: usize,
+    },
     /// Max-pooling with a square `size`x`size` window and `stride`.
     /// The paper's YOLOv2 prefix only uses `size == stride == 2`.
     MaxPool { size: usize, stride: usize },
@@ -37,6 +57,7 @@ impl LayerKind {
     pub fn filter(&self) -> usize {
         match *self {
             LayerKind::Conv { size, .. } => size,
+            LayerKind::DepthwiseConv { size, .. } => size,
             LayerKind::MaxPool { size, .. } => size,
         }
     }
@@ -45,6 +66,7 @@ impl LayerKind {
     pub fn stride(&self) -> usize {
         match *self {
             LayerKind::Conv { stride, .. } => stride,
+            LayerKind::DepthwiseConv { stride, .. } => stride,
             LayerKind::MaxPool { stride, .. } => stride,
         }
     }
@@ -53,22 +75,21 @@ impl LayerKind {
     pub fn padding(&self) -> usize {
         match *self {
             LayerKind::Conv { pad, .. } => pad,
+            LayerKind::DepthwiseConv { pad, .. } => pad,
             LayerKind::MaxPool { .. } => 0,
         }
-    }
-
-    pub fn is_conv(&self) -> bool {
-        matches!(self, LayerKind::Conv { .. })
     }
 
     pub fn is_pool(&self) -> bool {
         matches!(self, LayerKind::MaxPool { .. })
     }
 
-    /// Short Darknet-style name ("Conv" / "Max"), as printed in Table 2.1.
+    /// Short Darknet-style name ("Conv" / "DwConv" / "Max"), as printed in
+    /// Table 2.1.
     pub fn name(&self) -> &'static str {
         match self {
             LayerKind::Conv { .. } => "Conv",
+            LayerKind::DepthwiseConv { .. } => "DwConv",
             LayerKind::MaxPool { .. } => "Max",
         }
     }
@@ -105,6 +126,13 @@ impl LayerSpec {
                 let oh = (in_h + 2 * pad - size) / stride + 1;
                 (ow, oh, filters)
             }
+            LayerKind::DepthwiseConv { size, stride, pad } => {
+                // Same spatial arithmetic as a conv, but each channel maps
+                // to itself: `out_c == in_c` by construction.
+                let ow = (in_w + 2 * pad - size) / stride + 1;
+                let oh = (in_h + 2 * pad - size) / stride + 1;
+                (ow, oh, in_c)
+            }
             LayerKind::MaxPool { size, stride } => {
                 // Darknet pads maxpool so that out = ceil(in / stride); for
                 // the even dimensions of the YOLOv2 prefix this is in/stride.
@@ -132,6 +160,8 @@ impl LayerSpec {
             LayerKind::Conv { filters, size, .. } => {
                 (size * size * self.in_c * filters) as u64
             }
+            // One k x k filter per channel: C * k * k, not C * k * k * F.
+            LayerKind::DepthwiseConv { size, .. } => (size * size * self.in_c) as u64,
             LayerKind::MaxPool { .. } => 0,
         }
     }
@@ -160,6 +190,12 @@ impl LayerSpec {
                 (self.out_w * self.out_h * size * size * self.in_c / stride) as u64
                     * BYTES_PER_ELEM
             }
+            // Darknet's grouped-conv workspace with groups == channels: the
+            // per-channel im2col buffer (`w * h * F^2 / s`) is reused across
+            // channels, so `c` drops out of Eq. (2.1).
+            LayerKind::DepthwiseConv { size, stride, .. } => {
+                (self.out_w * self.out_h * size * size / stride) as u64 * BYTES_PER_ELEM
+            }
             LayerKind::MaxPool { .. } => 0,
         }
     }
@@ -179,6 +215,10 @@ impl LayerSpec {
                 (self.out_w * self.out_h) as u64
                     * (size * size * self.in_c) as u64
                     * self.out_c as u64
+            }
+            // k*k MACs per output element, no cross-channel reduction.
+            LayerKind::DepthwiseConv { size, .. } => {
+                (self.out_w * self.out_h * self.out_c) as u64 * (size * size) as u64
             }
             LayerKind::MaxPool { size, .. } => {
                 (self.out_w * self.out_h * self.out_c) as u64 * (size * size) as u64
@@ -232,6 +272,83 @@ mod tests {
         assert!((l.input_bytes() as f64 / MIB as f64 - 4.23).abs() < 0.01);
         assert!((l.output_bytes() as f64 / MIB as f64 - 45.13).abs() < 0.01);
         assert!((l.scratch_bytes() as f64 / MIB as f64 - 38.07).abs() < 0.01);
+    }
+
+    #[test]
+    fn depthwise_preserves_shape_and_channels() {
+        let l = LayerSpec::resolve(
+            LayerKind::DepthwiseConv {
+                size: 3,
+                stride: 1,
+                pad: 1,
+            },
+            32,
+            32,
+            16,
+        );
+        assert_eq!((l.out_w, l.out_h, l.out_c), (32, 32, 16));
+    }
+
+    #[test]
+    fn depthwise_weight_bytes_are_per_channel() {
+        // C * k * k * 4 bytes: 16 channels * 9 taps * 4 = 576, independent
+        // of any notion of output filters.
+        let l = LayerSpec::resolve(
+            LayerKind::DepthwiseConv {
+                size: 3,
+                stride: 1,
+                pad: 1,
+            },
+            32,
+            32,
+            16,
+        );
+        assert_eq!(l.weight_params(), 16 * 9);
+        assert_eq!(l.weight_bytes(), 16 * 9 * 4);
+        // The full conv with the same shape costs F times more.
+        let full = LayerSpec::resolve(
+            LayerKind::Conv {
+                filters: 16,
+                size: 3,
+                stride: 1,
+                pad: 1,
+            },
+            32,
+            32,
+            16,
+        );
+        assert_eq!(full.weight_bytes(), l.weight_bytes() * 16);
+    }
+
+    #[test]
+    fn depthwise_scratch_drops_channel_factor() {
+        // Per-channel im2col buffer reused across channels: w*h*k^2/s elems.
+        let l = LayerSpec::resolve(
+            LayerKind::DepthwiseConv {
+                size: 3,
+                stride: 1,
+                pad: 1,
+            },
+            32,
+            32,
+            16,
+        );
+        assert_eq!(l.scratch_bytes(), (32 * 32 * 9) as u64 * 4);
+    }
+
+    #[test]
+    fn depthwise_macs_have_no_channel_reduction() {
+        let l = LayerSpec::resolve(
+            LayerKind::DepthwiseConv {
+                size: 3,
+                stride: 1,
+                pad: 1,
+            },
+            32,
+            32,
+            16,
+        );
+        assert_eq!(l.macs(), (32 * 32 * 16 * 9) as u64);
     }
 
     #[test]

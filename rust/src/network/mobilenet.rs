@@ -1,0 +1,155 @@
+//! MobileNet-style depthwise-separable prefix: alternating depthwise 3x3 /
+//! pointwise 1x1 stacks (arXiv 2303.17878 shows MAFAT's fusing/tiling
+//! formulation extends directly to this workload class). Built from the
+//! same [`LayerKind`] substrate as [`super::yolov2`], so the predictor,
+//! tiler, search, and executors consume it unchanged — only the weight and
+//! peak profile differs: depthwise layers carry `C*k*k` weights instead of
+//! `C*k*k*F`, shifting where a fused group's memory peak lands.
+
+use super::{LayerKind, Network};
+
+/// SAME-padded depthwise 3x3 (stride 1) — the MobileNet spatial filter.
+fn dw3() -> LayerKind {
+    LayerKind::DepthwiseConv {
+        size: 3,
+        stride: 1,
+        pad: 1,
+    }
+}
+
+/// Pointwise 1x1 conv — the MobileNet channel mixer, an ordinary
+/// [`LayerKind::Conv`] with `size == 1`.
+fn pw(filters: usize) -> LayerKind {
+    LayerKind::Conv {
+        filters,
+        size: 1,
+        stride: 1,
+        pad: 0,
+    }
+}
+
+/// SAME-padded full conv (the stem layer).
+fn conv(filters: usize, size: usize) -> LayerKind {
+    LayerKind::Conv {
+        filters,
+        size,
+        stride: 1,
+        pad: size / 2,
+    }
+}
+
+/// 2x2/2 maxpool. MobileNet proper downsamples with strided depthwise
+/// convs; we use pools so MAFAT's memory-aware cut rule (§3.1: cut after
+/// pools) applies to this network exactly as it does to YOLOv2.
+fn maxpool() -> LayerKind {
+    LayerKind::MaxPool { size: 2, stride: 2 }
+}
+
+/// Layer kinds of the 16-layer MobileNet-style prefix: a full-conv stem
+/// followed by depthwise/pointwise pairs, downsampling (and doubling
+/// channels) three times. Candidate cuts land at `[4, 9, 14]`.
+pub fn mobilenet_16_ops() -> Vec<LayerKind> {
+    vec![
+        conv(32, 3),  // 0:  WxHx3   -> WxHx32
+        dw3(),        // 1:  -> WxHx32
+        pw(64),       // 2:  -> WxHx64
+        maxpool(),    // 3:  -> W/2xH/2x64
+        dw3(),        // 4:  -> W/2xH/2x64
+        pw(128),      // 5:  -> W/2xH/2x128
+        dw3(),        // 6:  -> W/2xH/2x128
+        pw(128),      // 7:  -> W/2xH/2x128
+        maxpool(),    // 8:  -> W/4xH/4x128
+        dw3(),        // 9:  -> W/4xH/4x128
+        pw(256),      // 10: -> W/4xH/4x256
+        dw3(),        // 11: -> W/4xH/4x256
+        pw(256),      // 12: -> W/4xH/4x256
+        maxpool(),    // 13: -> W/8xH/8x256
+        dw3(),        // 14: -> W/8xH/8x256
+        pw(512),      // 15: -> W/8xH/8x512
+    ]
+}
+
+/// Full-size MobileNet-16 prefix at the family's canonical 224x224x3 input.
+pub fn mobilenet_16() -> Network {
+    Network::from_ops("mobilenet-16", 224, 224, 3, &mobilenet_16_ops())
+}
+
+/// Scaled MobileNet-16 (default reference-bundle input is 96x96): same
+/// kinds and channel counts as [`mobilenet_16`], so planning geometry
+/// exercises identical code paths at a fraction of the compute.
+pub fn mobilenet_16_scaled(in_wh: usize) -> Network {
+    Network::from_ops(
+        &format!("mobilenet-16-s{in_wh}"),
+        in_wh,
+        in_wh,
+        3,
+        &mobilenet_16_ops(),
+    )
+}
+
+/// Small-input test variant: one stem conv, two depthwise/pointwise pairs
+/// around a pool, 16x16 input — big enough for multi-tile grids and a cut
+/// (candidate cuts: `[4]`), small enough for exhaustive bit-exact tests.
+pub fn mobilenet_tiny() -> Network {
+    Network::from_ops(
+        "mobilenet-tiny",
+        16,
+        16,
+        3,
+        &[conv(4, 3), dw3(), pw(8), maxpool(), dw3(), pw(16)],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenet_16_shapes_chain() {
+        let net = mobilenet_16();
+        net.validate().unwrap();
+        assert_eq!(net.n_layers(), 16);
+        assert_eq!(net.out_shape(15), (28, 28, 512));
+    }
+
+    #[test]
+    fn candidate_cuts_after_pools() {
+        assert_eq!(mobilenet_16().candidate_cuts(), vec![4, 9, 14]);
+        assert_eq!(mobilenet_tiny().candidate_cuts(), vec![4]);
+    }
+
+    #[test]
+    fn depthwise_layers_preserve_channels() {
+        let net = mobilenet_16();
+        let mut saw_dw = 0;
+        for l in &net.layers {
+            if matches!(l.kind, LayerKind::DepthwiseConv { .. }) {
+                saw_dw += 1;
+                assert_eq!(l.in_c, l.out_c);
+                assert_eq!((l.in_w, l.in_h), (l.out_w, l.out_h));
+            }
+        }
+        assert_eq!(saw_dw, 6);
+    }
+
+    #[test]
+    fn depthwise_weights_dominate_less_than_pointwise() {
+        // The separable structure's whole point: per-channel 3x3 filters
+        // are far cheaper than the 1x1 channel mixers that follow them.
+        let net = mobilenet_16();
+        for pair in net.layers.windows(2) {
+            if matches!(pair[0].kind, LayerKind::DepthwiseConv { .. })
+                && matches!(pair[1].kind, LayerKind::Conv { .. })
+            {
+                assert!(pair[0].weight_bytes() < pair[1].weight_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_variant_validates() {
+        let net = mobilenet_tiny();
+        net.validate().unwrap();
+        assert_eq!(net.out_shape(net.n_layers() - 1), (8, 8, 16));
+    }
+}

@@ -4,6 +4,7 @@
 
 mod layer;
 pub mod cfg;
+pub mod mobilenet;
 pub mod yolov2;
 
 pub use layer::{LayerKind, LayerSpec, BYTES_PER_ELEM, MIB};

@@ -120,6 +120,10 @@ pub fn peak_of_group_plan(net: &Network, group: &GroupPlan) -> PeakSite {
                 LayerKind::Conv { size, stride, .. } => {
                     w_out * h_out * c_in * (size * size) as u64 / stride as u64
                 }
+                // Per-channel im2col buffer reused across channels.
+                LayerKind::DepthwiseConv { size, stride, .. } => {
+                    w_out * h_out * (size * size) as u64 / stride as u64
+                }
                 LayerKind::MaxPool { .. } => 0,
             };
             let input = w_in * h_in * c_in;
@@ -254,6 +258,32 @@ mod tests {
             "total {} MB",
             p.total_mb()
         );
+    }
+
+    #[test]
+    fn depthwise_peak_accounting_matches_hand_computation() {
+        // One depthwise 3x3 (SAME, stride 1) on an 8x8x4 input, untiled:
+        //   scratch = out_w*out_h*k*k/s   = 8*8*9     = 576 elems
+        //   output  = out_w*out_h*out_c   = 8*8*4     = 256 elems
+        //   input   = in_w*in_h*in_c      = 8*8*4     = 256 elems
+        //   tile    = (576 + 256 + 2*256) * 4 B       = 5376 B
+        // and the group's weights are per-channel: C*k*k*4 = 4*9*4 = 144 B
+        // (a full 4-filter conv of the same shape would carry 576 B).
+        let net = crate::network::Network::from_ops(
+            "dw-hand",
+            8,
+            8,
+            4,
+            &[LayerKind::DepthwiseConv {
+                size: 3,
+                stride: 1,
+                pad: 1,
+            }],
+        );
+        let plan = crate::ftp::plan_group(&net, 0, 0, 1, 1).unwrap();
+        let peak = peak_of_group_plan(&net, &plan);
+        assert_eq!(peak.tile_bytes, 5376);
+        assert_eq!(net.group_weight_bytes(0, 0), 144);
     }
 
     #[test]

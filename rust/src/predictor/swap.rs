@@ -81,6 +81,9 @@ pub fn predict_swap(
                         (lg.out_rect.area() * size * size * spec.in_c / stride) as u64
                             * BYTES_PER_ELEM
                     }
+                    LayerKind::DepthwiseConv { size, stride, .. } => {
+                        (lg.out_rect.area() * size * size / stride) as u64 * BYTES_PER_ELEM
+                    }
                     LayerKind::MaxPool { .. } => 0,
                 };
                 let working = input + output + scratch * passes;

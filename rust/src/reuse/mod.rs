@@ -134,6 +134,7 @@ pub fn reuse_analysis(net: &Network, group: &GroupPlan) -> ReuseStats {
             let own_area = total_area - covered;
             let per_out: u64 = match spec.kind {
                 LayerKind::Conv { size, .. } => (size * size * spec.in_c * spec.out_c) as u64,
+                LayerKind::DepthwiseConv { size, .. } => (size * size * spec.out_c) as u64,
                 LayerKind::MaxPool { size, .. } => (size * size * spec.out_c) as u64,
             };
             let layer_macs = own_area as u64 * per_out;

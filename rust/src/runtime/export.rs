@@ -40,6 +40,12 @@ fn layer_kind_json(kind: &LayerKind) -> Json {
             ("stride", Json::num(stride as f64)),
             ("pad", Json::num(pad as f64)),
         ]),
+        LayerKind::DepthwiseConv { size, stride, pad } => Json::obj(vec![
+            ("kind", Json::str("dw")),
+            ("size", Json::num(size as f64)),
+            ("stride", Json::num(stride as f64)),
+            ("pad", Json::num(pad as f64)),
+        ]),
         LayerKind::MaxPool { size, stride } => Json::obj(vec![
             ("kind", Json::str("max")),
             ("size", Json::num(size as f64)),
@@ -319,6 +325,47 @@ pub fn write_default_reference_bundle(dir: &std::path::Path) -> Result<()> {
     )
 }
 
+/// The MobileNet-style network the depthwise reference bundle serves
+/// (96x96 input keeps the scalar oracle fast enough for `run --verify`).
+pub fn mobilenet_network() -> crate::network::Network {
+    crate::network::mobilenet::mobilenet_16_scaled(96)
+}
+
+/// Configurations of the MobileNet bundle: a governor-ladder-shaped set
+/// over the depthwise/pointwise stack — untiled, even grids with and
+/// without a cut (cut candidates for this network are `[4, 9, 14]`), and
+/// balanced variable tilings, so every fused config exercises depthwise
+/// layers through gather/execute/scatter.
+pub fn mobilenet_configs() -> Result<Vec<MultiConfig>> {
+    let mut configs: Vec<MultiConfig> = [
+        MafatConfig::no_cut(1),
+        MafatConfig::no_cut(2),
+        MafatConfig::with_cut(3, 9, 2),
+        MafatConfig::with_cut(4, 4, 2),
+    ]
+    .into_iter()
+    .map(MultiConfig::from_mafat)
+    .collect();
+    configs.push("3v3/9/2x2".parse()?);
+    configs.push("4v4/9/2v2".parse()?);
+    Ok(configs)
+}
+
+/// Write the MobileNet reference bundle to `dir`. Bundles are one network
+/// per directory (`Manifest::sole_network`), so this lives alongside — not
+/// inside — the default YOLOv2 bundle.
+pub fn write_mobilenet_reference_bundle(dir: &std::path::Path) -> Result<()> {
+    let net = mobilenet_network();
+    write_reference_bundle(
+        dir,
+        &[ExportSpec {
+            net: &net,
+            configs: mobilenet_configs()?,
+            emit_full: true,
+        }],
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -403,6 +450,34 @@ mod tests {
             for g in &entry.groups {
                 assert!(g.xs.is_some() && g.ys.is_some(), "{}", entry.config);
             }
+        }
+    }
+
+    #[test]
+    fn mobilenet_manifest_parses_and_verifies() {
+        // The depthwise bundle round-trips: `dw` layer entries parse back
+        // into `LayerKind::DepthwiseConv` and every config's geometry
+        // (including the fused-with-cut and balanced entries) cross-checks
+        // against a fresh plan.
+        let net = mobilenet_network();
+        let j = reference_manifest(&[ExportSpec {
+            net: &net,
+            configs: mobilenet_configs().unwrap(),
+            emit_full: true,
+        }])
+        .unwrap();
+        let m = crate::runtime::Manifest::parse(&j.to_string_pretty()).unwrap();
+        let mnet = m.sole_network().unwrap();
+        assert_eq!(mnet.backend, crate::runtime::BackendKind::Reference);
+        assert!(
+            mnet.ops
+                .iter()
+                .any(|k| matches!(k, crate::network::LayerKind::DepthwiseConv { .. })),
+            "parsed network must keep its depthwise layers"
+        );
+        assert_eq!(mnet.configs.len(), 6);
+        for entry in &mnet.configs {
+            mnet.verify_geometry(&entry.config).unwrap();
         }
     }
 

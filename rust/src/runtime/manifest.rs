@@ -235,6 +235,11 @@ fn parse_ops(layers: &Json) -> Result<Vec<LayerKind>> {
                     stride: l.usize_at("stride")?,
                     pad: l.usize_at("pad")?,
                 },
+                "dw" => LayerKind::DepthwiseConv {
+                    size: l.usize_at("size")?,
+                    stride: l.usize_at("stride")?,
+                    pad: l.usize_at("pad")?,
+                },
                 "max" => LayerKind::MaxPool {
                     size: l.usize_at("size")?,
                     stride: l.usize_at("stride")?,

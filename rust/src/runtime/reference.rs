@@ -96,6 +96,24 @@ pub fn run_task(
                     ow,
                 )?
             }
+            LayerKind::DepthwiseConv { size, stride, .. } => {
+                let lw = weights[lg.layer]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("layer {} has no weights", lg.layer))?;
+                depthwise_conv2d(
+                    &x,
+                    ih,
+                    iw,
+                    spec.in_c,
+                    &lw.w,
+                    &lw.b,
+                    size,
+                    stride,
+                    [lg.pad.top, lg.pad.bottom, lg.pad.left, lg.pad.right],
+                    oh,
+                    ow,
+                )?
+            }
             LayerKind::MaxPool { size, stride } => {
                 if lg.pad.any() {
                     bail!("layer {}: padded max-pool regions are not plannable", lg.layer);
@@ -142,10 +160,15 @@ pub struct PackedLayer {
     pub out_c: usize,
     /// `out_c` rounded up to an [`OC_LANES`] multiple.
     pub oc_pad: usize,
-    /// `size * size * in_c` rows of `oc_pad` weights.
+    /// `size * size * in_c` rows of `oc_pad` weights for a full conv;
+    /// `size * size` rows for a depthwise conv (one weight per channel
+    /// per tap — the per-channel filters live side by side in each row).
     pub w: Vec<f32>,
     /// Bias, zero-padded to `oc_pad`.
     pub b: Vec<f32>,
+    /// Depthwise layer: the microkernel multiplies element-wise per
+    /// channel instead of the rank-1 `axpy_lanes` update.
+    pub depthwise: bool,
 }
 
 /// Preconverted weights for a whole network, keyed by absolute layer index
@@ -205,6 +228,30 @@ pub fn pack_weights(net: &Network, weights: &[Option<LayerWeights>]) -> PackedWe
                     oc_pad,
                     w,
                     b,
+                    depthwise: false,
+                })
+            }
+            (LayerKind::DepthwiseConv { size, stride, .. }, Some(lw)) => {
+                // One weight per channel per tap: `size * size` rows of
+                // `out_c` (== `in_c`) channels, each zero-padded to lanes.
+                let rows = size * size;
+                let oc_pad = spec.out_c.div_ceil(OC_LANES) * OC_LANES;
+                let mut w = vec![0.0f32; rows * oc_pad];
+                for r in 0..rows {
+                    w[r * oc_pad..r * oc_pad + spec.out_c]
+                        .copy_from_slice(&lw.w[r * spec.out_c..(r + 1) * spec.out_c]);
+                }
+                let mut b = vec![0.0f32; oc_pad];
+                b[..spec.out_c].copy_from_slice(&lw.b);
+                Some(PackedLayer {
+                    size,
+                    stride,
+                    in_c: spec.in_c,
+                    out_c: spec.out_c,
+                    oc_pad,
+                    w,
+                    b,
+                    depthwise: true,
                 })
             }
             _ => None,
@@ -309,6 +356,89 @@ fn conv2d_blocked_into(
     Ok(())
 }
 
+/// Blocked depthwise conv + bias + leaky ReLU, bit-identical to
+/// [`depthwise_conv2d`]: same `bias, then += x*w in (fy, fx, ci) order`
+/// per output element, with the loop nest rearranged so one packed weight
+/// row (all channels of one tap) serves a whole block of output pixels.
+/// Unlike the full-conv microkernel there is no rank-1 update — each
+/// channel multiplies element-wise with its own filter tap, so the inner
+/// loop runs over the real `in_c` channels (padded lanes carry no input
+/// value and are never touched).
+#[allow(clippy::too_many_arguments)]
+fn depthwise_conv2d_blocked_into(
+    x: &[f32],
+    ih: usize,
+    iw: usize,
+    pk: &PackedLayer,
+    pads: [usize; 4],
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    let [pt, pb, pl, pr] = pads;
+    let (size, stride, in_c, out_c, ocp) = (pk.size, pk.stride, pk.in_c, pk.out_c, pk.oc_pad);
+    if (ih + pt + pb).saturating_sub(size) / stride + 1 != oh
+        || (iw + pl + pr).saturating_sub(size) / stride + 1 != ow
+    {
+        bail!("depthwise geometry mismatch: {ih}x{iw} + pads {pads:?} -/-> {oh}x{ow}");
+    }
+    if x.len() != ih * iw * in_c || out.len() != oh * ow * out_c {
+        bail!("depthwise buffer size mismatch");
+    }
+    let mut acc = vec![0.0f32; BLOCK_W * ocp];
+    for oy in 0..oh {
+        let y0 = (oy * stride) as isize - pt as isize;
+        let mut ox0 = 0;
+        while ox0 < ow {
+            let bw = BLOCK_W.min(ow - ox0);
+            for p in 0..bw {
+                acc[p * ocp..(p + 1) * ocp].copy_from_slice(&pk.b);
+            }
+            for fy in 0..size {
+                let y = y0 + fy as isize;
+                if y < 0 || y >= ih as isize {
+                    continue;
+                }
+                let row = &x[(y as usize * iw) * in_c..][..iw * in_c];
+                for fx in 0..size {
+                    let base = (ox0 * stride + fx) as isize - pl as isize;
+                    let p_lo = if base >= 0 {
+                        0
+                    } else {
+                        ((-base) as usize).div_ceil(stride)
+                    };
+                    let p_hi_raw = if base >= iw as isize {
+                        0
+                    } else {
+                        ((iw as isize - 1 - base) / stride as isize + 1) as usize
+                    };
+                    let p_hi = p_hi_raw.min(bw);
+                    if p_lo >= p_hi {
+                        continue;
+                    }
+                    let wrow = &pk.w[(fy * size + fx) * ocp..][..ocp];
+                    for p in p_lo..p_hi {
+                        let xx = (base + (p * stride) as isize) as usize;
+                        let xrow = &row[xx * in_c..][..in_c];
+                        let a = &mut acc[p * ocp..][..in_c];
+                        for ((a, &xv), &wv) in a.iter_mut().zip(xrow).zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+            for p in 0..bw {
+                let dst = (oy * ow + ox0 + p) * out_c;
+                for (o, &v) in out[dst..dst + out_c].iter_mut().zip(&acc[p * ocp..]) {
+                    *o = if v >= 0.0 { v } else { LEAKY_SLOPE * v };
+                }
+            }
+            ox0 += bw;
+        }
+    }
+    Ok(())
+}
+
 /// Execute one fused task on a contiguous batch of `n_tiles` same-class
 /// tiles (each `first.in_rect * in_c` dense HWC elements, back to back).
 /// Returns the contiguous batch of output tiles. This is the call shape
@@ -358,6 +488,23 @@ pub fn run_task_batch_blocked(
                     .ok_or_else(|| anyhow::anyhow!("layer {} has no packed weights", lg.layer))?;
                 for t in 0..n_tiles {
                     conv2d_blocked_into(
+                        &src[t * x_stride..][..x_stride],
+                        ih,
+                        iw,
+                        pk,
+                        [lg.pad.top, lg.pad.bottom, lg.pad.left, lg.pad.right],
+                        oh,
+                        ow,
+                        &mut next[t * out_stride..][..out_stride],
+                    )?;
+                }
+            }
+            LayerKind::DepthwiseConv { .. } => {
+                let pk = packed.layers[lg.layer]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("layer {} has no packed weights", lg.layer))?;
+                for t in 0..n_tiles {
+                    depthwise_conv2d_blocked_into(
                         &src[t * x_stride..][..x_stride],
                         ih,
                         iw,
@@ -461,6 +608,69 @@ fn conv2d(
     Ok(out)
 }
 
+/// Explicit-padding depthwise conv + bias + leaky ReLU over a dense HWC
+/// tile: channel `ci` of the output accumulates only channel `ci` of the
+/// input against its own `size * size` filter — no channel mixing, so
+/// `out_c == in_c`. Weight row order matches
+/// [`crate::engine::gen_network_weights`]: `w[(fy * size + fx) * c + ci]`.
+#[allow(clippy::too_many_arguments)]
+fn depthwise_conv2d(
+    x: &[f32],
+    ih: usize,
+    iw: usize,
+    c: usize,
+    w: &[f32],
+    b: &[f32],
+    size: usize,
+    stride: usize,
+    pads: [usize; 4],
+    oh: usize,
+    ow: usize,
+) -> Result<Vec<f32>> {
+    let [pt, pb, pl, pr] = pads;
+    if (ih + pt + pb).saturating_sub(size) / stride + 1 != oh
+        || (iw + pl + pr).saturating_sub(size) / stride + 1 != ow
+    {
+        bail!("depthwise geometry mismatch: {ih}x{iw} + pads {pads:?} -/-> {oh}x{ow}");
+    }
+    if w.len() != size * size * c || b.len() != c {
+        bail!("depthwise weight shape mismatch");
+    }
+    let mut out = vec![0.0f32; oh * ow * c];
+    let mut acc = vec![0.0f32; c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            acc.copy_from_slice(b);
+            for fy in 0..size {
+                let y = (oy * stride + fy) as isize - pt as isize;
+                if y < 0 || y >= ih as isize {
+                    continue;
+                }
+                for fx in 0..size {
+                    let xx = (ox * stride + fx) as isize - pl as isize;
+                    if xx < 0 || xx >= iw as isize {
+                        continue;
+                    }
+                    let in_base = (y as usize * iw + xx as usize) * c;
+                    let w_base = (fy * size + fx) * c;
+                    for ((a, &xv), &wv) in acc
+                        .iter_mut()
+                        .zip(&x[in_base..in_base + c])
+                        .zip(&w[w_base..w_base + c])
+                    {
+                        *a += xv * wv;
+                    }
+                }
+            }
+            let dst = (oy * ow + ox) * c;
+            for (o, &v) in out[dst..dst + c].iter_mut().zip(acc.iter()) {
+                *o = if v >= 0.0 { v } else { LEAKY_SLOPE * v };
+            }
+        }
+    }
+    Ok(out)
+}
+
 /// VALID max-pool over a dense HWC tile (pool regions are always
 /// window-aligned by the tiler, so every window is fully in bounds).
 #[allow(clippy::too_many_arguments)]
@@ -515,6 +725,14 @@ mod tests {
         }
     }
 
+    fn dw(size: usize) -> LayerKind {
+        LayerKind::DepthwiseConv {
+            size,
+            stride: 1,
+            pad: size / 2,
+        }
+    }
+
     fn tiny_net() -> Network {
         Network::from_ops(
             "ref-tiny",
@@ -522,6 +740,25 @@ mod tests {
             16,
             3,
             &[conv(4, 3), LayerKind::MaxPool { size: 2, stride: 2 }, conv(8, 3)],
+        )
+    }
+
+    /// MobileNet-flavored tiny net: full conv stem, then depthwise /
+    /// pointwise pairs around a pool — exercises every kind in one task.
+    fn dw_tiny_net() -> Network {
+        Network::from_ops(
+            "ref-dw-tiny",
+            16,
+            16,
+            3,
+            &[
+                conv(4, 3),
+                dw(3),
+                conv(8, 1),
+                LayerKind::MaxPool { size: 2, stride: 2 },
+                dw(3),
+                conv(16, 1),
+            ],
         )
     }
 
@@ -696,6 +933,117 @@ mod tests {
         let plan = plan_group(&net, 0, net.n_layers() - 1, 1, 1).unwrap();
         let blocked = run_task_blocked(&net, &packed, &plan.tasks[0], &image).unwrap();
         assert_eq!(blocked, oracle);
+    }
+
+    #[test]
+    fn depthwise_identity_tap_passes_positive_input_through() {
+        // A 1x1 depthwise conv with all-ones weights and zero bias is a
+        // per-channel copy for non-negative inputs.
+        let (h, w, c) = (3, 4, 2);
+        let x: Vec<f32> = (0..h * w * c).map(|i| i as f32).collect();
+        let out =
+            depthwise_conv2d(&x, h, w, c, &[1.0, 1.0], &[0.0, 0.0], 1, 1, [0; 4], h, w).unwrap();
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn depthwise_does_not_mix_channels() {
+        // Channel 1's filter is zero: its output is exactly leaky(bias),
+        // untouched by channel 0's (large) values.
+        let x = vec![100.0, 1.0]; // 1x1x2
+        let w = vec![5.0, 0.0]; // one 1x1 tap per channel
+        let b = vec![0.0, -3.0];
+        let out = depthwise_conv2d(&x, 1, 1, 2, &w, &b, 1, 1, [0; 4], 1, 1).unwrap();
+        assert_eq!(out, vec![500.0, -0.3]);
+    }
+
+    #[test]
+    fn depthwise_tiled_equals_untiled_bit_exact() {
+        // §2.1.1 equivalence on a depthwise/pointwise stack: stitched 2x2
+        // tiling == single-task full forward, bit for bit.
+        let net = dw_tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let image = crate::data::gen_image(31, net.in_w, net.in_h, net.in_c);
+        let oracle = run_full(&net, &weights, &image).unwrap();
+
+        let plan = plan_group(&net, 0, net.n_layers() - 1, 2, 2).unwrap();
+        let (ow, oh, oc) = net.out_shape(net.n_layers() - 1);
+        let mut stitched = vec![0.0f32; ow * oh * oc];
+        let in_map = crate::engine::FeatureMap {
+            h: net.in_h,
+            w: net.in_w,
+            c: net.in_c,
+            data: image,
+        };
+        for task in &plan.tasks {
+            let tile = in_map.gather(&task.input_rect());
+            let out = run_task(&net, &weights, task, &tile).unwrap();
+            let r = task.output_rect();
+            for (ty, y) in (r.y0..r.y1).enumerate() {
+                let dst = (y * ow + r.x0) * oc;
+                let src = ty * r.w() * oc;
+                stitched[dst..dst + r.w() * oc].copy_from_slice(&out[src..src + r.w() * oc]);
+            }
+        }
+        assert_eq!(stitched, oracle, "tiled and untiled must be bit-identical");
+    }
+
+    #[test]
+    fn depthwise_blocked_is_bit_identical_to_scalar() {
+        // Every tile of a 3x3 tiling of the dw/pw net — all pad combos —
+        // through the blocked path must equal the scalar path bit for bit.
+        let net = dw_tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = pack_weights(&net, &weights);
+        let image = crate::data::gen_image(37, net.in_w, net.in_h, net.in_c);
+        let in_map = crate::engine::FeatureMap {
+            h: net.in_h,
+            w: net.in_w,
+            c: net.in_c,
+            data: image,
+        };
+        let plan = plan_group(&net, 0, net.n_layers() - 1, 3, 3).unwrap();
+        for task in &plan.tasks {
+            let tile = in_map.gather(&task.input_rect());
+            let scalar = run_task(&net, &weights, task, &tile).unwrap();
+            let blocked = run_task_blocked(&net, &packed, task, &tile).unwrap();
+            assert_eq!(
+                scalar, blocked,
+                "task ({},{}) diverged",
+                task.grid_i, task.grid_j
+            );
+        }
+    }
+
+    #[test]
+    fn depthwise_packing_pads_lanes_and_preserves_values() {
+        let net = dw_tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = pack_weights(&net, &weights);
+        for (l, pk) in packed.layers.iter().enumerate() {
+            let Some(pk) = pk else { continue };
+            if !pk.depthwise {
+                continue;
+            }
+            let lw = weights[l].as_ref().unwrap();
+            assert_eq!(pk.oc_pad % OC_LANES, 0);
+            assert_eq!(pk.out_c, pk.in_c, "depthwise preserves channels");
+            // size*size rows of out_c channels, padded to oc_pad lanes.
+            assert_eq!(pk.w.len(), pk.size * pk.size * pk.oc_pad);
+            for r in 0..pk.size * pk.size {
+                let packed_row = &pk.w[r * pk.oc_pad..][..pk.oc_pad];
+                assert_eq!(
+                    &packed_row[..pk.out_c],
+                    &lw.w[r * pk.out_c..(r + 1) * pk.out_c]
+                );
+                assert!(packed_row[pk.out_c..].iter().all(|&v| v == 0.0));
+            }
+            assert_eq!(&pk.b[..pk.out_c], &lw.b[..]);
+        }
+        assert!(
+            packed.layers.iter().flatten().any(|pk| pk.depthwise),
+            "net must contain a depthwise layer"
+        );
     }
 
     #[test]

@@ -387,6 +387,37 @@ mod tests {
     }
 
     #[test]
+    fn mobilenet_search_and_frontier_return_fused_depthwise_configs() {
+        // The depthwise-separable network plans end to end: the variable
+        // search returns a config whose groups fuse depthwise layers, and
+        // the variable frontier is a valid, plannable ladder for it.
+        let net = crate::network::mobilenet::mobilenet_16_scaled(96);
+        let params = PredictorParams::default();
+        let r = search_multi_variable(&net, 48 * MIB, 3, 5, &params).unwrap();
+        let plan = crate::plan::plan_multi(&net, &r.config).unwrap();
+        assert!(
+            plan.groups.iter().any(|g| net.layers[g.top..=g.bottom]
+                .iter()
+                .any(|l| matches!(l.kind, LayerKind::DepthwiseConv { .. }))
+                && (g.top != g.bottom)),
+            "expected a fused group containing a depthwise layer: {}",
+            r.config
+        );
+
+        let points = frontier_variable(&net, 3, 5, &params).unwrap();
+        assert!(points.len() >= 2, "frontier has only {} points", points.len());
+        for pair in points.windows(2) {
+            // A valid ladder: memory strictly grows, cost strictly drops.
+            assert!(pair[0].predicted_bytes < pair[1].predicted_bytes);
+            assert!(pair[0].cost_proxy > pair[1].cost_proxy);
+        }
+        for p in &points {
+            // Every rung must plan (boundaries rebuild exactly).
+            crate::plan::plan_multi(&net, &p.config).unwrap();
+        }
+    }
+
+    #[test]
     fn generous_memory_returns_untiled() {
         // Table 4.1: at 256 MB and 192 MB the algorithm returns 1x1/NoCut.
         for mb in [256, 192] {

@@ -190,11 +190,18 @@ pub fn mafat_trace(net: &Network, plan: &Plan, opts: &SimOptions) -> Vec<Step> {
                     bytes: tile_bytes(lg.out_rect.area(), spec.out_c),
                 });
                 match spec.kind {
-                    LayerKind::Conv { size, stride, .. } => {
+                    LayerKind::Conv { .. } | LayerKind::DepthwiseConv { .. } => {
                         // im2col: read input tile, write scratch; GEMM: read
-                        // scratch, write output tile.
+                        // scratch, write output tile. Depthwise reuses one
+                        // per-channel im2col buffer, so its scratch drops the
+                        // `in_c` factor.
+                        let (size, stride) = (spec.kind.filter(), spec.kind.stride());
+                        let chan = match spec.kind {
+                            LayerKind::Conv { .. } => spec.in_c,
+                            _ => 1,
+                        };
                         let scr = format!("g{gi}.t{tix}.l{li}.scr");
-                        let scr_bytes = (lg.out_rect.area() * size * size * spec.in_c
+                        let scr_bytes = (lg.out_rect.area() * size * size * chan
                             / stride) as u64
                             * BYTES_PER_ELEM;
                         push(&mut steps, Step::Alloc { key: scr.clone(), bytes: scr_bytes.max(1) });
@@ -217,6 +224,9 @@ pub fn mafat_trace(net: &Network, plan: &Plan, opts: &SimOptions) -> Vec<Step> {
                         let per_out: u64 = match spec.kind {
                             LayerKind::Conv { size, .. } => {
                                 (size * size * spec.in_c * spec.out_c) as u64
+                            }
+                            LayerKind::DepthwiseConv { size, .. } => {
+                                (size * size * spec.out_c) as u64
                             }
                             LayerKind::MaxPool { size, .. } => {
                                 (size * size * spec.out_c) as u64

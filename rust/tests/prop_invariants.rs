@@ -418,6 +418,105 @@ fn prop_class_batched_blocked_execution_matches_scalar_sequential() {
     });
 }
 
+/// A small random depthwise/pointwise stack (MobileNet-shaped): a full-conv
+/// stem, then alternating depthwise 3x3 / pointwise 1x1 pairs with
+/// occasional pools — every net is guaranteed at least one depthwise layer.
+fn random_dw_pw_network(rng: &mut SplitMix64) -> Network {
+    let mut ops = vec![LayerKind::Conv {
+        filters: 1 << (1 + rng.next_below(3)),
+        size: 3,
+        stride: 1,
+        pad: 1,
+    }];
+    let n_pairs = 1 + rng.next_below(3);
+    let mut pools = 0;
+    for _ in 0..n_pairs {
+        ops.push(LayerKind::DepthwiseConv {
+            size: 3,
+            stride: 1,
+            pad: 1,
+        });
+        ops.push(LayerKind::Conv {
+            filters: 1 << (1 + rng.next_below(3)),
+            size: 1,
+            stride: 1,
+            pad: 0,
+        });
+        if pools < 1 && rng.next_below(3) == 0 {
+            ops.push(LayerKind::MaxPool { size: 2, stride: 2 });
+            pools += 1;
+        }
+    }
+    let wh = 8 * (1 + rng.next_below(3)); // 8..24
+    Network::from_ops("prop-dw", wh, wh, 3, &ops)
+}
+
+#[test]
+fn prop_depthwise_class_batched_blocked_matches_scalar_sequential() {
+    // The depthwise tentpole equivalence: over arbitrary small
+    // depthwise/pointwise stacks and arbitrary rect partitions, executing
+    // each shape class with one blocked batched call must reproduce the
+    // scalar per-tile sequential path byte for byte — and the plan's
+    // boundaries must round-trip through `GroupPlan::bounds()`.
+    cases(25, |rng| {
+        let net = random_dw_pw_network(rng);
+        let bottom = net.n_layers() - 1;
+        let (w, h, _) = net.out_shape(bottom);
+        let xs = random_bounds(rng, w, 4);
+        let ys = random_bounds(rng, h, 4);
+        let g = plan_group_from_bounds(&net, 0, bottom, &xs, &ys).unwrap();
+        assert_eq!(g.bounds(), (xs, ys), "bounds must round-trip");
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = reference::pack_weights(&net, &weights);
+        let image = mafat::data::gen_image(7100, net.in_w, net.in_h, net.in_c);
+        let input = FeatureMap {
+            h: net.in_h,
+            w: net.in_w,
+            c: net.in_c,
+            data: image,
+        };
+        let (ow, oh, oc) = net.out_shape(bottom);
+
+        // Scalar sequential reference.
+        let mut expected = FeatureMap::zeros(oh, ow, oc);
+        for task in &g.tasks {
+            let tile = input.gather(&task.input_rect());
+            let out = reference::run_task(&net, &weights, task, &tile).unwrap();
+            expected.scatter(&task.output_rect(), &out);
+        }
+
+        // Class-batched blocked path: one executor call per class.
+        let mut got = FeatureMap::zeros(oh, ow, oc);
+        let mut by_class: std::collections::HashMap<String, Vec<usize>> =
+            std::collections::HashMap::new();
+        for (ix, task) in g.tasks.iter().enumerate() {
+            by_class
+                .entry(task.class_key().short_name())
+                .or_default()
+                .push(ix);
+        }
+        for ixs in by_class.values() {
+            let mut batch = Vec::new();
+            for &ix in ixs {
+                batch.extend_from_slice(&input.gather(&g.tasks[ix].input_rect()));
+            }
+            let out = reference::run_task_batch_blocked(
+                &net,
+                &packed,
+                &g.tasks[ixs[0]],
+                &batch,
+                ixs.len(),
+            )
+            .unwrap();
+            let stride = out.len() / ixs.len();
+            for (slot, &ix) in ixs.iter().enumerate() {
+                got.scatter(&g.tasks[ix].output_rect(), &out[slot * stride..][..stride]);
+            }
+        }
+        assert_eq!(expected.data, got.data, "batched blocked != scalar sequential");
+    });
+}
+
 #[test]
 fn prop_reuse_schedule_is_permutation_and_even_first() {
     cases(CASES, |rng| {
