@@ -1,17 +1,18 @@
-//! Serving demo: boots the coordinator with a small worker pool, drives it
-//! with a client load (mixed synthetic-image requests over several
-//! connections), prints per-request latencies and the final metrics
-//! snapshot — the single-device edge-serving scenario the paper's intro
-//! motivates, scaled out to N engines.
+//! Serving demo: boots the coordinator with a small worker pool serving
+//! TWO models from one process — the multi-tenant edge scenario — and
+//! drives it with a mixed client load: legacy v0 requests (no `v`, no
+//! `model`) at the default YOLOv2 bundle and protocol-v1 requests at the
+//! MobileNet bundle. Prints per-request latencies and the final metrics
+//! snapshot with its per-model slices.
 //!
 //! Runs against `make artifacts` output when present; otherwise falls
-//! back through the shared `runtime::export::ensure_reference_bundle`
-//! helper (same as `examples/e2e_inference.rs`), which exports a
-//! geometry-only reference bundle on the fly and serves it with the
-//! pure-Rust blocked executor. Run:
+//! back through the shared `runtime::export::ensure_*_bundle` helpers
+//! (same as `examples/e2e_inference.rs`), which export geometry-only
+//! reference bundles on the fly and serve them with the pure-Rust
+//! blocked executor. Run:
 //!     cargo run --release --example serve [ARTIFACTS_DIR] [WORKERS]
 
-use mafat::coordinator::{Server, ServerConfig};
+use mafat::coordinator::{ModelSpec, QosClass, Server, ServerConfig};
 use mafat::engine::Engine;
 use mafat::jsonlite::Json;
 use mafat::plan::MultiConfig;
@@ -26,25 +27,43 @@ fn main() -> anyhow::Result<()> {
         .map(|w| w.parse())
         .transpose()?
         .unwrap_or(2);
-    let artifacts =
+    let yolo_dir =
         mafat::runtime::export::ensure_reference_bundle(&artifacts, "mafat-serve-example")?;
-    let config: MultiConfig = "3x3/8/2x2".parse()?;
+    let mobile_dir = mafat::runtime::export::ensure_mobilenet_reference_bundle(
+        "artifacts-mobilenet",
+        "mafat-serve-example",
+    )?;
+    let yolo_config: MultiConfig = "3x3/8/2x2".parse()?;
+    let mobile_config: MultiConfig = "3x3/9/2x2".parse()?;
 
-    let server = Server::start(
-        move || Engine::load(&artifacts, config.clone()),
+    let server = Server::start_multi(
+        vec![
+            ModelSpec {
+                name: "default".into(),
+                qos: QosClass::Interactive,
+                factory: Box::new(move || Engine::load(&yolo_dir, yolo_config.clone())),
+            },
+            ModelSpec {
+                name: "mobilenet".into(),
+                qos: QosClass::Batch,
+                factory: Box::new(move || Engine::load(&mobile_dir, mobile_config.clone())),
+            },
+        ],
         "127.0.0.1:0",
         ServerConfig {
             queue_depth: 32,
             max_batch: 4,
             workers,
         },
+        None,
     )?;
     let addr = server.local_addr;
     std::thread::spawn(move || {
         let _ = server.run();
     });
 
-    // Client load: 3 connections x 4 requests each.
+    // Client load: 3 connections x 4 requests each, alternating a legacy
+    // v0 request (routed to `default`) with a v1 request at `mobilenet`.
     let t0 = Instant::now();
     let handles: Vec<_> = (0..3)
         .map(|conn| {
@@ -55,8 +74,19 @@ fn main() -> anyhow::Result<()> {
                 let mut reader = BufReader::new(stream);
                 let mut out = Vec::new();
                 for i in 0..4 {
-                    let id = format!("c{conn}-r{i}");
-                    let req = format!(r#"{{"cmd":"infer","id":"{id}","seed":{}}}"#, conn * 10 + i);
+                    let seed = conn * 10 + i;
+                    let (id, req) = if i % 2 == 0 {
+                        let id = format!("c{conn}-v0-r{i}");
+                        (id.clone(), format!(r#"{{"cmd":"infer","id":"{id}","seed":{seed}}}"#))
+                    } else {
+                        let id = format!("c{conn}-v1-r{i}");
+                        (
+                            id.clone(),
+                            format!(
+                                r#"{{"v":1,"cmd":"infer","model":"mobilenet","id":"{id}","seed":{seed}}}"#
+                            ),
+                        )
+                    };
                     writer.write_all(req.as_bytes())?;
                     writer.write_all(b"\n")?;
                     let mut line = String::new();
@@ -80,9 +110,9 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     all.sort_by(|a, b| a.0.cmp(&b.0));
-    println!("{:<10} {:>12} {:>10}", "request", "infer (ms)", "queue (ms)");
+    println!("{:<12} {:>12} {:>10}", "request", "infer (ms)", "queue (ms)");
     for (id, lat, q) in &all {
-        println!("{id:<10} {lat:>12.1} {q:>10.1}");
+        println!("{id:<12} {lat:>12.1} {q:>10.1}");
     }
     println!(
         "\n{} requests in {:.2} s wall ({:.2} req/s over a pool of {workers} worker(s))",
@@ -91,12 +121,23 @@ fn main() -> anyhow::Result<()> {
         all.len() as f64 / wall
     );
 
-    // Metrics snapshot (aggregated across the pool).
+    // A structured error: v1 gives every failure a stable machine code.
     let stream = TcpStream::connect(addr)?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    writer.write_all(b"{\"cmd\":\"metrics\"}\n")?;
+    writer.write_all(b"{\"v\":1,\"cmd\":\"infer\",\"model\":\"nope\",\"id\":\"x\"}\n")?;
     let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = Json::parse(&line)?;
+    println!(
+        "\nunknown model -> error.code {:?}: {}",
+        j.get("error")?.str_at("code")?,
+        j.get("error")?.str_at("message")?
+    );
+
+    // Metrics snapshot (aggregates + per-model slices).
+    writer.write_all(b"{\"cmd\":\"metrics\"}\n")?;
+    line.clear();
     reader.read_line(&mut line)?;
     let j = Json::parse(&line)?;
     println!("\nserver metrics:\n{}", j.str_at("metrics")?);

@@ -769,3 +769,61 @@ def engine_infer_batched(engine, images):
     shared = engine['shared']
     return infer_batched_packed(
         shared['layers'], shared['packed'], engine['groups'], images)
+
+
+# --------------------------------------------------------------------------
+# coordinator::governor — the multi-tenant arbiter's pure math (PR 7).
+
+QOS_WEIGHT = {'interactive': 3, 'batch': 1}
+# Batch sorts below interactive: the sacrificial class under pressure.
+QOS_ORDER = {'batch': 0, 'interactive': 1}
+
+
+def derive_drain(headroom, per_image, max_batch, workers):
+    """governor::derive_drain — per-wake batch drain from a headroom share:
+    clamp(headroom / per_image, 1, max(1, max_batch / workers)); a zero
+    per-image prediction falls back to the cap."""
+    cap = max(1, max_batch // max(1, workers))
+    if per_image == 0:
+        return cap
+    return min(cap, max(1, headroom // per_image))
+
+
+def arbiter_drains(tenants, budget, max_batch, workers):
+    """governor::split_drains — the joint headroom (budget minus every
+    tenant's resident base = predicted - activation) shared by QoS weight
+    (interactive 3 : batch 1), each share divided by the tenant's active
+    activation footprint. Tenants are dicts with keys
+    name/qos/predicted/activation."""
+    bases = sum(t['predicted'] - t['activation'] for t in tenants)
+    headroom = max(0, budget - bases)
+    total_w = sum(QOS_WEIGHT[t['qos']] for t in tenants)
+    return {
+        t['name']: derive_drain(
+            headroom * QOS_WEIGHT[t['qos']] // max(1, total_w),
+            t['activation'], max_batch, workers)
+        for t in tenants
+    }
+
+
+def step_down_victim(tenants):
+    """governor::step_down_victim — among tenants of the lowest QoS class
+    present, the first in registration order with a rung left below it
+    (tenant dicts carry a `rung` index). Interactive tenants are never
+    victims while any batch tenant is registered."""
+    sacrificial = min(QOS_ORDER[t['qos']] for t in tenants)
+    for t in tenants:
+        if QOS_ORDER[t['qos']] == sacrificial and t['rung'] > 0:
+            return t['name']
+    return None
+
+
+def route_model(served, request):
+    """coordinator::process_line's model resolution — the `model` field
+    (absent means the legacy id `default`) must name a served model; an
+    unknown id yields the stable `unknown_model` code before any queue is
+    touched. Returns (model, error_code)."""
+    name = request.get('model', 'default')
+    if name in served:
+        return name, None
+    return None, 'unknown_model'

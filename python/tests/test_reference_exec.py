@@ -367,3 +367,52 @@ def test_depthwise_packing_pads_lanes_and_preserves_values():
     assert not wp[:, :, 3:].any()
     assert np.array_equal(bp[:3], b)
     assert not bp[3:].any()
+
+
+def test_arbiter_drain_split_mirrors_the_rust_governor():
+    # Pinned cross-language numbers (rust governor.rs test
+    # `drain_split_weights_interactive_over_batch`): budget 1000, resident
+    # bases (300-100) + (260-60) = 400 -> joint headroom 600, split 3:1 ->
+    # 450/150, divided by activation 100/60 -> drains 4 and 2 under
+    # max_batch 8, workers 1.
+    tenants = [
+        {'name': 'a', 'qos': 'interactive', 'predicted': 300, 'activation': 100},
+        {'name': 'b', 'qos': 'batch', 'predicted': 260, 'activation': 60},
+    ]
+    assert port.arbiter_drains(tenants, 1000, 8, 1) == {'a': 4, 'b': 2}
+    # A single tenant reduces to the plain single-model derivation:
+    # headroom 800 over activation 100 hits the max_batch/workers cap.
+    solo = [tenants[0]]
+    assert port.arbiter_drains(solo, 1000, 8, 1) == {'a': 8}
+    assert port.arbiter_drains(solo, 1000, 8, 2) == {'a': 4}
+    # Drains never drop below 1 (forward progress) even with no headroom,
+    # and a zero activation prediction falls back to the cap.
+    assert port.arbiter_drains(tenants, 1, 8, 1) == {'a': 1, 'b': 1}
+    assert port.derive_drain(0, 0, 8, 2) == 4
+
+
+def test_arbiter_victim_and_routing_mirror_the_coordinator():
+    # Step-down policy: while any batch tenant is registered, only batch
+    # tenants are victims — even when the batch tenant is listed second.
+    tenants = [
+        {'name': 'a', 'qos': 'interactive', 'rung': 2},
+        {'name': 'b', 'qos': 'batch', 'rung': 1},
+    ]
+    assert port.step_down_victim(tenants) == 'b'
+    # A batch tenant at its floor leaves nobody to step: the pool holds
+    # (the interactive tenant's rung and checksums are pinned).
+    tenants[1]['rung'] = 0
+    assert port.step_down_victim(tenants) is None
+    # Without batch tenants, interactive degrades like a single-model
+    # server: first registered with a rung left.
+    solo = [{'name': 'a', 'qos': 'interactive', 'rung': 2}]
+    assert port.step_down_victim(solo) == 'a'
+    solo[0]['rung'] = 0
+    assert port.step_down_victim(solo) is None
+
+    # Routing: a missing `model` field is the legacy id `default`; unknown
+    # ids get the stable `unknown_model` code before any queue is touched.
+    served = {'default', 'mobile'}
+    assert port.route_model(served, {'cmd': 'infer'}) == ('default', None)
+    assert port.route_model(served, {'v': 1, 'model': 'mobile'}) == ('mobile', None)
+    assert port.route_model(served, {'v': 1, 'model': 'nope'}) == (None, 'unknown_model')

@@ -60,40 +60,54 @@ Tooling:
                                                     toolchain needed
 
 Real execution (against `make artifacts` or an `export-bundle` dir):
-  run       --config 5v5/12/3v3 [--artifacts DIR] [--batch N] [--verify]
+  run       --config 5v5/12/3v3 [--bundle DIR] [--batch N] [--verify]
             (--config takes any manifest entry: k-group cuts and
              variable `TvT` tilings included)
-  serve     --addr 127.0.0.1:7077 --config 3x3/8/2x2 [--artifacts DIR]
+  serve     --addr 127.0.0.1:7077 [--bundle NAME=DIR]...
+            [--qos NAME=interactive|batch]          tenant QoS class
+                                                    (default interactive;
+                                                    batch tenants absorb
+                                                    governor step-downs
+                                                    first)
+            [--config 3x3/8/2x2]                    single-bundle only
             [--workers N]                           engine pool size
             [--mem-limit-mb N]                      memory budget override
                                                     (precedence: flag >
                                                     MAFAT_MEM_LIMIT_MB env >
                                                     --limit-mb > probed host
                                                     limit)
-            (no --config: auto-picked among the manifest's compiled
-             configs for the budget. A known budget arms the memory
-             governor: per-wake batch drain derived from the predictor,
+            (--bundle repeats to serve several models from one governed
+             budget; a bare --bundle DIR serves as model \"default\", the
+             model legacy v0 clients route to. No --config: each model's
+             config is auto-picked among its manifest's compiled configs
+             for the budget. A known budget arms the memory governor:
+             per-wake batch drain split across tenants by QoS weight,
              live RSS sampled each wake, and — without --config — the
-             active config steps down/up the bundle's footprint ladder
-             under sustained pressure/headroom)
+             governor steps the lowest-QoS tenant's footprint ladder
+             down first under sustained pressure)
 
 Common flags:
   --cfg FILE        Darknet-style .cfg network (default: built-in YOLOv2-16)
   --network NAME    built-in network: yolov2 (default) or mobilenet (the
                     depthwise-separable MobileNet-16 prefix)
+  --bundle DIR      use a bundle manifest's network (run/serve: the bundle
+                    to execute; elsewhere: its sole network). --artifacts
+                    is the deprecated spelling, accepted with a warning
   --bias-mb N       predictor bias constant (default 31)
   --no-reuse        disable data reuse in simulation
 ";
 
-/// Parsed `--key value` arguments.
+/// Parsed `--key value` arguments. Repeatable flags (`--bundle`, `--qos`)
+/// keep every occurrence in order; scalar accessors keep the historical
+/// last-one-wins behaviour.
 #[derive(Debug, Default)]
 pub struct Args {
-    kv: BTreeMap<String, String>,
+    kv: BTreeMap<String, Vec<String>>,
 }
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
-        let mut kv = BTreeMap::new();
+        let mut kv: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
@@ -102,19 +116,27 @@ impl Args {
             };
             // Flag followed by a value, unless next token is another flag
             // or we're at the end (boolean flag).
-            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                kv.insert(key.to_string(), argv[i + 1].clone());
+            let value = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                 i += 2;
+                argv[i - 1].clone()
             } else {
-                kv.insert(key.to_string(), "true".to_string());
                 i += 1;
-            }
+                "true".to_string()
+            };
+            kv.entry(key.to_string()).or_default().push(value);
         }
         Ok(Args { kv })
     }
 
+    /// The flag's value — the LAST occurrence when repeated (the
+    /// historical override behaviour).
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.kv.get(key).map(|s| s.as_str())
+        self.kv.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.kv.get(key).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
@@ -128,13 +150,25 @@ impl Args {
     }
 
     /// The network: `--cfg file.cfg`, a built-in `--network` name
-    /// (`yolov2` / `mobilenet`), or the default YOLOv2-16.
+    /// (`yolov2` / `mobilenet`), the sole network of a `--bundle DIR`
+    /// manifest (the same flag spelling `run`/`serve` use), or the default
+    /// YOLOv2-16.
     pub fn network(&self) -> Result<Network> {
+        let sources = [self.has("cfg"), self.has("network"), self.has("bundle")]
+            .iter()
+            .filter(|&&b| b)
+            .count();
+        if sources > 1 {
+            bail!("--cfg, --network, and --bundle are mutually exclusive");
+        }
         if let Some(path) = self.get("cfg") {
-            if self.has("network") {
-                bail!("--cfg and --network are mutually exclusive");
-            }
             return cfg::load_cfg(&PathBuf::from(path));
+        }
+        if let Some(bundle) = self.get("bundle") {
+            let (_, path) = split_bundle(bundle);
+            let manifest = crate::runtime::Manifest::load(&PathBuf::from(&path))
+                .with_context(|| format!("loading bundle manifest from {path}"))?;
+            return Ok(manifest.sole_network()?.network());
         }
         match self.get("network") {
             None | Some("yolov2") => Ok(yolov2::yolov2_16()),
@@ -601,16 +635,95 @@ pub fn cmd_export_bundle(args: &Args) -> Result<()> {
 
 // ----------------------------------------------------------- real execution
 
+/// Split one `--bundle` value: `NAME=PATH`, or a bare `PATH` named
+/// `default` — the model id legacy v0 clients (no `model` field) route to.
+fn split_bundle(v: &str) -> (String, String) {
+    match v.split_once('=') {
+        Some((name, path)) if !name.is_empty() => (name.to_string(), path.to_string()),
+        _ => ("default".to_string(), v.to_string()),
+    }
+}
+
+/// The bundle directory of single-bundle commands (`run`): `--bundle DIR`
+/// is the unified spelling; the old `--artifacts DIR` is accepted with a
+/// deprecation warning.
+fn single_bundle_dir(args: &Args) -> Result<String> {
+    if let Some(b) = args.get("bundle") {
+        if args.has("artifacts") {
+            bail!("--artifacts is deprecated; pass --bundle alone");
+        }
+        return Ok(split_bundle(b).1);
+    }
+    if let Some(a) = args.get("artifacts") {
+        eprintln!("warning: --artifacts is deprecated; use --bundle [NAME=]DIR");
+        return Ok(a.to_string());
+    }
+    Ok("artifacts".to_string())
+}
+
+impl Args {
+    /// The `serve` bundle set: repeated `--bundle NAME=PATH` (a bare
+    /// `PATH` serves as model `default`), with QoS classes applied from
+    /// repeated `--qos NAME=interactive|batch` (default: interactive).
+    /// The deprecated `--artifacts DIR` is accepted as `default=DIR` with
+    /// a warning; with neither flag, the historical `artifacts` directory.
+    pub fn serve_bundles(&self) -> Result<Vec<crate::coordinator::BundleSpec>> {
+        use crate::coordinator::{BundleSpec, QosClass};
+        let mut specs: Vec<BundleSpec> = Vec::new();
+        let bundle_args = self.get_all("bundle");
+        if !bundle_args.is_empty() {
+            if self.has("artifacts") {
+                bail!("--artifacts is deprecated; pass every bundle via --bundle NAME=PATH");
+            }
+            for v in bundle_args {
+                let (name, path) = split_bundle(v);
+                if specs.iter().any(|s| s.name == name) {
+                    bail!("duplicate --bundle name {name:?}");
+                }
+                specs.push(BundleSpec {
+                    name,
+                    path,
+                    qos: QosClass::Interactive,
+                });
+            }
+        } else {
+            let path = match self.get("artifacts") {
+                Some(a) => {
+                    eprintln!("warning: --artifacts is deprecated; use --bundle [NAME=]DIR");
+                    a.to_string()
+                }
+                None => "artifacts".to_string(),
+            };
+            specs.push(BundleSpec {
+                name: "default".to_string(),
+                path,
+                qos: QosClass::Interactive,
+            });
+        }
+        for q in self.get_all("qos") {
+            let (name, class) = q
+                .split_once('=')
+                .with_context(|| format!("--qos {q:?} (expected NAME=interactive|batch)"))?;
+            let class: QosClass = class.parse()?;
+            let spec = specs
+                .iter_mut()
+                .find(|s| s.name == name)
+                .with_context(|| format!("--qos {name:?} does not match any --bundle name"))?;
+            spec.qos = class;
+        }
+        Ok(specs)
+    }
+}
+
 pub fn cmd_run(args: &Args) -> Result<()> {
-    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let bundle = single_bundle_dir(args)?;
     let config = args.multi_config()?;
     let batch = args.get_u64("batch")?.unwrap_or(1) as usize;
     let verify = args.has("verify");
-    crate::engine::run_cli(artifacts, config, batch, verify)
+    crate::engine::run_cli(&bundle, config, batch, verify)
 }
 
 pub fn cmd_serve(args: &Args) -> Result<()> {
-    let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let addr = args.get("addr").unwrap_or("127.0.0.1:7077");
     let mut server_cfg = crate::coordinator::ServerConfig::default();
     if let Some(workers) = args.get_u64("workers")? {
@@ -619,16 +732,17 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     // Parse --config first so a malformed TvT string fails before any
     // artifact or budget work.
     let config = args.has("config").then(|| args.multi_config()).transpose()?;
+    let bundles = args.serve_bundles()?;
     // The memory budget the governor owns: --mem-limit-mb, then the
     // MAFAT_MEM_LIMIT_MB env, then the legacy --limit-mb, then the probed
-    // host limit. `serve_cli` auto-picks the config (no --config) and arms
-    // the governor whenever a budget is known.
+    // host limit. `serve_cli` auto-picks each model's config (no --config)
+    // and arms the governor whenever a budget is known.
     let budget = crate::coordinator::resolve_budget_bytes(
         args.get_u64("mem-limit-mb")?,
         args.get_u64("limit-mb")?,
     )?;
     crate::coordinator::serve_cli(
-        artifacts,
+        &bundles,
         config,
         addr,
         server_cfg,
@@ -688,6 +802,71 @@ mod tests {
     fn default_network_is_yolov2() {
         let a = parse(&[]);
         assert_eq!(a.network().unwrap().n_layers(), 16);
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_occurrence_in_order() {
+        let a = parse(&["--bundle", "a=dir-a", "--bundle", "b=dir-b", "--limit-mb", "1", "--limit-mb", "2"]);
+        assert_eq!(a.get_all("bundle"), ["a=dir-a", "b=dir-b"]);
+        // Scalar accessors keep the historical last-one-wins behaviour.
+        assert_eq!(a.get_u64("limit-mb").unwrap(), Some(2));
+        assert!(a.get_all("missing").is_empty());
+    }
+
+    #[test]
+    fn split_bundle_names_bare_paths_default() {
+        assert_eq!(split_bundle("yolo=dir/a"), ("yolo".into(), "dir/a".into()));
+        assert_eq!(split_bundle("dir/a"), ("default".into(), "dir/a".into()));
+        // A leading '=' is not a name; the whole token is the path.
+        assert_eq!(split_bundle("=dir"), ("default".into(), "=dir".into()));
+        // Only the first '=' splits, so paths may contain '='.
+        assert_eq!(split_bundle("m=dir=x"), ("m".into(), "dir=x".into()));
+    }
+
+    #[test]
+    fn serve_bundles_maps_legacy_and_applies_qos() {
+        use crate::coordinator::QosClass;
+        // No flags: the historical implicit `artifacts` dir as `default`.
+        let specs = parse(&[]).serve_bundles().unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!((specs[0].name.as_str(), specs[0].path.as_str()), ("default", "artifacts"));
+        assert_eq!(specs[0].qos, QosClass::Interactive);
+        // Deprecated --artifacts maps to default=DIR.
+        let specs = parse(&["--artifacts", "d"]).serve_bundles().unwrap();
+        assert_eq!((specs[0].name.as_str(), specs[0].path.as_str()), ("default", "d"));
+        // Repeated --bundle with a QoS override.
+        let specs = parse(&["--bundle", "a=da", "--bundle", "b=db", "--qos", "b=batch"])
+            .serve_bundles()
+            .unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].qos, QosClass::Interactive);
+        assert_eq!((specs[1].name.as_str(), specs[1].qos), ("b", QosClass::Batch));
+    }
+
+    #[test]
+    fn serve_bundles_rejects_bad_combinations() {
+        // Duplicate names (incl. two bare paths, both named default).
+        assert!(parse(&["--bundle", "a=x", "--bundle", "a=y"]).serve_bundles().is_err());
+        assert!(parse(&["--bundle", "x", "--bundle", "y"]).serve_bundles().is_err());
+        // Mixing the deprecated flag with the new one.
+        assert!(parse(&["--bundle", "a=x", "--artifacts", "y"]).serve_bundles().is_err());
+        // QoS for an unknown tenant, and an unknown class name.
+        assert!(parse(&["--bundle", "a=x", "--qos", "b=batch"]).serve_bundles().is_err());
+        assert!(parse(&["--bundle", "a=x", "--qos", "a=turbo"]).serve_bundles().is_err());
+        assert!(parse(&["--bundle", "a=x", "--qos", "batch"]).serve_bundles().is_err());
+    }
+
+    #[test]
+    fn network_accepts_bundle_but_rejects_mixed_sources() {
+        let a = parse(&["--cfg", "x.cfg", "--network", "mobilenet"]);
+        let err = format!("{:#}", a.network().unwrap_err());
+        assert!(err.contains("mutually exclusive"), "{err}");
+        let a = parse(&["--bundle", "no-such-dir", "--network", "mobilenet"]);
+        assert!(format!("{:#}", a.network().unwrap_err()).contains("mutually exclusive"));
+        // A --bundle pointing nowhere fails with the loading context.
+        let a = parse(&["--bundle", "no-such-dir"]);
+        let err = format!("{:#}", a.network().unwrap_err());
+        assert!(err.contains("loading bundle manifest"), "{err}");
     }
 
     #[test]

@@ -1,39 +1,50 @@
 //! The **memory governor**: the serving loop's runtime owner of the memory
-//! budget.
+//! budget — since multi-model serving, an *arbiter* over one ladder per
+//! served model.
 //!
 //! MAFAT's compile-time story picks a fused/tiled configuration whose
 //! *predicted* footprint fits a probed limit — but a budget is not a
-//! constant. Co-located processes grow, cgroup limits get re-written, and
-//! the prediction itself carries a fitted bias. The governor closes the
-//! loop at runtime, re-deciding two things at every worker wake-up:
+//! constant, and a production edge box rarely serves one network. The
+//! governor closes the loop at runtime across every tenant sharing the
+//! process: each model brings its own [`ConfigLadder`] (the Pareto
+//! frontier of its compiled configs ordered by predicted footprint) and a
+//! [`QosClass`], and the governor re-decides, at every worker wake-up:
 //!
-//! * **Drain** — how many queued requests a worker may batch into one
-//!   engine call. Derived from the predictor instead of operator
-//!   arithmetic: `clamp(budget_headroom / activation_bytes, 1,
-//!   max_batch/workers)`, where `budget_headroom` is the budget minus the
-//!   active configuration's resident base (weights + bias) and
-//!   `activation_bytes` is the Alg. 1 peak tile footprint — the marginal
-//!   memory of one more in-flight image ([`derive_drain`]).
-//! * **Configuration** — which rung of the [`ConfigLadder`] (the Pareto
-//!   frontier ordered by predicted footprint) the pool serves. Live RSS is
-//!   sampled each wake ([`sample_rss_bytes`]); *sustained* residency above
-//!   the high watermark steps the active config down a rung (smaller
-//!   footprint, more tiling overhead), sustained residency below the low
-//!   watermark steps back up — but only onto a rung whose prediction still
-//!   fits the budget. Hysteresis (a streak of consecutive wakes, reset on
-//!   any reading between the watermarks) keeps the governor silent while
-//!   memory is steady, so a steady-state governed server is byte-identical
-//!   to the static path. Workers swap engines only at batch boundaries via
-//!   the cheap [`crate::engine::Engine::reconfigure`] plan stage.
+//! * **Per-model drain** — how many of a model's queued requests a worker
+//!   may batch into one engine call. The joint headroom
+//!   `budget - Σ resident_base(model)` is split across tenants by QoS
+//!   weight ([`QosClass::weight`]: interactive 3, batch 1), then each
+//!   model's share is divided by its active rung's Alg. 1 activation
+//!   footprint — the marginal memory of one more in-flight image
+//!   ([`derive_drain`]). A model's resident base is its rung's predicted
+//!   total minus that activation term (weights + bias stay resident
+//!   whether or not the model is being served).
+//! * **Per-model configuration** — which rung each tenant serves. Live RSS
+//!   is sampled once per wake ([`sample_rss_bytes`]); *sustained*
+//!   residency above the high watermark steps **the least-latency-
+//!   sensitive tenant** down a rung: while any `batch`-class tenant is
+//!   registered, only batch tenants are eligible victims — an interactive
+//!   tenant's rung (and therefore its latency and its byte-exact outputs)
+//!   holds even if every batch tenant is already at its floor. Only a
+//!   server with no batch tenants degrades interactive ones (which is how
+//!   a single-model server behaves exactly as it did before the arbiter).
+//!   Sustained residency below the low watermark steps back up in the
+//!   opposite order — interactive tenants are restored first — and only
+//!   onto a rung whose prediction still fits *jointly* with every other
+//!   tenant's resident base. Hysteresis (a streak of consecutive wakes,
+//!   reset on any reading between the watermarks) keeps the governor
+//!   silent while memory is steady, so a steady-state governed server is
+//!   byte-identical to the static path.
 //!
-//! State machine (per [`MemoryGovernor::on_wake`], shared by the pool):
+//! State machine (per [`MemoryGovernor::on_wake`], shared by the pool;
+//! `victim`/`riser` are the QoS-ordered picks described above):
 //!
 //! ```text
-//!            rss > high*budget for W wakes            rss < low*budget for W wakes
-//!                AND rung > 0                       AND rung+1 fits the budget
-//!   [rung r] ────────────────────────> [rung r-1]  ────────────────────> [rung r+1]
-//!       ^                                                                    |
-//!       '───── any wake with low <= rss <= high resets both streaks ─────────'
+//!         rss > high*budget for W wakes          rss < low*budget for W wakes
+//!           AND victim rung > 0                AND riser rung+1 fits jointly
+//!  [victim r] ────────────────> [victim r-1]   [riser r] ────────> [riser r+1]
+//!       ^                                                               |
+//!       '──── any wake with low <= rss <= high resets both streaks ─────'
 //! ```
 
 use crate::plan::MultiConfig;
@@ -67,6 +78,65 @@ impl Default for GovernorConfig {
     }
 }
 
+/// A tenant's latency sensitivity: how the arbiter ranks it when memory
+/// pressure forces someone's configuration down the ladder, and what share
+/// of the joint headroom its drain is derived from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum QosClass {
+    /// Latency-insensitive: first to step down under pressure, smallest
+    /// headroom share.
+    Batch,
+    /// Latency-sensitive (the default): holds its rung while any batch
+    /// tenant is registered, largest headroom share.
+    Interactive,
+}
+
+impl QosClass {
+    /// Relative headroom share (interactive-weighted 3:1).
+    pub fn weight(self) -> u64 {
+        match self {
+            QosClass::Interactive => 3,
+            QosClass::Batch => 1,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for QosClass {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<QosClass> {
+        match s {
+            "interactive" => Ok(QosClass::Interactive),
+            "batch" => Ok(QosClass::Batch),
+            other => anyhow::bail!("unknown QoS class {other:?} (expected interactive or batch)"),
+        }
+    }
+}
+
+/// One model registered with the arbiter.
+#[derive(Debug)]
+pub struct TenantSpec {
+    /// The model id requests route by (`"default"` for legacy clients).
+    pub name: String,
+    /// The model's footprint ladder (its bundle's compiled configs).
+    pub ladder: ConfigLadder,
+    /// Starting rung, clamped into the ladder.
+    pub start_rung: usize,
+    pub qos: QosClass,
+}
+
 /// Predictor-derived per-wake batch drain:
 /// `clamp(budget_headroom / predicted_per_image, 1, max(1, max_batch/workers))`.
 ///
@@ -93,7 +163,7 @@ pub fn derive_drain(
 /// `/proc/self/status` `VmRSS` (unit-explicit kB); falls back to the
 /// second field of `/proc/self/statm` (pages, assumed 4 KiB — the common
 /// Linux page size). `None` when procfs is unavailable (non-Linux), in
-/// which case the governor holds its rung and keeps the derived drain.
+/// which case the governor holds its rungs and keeps the derived drains.
 pub fn sample_rss_bytes() -> Option<u64> {
     if let Ok(text) = std::fs::read_to_string("/proc/self/status") {
         for line in text.lines() {
@@ -118,42 +188,89 @@ pub fn sample_rss_bytes() -> Option<u64> {
 pub enum GovernorAction {
     /// No transition this wake.
     Hold,
-    /// Sustained pressure: stepped to the next-smaller-footprint rung.
-    StepDown { from: MultiConfig, to: MultiConfig },
-    /// Sustained headroom: stepped back toward a cheaper configuration.
-    StepUp { from: MultiConfig, to: MultiConfig },
+    /// Sustained pressure: `model` stepped to its next-smaller-footprint
+    /// rung.
+    StepDown {
+        model: String,
+        from: MultiConfig,
+        to: MultiConfig,
+    },
+    /// Sustained headroom: `model` stepped back toward a cheaper
+    /// configuration.
+    StepUp {
+        model: String,
+        from: MultiConfig,
+        to: MultiConfig,
+    },
 }
 
-/// The governor's verdict for one worker wake-up.
+/// One tenant's verdict within a [`WakeDecision`].
 #[derive(Debug, Clone)]
-pub struct WakeDecision {
-    /// How many requests this worker may drain into one engine call.
-    pub drain: usize,
+pub struct TenantDecision {
+    pub model: String,
+    pub qos: QosClass,
     /// Active ladder rung index after any transition.
     pub active: usize,
-    /// The configuration workers should serve with; a worker whose engine
-    /// differs reconfigures at the batch boundary.
+    /// The configuration workers should serve this model with; a worker
+    /// whose engine differs reconfigures at the batch boundary.
     pub config: MultiConfig,
+    /// How many of this model's requests a worker may drain into one
+    /// engine call.
+    pub drain: usize,
+}
+
+/// The arbiter's verdict for one worker wake-up: one decision per tenant,
+/// plus at most one ladder transition (the wake that crossed a hysteresis
+/// threshold carries it; every other wake reports `Hold`).
+#[derive(Debug, Clone)]
+pub struct WakeDecision {
     /// The RSS sample driving this wake (`None` off-procfs).
     pub rss_bytes: Option<u64>,
     pub action: GovernorAction,
+    /// Per-tenant verdicts, in registration order.
+    pub tenants: Vec<TenantDecision>,
+}
+
+impl WakeDecision {
+    /// The verdict for one model (`None` for an unregistered id).
+    pub fn tenant(&self, model: &str) -> Option<&TenantDecision> {
+        self.tenants.iter().find(|t| t.model == model)
+    }
+}
+
+/// Internal per-tenant state.
+#[derive(Debug)]
+struct TenantState {
+    name: String,
+    ladder: ConfigLadder,
+    qos: QosClass,
+    active: usize,
+}
+
+impl TenantState {
+    /// Resident base of the active rung: predicted total minus the Alg. 1
+    /// activation term — what stays resident whether or not this model is
+    /// currently being served.
+    fn resident_base(&self) -> u64 {
+        let rung = &self.ladder.rungs()[self.active];
+        rung.predicted_bytes.saturating_sub(rung.activation_bytes)
+    }
 }
 
 /// Internal hysteresis state, shared by every worker of the pool.
 #[derive(Debug)]
 struct GovState {
-    active: usize,
+    tenants: Vec<TenantState>,
     pressure_streak: u32,
     headroom_streak: u32,
 }
 
-/// The memory governor: owns the budget and the config ladder, and is
-/// consulted by every worker at every wake (cheap: one procfs read + one
-/// short mutex). One instance per server, shared across the pool so the
-/// hysteresis streaks and the active rung are global.
+/// The memory governor: owns the budget and one config ladder per tenant,
+/// and is consulted by every worker at every wake (cheap: one procfs read
+/// + one short mutex). One instance per server, shared across the pool so
+/// the hysteresis streaks and the active rungs are global.
 pub struct MemoryGovernor {
     budget_bytes: u64,
-    ladder: ConfigLadder,
     max_batch: usize,
     workers: usize,
     cfg: GovernorConfig,
@@ -161,10 +278,57 @@ pub struct MemoryGovernor {
 }
 
 impl MemoryGovernor {
-    /// Govern `ladder` under `budget_bytes`, starting at `start_rung`
-    /// (clamped into the ladder). `max_batch`/`workers` bound the derived
+    /// Arbitrate `budget_bytes` across `tenants` (at least one; names must
+    /// be unique). `max_batch`/`workers` bound every tenant's derived
     /// drain exactly like the static path's `max_batch / workers`.
     pub fn new(
+        tenants: Vec<TenantSpec>,
+        budget_bytes: u64,
+        max_batch: usize,
+        workers: usize,
+        cfg: GovernorConfig,
+    ) -> Result<MemoryGovernor> {
+        if tenants.is_empty() {
+            anyhow::bail!("memory governor needs at least one tenant");
+        }
+        if budget_bytes == 0 {
+            anyhow::bail!("memory governor needs a non-zero budget");
+        }
+        let mut states = Vec::with_capacity(tenants.len());
+        for t in tenants {
+            if t.ladder.is_empty() {
+                anyhow::bail!("tenant {:?} needs a non-empty config ladder", t.name);
+            }
+            if states.iter().any(|s: &TenantState| s.name == t.name) {
+                anyhow::bail!("duplicate tenant {:?}", t.name);
+            }
+            let active = t.start_rung.min(t.ladder.len() - 1);
+            states.push(TenantState {
+                name: t.name,
+                ladder: t.ladder,
+                qos: t.qos,
+                active,
+            });
+        }
+        Ok(MemoryGovernor {
+            budget_bytes,
+            max_batch,
+            workers,
+            cfg,
+            state: Mutex::new(GovState {
+                tenants: states,
+                pressure_streak: 0,
+                headroom_streak: 0,
+            }),
+        })
+    }
+
+    /// The single-model form ([`MemoryGovernor::new`] with one
+    /// `interactive` tenant named `default`) — what a legacy single-bundle
+    /// `serve` arms. With one tenant the arbiter reduces exactly to the
+    /// original single-ladder state machine: the lone tenant is the lowest
+    /// QoS class present, so it is its own step-down victim.
+    pub fn single(
         ladder: ConfigLadder,
         budget_bytes: u64,
         start_rung: usize,
@@ -172,47 +336,57 @@ impl MemoryGovernor {
         workers: usize,
         cfg: GovernorConfig,
     ) -> Result<MemoryGovernor> {
-        if ladder.is_empty() {
-            anyhow::bail!("memory governor needs a non-empty config ladder");
-        }
-        if budget_bytes == 0 {
-            anyhow::bail!("memory governor needs a non-zero budget");
-        }
-        let active = start_rung.min(ladder.len() - 1);
-        Ok(MemoryGovernor {
+        MemoryGovernor::new(
+            vec![TenantSpec {
+                name: "default".into(),
+                ladder,
+                start_rung,
+                qos: QosClass::Interactive,
+            }],
             budget_bytes,
-            ladder,
             max_batch,
             workers,
             cfg,
-            state: Mutex::new(GovState {
-                active,
-                pressure_streak: 0,
-                headroom_streak: 0,
-            }),
-        })
+        )
     }
 
     pub fn budget_bytes(&self) -> u64 {
         self.budget_bytes
     }
 
-    pub fn ladder(&self) -> &ConfigLadder {
-        &self.ladder
+    /// Registered `(model, QoS)` pairs, in registration order.
+    pub fn tenants(&self) -> Vec<(String, QosClass)> {
+        let st = self.state.lock().unwrap();
+        st.tenants.iter().map(|t| (t.name.clone(), t.qos)).collect()
     }
 
-    /// The configuration the pool is currently governed onto.
-    pub fn active_config(&self) -> MultiConfig {
+    /// A clone of a tenant's ladder (`None` for an unregistered id).
+    pub fn ladder(&self, model: &str) -> Option<ConfigLadder> {
         let st = self.state.lock().unwrap();
-        self.ladder.rungs()[st.active].config.clone()
+        st.tenants.iter().find(|t| t.name == model).map(|t| t.ladder.clone())
+    }
+
+    /// The configuration a tenant is currently governed onto (`None` for
+    /// an unregistered id).
+    pub fn active_config(&self, model: &str) -> Option<MultiConfig> {
+        let st = self.state.lock().unwrap();
+        st.tenants
+            .iter()
+            .find(|t| t.name == model)
+            .map(|t| t.ladder.rungs()[t.active].config.clone())
+    }
+
+    /// A tenant's active rung index (`None` for an unregistered id).
+    pub fn active_rung(&self, model: &str) -> Option<usize> {
+        let st = self.state.lock().unwrap();
+        st.tenants.iter().find(|t| t.name == model).map(|t| t.active)
     }
 
     /// One wake of the state machine (module docs): update the pressure /
-    /// headroom streaks from `rss_bytes`, possibly step the active rung,
-    /// and derive this wake's drain from the (post-step) active rung's
-    /// prediction.
+    /// headroom streaks from `rss_bytes`, possibly step one tenant's rung,
+    /// and derive every tenant's drain from its share of the joint
+    /// (post-step) headroom.
     pub fn on_wake(&self, rss_bytes: Option<u64>) -> WakeDecision {
-        let rungs = self.ladder.rungs();
         let mut st = self.state.lock().unwrap();
         let mut action = GovernorAction::Hold;
         if let Some(rss) = rss_bytes {
@@ -221,28 +395,30 @@ impl MemoryGovernor {
             if rss > high {
                 st.pressure_streak += 1;
                 st.headroom_streak = 0;
-                if st.pressure_streak >= self.cfg.hysteresis_wakes && st.active > 0 {
-                    let from = rungs[st.active].config.clone();
-                    st.active -= 1;
-                    st.pressure_streak = 0;
-                    action = GovernorAction::StepDown {
-                        from,
-                        to: rungs[st.active].config.clone(),
-                    };
+                if st.pressure_streak >= self.cfg.hysteresis_wakes {
+                    if let Some(ix) = step_down_victim(&st.tenants) {
+                        let t = &mut st.tenants[ix];
+                        let from = t.ladder.rungs()[t.active].config.clone();
+                        t.active -= 1;
+                        let to = t.ladder.rungs()[t.active].config.clone();
+                        let model = t.name.clone();
+                        st.pressure_streak = 0;
+                        action = GovernorAction::StepDown { model, from, to };
+                    }
                 }
             } else if rss < low {
                 st.headroom_streak += 1;
                 st.pressure_streak = 0;
-                let next_fits = st.active + 1 < rungs.len()
-                    && rungs[st.active + 1].predicted_bytes < self.budget_bytes;
-                if st.headroom_streak >= self.cfg.hysteresis_wakes && next_fits {
-                    let from = rungs[st.active].config.clone();
-                    st.active += 1;
-                    st.headroom_streak = 0;
-                    action = GovernorAction::StepUp {
-                        from,
-                        to: rungs[st.active].config.clone(),
-                    };
+                if st.headroom_streak >= self.cfg.hysteresis_wakes {
+                    if let Some(ix) = step_up_riser(&st.tenants, self.budget_bytes) {
+                        let t = &mut st.tenants[ix];
+                        let from = t.ladder.rungs()[t.active].config.clone();
+                        t.active += 1;
+                        let to = t.ladder.rungs()[t.active].config.clone();
+                        let model = t.name.clone();
+                        st.headroom_streak = 0;
+                        action = GovernorAction::StepUp { model, from, to };
+                    }
                 }
             } else {
                 // Between the watermarks: memory is steady; any step needs
@@ -251,18 +427,78 @@ impl MemoryGovernor {
                 st.headroom_streak = 0;
             }
         }
-        let rung = &rungs[st.active];
-        let base = rung.predicted_bytes.saturating_sub(rung.activation_bytes);
-        let headroom = self.budget_bytes.saturating_sub(base);
-        let drain = derive_drain(headroom, rung.activation_bytes, self.max_batch, self.workers);
+        let tenants = split_drains(&st.tenants, self.budget_bytes, self.max_batch, self.workers);
         WakeDecision {
-            drain,
-            active: st.active,
-            config: rung.config.clone(),
             rss_bytes,
             action,
+            tenants,
         }
     }
+}
+
+/// Pick the step-down victim: among tenants of the *lowest QoS class
+/// present* (batch before interactive), the first in registration order
+/// with a rung left below it. While any batch tenant is registered,
+/// interactive tenants are never victims — even if every batch tenant is
+/// already at its floor (the pool then holds under pressure, exactly like
+/// a single-model server at its floor).
+fn step_down_victim(tenants: &[TenantState]) -> Option<usize> {
+    let sacrificial = tenants.iter().map(|t| t.qos).min().expect("at least one tenant");
+    tenants.iter().position(|t| t.qos == sacrificial && t.active > 0)
+}
+
+/// Pick the step-up riser: the first tenant — interactive class before
+/// batch, registration order within a class — whose next rung up exists
+/// and whose prediction fits the budget *jointly* with every other
+/// tenant's current resident base.
+fn step_up_riser(tenants: &[TenantState], budget: u64) -> Option<usize> {
+    let mut order: Vec<usize> = (0..tenants.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(tenants[i].qos));
+    order.into_iter().find(|&i| {
+        let t = &tenants[i];
+        if t.active + 1 >= t.ladder.len() {
+            return false;
+        }
+        let others: u64 = tenants
+            .iter()
+            .enumerate()
+            .filter(|&(j, _)| j != i)
+            .map(|(_, o)| o.resident_base())
+            .sum();
+        let next = t.ladder.rungs()[t.active + 1].predicted_bytes;
+        others.saturating_add(next) < budget
+    })
+}
+
+/// Split the joint headroom into per-tenant drains: headroom = budget
+/// minus the sum of every tenant's resident base, shared by QoS weight
+/// (interactive 3 : batch 1), each share divided by that tenant's active
+/// activation footprint via [`derive_drain`]. With one tenant this is
+/// exactly the single-model drain derivation. Mirrored by the numpy port
+/// (`arbiter_drains`).
+fn split_drains(
+    tenants: &[TenantState],
+    budget: u64,
+    max_batch: usize,
+    workers: usize,
+) -> Vec<TenantDecision> {
+    let bases: u64 = tenants.iter().map(|t| t.resident_base()).sum();
+    let headroom = budget.saturating_sub(bases);
+    let total_weight: u64 = tenants.iter().map(|t| t.qos.weight()).sum();
+    tenants
+        .iter()
+        .map(|t| {
+            let rung = &t.ladder.rungs()[t.active];
+            let share = headroom * t.qos.weight() / total_weight.max(1);
+            TenantDecision {
+                model: t.name.clone(),
+                qos: t.qos,
+                active: t.active,
+                config: rung.config.clone(),
+                drain: derive_drain(share, rung.activation_bytes, max_batch, workers),
+            }
+        })
+        .collect()
 }
 
 /// Build the [`ConfigLadder`] of a bundle's *compiled* configurations —
@@ -345,7 +581,13 @@ mod tests {
 
     fn governor(budget: u64, start: usize) -> MemoryGovernor {
         let cfg = GovernorConfig::default();
-        MemoryGovernor::new(test_ladder(), budget, start, 8, 1, cfg).unwrap()
+        MemoryGovernor::single(test_ladder(), budget, start, 8, 1, cfg).unwrap()
+    }
+
+    /// The lone tenant's verdict of a single-model governor.
+    fn sole(d: &WakeDecision) -> &TenantDecision {
+        assert_eq!(d.tenants.len(), 1);
+        &d.tenants[0]
     }
 
     #[test]
@@ -368,11 +610,11 @@ mod tests {
         for rss in [70u64, 72, 75, 80, 84] {
             let d = g.on_wake(Some(rss));
             assert!(matches!(d.action, GovernorAction::Hold));
-            assert_eq!(d.active, 1);
+            assert_eq!(sole(&d).active, 1);
         }
         let d = g.on_wake(None);
         assert!(matches!(d.action, GovernorAction::Hold));
-        assert_eq!(d.active, 1);
+        assert_eq!(sole(&d).active, 1);
     }
 
     #[test]
@@ -390,14 +632,16 @@ mod tests {
         // ...so the step lands on the 3rd consecutive pressured wake.
         let d = g.on_wake(Some(95));
         match d.action {
-            GovernorAction::StepDown { from, to } => {
+            GovernorAction::StepDown { model, from, to } => {
+                assert_eq!(model, "default");
                 assert_eq!(from.to_string(), "1x1/NoCut");
                 assert_eq!(to.to_string(), "2x2/NoCut");
             }
             other => panic!("expected step down, got {other:?}"),
         }
-        assert_eq!(d.active, 1);
-        assert_eq!(g.active_config().to_string(), "2x2/NoCut");
+        assert_eq!(sole(&d).active, 1);
+        assert_eq!(g.active_config("default").unwrap().to_string(), "2x2/NoCut");
+        assert!(g.active_config("nope").is_none());
     }
 
     #[test]
@@ -406,10 +650,10 @@ mod tests {
         for _ in 0..10 {
             let d = g.on_wake(Some(99));
             assert!(matches!(d.action, GovernorAction::Hold));
-            assert_eq!(d.active, 0);
+            assert_eq!(sole(&d).active, 0);
             // Drain derives from the rung's prediction, not from the RSS
             // sample: rung 0 has base 30, activation 10 => (100-30)/10.
-            assert_eq!(d.drain, 7);
+            assert_eq!(sole(&d).drain, 7);
         }
     }
 
@@ -422,12 +666,12 @@ mod tests {
         }
         let d = g.on_wake(Some(10));
         assert!(matches!(d.action, GovernorAction::StepUp { .. }), "{:?}", d.action);
-        assert_eq!(d.active, 1);
+        assert_eq!(sole(&d).active, 1);
         // Rung 2 predicts 100 >= 80: headroom can accrue forever, no step.
         for _ in 0..10 {
             let d = g.on_wake(Some(10));
             assert!(matches!(d.action, GovernorAction::Hold));
-            assert_eq!(d.active, 1);
+            assert_eq!(sole(&d).active, 1);
         }
     }
 
@@ -436,14 +680,14 @@ mod tests {
         // Rung 1: predicted 70, activation 40 => base 30; budget 150 =>
         // headroom 120 => drain 3 (120/40), capped at 8.
         let g = governor(150, 1);
-        assert_eq!(g.on_wake(None).drain, 3);
+        assert_eq!(sole(&g.on_wake(None)).drain, 3);
         // After stepping down to rung 0 (predicted 40, activation 10 =>
         // base 30; headroom 120 => 12, capped at 8).
         for _ in 0..3 {
             g.on_wake(Some(149));
         }
-        assert_eq!(g.active_config().to_string(), "3x3/8/2x2");
-        assert_eq!(g.on_wake(None).drain, 8);
+        assert_eq!(g.active_config("default").unwrap().to_string(), "3x3/8/2x2");
+        assert_eq!(sole(&g.on_wake(None)).drain, 8);
     }
 
     #[test]
@@ -466,9 +710,143 @@ mod tests {
     }
 
     #[test]
-    fn empty_ladder_and_zero_budget_rejected() {
+    fn empty_ladder_zero_budget_and_duplicates_rejected() {
         let cfg = GovernorConfig::default();
-        assert!(MemoryGovernor::new(ConfigLadder::default(), 100, 0, 8, 1, cfg).is_err());
-        assert!(MemoryGovernor::new(test_ladder(), 0, 0, 8, 1, cfg).is_err());
+        assert!(MemoryGovernor::single(ConfigLadder::default(), 100, 0, 8, 1, cfg).is_err());
+        assert!(MemoryGovernor::single(test_ladder(), 0, 0, 8, 1, cfg).is_err());
+        assert!(MemoryGovernor::new(vec![], 100, 8, 1, cfg).is_err());
+        let dup = || TenantSpec {
+            name: "m".into(),
+            ladder: test_ladder(),
+            start_rung: 0,
+            qos: QosClass::Interactive,
+        };
+        assert!(MemoryGovernor::new(vec![dup(), dup()], 100, 8, 1, cfg).is_err());
+    }
+
+    // ------------------------------------------------- multi-tenant arbiter
+
+    fn two_tenants(start_a: usize, start_b: usize) -> Vec<TenantSpec> {
+        vec![
+            TenantSpec {
+                name: "a".into(),
+                ladder: test_ladder(),
+                start_rung: start_a,
+                qos: QosClass::Interactive,
+            },
+            TenantSpec {
+                name: "b".into(),
+                ladder: test_ladder(),
+                start_rung: start_b,
+                qos: QosClass::Batch,
+            },
+        ]
+    }
+
+    #[test]
+    fn pressure_steps_only_the_batch_tenant_and_interactive_holds_at_its_floor() {
+        let cfg = GovernorConfig::default();
+        let g = MemoryGovernor::new(two_tenants(2, 2), 100, 8, 1, cfg).unwrap();
+        // Sustained pressure: every step lands on the batch tenant until
+        // its floor; the interactive tenant's rung never moves — even once
+        // the batch tenant has nothing left to give.
+        let mut downs = vec![];
+        for _ in 0..30 {
+            if let GovernorAction::StepDown { model, .. } = g.on_wake(Some(99)).action {
+                downs.push(model);
+            }
+        }
+        assert_eq!(downs, vec!["b", "b"], "exactly the batch tenant's 2 rungs");
+        assert_eq!(g.active_rung("a"), Some(2), "interactive rung must hold");
+        assert_eq!(g.active_rung("b"), Some(0));
+    }
+
+    #[test]
+    fn all_interactive_tenants_degrade_like_a_single_model_server() {
+        // With no batch tenant registered, interactive is the lowest QoS
+        // class present and steps normally (single-model compatibility).
+        let cfg = GovernorConfig::default();
+        let mut tenants = two_tenants(2, 2);
+        tenants[1].qos = QosClass::Interactive;
+        let g = MemoryGovernor::new(tenants, 100, 8, 1, cfg).unwrap();
+        for _ in 0..3 {
+            g.on_wake(Some(99));
+        }
+        assert_eq!(g.active_rung("a"), Some(1), "first-registered steps first");
+        assert_eq!(g.active_rung("b"), Some(2));
+    }
+
+    #[test]
+    fn step_up_restores_interactive_first_and_respects_joint_fit() {
+        let cfg = GovernorConfig::default();
+        // Interactive at the floor, batch at the floor. Joint fit for a
+        // step up: riser's next predicted + other's resident base < budget.
+        // Rung bases: rung0 base 30, rung1 base 30, rung2 base 30.
+        // a stepping to rung 1 needs 70 + 30 = 100 < budget.
+        let g = MemoryGovernor::new(two_tenants(0, 0), 101, 8, 1, cfg).unwrap();
+        for _ in 0..3 {
+            g.on_wake(Some(10));
+        }
+        // Interactive rises first...
+        assert_eq!(g.active_rung("a"), Some(1));
+        assert_eq!(g.active_rung("b"), Some(0));
+        // ...but its next rung (predicted 100 + base 30 >= 101) never
+        // fits jointly, so continued headroom restores the batch tenant.
+        for _ in 0..3 {
+            g.on_wake(Some(10));
+        }
+        assert_eq!(g.active_rung("a"), Some(1));
+        assert_eq!(g.active_rung("b"), Some(1));
+        // Nothing fits any more: headroom accrues without a step.
+        for _ in 0..10 {
+            assert!(matches!(g.on_wake(Some(10)).action, GovernorAction::Hold));
+        }
+    }
+
+    #[test]
+    fn drain_split_weights_interactive_over_batch() {
+        // Mirrored by the numpy port (`arbiter_drains`): budget 1000;
+        // tenant a (interactive) rung predicts 300 total / 100 activation
+        // => base 200; tenant b (batch) predicts 260 / 60 => base 200.
+        // Joint headroom = 1000 - 400 = 600, split 3:1 => 450 / 150.
+        // Drains: 450/100 = 4, 150/60 = 2 (cap 8).
+        let cfg = GovernorConfig::default();
+        let tenants = vec![
+            TenantSpec {
+                name: "a".into(),
+                ladder: ConfigLadder::new(vec![rung("2x2/NoCut", 300, 100, 10)]),
+                start_rung: 0,
+                qos: QosClass::Interactive,
+            },
+            TenantSpec {
+                name: "b".into(),
+                ladder: ConfigLadder::new(vec![rung("3x3/8/2x2", 260, 60, 20)]),
+                start_rung: 0,
+                qos: QosClass::Batch,
+            },
+        ];
+        let g = MemoryGovernor::new(tenants, 1000, 8, 1, cfg).unwrap();
+        let d = g.on_wake(None);
+        assert_eq!(d.tenant("a").unwrap().drain, 4);
+        assert_eq!(d.tenant("b").unwrap().drain, 2);
+        assert!(d.tenant("c").is_none());
+    }
+
+    #[test]
+    fn single_tenant_drain_matches_the_pre_arbiter_derivation() {
+        // One tenant owns the whole headroom: the split must reduce to
+        // derive_drain(budget - base, activation, ...) exactly.
+        let g = governor(150, 1);
+        let d = sole(&g.on_wake(None)).drain;
+        assert_eq!(d, derive_drain(150 - 30, 40, 8, 1));
+    }
+
+    #[test]
+    fn qos_class_parse_and_display_round_trip() {
+        for q in [QosClass::Interactive, QosClass::Batch] {
+            assert_eq!(q.as_str().parse::<QosClass>().unwrap(), q);
+        }
+        assert!("realtime".parse::<QosClass>().is_err());
+        assert!(QosClass::Interactive.weight() > QosClass::Batch.weight());
     }
 }

@@ -1,73 +1,138 @@
 //! L3 serving loop: an async-style request coordinator over std threads
-//! (the offline build has no tokio; see Cargo.toml note).
+//! (the offline build has no tokio; see Cargo.toml note) — since
+//! multi-model serving, a **router**: one process serves N bundles behind
+//! one memory budget.
 //!
 //! Architecture — the single-device analogue of a vLLM-style router:
 //!
 //! ```text
-//!  TCP conns --> per-conn reader threads --> bounded request queue
-//!                                              | (backpressure: reject
-//!                                              v  when full)
-//!                              worker pool (N threads, each owns an Engine)
-//!                                - workers race for the shared queue
-//!                                - per wake, each drains a batch: the
-//!                                  governor-derived drain when serving
-//!                                  governed, else `max_batch / N`
-//!                                - the drained batch runs as ONE
-//!                                  `Engine::infer_batch` call: tiles are
-//!                                  class-batched across requests, one
-//!                                  executor call per tile class
+//!  TCP conns --> per-conn reader threads --> per-MODEL bounded queues
+//!                     (route by "model";       | (backpressure per model:
+//!                      unknown model never     v  queue_full when its
+//!                      touches a queue)           queue is at depth)
+//!                              worker pool (N threads, each owns one
+//!                              Engine PER MODEL on a shared weight stage)
+//!                                - workers race for the queues: a wake
+//!                                  pops ONE model's batch — interactive-
+//!                                  class queues first, round-robin within
+//!                                  a class, up to that model's drain
+//!                                - the drained batch stays per-model and
+//!                                  runs as ONE `Engine::infer_batch`
+//!                                  call: tiles are class-batched across
+//!                                  requests, one executor call per tile
+//!                                  class — byte-identical to a
+//!                                  single-model server
 //!                                              |            ^
 //!                                              |   MemoryGovernor (shared):
-//!                                              |   budget + config ladder,
-//!                                              |   RSS sampled per wake,
+//!                                              |   budget + one ladder per
+//!                                              |   model, RSS per wake,
+//!                                              |   QoS-ordered arbitration,
 //!                                              |   engine hot-swap at batch
 //!                                              v   boundaries
 //!                                   per-request response channels
 //! ```
 //!
-//! The pool size is `ServerConfig::workers` (default 1 — the paper's
-//! single-device scenario); every worker constructs its own engine via the
-//! shared factory, so PJRT handles never cross threads, and all workers
-//! record into one shared [`Metrics`] registry. Engines are deterministic,
-//! so responses are byte-identical regardless of which worker serves a
-//! request — and regardless of batch drain, so the [`governor`]'s adaptive
-//! drain is response-invisible too; only a ladder step (config swap under
-//! sustained memory pressure) changes outputs, and hysteresis guarantees
-//! that never happens while memory is steady.
+//! The pool size is [`ServerConfig::workers`] (default 1 — the paper's
+//! single-device scenario); every worker constructs its own engines via
+//! the shared per-model factories, so PJRT handles never cross threads,
+//! and all workers record into one shared [`Metrics`] registry (plus a
+//! labelled [`crate::metrics::ModelMetrics`] slice per model). Engines are
+//! deterministic, so responses are byte-identical regardless of which
+//! worker serves a request — and regardless of batch drain, so the
+//! [`governor`]'s adaptive drain is response-invisible too; only a ladder
+//! step (config swap under sustained memory pressure) changes outputs, the
+//! arbiter never steps an interactive tenant while a batch tenant is
+//! registered, and hysteresis guarantees no step ever happens while memory
+//! is steady.
 //!
-//! Protocol: JSON-lines. Requests:
-//!   {"cmd":"infer","id":"r1","seed":123}            synthetic image
-//!   {"cmd":"infer","id":"r1","image":[...f32...]}   explicit HWC image
-//!        optional "return_output": true
-//!   {"cmd":"metrics"}                               metrics snapshot
-//!   {"cmd":"ping"}                                  liveness
-//! Responses: {"id","ok",...} one line each.
+//! # Wire protocol (JSON lines, one request/response per line)
+//!
+//! **v1** (versioned; requests carry `"v":1`):
+//!
+//! ```text
+//! {"v":1,"cmd":"infer","model":"m","id":"r1","seed":123}        synthetic image
+//! {"v":1,"cmd":"infer","model":"m","id":"r1","image":[..f32..]} explicit HWC image
+//!      optional "return_output": true
+//! {"v":1,"cmd":"metrics","model":"m"}                           metrics snapshot
+//! {"v":1,"cmd":"ping"}                                          liveness
+//! ```
+//!
+//! `"model"` is optional and defaults to `"default"` (what a single-bundle
+//! server names its only model). v1 success responses echo `"v":1` and
+//! `"model"`; infer carries `id`, `ok`, `shape`, `checksum`, `latency_ms`,
+//! `queue_ms`, `tasks` and (on request) `output`. v1 errors are
+//! structured:
+//!
+//! ```text
+//! {"v":1,"id":"r1","model":"m","ok":false,
+//!  "error":{"code":"<stable code>","message":"<human text>"}}
+//! ```
+//!
+//! **v0** (legacy; no `"v"` field): the original schema — same commands
+//! without `model`/`v` (`model` is accepted for migration) — answered in
+//! the original v0 shape: success fields exactly as before, errors with
+//! the legacy string `"error"` plus an additive machine-readable `"code"`:
+//!
+//! ```text
+//! {"id":"r1","ok":false,"error":"<human text>","code":"<stable code>"}
+//! ```
+//!
+//! Stable error codes ([`error_code`]): `bad_request` (malformed JSON,
+//! unknown `cmd`, unknown/ill-typed field — typos like `"imge"` are
+//! rejected, not ignored), `unknown_model` (rejected before touching any
+//! queue), `bad_image` (the engine's own image validation), `queue_full`
+//! (per-model backpressure), `internal` (engine/runtime failure).
 
 pub mod governor;
 
 pub use governor::{
     derive_drain, ladder_from_manifest, resolve_budget_bytes, sample_rss_bytes, GovernorAction,
-    GovernorConfig, MemoryGovernor, WakeDecision,
+    GovernorConfig, MemoryGovernor, QosClass, TenantDecision, TenantSpec, WakeDecision,
 };
 
 use crate::engine::{Engine, EngineShared};
 use crate::jsonlite::Json;
-use crate::metrics::Metrics;
+use crate::metrics::{Metrics, ModelMetrics};
 use crate::network::MIB;
 use crate::plan::MultiConfig;
 use crate::predictor::{predict_multi, PredictorParams};
 use crate::search::{ConfigLadder, LadderRung};
 use anyhow::{Context, Result};
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+/// The stable machine-readable `code` values error responses carry (v1:
+/// `error.code`; v0: the additive top-level `code`).
+pub mod error_code {
+    /// Malformed JSON, unknown `cmd`, unknown or ill-typed field.
+    pub const BAD_REQUEST: &str = "bad_request";
+    /// The `model` routes nowhere; rejected before touching any queue.
+    pub const UNKNOWN_MODEL: &str = "unknown_model";
+    /// The engine's own image validation rejected the input.
+    pub const BAD_IMAGE: &str = "bad_image";
+    /// The model's bounded queue is at depth (per-model backpressure).
+    pub const QUEUE_FULL: &str = "queue_full";
+    /// Engine/runtime failure while serving a validated request.
+    pub const INTERNAL: &str = "internal";
+}
+
+/// Protocol version a request arrived under (and its response leaves in).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Proto {
+    V0,
+    V1,
+}
 
 /// A queued inference request.
 struct Request {
     id: String,
+    model: String,
+    proto: Proto,
     image: Vec<f32>,
     return_output: bool,
     respond: Sender<Json>,
@@ -77,7 +142,9 @@ struct Request {
 /// Server tuning knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
-    /// Bounded queue depth; senders beyond this are rejected (backpressure).
+    /// Bounded per-model queue depth; senders beyond this are rejected
+    /// with `queue_full` (backpressure) — one model's burst cannot evict
+    /// another model's queued work.
     pub queue_depth: usize,
     /// The **hard cap** on the per-wake batch, shared across the pool: no
     /// worker ever drains more than `max(1, max_batch / workers)` requests
@@ -85,18 +152,19 @@ pub struct ServerConfig {
     /// into whichever worker wins the queue lock.
     ///
     /// This is a cap only — how many requests a wake *actually* drains is
-    /// derived by the [`governor`] from the memory budget and the active
-    /// configuration's predicted per-image activation footprint
+    /// derived per model by the [`governor`] from the memory budget and
+    /// the model's predicted per-image activation footprint
     /// ([`governor::derive_drain`]): a drained batch executes as **one**
     /// class-batched engine call, and the governor sizes it so the batch's
-    /// predicted peak stays inside the budget. Operators no longer
-    /// hand-size drain against per-image predictions; set `max_batch` for
-    /// throughput/latency policy (largest batch ever worth forming) and
-    /// let the budget bound memory. Ungoverned servers (no budget, e.g.
-    /// [`Server::start`] in tests) fall back to draining the cap itself.
+    /// predicted peak stays inside the model's QoS-weighted share of the
+    /// joint headroom. Operators no longer hand-size drain against
+    /// per-image predictions; set `max_batch` for throughput/latency
+    /// policy (largest batch ever worth forming) and let the budget bound
+    /// memory. Ungoverned servers (no budget, e.g. [`Server::start`] in
+    /// tests) fall back to draining the cap itself.
     pub max_batch: usize,
-    /// Worker pool size: engines sharing the request queue. Values < 1 are
-    /// treated as 1.
+    /// Worker pool size: engine sets sharing the request queues. Values
+    /// < 1 are treated as 1.
     pub workers: usize,
 }
 
@@ -110,42 +178,174 @@ impl Default for ServerConfig {
     }
 }
 
-/// State shared between the worker pool (which records metrics) and the
-/// connection handlers (which serve `metrics` requests and synthesize
-/// seed images). Per-server — multiple servers in one process no longer
-/// share globals.
-pub struct ServerShared {
-    pub metrics: Arc<Metrics>,
+/// One model a [`Server`] serves: its routing id, QoS class, and the
+/// factory each worker thread builds its own engine from (PJRT handles are
+/// not `Send`, so engines must live and die on one thread; factories
+/// typically close over one [`EngineShared`] weight stage per bundle).
+pub struct ModelSpec {
+    pub name: String,
+    pub qos: QosClass,
+    pub factory: Box<dyn Fn() -> Result<Engine> + Send + Sync>,
+}
+
+/// What the connection layer knows about one served model.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub qos: QosClass,
     /// Input dimensions for synthetic-image requests (h, w, c).
     pub dims: (usize, usize, usize),
 }
 
+/// State shared between the worker pool (which records metrics) and the
+/// connection handlers (which serve `metrics` requests, route by model id,
+/// and synthesize seed images). Per-server — multiple servers in one
+/// process do not share globals.
+pub struct ServerShared {
+    pub metrics: Arc<Metrics>,
+    /// Served models by routing id.
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
 impl Default for ServerShared {
     fn default() -> Self {
+        let mut models = BTreeMap::new();
+        models.insert(
+            "default".to_string(),
+            ModelInfo {
+                qos: QosClass::Interactive,
+                dims: (160, 160, 3),
+            },
+        );
         ServerShared {
             metrics: Arc::new(Metrics::default()),
-            dims: (160, 160, 3),
+            models,
         }
+    }
+}
+
+/// Why a push into [`RequestQueues`] was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PushError {
+    UnknownModel,
+    QueueFull,
+    Closed,
+}
+
+/// One model's bounded queue.
+struct ModelQueue {
+    name: String,
+    qos: QosClass,
+    buf: VecDeque<Request>,
+}
+
+struct QueuesState {
+    /// Stable-sorted interactive-first (registration order within a
+    /// class), so class priority is simply index order.
+    models: Vec<ModelQueue>,
+    /// Round-robin cursor for fairness within a QoS class.
+    rr: usize,
+    closed: bool,
+}
+
+/// The per-model request queues: bounded per model, popped by the worker
+/// pool interactive-class-first with round-robin fairness within a class.
+struct RequestQueues {
+    depth: usize,
+    state: Mutex<QueuesState>,
+    ready: Condvar,
+}
+
+impl RequestQueues {
+    fn new(models: &[(String, QosClass)], depth: usize) -> RequestQueues {
+        let mut queues: Vec<ModelQueue> = models
+            .iter()
+            .map(|(name, qos)| ModelQueue {
+                name: name.clone(),
+                qos: *qos,
+                buf: VecDeque::new(),
+            })
+            .collect();
+        // Stable sort: interactive before batch, registration order within.
+        queues.sort_by_key(|m| std::cmp::Reverse(m.qos));
+        RequestQueues {
+            depth: depth.max(1),
+            state: Mutex::new(QueuesState {
+                models: queues,
+                rr: 0,
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn push(&self, model: &str, req: Request) -> std::result::Result<(), PushError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed);
+        }
+        let Some(q) = st.models.iter_mut().find(|m| m.name == model) else {
+            return Err(PushError::UnknownModel);
+        };
+        if q.buf.len() >= self.depth {
+            return Err(PushError::QueueFull);
+        }
+        q.buf.push_back(req);
+        drop(st);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until some queue holds work (or the server closed): pop ONE
+    /// model's batch — the non-empty queue of the highest QoS class,
+    /// round-robin within the class, up to that model's entry in `drains`
+    /// — so a drained batch is always per-model and class-batching inside
+    /// the engine is untouched. `None` only after close with every queue
+    /// empty (remaining work is drained first).
+    fn pop_batch(&self, drains: &BTreeMap<String, usize>) -> Option<(String, Vec<Request>)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let n = st.models.len();
+            let rr = st.rr;
+            let pick = (0..n)
+                .filter(|&i| !st.models[i].buf.is_empty())
+                .map(|i| (std::cmp::Reverse(st.models[i].qos), (i + n - rr % n.max(1)) % n, i))
+                .min();
+            if let Some((_, _, i)) = pick {
+                st.rr = (i + 1) % n;
+                let name = st.models[i].name.clone();
+                let drain = drains.get(&name).copied().unwrap_or(1).max(1);
+                let take = drain.min(st.models[i].buf.len());
+                let batch: Vec<Request> = st.models[i].buf.drain(..take).collect();
+                return Some((name, batch));
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
     }
 }
 
 /// The serving coordinator handle.
 pub struct Server {
     listener: TcpListener,
-    queue: SyncSender<Request>,
+    queues: Arc<RequestQueues>,
     shutdown: Arc<AtomicBool>,
     shared: Arc<ServerShared>,
     pub local_addr: std::net::SocketAddr,
 }
 
 impl Server {
-    /// Bind and start the worker pool. Engines are constructed *inside*
-    /// the worker threads via `factory` — PJRT handles are not `Send`, so
-    /// each engine must live and die on one thread. `start` waits for
+    /// Single-model convenience over [`Server::start_multi`]: the engine
+    /// serves as model `"default"` (interactive class). `start` waits for
     /// every worker's engine to load and **fails outright when any factory
-    /// call fails**: previously a dead worker exited silently while the
-    /// listener kept accepting, so every queued client waited on a
-    /// response that could never come.
+    /// call fails**: a dead worker must not leave the listener accepting
+    /// requests no one will answer.
     pub fn start<F>(factory: F, addr: &str, cfg: ServerConfig) -> Result<Server>
     where
         F: Fn() -> Result<Engine> + Send + Sync + 'static,
@@ -153,11 +353,8 @@ impl Server {
         Self::start_governed(factory, addr, cfg, None)
     }
 
-    /// [`Server::start`] with an optional shared [`MemoryGovernor`]: every
-    /// worker consults it once per wake for the derived drain and the
-    /// active ladder rung, hot-swapping its engine (plan stage only) at
-    /// the batch boundary when the rung stepped. `None` serves statically
-    /// with the fixed `max_batch / workers` drain.
+    /// [`Server::start`] with an optional shared [`MemoryGovernor`] (a
+    /// single-tenant arbiter; see [`MemoryGovernor::single`]).
     pub fn start_governed<F>(
         factory: F,
         addr: &str,
@@ -167,19 +364,53 @@ impl Server {
     where
         F: Fn() -> Result<Engine> + Send + Sync + 'static,
     {
+        Self::start_multi(
+            vec![ModelSpec {
+                name: "default".to_string(),
+                qos: QosClass::Interactive,
+                factory: Box::new(factory),
+            }],
+            addr,
+            cfg,
+            governor,
+        )
+    }
+
+    /// Bind and start the worker pool over N models. Every worker thread
+    /// builds its own engine **per model** via the specs' factories and
+    /// consults the (optional) governor once per wake for each model's
+    /// drain and active rung, hot-swapping the served model's engine (plan
+    /// stage only) at the batch boundary when its rung stepped. `None`
+    /// governor serves statically with the fixed `max_batch / workers`
+    /// drain for every model.
+    pub fn start_multi(
+        models: Vec<ModelSpec>,
+        addr: &str,
+        cfg: ServerConfig,
+        governor: Option<Arc<MemoryGovernor>>,
+    ) -> Result<Server> {
+        if models.is_empty() {
+            anyhow::bail!("a server needs at least one model");
+        }
+        for (i, m) in models.iter().enumerate() {
+            if models[..i].iter().any(|o| o.name == m.name) {
+                anyhow::bail!("duplicate model {:?}", m.name);
+            }
+        }
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local_addr = listener.local_addr()?;
         let workers = cfg.workers.max(1);
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
+        let routes: Vec<(String, QosClass)> =
+            models.iter().map(|m| (m.name.clone(), m.qos)).collect();
+        let queues = Arc::new(RequestQueues::new(&routes, cfg.queue_depth));
         let (ready_tx, ready_rx) =
-            std::sync::mpsc::channel::<std::result::Result<(usize, usize, usize), String>>();
+            std::sync::mpsc::channel::<std::result::Result<BTreeMap<String, ModelInfo>, String>>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::default());
-        let factory = Arc::new(factory);
+        let models = Arc::new(models);
         for wi in 0..workers {
-            let factory = factory.clone();
-            let rx = rx.clone();
+            let models = models.clone();
+            let queues = queues.clone();
             let ready_tx = ready_tx.clone();
             let worker_shutdown = shutdown.clone();
             let metrics = metrics.clone();
@@ -187,44 +418,76 @@ impl Server {
             std::thread::Builder::new()
                 .name(format!("mafat-worker-{wi}"))
                 .spawn(move || {
-                    let mut engine = match factory() {
-                        Ok(e) => e,
-                        Err(err) => {
-                            eprintln!("worker {wi}: engine failed to load: {err:#}");
-                            let _ = ready_tx.send(Err(format!("{err:#}")));
-                            return;
-                        }
-                    };
-                    // All workers record into the server's shared registry.
-                    engine.metrics = metrics;
-                    let net = engine.network();
-                    let dims = (net.in_h, net.in_w, net.in_c);
-                    eprintln!(
-                        "worker {wi}: engine ready: {} | config {} | {} executables",
-                        net.name,
-                        engine.config(),
-                        engine.n_executables()
+                    let mut engines: BTreeMap<String, Engine> = BTreeMap::new();
+                    let mut infos: BTreeMap<String, ModelInfo> = BTreeMap::new();
+                    for spec in models.iter() {
+                        let mut engine = match (spec.factory)() {
+                            Ok(e) => e,
+                            Err(err) => {
+                                eprintln!(
+                                    "worker {wi}: engine [model={}] failed to load: {err:#}",
+                                    spec.name
+                                );
+                                let _ = ready_tx.send(Err(format!("{err:#}")));
+                                return;
+                            }
+                        };
+                        // All workers record into the server's shared
+                        // registry.
+                        engine.metrics = metrics.clone();
+                        let (name, dims, n_exec, config) = {
+                            let net = engine.network();
+                            (
+                                net.name.clone(),
+                                (net.in_h, net.in_w, net.in_c),
+                                engine.n_executables(),
+                                engine.config().clone(),
+                            )
+                        };
+                        eprintln!(
+                            "worker {wi}: engine ready [model={}]: {name} | config {config} | \
+                             {n_exec} executables",
+                            spec.name
+                        );
+                        infos.insert(
+                            spec.name.clone(),
+                            ModelInfo {
+                                qos: spec.qos,
+                                dims,
+                            },
+                        );
+                        engines.insert(spec.name.clone(), engine);
+                    }
+                    let model_metrics: BTreeMap<String, Arc<ModelMetrics>> =
+                        engines.keys().map(|k| (k.clone(), metrics.model(k))).collect();
+                    let _ = ready_tx.send(Ok(infos));
+                    worker_loop(
+                        engines,
+                        model_metrics,
+                        queues,
+                        cfg,
+                        worker_shutdown,
+                        governor,
+                        metrics,
                     );
-                    let _ = ready_tx.send(Ok(dims));
-                    worker_loop(engine, rx, cfg, worker_shutdown, governor);
                 })?;
         }
         drop(ready_tx);
-        let mut dims = None;
+        let mut model_infos = None;
         for _ in 0..workers {
             match ready_rx.recv() {
-                Ok(Ok(d)) => dims = Some(d),
+                Ok(Ok(infos)) => model_infos = Some(infos),
                 Ok(Err(msg)) => anyhow::bail!("engine failed to load: {msg}"),
                 Err(_) => anyhow::bail!("engine worker died during startup"),
             }
         }
         let shared = Arc::new(ServerShared {
             metrics,
-            dims: dims.expect("at least one worker"),
+            models: model_infos.expect("at least one worker"),
         });
         Ok(Server {
             listener,
-            queue: tx,
+            queues,
             shutdown,
             shared,
             local_addr,
@@ -233,17 +496,26 @@ impl Server {
 
     /// Accept connections until shutdown; blocks the calling thread.
     pub fn run(&self) -> Result<()> {
-        eprintln!("mafat serve: listening on {}", self.local_addr);
+        eprintln!(
+            "mafat serve: listening on {} (models: {})",
+            self.local_addr,
+            self.shared
+                .models
+                .iter()
+                .map(|(name, i)| format!("{name}[{}]", i.qos))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
         for conn in self.listener.incoming() {
             if self.shutdown.load(Ordering::Relaxed) {
                 break;
             }
             match conn {
                 Ok(stream) => {
-                    let queue = self.queue.clone();
+                    let queues = self.queues.clone();
                     let shared = self.shared.clone();
                     std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, queue, shared) {
+                        if let Err(e) = handle_conn(stream, queues, shared) {
                             eprintln!("connection error: {e:#}");
                         }
                     });
@@ -256,10 +528,61 @@ impl Server {
 
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::Relaxed);
+        self.queues.close();
     }
 }
 
-/// Build the success response for one served request.
+impl Drop for Server {
+    /// Close the queues so workers drain what is left and exit (the
+    /// pre-router behaviour of dropping the queue's sender half).
+    fn drop(&mut self) {
+        self.queues.close();
+    }
+}
+
+/// Build an error response in the request's protocol shape: v0 keeps the
+/// legacy string `error` and adds the machine-readable `code`; v1 carries
+/// the structured `error` object.
+fn protocol_error(
+    proto: Proto,
+    id: Option<&str>,
+    model: Option<&str>,
+    code: &str,
+    message: &str,
+) -> Json {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    match proto {
+        Proto::V0 => {
+            if let Some(id) = id {
+                fields.push(("id", Json::str(id)));
+            }
+            fields.push(("ok", Json::Bool(false)));
+            fields.push(("error", Json::str(message)));
+            fields.push(("code", Json::str(code)));
+        }
+        Proto::V1 => {
+            fields.push(("v", Json::num(1)));
+            if let Some(id) = id {
+                fields.push(("id", Json::str(id)));
+            }
+            if let Some(model) = model {
+                fields.push(("model", Json::str(model)));
+            }
+            fields.push(("ok", Json::Bool(false)));
+            fields.push((
+                "error",
+                Json::obj(vec![
+                    ("code", Json::str(code)),
+                    ("message", Json::str(message)),
+                ]),
+            ));
+        }
+    }
+    Json::obj(fields)
+}
+
+/// Build the success response for one served request (v0 shape is exactly
+/// the pre-router schema; v1 adds `v` and `model`).
 fn ok_response(
     req: &Request,
     out: &crate::engine::FeatureMap,
@@ -283,6 +606,10 @@ fn ok_response(
         ("queue_ms", Json::num(queue_ms)),
         ("tasks", Json::num(stats.tasks as f64)),
     ];
+    if req.proto == Proto::V1 {
+        fields.push(("v", Json::num(1)));
+        fields.push(("model", Json::str(req.model.clone())));
+    }
     if req.return_output {
         fields.push((
             "output",
@@ -292,107 +619,129 @@ fn ok_response(
     Json::obj(fields)
 }
 
-fn err_response(req: &Request, e: &anyhow::Error) -> Json {
-    Json::obj(vec![
-        ("id", Json::str(req.id.clone())),
-        ("ok", Json::Bool(false)),
-        ("error", Json::str(format!("{e:#}"))),
-    ])
+fn err_response(req: &Request, code: &str, e: &anyhow::Error) -> Json {
+    protocol_error(
+        req.proto,
+        Some(&req.id),
+        Some(&req.model),
+        code,
+        &format!("{e:#}"),
+    )
 }
 
 fn worker_loop(
-    mut engine: Engine,
-    rx: Arc<Mutex<Receiver<Request>>>,
+    mut engines: BTreeMap<String, Engine>,
+    model_metrics: BTreeMap<String, Arc<ModelMetrics>>,
+    queues: Arc<RequestQueues>,
     cfg: ServerConfig,
     shutdown: Arc<AtomicBool>,
     governor: Option<Arc<MemoryGovernor>>,
+    metrics: Arc<Metrics>,
 ) {
     // Ungoverned fallback drain: the batch cap divided across the pool, so
     // one worker cannot swallow a whole burst while its peers idle. A
-    // governed worker derives its drain from the budget instead (same
-    // cap), seeded here from the predictor alone (no RSS sample yet) and
-    // refreshed after every wake *outside* the queue lock — procfs I/O and
-    // the governor mutex never extend the pool's shared critical section,
-    // and one wake of drain staleness is harmless against the governor's
-    // multi-wake hysteresis.
+    // governed worker derives each model's drain from the budget instead
+    // (same cap), seeded here from the predictor alone (no RSS sample yet)
+    // and refreshed after every wake *outside* the queue lock — procfs I/O
+    // and the governor mutex never extend the pool's shared critical
+    // section, and one wake of drain staleness is harmless against the
+    // governor's multi-wake hysteresis.
     let fixed_drain = (cfg.max_batch / cfg.workers.max(1)).max(1);
-    let mut drain = match &governor {
-        Some(g) => g.on_wake(None).drain,
-        None => fixed_drain,
-    };
+    let mut drains: BTreeMap<String, usize> =
+        engines.keys().map(|k| (k.clone(), fixed_drain)).collect();
+    if let Some(g) = &governor {
+        for t in g.on_wake(None).tenants {
+            drains.insert(t.model, t.drain);
+        }
+    }
     while !shutdown.load(Ordering::Relaxed) {
-        // Race for the queue: block for the first request, then drain a
-        // batch while still holding the lock (idle workers park on the
-        // mutex and take the next batch).
-        let batch = {
-            let guard = match rx.lock() {
-                Ok(g) => g,
-                Err(_) => break, // a worker panicked mid-recv; shut down
-            };
-            let Ok(first) = guard.recv() else { break };
-            let mut batch = vec![first];
-            while batch.len() < drain {
-                match guard.try_recv() {
-                    Ok(r) => batch.push(r),
-                    Err(_) => break,
-                }
-            }
-            batch
+        // Race for the queues: block until some model has work, then take
+        // that model's batch (idle workers park on the condvar and take
+        // the next batch).
+        let Some((model, batch)) = queues.pop_batch(&drains) else {
+            break; // closed and fully drained
         };
         // Consult the governor at the batch boundary (the only place
         // engines may swap), with the queue lock released: sample live
         // RSS, record the observability gauges, log a ladder step once
-        // (only the wake that transitioned carries the action), update the
-        // next wake's drain, and hot-swap this worker's engine when its
-        // config lags the active rung — a plan-stage-only rebuild on the
-        // shared weight stage, so the swap is cheap and the queue keeps
-        // moving.
+        // (only the wake that transitioned carries the action), update
+        // every model's next-wake drain, and hot-swap the served model's
+        // engine when its config lags its tenant's active rung — a
+        // plan-stage-only rebuild on the shared weight stage, so the swap
+        // is cheap and the queues keep moving.
         if let Some(g) = &governor {
             let d = g.on_wake(sample_rss_bytes());
-            drain = d.drain;
             let mb = |b: u64| b as f64 / MIB as f64;
-            engine.metrics.rss_bytes.set(d.rss_bytes.unwrap_or(0));
-            engine.metrics.governor_drain.set(d.drain as u64);
+            metrics.rss_bytes.set(d.rss_bytes.unwrap_or(0));
+            for t in &d.tenants {
+                drains.insert(t.model.clone(), t.drain);
+                if let Some(mm) = model_metrics.get(&t.model) {
+                    mm.governor_rung.set(t.active as u64);
+                    mm.governor_drain.set(t.drain as u64);
+                }
+            }
+            if let Some(t) = d.tenant(&model) {
+                metrics.governor_drain.set(t.drain as u64);
+            }
             match &d.action {
                 GovernorAction::Hold => {}
-                GovernorAction::StepDown { from, to } => {
-                    engine.metrics.governor_swaps_down.inc();
+                GovernorAction::StepDown { model: m, from, to } => {
+                    metrics.governor_swaps_down.inc();
+                    if let Some(mm) = model_metrics.get(m) {
+                        mm.governor_swaps_down.inc();
+                    }
                     eprintln!(
-                        "governor: step down {from} -> {to} (rss {:.1} MB sustained above \
-                         the high watermark of a {:.1} MB budget; drain {})",
+                        "governor: step down [model={m}] {from} -> {to} (rss {:.1} MB sustained \
+                         above the high watermark of a {:.1} MB budget)",
                         mb(d.rss_bytes.unwrap_or(0)),
                         mb(g.budget_bytes()),
-                        d.drain
                     );
                 }
-                GovernorAction::StepUp { from, to } => {
-                    engine.metrics.governor_swaps_up.inc();
+                GovernorAction::StepUp { model: m, from, to } => {
+                    metrics.governor_swaps_up.inc();
+                    if let Some(mm) = model_metrics.get(m) {
+                        mm.governor_swaps_up.inc();
+                    }
                     eprintln!(
-                        "governor: step up {from} -> {to} (rss {:.1} MB sustained below \
-                         the low watermark of a {:.1} MB budget; drain {})",
+                        "governor: step up [model={m}] {from} -> {to} (rss {:.1} MB sustained \
+                         below the low watermark of a {:.1} MB budget)",
                         mb(d.rss_bytes.unwrap_or(0)),
                         mb(g.budget_bytes()),
-                        d.drain
                     );
                 }
             }
-            if engine.config() != &d.config {
-                match engine.reconfigure(&d.config) {
-                    Ok(()) => eprintln!("worker: engine reconfigured to {}", d.config),
-                    Err(e) => eprintln!(
-                        "worker: reconfigure to {} failed ({e:#}); serving {} unchanged",
-                        d.config,
-                        engine.config()
-                    ),
+            if let (Some(t), Some(engine)) = (d.tenant(&model), engines.get_mut(&model)) {
+                if engine.config() != &t.config {
+                    match engine.reconfigure(&t.config) {
+                        Ok(()) => eprintln!(
+                            "worker: engine [model={model}] reconfigured to {}",
+                            t.config
+                        ),
+                        Err(e) => eprintln!(
+                            "worker: reconfigure [model={model}] to {} failed ({e:#}); \
+                             serving {} unchanged",
+                            t.config,
+                            engine.config()
+                        ),
+                    }
                 }
             }
         }
+        let Some(engine) = engines.get_mut(&model) else {
+            // Unreachable: queues only exist for registered models.
+            for req in &batch {
+                let e = anyhow::anyhow!("no engine for model {model:?}");
+                let _ = req.respond.send(err_response(req, error_code::INTERNAL, &e));
+            }
+            continue;
+        };
+        let mm = model_metrics.get(&model);
         // Split out requests whose image cannot run BEFORE batching, using
         // the engine's own validation predicate (the same check
         // `infer_batch` enforces — one rule, no drift): each gets its
-        // structured error immediately, so a bad request can neither
-        // poison its batchmates nor force a re-execution of work that
-        // already ran.
+        // structured `bad_image` error immediately, so a bad request can
+        // neither poison its batchmates nor force a re-execution of work
+        // that already ran.
         let (valid, invalid): (Vec<Request>, Vec<Request>) = batch
             .into_iter()
             .partition(|r| engine.validate_image(&r.image).is_ok());
@@ -401,7 +750,10 @@ fn worker_loop(
                 .validate_image(&req.image)
                 .expect_err("partitioned as invalid");
             engine.metrics.errors.inc();
-            let _ = req.respond.send(err_response(&req, &e));
+            if let Some(mm) = mm {
+                mm.errors.inc();
+            }
+            let _ = req.respond.send(err_response(&req, error_code::BAD_IMAGE, &e));
         }
         if valid.is_empty() {
             continue;
@@ -420,6 +772,9 @@ fn worker_loop(
                 for ((req, (out, stats)), q_ms) in valid.iter().zip(&results).zip(&queue_ms) {
                     engine.metrics.requests.inc();
                     engine.metrics.request_latency.record(elapsed);
+                    if let Some(mm) = mm {
+                        mm.requests.inc();
+                    }
                     let _ = req.respond.send(ok_response(req, out, stats, *q_ms));
                 }
             }
@@ -432,7 +787,10 @@ fn worker_loop(
                 // in the metrics — the classes that already succeeded.
                 for req in &valid {
                     engine.metrics.errors.inc();
-                    let _ = req.respond.send(err_response(req, &e));
+                    if let Some(mm) = mm {
+                        mm.errors.inc();
+                    }
+                    let _ = req.respond.send(err_response(req, error_code::INTERNAL, &e));
                 }
             }
         }
@@ -441,7 +799,7 @@ fn worker_loop(
 
 fn handle_conn(
     stream: TcpStream,
-    queue: SyncSender<Request>,
+    queues: Arc<RequestQueues>,
     shared: Arc<ServerShared>,
 ) -> Result<()> {
     let peer = stream.peer_addr()?;
@@ -452,13 +810,7 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match process_line(&line, &queue, &shared) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(format!("{e:#}"))),
-            ]),
-        };
+        let reply = process_line(&line, &queues, &shared);
         writer.write_all(reply.to_string_compact().as_bytes())?;
         writer.write_all(b"\n")?;
     }
@@ -466,169 +818,375 @@ fn handle_conn(
     Ok(())
 }
 
-fn process_line(line: &str, queue: &SyncSender<Request>, shared: &ServerShared) -> Result<Json> {
-    let req = Json::parse(line)?;
-    match req.str_at("cmd").unwrap_or("infer") {
-        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
-        "metrics" => Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("metrics", Json::str(shared.metrics.snapshot())),
-        ])),
+/// Fields each command accepts; anything else is a `bad_request` — a typo
+/// like `"imge"` must surface, not silently serve a synthetic image.
+fn allowed_fields(cmd: &str) -> Option<&'static [&'static str]> {
+    match cmd {
+        "infer" => Some(&["v", "cmd", "model", "id", "seed", "image", "return_output"]),
+        "ping" | "metrics" => Some(&["v", "cmd", "model", "id"]),
+        _ => None,
+    }
+}
+
+/// Parse one request line and answer it: route by model, reject malformed
+/// requests with stable error codes (in the request's own protocol shape),
+/// enqueue infer work, and synchronously serve `ping`/`metrics`. Always
+/// returns the response to write — protocol errors are responses, not Rust
+/// errors.
+fn process_line(line: &str, queues: &RequestQueues, shared: &ServerShared) -> Json {
+    use error_code::*;
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            return protocol_error(Proto::V0, None, None, BAD_REQUEST, &format!("{e:#}"));
+        }
+    };
+    let Json::Obj(fields) = &req else {
+        return protocol_error(Proto::V0, None, None, BAD_REQUEST, "request must be a JSON object");
+    };
+    let id = req.get_opt("id").and_then(|j| j.as_str().ok()).map(str::to_string);
+    let id_ref = id.as_deref();
+    let proto = match req.get_opt("v") {
+        None => Proto::V0,
+        Some(v) => match v.as_f64() {
+            Ok(f) if f == 1.0 => Proto::V1,
+            _ => {
+                return protocol_error(
+                    Proto::V0,
+                    id_ref,
+                    None,
+                    BAD_REQUEST,
+                    "unsupported protocol version (this server speaks \"v\":1 and legacy v0)",
+                );
+            }
+        },
+    };
+    let cmd = match req.get_opt("cmd") {
+        None => "infer",
+        Some(c) => match c.as_str() {
+            Ok(s) => s,
+            Err(_) => {
+                return protocol_error(
+                    proto,
+                    id_ref,
+                    None,
+                    BAD_REQUEST,
+                    "field \"cmd\" must be a string",
+                );
+            }
+        },
+    };
+    let Some(allowed) = allowed_fields(cmd) else {
+        return protocol_error(
+            proto,
+            id_ref,
+            None,
+            BAD_REQUEST,
+            &format!("unknown cmd {cmd:?} (expected infer, metrics, or ping)"),
+        );
+    };
+    for key in fields.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return protocol_error(
+                proto,
+                id_ref,
+                None,
+                BAD_REQUEST,
+                &format!("unknown field {key:?} for cmd {cmd:?}"),
+            );
+        }
+    }
+    let model = match req.get_opt("model") {
+        None => "default".to_string(),
+        Some(m) => match m.as_str() {
+            Ok(s) => s.to_string(),
+            Err(_) => {
+                return protocol_error(
+                    proto,
+                    id_ref,
+                    None,
+                    BAD_REQUEST,
+                    "field \"model\" must be a string",
+                );
+            }
+        },
+    };
+    // Routing happens before any queue is touched: an unknown model is
+    // answered here and cannot consume queue capacity.
+    let Some(info) = shared.models.get(&model) else {
+        let served: Vec<&str> = shared.models.keys().map(String::as_str).collect();
+        return protocol_error(
+            proto,
+            id_ref,
+            Some(&model),
+            UNKNOWN_MODEL,
+            &format!("unknown model {model:?} (serving: {})", served.join(", ")),
+        );
+    };
+    match cmd {
+        "ping" => {
+            let mut out = vec![("ok", Json::Bool(true))];
+            if proto == Proto::V1 {
+                out.push(("v", Json::num(1)));
+            }
+            Json::obj(out)
+        }
+        "metrics" => {
+            let mut out = vec![
+                ("ok", Json::Bool(true)),
+                ("metrics", Json::str(shared.metrics.snapshot())),
+            ];
+            if proto == Proto::V1 {
+                out.push(("v", Json::num(1)));
+                out.push(("model", Json::str(model.clone())));
+            }
+            Json::obj(out)
+        }
         "infer" => {
-            let id = req
-                .get_opt("id")
-                .and_then(|j| j.as_str().ok())
-                .unwrap_or("anon")
-                .to_string();
+            let id = id.unwrap_or_else(|| "anon".to_string());
             let image: Vec<f32> = match req.get_opt("image") {
-                Some(arr) => arr
-                    .as_arr()?
-                    .iter()
-                    .map(|v| v.as_f64().map(|f| f as f32))
-                    .collect::<Result<_>>()?,
+                Some(arr) => {
+                    let parsed: Result<Vec<f32>> = (|| {
+                        arr.as_arr()?
+                            .iter()
+                            .map(|v| v.as_f64().map(|f| f as f32))
+                            .collect()
+                    })();
+                    match parsed {
+                        Ok(v) => v,
+                        Err(e) => {
+                            return protocol_error(
+                                proto,
+                                Some(&id),
+                                Some(&model),
+                                BAD_REQUEST,
+                                &format!("field \"image\" must be an array of numbers: {e:#}"),
+                            );
+                        }
+                    }
+                }
                 None => {
-                    // Synthetic image by seed, at the served network's
+                    // Synthetic image by seed, at the routed model's
                     // advertised dimensions.
-                    let seed = req
-                        .get_opt("seed")
-                        .map(|s| s.as_f64())
-                        .transpose()?
-                        .unwrap_or(0.0) as u64;
-                    let (h, w, c) = shared.dims;
+                    let seed = match req.get_opt("seed").map(|s| s.as_f64()).transpose() {
+                        Ok(s) => s.unwrap_or(0.0) as u64,
+                        Err(_) => {
+                            return protocol_error(
+                                proto,
+                                Some(&id),
+                                Some(&model),
+                                BAD_REQUEST,
+                                "field \"seed\" must be a number",
+                            );
+                        }
+                    };
+                    let (h, w, c) = info.dims;
                     crate::data::gen_image(seed, w, h, c)
                 }
             };
-            let return_output = req
-                .get_opt("return_output")
-                .map(|b| b.as_bool())
-                .transpose()?
-                .unwrap_or(false);
+            let return_output = match req.get_opt("return_output").map(|b| b.as_bool()).transpose()
+            {
+                Ok(b) => b.unwrap_or(false),
+                Err(_) => {
+                    return protocol_error(
+                        proto,
+                        Some(&id),
+                        Some(&model),
+                        BAD_REQUEST,
+                        "field \"return_output\" must be a boolean",
+                    );
+                }
+            };
             let (tx, rx) = std::sync::mpsc::channel();
             let request = Request {
                 id: id.clone(),
+                model: model.clone(),
+                proto,
                 image,
                 return_output,
                 respond: tx,
                 enqueued: Instant::now(),
             };
-            match queue.try_send(request) {
-                Ok(()) => rx
-                    .recv()
-                    .map_err(|_| anyhow::anyhow!("worker dropped request {id}")),
-                Err(TrySendError::Full(_)) => Ok(Json::obj(vec![
-                    ("id", Json::str(id)),
-                    ("ok", Json::Bool(false)),
-                    ("error", Json::str("overloaded: queue full (backpressure)")),
-                ])),
-                Err(TrySendError::Disconnected(_)) => {
-                    anyhow::bail!("server shutting down")
-                }
+            match queues.push(&model, request) {
+                Ok(()) => rx.recv().unwrap_or_else(|_| {
+                    protocol_error(
+                        proto,
+                        Some(&id),
+                        Some(&model),
+                        INTERNAL,
+                        &format!("worker dropped request {id}"),
+                    )
+                }),
+                Err(PushError::QueueFull) => protocol_error(
+                    proto,
+                    Some(&id),
+                    Some(&model),
+                    QUEUE_FULL,
+                    "overloaded: queue full (backpressure)",
+                ),
+                Err(PushError::UnknownModel) => protocol_error(
+                    proto,
+                    Some(&id),
+                    Some(&model),
+                    UNKNOWN_MODEL,
+                    &format!("unknown model {model:?}"),
+                ),
+                Err(PushError::Closed) => protocol_error(
+                    proto,
+                    Some(&id),
+                    Some(&model),
+                    INTERNAL,
+                    "server shutting down",
+                ),
             }
         }
-        other => anyhow::bail!("unknown cmd {other:?}"),
+        _ => unreachable!("allowed_fields gated cmd"),
     }
 }
 
-/// CLI entry: load the bundle's weight stage **once**, resolve the serving
-/// configuration and the memory governor, then serve until killed
-/// (`mafat serve`).
+/// One `--bundle` of a `serve` invocation: routing name, bundle directory,
+/// QoS class.
+#[derive(Debug, Clone)]
+pub struct BundleSpec {
+    pub name: String,
+    pub path: String,
+    pub qos: QosClass,
+}
+
+/// CLI entry: load each bundle's weight stage **once**, resolve every
+/// model's serving configuration and the shared memory governor, then
+/// serve until killed (`mafat serve`).
 ///
-/// * `config: Some(_)` pins the shape — the governor (if a budget is
-///   known) only derives the drain, never swaps configs.
-/// * `config: None` auto-picks from the bundle's compiled set for the
-///   budget and hands the governor the full manifest ladder to walk.
+/// * `config: Some(_)` (single bundle only) pins the shape — the governor
+///   (if a budget is known) only derives the drain, never swaps configs.
+/// * `config: None` auto-picks per bundle from its compiled set for the
+///   budget and hands the governor one manifest ladder per model to
+///   arbitrate.
 /// * `budget_bytes: None` with an explicit config serves statically (the
 ///   pre-governor behaviour); with no config it is an error — there is
 ///   nothing to pick against.
 pub fn serve_cli(
-    artifacts: &str,
+    bundles: &[BundleSpec],
     config: Option<MultiConfig>,
     addr: &str,
     cfg: ServerConfig,
     budget_bytes: Option<u64>,
     params: &PredictorParams,
 ) -> Result<()> {
-    // The weight stage runs once here; every worker's engine and every
-    // governor hot-swap share it (weights packed once per bundle).
-    let shared = EngineShared::load(artifacts)?;
+    if bundles.is_empty() {
+        anyhow::bail!("serve needs at least one --bundle");
+    }
+    if bundles.len() > 1 && config.is_some() {
+        anyhow::bail!("--config pins one shape and needs exactly one --bundle");
+    }
     let workers = cfg.workers.max(1);
-    let (initial, gov) = match (config, budget_bytes) {
-        (Some(c), None) => (c, None),
+    // Each bundle's weight stage runs once here; every worker's engine and
+    // every governor hot-swap of that model share it (weights packed once
+    // per bundle).
+    let mut stages: Vec<(BundleSpec, Arc<EngineShared>)> = Vec::with_capacity(bundles.len());
+    for b in bundles {
+        let shared = EngineShared::load(&b.path)
+            .with_context(|| format!("loading bundle {:?} from {}", b.name, b.path))?;
+        stages.push((b.clone(), shared));
+    }
+    // Resolve each model's initial config, and its governor tenant when a
+    // budget is known.
+    let mut initials: Vec<MultiConfig> = Vec::with_capacity(stages.len());
+    let mut tenants: Vec<TenantSpec> = Vec::new();
+    match (config, budget_bytes) {
+        (Some(c), None) => initials.push(c),
         (Some(c), Some(budget)) => {
             // Operator-pinned shape: a single-rung ladder governs drain
             // only. An unpredictable shape (degenerate net) serves static.
-            let gov = match predict_multi(shared.network(), &c, params) {
-                Ok(pred) => {
-                    let ladder = ConfigLadder::new(vec![LadderRung {
+            let (b, shared) = &stages[0];
+            if let Ok(pred) = predict_multi(shared.network(), &c, params) {
+                tenants.push(TenantSpec {
+                    name: b.name.clone(),
+                    ladder: ConfigLadder::new(vec![LadderRung {
                         config: c.clone(),
                         predicted_bytes: pred.total_bytes,
                         activation_bytes: pred.activation_bytes(),
                         cost_proxy: 0,
-                    }]);
-                    Some(MemoryGovernor::new(
-                        ladder,
-                        budget,
-                        0,
-                        cfg.max_batch,
-                        workers,
-                        GovernorConfig::default(),
-                    )?)
-                }
-                Err(_) => None,
-            };
-            (c, gov)
+                    }]),
+                    start_rung: 0,
+                    qos: b.qos,
+                });
+            }
+            initials.push(c);
         }
         (None, None) => anyhow::bail!(
             "cannot probe the memory budget on this host; pass --config or --mem-limit-mb"
         ),
         (None, Some(budget)) => {
-            let mnet = shared.manifest_network();
-            let (picked, predicted) = auto_config_from_manifest(mnet, budget, params)?;
-            eprintln!(
-                "auto-selected {picked} (of {} compiled configs) for a {:.0} MB budget \
-                 (predicted {:.1} MB on {})",
-                mnet.configs.len(),
-                budget as f64 / MIB as f64,
-                predicted as f64 / MIB as f64,
-                mnet.name
-            );
-            let ladder = ladder_from_manifest(mnet, params)?;
-            // Start the governor at the picked rung. Below the no-swap
-            // floor the least-stall pick can be absent from the ladder
-            // (dominated at its byte level); start at the floor rung then.
-            let (start, initial) = match ladder.position_of(&picked) {
-                Some(ix) => (ix, picked),
-                None => {
-                    let ix = ladder.rung_for_limit(budget).unwrap_or(0);
-                    (ix, ladder.rungs()[ix].config.clone())
-                }
-            };
-            let gov = MemoryGovernor::new(
-                ladder,
-                budget,
-                start,
-                cfg.max_batch,
-                workers,
-                GovernorConfig::default(),
-            )?;
-            eprintln!(
-                "governor: budget {:.1} MB, ladder of {} rung(s), starting at rung {} ({})",
-                budget as f64 / MIB as f64,
-                gov.ladder().len(),
-                start,
-                initial
-            );
-            (initial, Some(gov))
+            for (b, shared) in &stages {
+                let mnet = shared.manifest_network();
+                let (picked, predicted) = auto_config_from_manifest(mnet, budget, params)?;
+                eprintln!(
+                    "auto-selected {picked} [model={}] (of {} compiled configs) for a {:.0} MB \
+                     budget (predicted {:.1} MB on {})",
+                    b.name,
+                    mnet.configs.len(),
+                    budget as f64 / MIB as f64,
+                    predicted as f64 / MIB as f64,
+                    mnet.name
+                );
+                let ladder = ladder_from_manifest(mnet, params)?;
+                // Start the governor at the picked rung. Below the no-swap
+                // floor the least-stall pick can be absent from the ladder
+                // (dominated at its byte level); start at the floor rung
+                // then.
+                let (start, initial) = match ladder.position_of(&picked) {
+                    Some(ix) => (ix, picked),
+                    None => {
+                        let ix = ladder.rung_for_limit(budget).unwrap_or(0);
+                        (ix, ladder.rungs()[ix].config.clone())
+                    }
+                };
+                eprintln!(
+                    "governor: [model={}] budget {:.1} MB, ladder of {} rung(s), starting at \
+                     rung {} ({})",
+                    b.name,
+                    budget as f64 / MIB as f64,
+                    ladder.len(),
+                    start,
+                    initial
+                );
+                tenants.push(TenantSpec {
+                    name: b.name.clone(),
+                    ladder,
+                    start_rung: start,
+                    qos: b.qos,
+                });
+                initials.push(initial);
+            }
         }
+    }
+    let gov = match (budget_bytes, tenants.is_empty()) {
+        (Some(budget), false) => Some(Arc::new(MemoryGovernor::new(
+            tenants,
+            budget,
+            cfg.max_batch,
+            workers,
+            GovernorConfig::default(),
+        )?)),
+        _ => None,
     };
-    let factory_shared = shared.clone();
-    let factory_config = initial;
-    let server = Server::start_governed(
-        move || Engine::with_shared(factory_shared.clone(), factory_config.clone()),
-        addr,
-        cfg,
-        gov.map(Arc::new),
-    )?;
+    let models: Vec<ModelSpec> = stages
+        .iter()
+        .zip(&initials)
+        .map(|((b, shared), initial)| {
+            let factory_shared = shared.clone();
+            let factory_config = initial.clone();
+            ModelSpec {
+                name: b.name.clone(),
+                qos: b.qos,
+                factory: Box::new(move || {
+                    Engine::with_shared(factory_shared.clone(), factory_config.clone())
+                }),
+            }
+        })
+        .collect();
+    let server = Server::start_multi(models, addr, cfg, gov)?;
     server.run()
 }
 
@@ -766,29 +1324,155 @@ mod tests {
         assert_eq!(c.workers, 1);
     }
 
-    #[test]
-    fn process_line_rejects_garbage() {
-        let (tx, _rx) = sync_channel::<Request>(1);
-        let shared = ServerShared::default();
-        assert!(process_line("not json", &tx, &shared).is_err());
-        assert!(process_line(r#"{"cmd":"infer","image":["a"]}"#, &tx, &shared).is_err());
-        let r = process_line(r#"{"cmd":"ping"}"#, &tx, &shared).unwrap();
-        assert!(r.get("ok").unwrap().as_bool().unwrap());
+    fn test_queues(shared: &ServerShared, depth: usize) -> RequestQueues {
+        let routes: Vec<(String, QosClass)> =
+            shared.models.iter().map(|(n, i)| (n.clone(), i.qos)).collect();
+        RequestQueues::new(&routes, depth)
+    }
+
+    /// A request that never waits on a worker (tests only exercise paths
+    /// that answer before or instead of dequeueing).
+    fn dummy_request(model: &str) -> Request {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        Request {
+            id: "t".into(),
+            model: model.into(),
+            proto: Proto::V0,
+            image: vec![],
+            return_output: false,
+            respond: tx,
+            enqueued: Instant::now(),
+        }
     }
 
     #[test]
-    fn unknown_cmd_is_error() {
-        let (tx, _rx) = sync_channel::<Request>(1);
-        assert!(process_line(r#"{"cmd":"reboot"}"#, &tx, &ServerShared::default()).is_err());
+    fn process_line_rejects_garbage_with_bad_request() {
+        let shared = ServerShared::default();
+        let q = test_queues(&shared, 4);
+        let r = process_line("not json", &q, &shared);
+        assert!(!r.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(r.str_at("code").unwrap(), error_code::BAD_REQUEST);
+        // v0 errors keep the legacy string "error".
+        assert!(r.get("error").unwrap().as_str().is_ok());
+        let r = process_line(r#"{"cmd":"infer","image":["a"]}"#, &q, &shared);
+        assert_eq!(r.str_at("code").unwrap(), error_code::BAD_REQUEST);
+        let r = process_line(r#"{"cmd":"ping"}"#, &q, &shared);
+        assert!(r.get("ok").unwrap().as_bool().unwrap());
+        // v0 ping response shape is exactly the legacy one: no "v".
+        assert!(r.get_opt("v").is_none());
+    }
+
+    #[test]
+    fn unknown_cmd_is_bad_request_in_both_protocols() {
+        let shared = ServerShared::default();
+        let q = test_queues(&shared, 4);
+        let r = process_line(r#"{"cmd":"reboot"}"#, &q, &shared);
+        assert_eq!(r.str_at("code").unwrap(), error_code::BAD_REQUEST);
+        assert!(r.str_at("error").unwrap().contains("reboot"));
+        let r = process_line(r#"{"v":1,"cmd":"reboot"}"#, &q, &shared);
+        let err = r.get("error").unwrap();
+        assert_eq!(err.str_at("code").unwrap(), error_code::BAD_REQUEST);
+        assert!(err.str_at("message").unwrap().contains("reboot"));
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_in_both_protocols() {
+        // The fix this PR pins: a typo like "imge" must surface as
+        // bad_request instead of silently serving a synthetic image.
+        let shared = ServerShared::default();
+        let q = test_queues(&shared, 4);
+        let r = process_line(r#"{"cmd":"infer","id":"x","imge":[1]}"#, &q, &shared);
+        assert_eq!(r.str_at("code").unwrap(), error_code::BAD_REQUEST);
+        assert!(r.str_at("error").unwrap().contains("imge"), "{r:?}");
+        assert_eq!(r.str_at("id").unwrap(), "x");
+        let r = process_line(r#"{"v":1,"cmd":"infer","id":"x","imge":[1]}"#, &q, &shared);
+        let err = r.get("error").unwrap();
+        assert_eq!(err.str_at("code").unwrap(), error_code::BAD_REQUEST);
+        assert!(err.str_at("message").unwrap().contains("imge"));
+        // An unsupported version is bad_request too.
+        let r = process_line(r#"{"v":2,"cmd":"ping"}"#, &q, &shared);
+        assert_eq!(r.str_at("code").unwrap(), error_code::BAD_REQUEST);
+    }
+
+    #[test]
+    fn unknown_model_is_structured_and_never_touches_the_queue() {
+        let shared = ServerShared::default();
+        let q = test_queues(&shared, 1);
+        let r = process_line(r#"{"v":1,"cmd":"infer","model":"nope","seed":1}"#, &q, &shared);
+        let err = r.get("error").unwrap();
+        assert_eq!(err.str_at("code").unwrap(), error_code::UNKNOWN_MODEL);
+        assert_eq!(r.str_at("model").unwrap(), "nope");
+        assert_eq!(r.get("v").unwrap().as_f64().unwrap(), 1.0);
+        // The depth-1 queue is still empty: a real request fits.
+        assert!(q.push("default", dummy_request("default")).is_ok());
+    }
+
+    #[test]
+    fn queue_full_uses_its_stable_code_and_legacy_text() {
+        let shared = ServerShared::default();
+        let q = test_queues(&shared, 1);
+        q.push("default", dummy_request("default")).unwrap();
+        // v0: the legacy free-text error is preserved, the code is new.
+        let r = process_line(r#"{"cmd":"infer","id":"q1","seed":0}"#, &q, &shared);
+        assert_eq!(r.str_at("code").unwrap(), error_code::QUEUE_FULL);
+        assert_eq!(r.str_at("error").unwrap(), "overloaded: queue full (backpressure)");
+        assert_eq!(r.str_at("id").unwrap(), "q1");
+        // v1: structured.
+        let r = process_line(r#"{"v":1,"cmd":"infer","id":"q2","seed":0}"#, &q, &shared);
+        let err = r.get("error").unwrap();
+        assert_eq!(err.str_at("code").unwrap(), error_code::QUEUE_FULL);
     }
 
     #[test]
     fn metrics_cmd_uses_per_server_registry() {
-        let (tx, _rx) = sync_channel::<Request>(1);
         let shared = ServerShared::default();
+        let q = test_queues(&shared, 4);
         shared.metrics.requests.add(7);
-        let r = process_line(r#"{"cmd":"metrics"}"#, &tx, &shared).unwrap();
+        let r = process_line(r#"{"cmd":"metrics"}"#, &q, &shared);
         assert!(r.str_at("metrics").unwrap().contains("requests 7"));
+        // v1 echoes the routing model.
+        let r = process_line(r#"{"v":1,"cmd":"metrics"}"#, &q, &shared);
+        assert_eq!(r.str_at("model").unwrap(), "default");
+    }
+
+    #[test]
+    fn queues_pop_interactive_class_first_with_round_robin_within_class() {
+        let routes = vec![
+            ("bulk".to_string(), QosClass::Batch),
+            ("chat".to_string(), QosClass::Interactive),
+            ("live".to_string(), QosClass::Interactive),
+        ];
+        let q = RequestQueues::new(&routes, 8);
+        for m in ["bulk", "bulk", "chat", "chat", "live"] {
+            q.push(m, dummy_request(m)).unwrap();
+        }
+        let drains: BTreeMap<String, usize> =
+            routes.iter().map(|(n, _)| (n.clone(), 2)).collect();
+        // Interactive queues drain before the batch queue; round-robin
+        // alternates within the interactive class.
+        let (m1, b1) = q.pop_batch(&drains).unwrap();
+        assert_eq!((m1.as_str(), b1.len()), ("chat", 2));
+        let (m2, b2) = q.pop_batch(&drains).unwrap();
+        assert_eq!((m2.as_str(), b2.len()), ("live", 1));
+        let (m3, b3) = q.pop_batch(&drains).unwrap();
+        assert_eq!((m3.as_str(), b3.len()), ("bulk", 2));
+        // Close with empty queues: pop returns None.
+        q.close();
+        assert!(q.pop_batch(&drains).is_none());
+        assert_eq!(q.push("bulk", dummy_request("bulk")), Err(PushError::Closed));
+    }
+
+    #[test]
+    fn queues_respect_per_model_drain_and_depth() {
+        let routes = vec![("m".to_string(), QosClass::Interactive)];
+        let q = RequestQueues::new(&routes, 2);
+        q.push("m", dummy_request("m")).unwrap();
+        q.push("m", dummy_request("m")).unwrap();
+        assert_eq!(q.push("m", dummy_request("m")), Err(PushError::QueueFull));
+        assert_eq!(q.push("nope", dummy_request("nope")), Err(PushError::UnknownModel));
+        let drains: BTreeMap<String, usize> = [("m".to_string(), 1)].into();
+        let (_, b) = q.pop_batch(&drains).unwrap();
+        assert_eq!(b.len(), 1, "drain 1 takes one request, not the backlog");
     }
 
     // (The factory-failure path of Server::start is covered by the

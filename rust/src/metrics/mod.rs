@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// A monotonically increasing counter.
@@ -96,6 +96,24 @@ impl ClassCounters {
     }
 }
 
+/// Per-model slice of a multi-model server's metrics, rendered as
+/// `{model=NAME}`-labelled snapshot lines. The unlabelled aggregates on
+/// [`Metrics`] keep their exact lines — dashboards and CI greps written
+/// against the single-model server still read totals.
+#[derive(Debug, Default)]
+pub struct ModelMetrics {
+    pub requests: Counter,
+    pub errors: Counter,
+    /// Governor steps of this model's ladder toward a smaller footprint.
+    pub governor_swaps_down: Counter,
+    /// Governor steps back toward this model's cheaper configurations.
+    pub governor_swaps_up: Counter,
+    /// This model's active ladder rung index as of the last governed wake.
+    pub governor_rung: Gauge,
+    /// The governor-derived per-wake drain for this model's queue.
+    pub governor_drain: Gauge,
+}
+
 /// Registry of named metrics for one engine/server instance.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -124,9 +142,18 @@ pub struct Metrics {
     /// measured durations, so percentiles expose slow classes; per-tile
     /// time inside one batched call is not separately observable).
     pub task_latency: Histogram,
+    /// Labelled per-model slices (multi-model serving), keyed by model id.
+    models: Mutex<BTreeMap<String, Arc<ModelMetrics>>>,
 }
 
 impl Metrics {
+    /// This model's labelled metrics slice, registered on first use.
+    /// Workers hold the `Arc` so the per-request hot path never re-locks
+    /// the registry map.
+    pub fn model(&self, name: &str) -> Arc<ModelMetrics> {
+        self.models.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
     /// Render a one-line-per-metric text snapshot (the server's `/metrics`).
     pub fn snapshot(&self) -> String {
         let mut kv: BTreeMap<&str, String> = BTreeMap::new();
@@ -171,12 +198,33 @@ impl Metrics {
                 );
             }
         }
+        let model_lines: String = self
+            .models
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, m)| {
+                format!(
+                    "requests{{model={name}}} {}\nerrors{{model={name}}} {}\n\
+                     governor_rung{{model={name}}} {}\ngovernor_drain{{model={name}}} {}\n\
+                     governor_swaps{{model={name},dir=down}} {}\n\
+                     governor_swaps{{model={name},dir=up}} {}\n",
+                    m.requests.get(),
+                    m.errors.get(),
+                    m.governor_rung.get(),
+                    m.governor_drain.get(),
+                    m.governor_swaps_down.get(),
+                    m.governor_swaps_up.get()
+                )
+            })
+            .collect();
         let mut out = kv
             .iter()
             .map(|(k, v)| format!("{k} {v}\n"))
             .collect::<String>();
         out.push_str(&governor_lines);
         out.push_str(&class_lines);
+        out.push_str(&model_lines);
         out
     }
 }
@@ -244,6 +292,27 @@ mod tests {
         assert!(s.contains("governor_drain 3"), "{s}");
         assert!(s.contains("governor_swaps{dir=down} 2"), "{s}");
         assert!(s.contains("governor_swaps{dir=up} 1"), "{s}");
+    }
+
+    #[test]
+    fn per_model_slices_render_labelled_lines() {
+        let m = Metrics::default();
+        let a = m.model("yolo");
+        a.requests.add(5);
+        a.governor_swaps_down.inc();
+        a.governor_rung.set(2);
+        // Same name resolves to the same slice.
+        m.model("yolo").errors.inc();
+        m.model("mobile").requests.add(1);
+        let s = m.snapshot();
+        assert!(s.contains("requests{model=yolo} 5"), "{s}");
+        assert!(s.contains("errors{model=yolo} 1"), "{s}");
+        assert!(s.contains("governor_rung{model=yolo} 2"), "{s}");
+        assert!(s.contains("governor_swaps{model=yolo,dir=down} 1"), "{s}");
+        assert!(s.contains("governor_swaps{model=yolo,dir=up} 0"), "{s}");
+        assert!(s.contains("requests{model=mobile} 1"), "{s}");
+        // Aggregate lines stay unlabelled and untouched.
+        assert!(s.contains("governor_swaps{dir=down} 0"), "{s}");
     }
 
     #[test]

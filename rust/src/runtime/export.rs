@@ -351,6 +351,22 @@ pub fn mobilenet_configs() -> Result<Vec<MultiConfig>> {
     Ok(configs)
 }
 
+/// [`ensure_reference_bundle`]'s MobileNet sibling: reuse `artifacts` when
+/// it already holds a manifest, else export the depthwise reference bundle
+/// to a temp dir — the second default bundle of two-model `serve` demos.
+pub fn ensure_mobilenet_reference_bundle(artifacts: &str, tag: &str) -> Result<String> {
+    if std::path::Path::new(artifacts).join("manifest.json").exists() {
+        return Ok(artifacts.to_string());
+    }
+    let dir = std::env::temp_dir().join(format!("{tag}-mobilenet-{}", std::process::id()));
+    eprintln!(
+        "no artifacts at {artifacts}; exporting a MobileNet reference bundle to {}",
+        dir.display()
+    );
+    write_mobilenet_reference_bundle(&dir)?;
+    Ok(dir.to_string_lossy().into_owned())
+}
+
 /// Write the MobileNet reference bundle to `dir`. Bundles are one network
 /// per directory (`Manifest::sole_network`), so this lives alongside — not
 /// inside — the default YOLOv2 bundle.

@@ -231,6 +231,45 @@ fn run_and_serve_reject_malformed_tvt_configs_cleanly() {
 }
 
 #[test]
+fn run_accepts_unified_bundle_flag_and_warns_on_artifacts() {
+    let dir = std::env::temp_dir().join(format!("mafat_cli_bundleflag_{}", std::process::id()));
+    let net = mafat::network::yolov2::yolov2_16_scaled(48);
+    mafat::runtime::export::write_reference_bundle(
+        &dir,
+        &[mafat::runtime::export::ExportSpec {
+            net: &net,
+            configs: vec!["2x2/NoCut".parse().unwrap()],
+            emit_full: true,
+        }],
+    )
+    .unwrap();
+    // The unified spelling: --bundle DIR, no deprecation chatter.
+    let (ok, stdout, stderr) =
+        mafat(&["run", "--bundle", dir.to_str().unwrap(), "--config", "2x2/NoCut"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("config 2x2/NoCut"), "{stdout}");
+    assert!(!stderr.contains("deprecated"), "{stderr}");
+    // The old flag still works but warns.
+    let (ok, _, stderr) =
+        mafat(&["run", "--artifacts", dir.to_str().unwrap(), "--config", "2x2/NoCut"]);
+    assert!(ok, "{stderr}");
+    assert!(stderr.contains("--artifacts is deprecated"), "{stderr}");
+    // Mixing both is an error.
+    let (ok, _, stderr) = mafat(&[
+        "run",
+        "--bundle",
+        dir.to_str().unwrap(),
+        "--artifacts",
+        dir.to_str().unwrap(),
+        "--config",
+        "2x2/NoCut",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("deprecated"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn run_executes_a_reference_bundle_end_to_end() {
     // The full CLI path on a geometry-only bundle: export, then run a
     // k-group config with oracle verification on the pure-Rust executor.

@@ -6,7 +6,7 @@
 
 use mafat::coordinator::{
     auto_config_from_manifest, ladder_from_manifest, sample_rss_bytes, GovernorConfig,
-    MemoryGovernor, Server, ServerConfig,
+    MemoryGovernor, ModelSpec, QosClass, Server, ServerConfig, TenantSpec,
 };
 use mafat::engine::Engine;
 use mafat::jsonlite::Json;
@@ -75,6 +75,42 @@ fn tiny_bundle() -> &'static str {
     .unwrap()
 }
 
+/// A second, differently shaped net for the two-tenant tests (the
+/// "mobilenet" stand-in): distinct outputs from `tiny_net`, tiny work.
+fn tiny_net_b() -> Network {
+    Network::from_ops(
+        "tiny-serve-b",
+        32,
+        32,
+        3,
+        &[conv(4, 3), maxpool(), conv(8, 3), conv(8, 1)],
+    )
+}
+
+fn tiny_bundle_b() -> &'static str {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("mafat-test-serve-b-{}", std::process::id()));
+        let net = tiny_net_b();
+        write_reference_bundle(
+            &dir,
+            &[ExportSpec {
+                net: &net,
+                configs: vec![
+                    "1x1/NoCut".parse().unwrap(),
+                    "2x2/NoCut".parse().unwrap(),
+                    "2x2/2/1x1".parse().unwrap(),
+                ],
+                emit_full: true,
+            }],
+        )
+        .expect("export second reference bundle");
+        dir
+    })
+    .to_str()
+    .unwrap()
+}
+
 fn start_server(config: &str, cfg: ServerConfig) -> Server {
     let dir = tiny_bundle().to_string();
     let config: MultiConfig = config.parse().unwrap();
@@ -103,11 +139,17 @@ impl Client {
         }
     }
 
-    fn call(&mut self, req: &str) -> Json {
+    /// One request -> the raw response line (for byte-identity pins).
+    fn raw_call(&mut self, req: &str) -> String {
         self.writer.write_all(req.as_bytes()).unwrap();
         self.writer.write_all(b"\n").unwrap();
         let mut line = String::new();
         self.reader.read_line(&mut line).unwrap();
+        line
+    }
+
+    fn call(&mut self, req: &str) -> Json {
+        let line = self.raw_call(req);
         Json::parse(&line).unwrap()
     }
 }
@@ -324,7 +366,7 @@ fn start_governed(
     let start = ladder.position_of(&picked).unwrap();
     let workers = cfg.workers.max(1);
     let gcfg = GovernorConfig::default();
-    let gov = MemoryGovernor::new(ladder, budget_bytes, start, cfg.max_batch, workers, gcfg);
+    let gov = MemoryGovernor::single(ladder, budget_bytes, start, cfg.max_batch, workers, gcfg);
     let governor = Arc::new(gov.unwrap());
     let factory_config = picked.clone();
     let server = Server::start_governed(
@@ -364,9 +406,10 @@ fn governed_server_with_steady_budget_is_byte_identical_to_static_server() {
     );
     // A huge budget picks the cheapest (largest-footprint) compiled
     // config — the ladder's top rung.
+    let ladder = governor.ladder("default").unwrap();
     assert_eq!(
-        governor.ladder().position_of(&picked).unwrap(),
-        governor.ladder().len() - 1,
+        ladder.position_of(&picked).unwrap(),
+        ladder.len() - 1,
         "{picked} is not the top rung"
     );
     let gaddr = governed.local_addr;
@@ -390,7 +433,7 @@ fn governed_server_with_steady_budget_is_byte_identical_to_static_server() {
     let b = outputs_for_seeds(faddr, &seeds);
     assert_eq!(a, b, "governed responses must equal fixed-drain responses");
     // And the governor really never stepped.
-    assert_eq!(governor.active_config(), picked);
+    assert_eq!(governor.active_config("default").unwrap(), picked);
 
     // Observability: the governed wakes exported RSS + drain gauges.
     let mut c = Client::connect(gaddr);
@@ -432,10 +475,11 @@ fn governed_server_under_tight_budget_steps_down_and_keeps_serving() {
     let budget = 2 * MIB;
     assert!(rss > budget, "test process RSS must dwarf the budget");
     let (server, governor, picked) = start_governed(budget, &params, ServerConfig::default());
-    let ladder_len = governor.ladder().len();
+    let ladder = governor.ladder("default").unwrap();
+    let ladder_len = ladder.len();
     assert!(ladder_len >= 2, "need rungs to step through");
-    assert_eq!(governor.ladder().position_of(&picked).unwrap(), ladder_len - 1);
-    let floor = governor.ladder().rungs()[0].config.clone();
+    assert_eq!(ladder.position_of(&picked).unwrap(), ladder_len - 1);
+    let floor = ladder.rungs()[0].config.clone();
     let addr = server.local_addr;
     std::thread::spawn(move || {
         let _ = server.run();
@@ -459,7 +503,7 @@ fn governed_server_under_tight_budget_steps_down_and_keeps_serving() {
         }
     }
     assert_eq!(
-        governor.active_config(),
+        governor.active_config("default").unwrap(),
         floor,
         "sustained pressure must land on the footprint floor"
     );
@@ -524,4 +568,239 @@ fn auto_pick_serves_variable_config_when_it_wins() {
     let (out, _) = direct.infer(&image).unwrap();
     let direct_out: Vec<f64> = out.data.iter().map(|&v| v as f64).collect();
     assert_eq!(served[0], direct_out);
+}
+
+/// Like [`outputs_for_seeds`], speaking protocol v1 at a named model.
+fn outputs_for_seeds_v1(addr: std::net::SocketAddr, model: &str, seeds: &[u64]) -> Vec<Vec<f64>> {
+    let mut c = Client::connect(addr);
+    seeds
+        .iter()
+        .map(|seed| {
+            let r = c.call(&format!(
+                r#"{{"v":1,"cmd":"infer","model":"{model}","id":"s{seed}","seed":{seed},"return_output":true}}"#
+            ));
+            assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+            // v1 responses echo the protocol version and the model id.
+            assert_eq!(r.get("v").unwrap().as_f64().unwrap(), 1.0, "{r:?}");
+            assert_eq!(r.str_at("model").unwrap(), model, "{r:?}");
+            r.get("output")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect()
+        })
+        .collect()
+}
+
+/// Auto-pick a config and build the footprint ladder for one bundle dir.
+fn pick_and_ladder(
+    dir: &str,
+    budget: u64,
+    params: &PredictorParams,
+) -> (MultiConfig, mafat::search::ConfigLadder, usize) {
+    let manifest = mafat::runtime::Manifest::load(std::path::Path::new(dir)).unwrap();
+    let mnet = manifest.sole_network().unwrap();
+    let ladder = ladder_from_manifest(mnet, params).unwrap();
+    let (picked, _) = auto_config_from_manifest(mnet, budget, params).unwrap();
+    let start = ladder.position_of(&picked).unwrap();
+    (picked, ladder, start)
+}
+
+/// One governed server over both tiny bundles: model `default`
+/// (interactive, the one legacy v0 clients hit) and model `mobile`
+/// (batch), each auto-picked for the budget.
+fn start_two_model(
+    budget: u64,
+    params: &PredictorParams,
+    cfg: ServerConfig,
+) -> (Server, Arc<MemoryGovernor>, MultiConfig, MultiConfig) {
+    let dir_a = tiny_bundle().to_string();
+    let dir_b = tiny_bundle_b().to_string();
+    let (picked_a, ladder_a, start_a) = pick_and_ladder(&dir_a, budget, params);
+    let (picked_b, ladder_b, start_b) = pick_and_ladder(&dir_b, budget, params);
+    let workers = cfg.workers.max(1);
+    let governor = Arc::new(
+        MemoryGovernor::new(
+            vec![
+                TenantSpec {
+                    name: "default".into(),
+                    ladder: ladder_a,
+                    start_rung: start_a,
+                    qos: QosClass::Interactive,
+                },
+                TenantSpec {
+                    name: "mobile".into(),
+                    ladder: ladder_b,
+                    start_rung: start_b,
+                    qos: QosClass::Batch,
+                },
+            ],
+            budget,
+            cfg.max_batch,
+            workers,
+            GovernorConfig::default(),
+        )
+        .unwrap(),
+    );
+    let (fa, fb) = (picked_a.clone(), picked_b.clone());
+    let server = Server::start_multi(
+        vec![
+            ModelSpec {
+                name: "default".into(),
+                qos: QosClass::Interactive,
+                factory: Box::new(move || Engine::load(&dir_a, fa.clone())),
+            },
+            ModelSpec {
+                name: "mobile".into(),
+                qos: QosClass::Batch,
+                factory: Box::new(move || Engine::load(&dir_b, fb.clone())),
+            },
+        ],
+        "127.0.0.1:0",
+        cfg,
+        Some(governor.clone()),
+    )
+    .unwrap();
+    (server, governor, picked_a, picked_b)
+}
+
+#[test]
+fn two_models_one_budget() {
+    let Some(rss) = sample_rss_bytes() else {
+        eprintln!("SKIP: no procfs RSS on this host");
+        return;
+    };
+
+    // ---- (a) steady budget: per-model responses are byte-identical to
+    // two isolated single-model servers. Both tenants auto-pick their top
+    // rung under the ample budget, so the governor provably holds (same
+    // argument as the single-model steady test).
+    let ample = (rss * 4).max(1 << 30);
+    let params = PredictorParams::default();
+    let (multi, governor, picked_a, picked_b) =
+        start_two_model(ample, &params, ServerConfig::default());
+    let maddr = multi.local_addr;
+    std::thread::spawn(move || {
+        let _ = multi.run();
+    });
+    let single_a = start_server(&picked_a.to_string(), ServerConfig::default());
+    let saddr_a = single_a.local_addr;
+    std::thread::spawn(move || {
+        let _ = single_a.run();
+    });
+    let dir_b = tiny_bundle_b().to_string();
+    let fb = picked_b.clone();
+    let single_b = Server::start_multi(
+        vec![ModelSpec {
+            name: "mobile".into(),
+            qos: QosClass::Batch,
+            factory: Box::new(move || Engine::load(&dir_b, fb.clone())),
+        }],
+        "127.0.0.1:0",
+        ServerConfig::default(),
+        None,
+    )
+    .unwrap();
+    let saddr_b = single_b.local_addr;
+    std::thread::spawn(move || {
+        let _ = single_b.run();
+    });
+
+    let seeds: Vec<u64> = (0..4).collect();
+    // Legacy v0 clients (no v, no model) route to `default` unchanged.
+    assert_eq!(
+        outputs_for_seeds(maddr, &seeds),
+        outputs_for_seeds(saddr_a, &seeds),
+        "v0/default outputs must match the isolated server"
+    );
+    assert_eq!(
+        outputs_for_seeds_v1(maddr, "mobile", &seeds),
+        outputs_for_seeds_v1(saddr_b, "mobile", &seeds),
+        "v1/mobile outputs must match the isolated server"
+    );
+    let mut cm = Client::connect(maddr);
+    // Distinct engines really answer the two ids (not one routed twice).
+    let ra = cm.call(r#"{"cmd":"infer","id":"xa","seed":9}"#);
+    let rb = cm.call(r#"{"v":1,"cmd":"infer","model":"mobile","id":"xb","seed":9}"#);
+    assert_ne!(
+        ra.get("checksum").unwrap().as_f64().unwrap(),
+        rb.get("checksum").unwrap().as_f64().unwrap()
+    );
+    assert_eq!(governor.active_config("default").unwrap(), picked_a);
+    assert_eq!(governor.active_config("mobile").unwrap(), picked_b);
+
+    // ---- (c) unknown model: its structured error comes back without
+    // touching the queue, and the connection keeps serving.
+    let e = cm.call(r#"{"v":1,"cmd":"infer","model":"nope","id":"u1","seed":1}"#);
+    assert!(!e.get("ok").unwrap().as_bool().unwrap(), "{e:?}");
+    assert_eq!(e.get("error").unwrap().str_at("code").unwrap(), "unknown_model");
+    assert_eq!(e.str_at("id").unwrap(), "u1");
+    let pong = cm.call(r#"{"v":1,"cmd":"ping"}"#);
+    assert!(pong.get("ok").unwrap().as_bool().unwrap());
+
+    // ---- (b) tight budget: sustained pressure steps only the
+    // batch-class tenant's rung down; the interactive tenant's rung and
+    // checksums hold. Bias 0 keeps every compiled config *predicting* as
+    // fitting (so both auto-picks start at their top rungs) while the
+    // test process RSS dwarfs the 2 MiB budget's watermarks.
+    let params0 = PredictorParams {
+        bias_bytes: 0,
+        ..PredictorParams::default()
+    };
+    let budget = 2 * MIB;
+    assert!(rss > budget, "test process RSS must dwarf the budget");
+    let (tight, gov2, tpicked_a, _) = start_two_model(budget, &params0, ServerConfig::default());
+    let lb = gov2.ladder("mobile").unwrap().len();
+    assert!(lb >= 2, "batch tenant needs rungs to step through");
+    let start_a = gov2.active_rung("default").unwrap();
+    let taddr = tight.local_addr;
+    std::thread::spawn(move || {
+        let _ = tight.run();
+    });
+
+    let mut c = Client::connect(taddr);
+    let mut checks_a = std::collections::HashMap::new();
+    for i in 0..(3 * lb + 6) {
+        let seed = i % 2;
+        // Interleave the tenants; every drained batch is a governor wake.
+        let ra = c.call(&format!(r#"{{"cmd":"infer","id":"a{i}","seed":{seed}}}"#));
+        assert!(ra.get("ok").unwrap().as_bool().unwrap(), "wake {i}: {ra:?}");
+        let sum = ra.get("checksum").unwrap().as_f64().unwrap();
+        if let Some(prev) = checks_a.insert(seed, sum) {
+            assert_eq!(prev, sum, "wake {i}: interactive checksum drifted");
+        }
+        let rb = c.call(&format!(
+            r#"{{"v":1,"cmd":"infer","model":"mobile","id":"b{i}","seed":{seed}}}"#
+        ));
+        assert!(rb.get("ok").unwrap().as_bool().unwrap(), "wake {i}: {rb:?}");
+    }
+    assert_eq!(
+        gov2.active_rung("mobile").unwrap(),
+        0,
+        "batch tenant must land on its floor"
+    );
+    assert_eq!(
+        gov2.active_rung("default").unwrap(),
+        start_a,
+        "interactive rung must hold under pressure"
+    );
+    assert_eq!(gov2.active_config("default").unwrap(), tpicked_a);
+
+    // Per-model metrics expose the asymmetry.
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    let snapshot = m.str_at("metrics").unwrap();
+    let downs_b: u64 = snapshot
+        .lines()
+        .find_map(|l| l.strip_prefix("governor_swaps{model=mobile,dir=down} "))
+        .unwrap_or_else(|| panic!("missing mobile swaps in {snapshot}"))
+        .trim()
+        .parse()
+        .unwrap();
+    assert_eq!(downs_b, (lb - 1) as u64, "one step per rung walked: {snapshot}");
+    assert!(
+        snapshot.contains("governor_swaps{model=default,dir=down} 0"),
+        "{snapshot}"
+    );
 }
