@@ -827,3 +827,90 @@ def route_model(served, request):
     if name in served:
         return name, None
     return None, 'unknown_model'
+
+
+# --------------------------------------------------------------------------
+# governor RSS/watermark math and the bench protection scoring (PR 8).
+
+U64_MAX = 2**64 - 1
+
+
+def parse_statm_rss(text, page_size):
+    """governor::parse_statm_rss — the resident-set field of a
+    /proc/self/statm snapshot (second whitespace-separated field, in
+    pages) scaled by the *probed* page size, never an assumed 4096 (16K
+    and 64K pages are common on arm64 edge kernels). Malformed or
+    u64-overflowing lines are None, not zero."""
+    fields = text.split()
+    if len(fields) < 2:
+        return None
+    try:
+        pages = int(fields[1])
+    except ValueError:
+        return None
+    if pages < 0 or pages > U64_MAX:
+        return None
+    rss = pages * page_size
+    if rss > U64_MAX:
+        return None  # checked_mul in the rust parser
+    return rss
+
+
+def watermark_bytes(budget, low=0.60, high=0.85, hysteresis=3):
+    """GovernorConfig::watermark_bytes — validate the fractional band
+    (finite, 0 < low < high <= 1, at least one hysteresis wake), then
+    the truncated byte thresholds; a band whose integer truncation
+    collapses to empty at a small budget raises instead of handing the
+    governor a state machine that oscillates."""
+    if not (math.isfinite(low) and math.isfinite(high)):
+        raise ValueError('governor watermarks must be finite')
+    if not 0.0 < high <= 1.0:
+        raise ValueError('governor high watermark must be in (0, 1]')
+    if low <= 0.0:
+        raise ValueError('governor low watermark must be positive')
+    if low >= high:
+        raise ValueError('governor low watermark must be below the high')
+    if hysteresis < 1:
+        raise ValueError('governor hysteresis must be at least one wake')
+    lo, hi = int(budget * low), int(budget * high)
+    if lo >= hi:
+        raise ValueError('governor watermark band truncates to empty')
+    return lo, hi
+
+
+def percentile_nearest_rank(xs, q):
+    """bench::percentile_u64/_f64 — nearest-rank on the ascending sort:
+    index round((n-1)*q), rounding half away from zero like rust."""
+    if not xs:
+        return 0.0
+    v = sorted(xs)
+    ix = int(math.floor((len(v) - 1) * q + 0.5))
+    return v[min(ix, len(v) - 1)]
+
+
+def protection_stats(windows, target_rps, base_lat_s):
+    """bench::protection_stats — isol% = min(100, window_rps/target*100)
+    for EVERY window (a stalled-out empty window scores 0, it is not
+    skipped); lat-imp% = max(0, (window_p90/base_p50 - 1)*100) only over
+    windows that saw completions. Windows are dicts with
+    count/rps/p90_s."""
+    base = max(base_lat_s, 1e-6)
+    isol, lat_imp = [], []
+    for w in windows:
+        if target_rps > 0:
+            isol.append(min(100.0, w['rps'] / target_rps * 100.0))
+        else:
+            isol.append(0.0)
+        if w['count'] > 0:
+            lat_imp.append(max(0.0, (w['p90_s'] / base - 1.0) * 100.0))
+    return isol, lat_imp
+
+
+def calibrate_stall_rate(base_lat_s, overage_ref, mult):
+    """bench::calibrate_stall_rate — emulated paging-stall seconds per
+    byte of budget overage, priced so one request over the full reference
+    overage stalls `mult` baseline latencies; no overage (or a negative
+    mult) means no stall."""
+    if overage_ref == 0:
+        return 0.0
+    return max(mult, 0.0) * base_lat_s / overage_ref

@@ -416,3 +416,78 @@ def test_arbiter_victim_and_routing_mirror_the_coordinator():
     assert port.route_model(served, {'cmd': 'infer'}) == ('default', None)
     assert port.route_model(served, {'v': 1, 'model': 'mobile'}) == ('mobile', None)
     assert port.route_model(served, {'v': 1, 'model': 'nope'}) == (None, 'unknown_model')
+
+
+def test_statm_rss_scales_by_the_probed_page_size():
+    # Pinned cross-language numbers (rust governor.rs test
+    # `statm_parsing_scales_by_the_page_size`): the same statm line is
+    # 4x/16x more resident bytes on 16K/64K-page kernels, and the parser
+    # must scale by the page size it is handed — the old hardcoded 4096
+    # read RSS 4-16x low and the governor never saw pressure.
+    line = '5000 2048 300 20 0 1000 0\n'
+    assert port.parse_statm_rss(line, 4096) == 2048 * 4096
+    assert port.parse_statm_rss(line, 16384) == 2048 * 16384
+    assert port.parse_statm_rss(line, 65536) == 2048 * 65536
+    # Malformed lines are None, not zero; overflow never wraps.
+    assert port.parse_statm_rss('', 4096) is None
+    assert port.parse_statm_rss('5000', 4096) is None
+    assert port.parse_statm_rss('5000 x', 4096) is None
+    assert port.parse_statm_rss('1 18446744073709551615', 4096) is None
+
+
+def test_watermark_band_validation_mirrors_the_governor():
+    import pytest
+
+    # The default 0.60/0.85 band at budget 100 is the (60, 85) the state
+    # machine compares RSS against.
+    assert port.watermark_bytes(100) == (60, 85)
+    # At a 2-byte budget the same band truncates to low == high == 1:
+    # every reading would be either pressure or headroom, so construction
+    # rejects it (rust `watermark_bands_that_truncate_to_empty_are_rejected`).
+    with pytest.raises(ValueError, match='truncates to empty'):
+        port.watermark_bytes(2)
+    # Degenerate fractional bands are rejected before any budget math
+    # (rust `degenerate_watermarks_are_rejected_at_construction`).
+    with pytest.raises(ValueError):
+        port.watermark_bytes(1000, low=0.9, high=0.85)
+    with pytest.raises(ValueError):
+        port.watermark_bytes(1000, high=1.5)
+    with pytest.raises(ValueError):
+        port.watermark_bytes(1000, low=0.0)
+    with pytest.raises(ValueError):
+        port.watermark_bytes(1000, low=float('nan'))
+    with pytest.raises(ValueError):
+        port.watermark_bytes(1000, hysteresis=0)
+
+
+def test_bench_protection_scoring_mirrors_the_rust_bench():
+    # Pinned numbers from rust bench tests
+    # `protection_stats_score_empty_windows_as_zero_isolation` and
+    # `stall_rate_calibration_prices_full_overage_at_mult_baselines`.
+    ws = [
+        {'count': 10, 'rps': 10.0, 'p90_s': 0.100},  # full target, baseline
+        {'count': 0, 'rps': 0.0, 'p90_s': 0.0},      # stalled-out window
+        {'count': 5, 'rps': 5.0, 'p90_s': 0.300},    # half rps, 3x latency
+    ]
+    isol, lat_imp = port.protection_stats(ws, 10.0, 0.100)
+    assert isol == [100.0, 0.0, 50.0]
+    # The empty window contributes no latency sample.
+    assert len(lat_imp) == 2
+    assert abs(lat_imp[0] - 0.0) < 1e-9 and abs(lat_imp[1] - 200.0) < 1e-9
+    # isol is capped at 100 even when a window beats the target.
+    isol, _ = port.protection_stats(
+        [{'count': 20, 'rps': 20.0, 'p90_s': 0.050}], 10.0, 0.100)
+    assert isol == [100.0]
+    # Stall calibration: one request over the full 16 MiB reference
+    # overage stalls 3 x 40 ms; no overage or negative mult means none.
+    rate = port.calibrate_stall_rate(0.040, 16 * MIB, 3.0)
+    assert abs(rate * 16 * MIB - 0.12) < 1e-9
+    assert port.calibrate_stall_rate(0.040, 0, 3.0) == 0.0
+    assert port.calibrate_stall_rate(0.040, 1024, -1.0) == 0.0
+    # Nearest-rank percentiles on the ascending sort (half away from 0).
+    xs = list(range(1, 101))
+    assert port.percentile_nearest_rank(xs, 0.5) == 51  # round(49.5) -> index 50
+    assert port.percentile_nearest_rank(xs, 0.9) == 90
+    assert port.percentile_nearest_rank(xs, 0.99) == 99
+    assert port.percentile_nearest_rank([], 0.5) == 0.0
+    assert port.percentile_nearest_rank([30, 10, 20], 0.5) == 20

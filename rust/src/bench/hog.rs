@@ -1,0 +1,112 @@
+//! The co-located **anonymous-memory hog**: the adversary of the
+//! protection scenarios.
+//!
+//! A background thread ramps up to a target number of bytes of touched
+//! anonymous memory (every page written, so the allocation is resident,
+//! not just reserved address space — page granularity comes from the
+//! probed [`crate::coordinator::page_size_bytes`], the same probe the
+//! governor's statm fallback uses), holds it until stopped, then frees
+//! everything. The currently-held total is published through a shared
+//! `AtomicU64`, which is what the scenarios' *accounted footprint* signal
+//! reads — the hog itself is real memory; the signal derived from it is
+//! deterministic.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Allocation step size: 1 MiB chunks keep the ramp smooth without
+/// thousands of tiny vectors.
+const CHUNK: usize = 1 << 20;
+
+/// Handle to the running hog thread; dropping it stops the thread and
+/// frees the held memory.
+pub struct MemoryHog {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MemoryHog {
+    /// Spawn the allocator thread: ramp to `target_bytes` of touched
+    /// memory over roughly `ramp`, publishing the held total into
+    /// `published` after every chunk (and a final `0` once freed).
+    pub fn start(target_bytes: u64, ramp: Duration, published: Arc<AtomicU64>) -> MemoryHog {
+        let stop = Arc::new(AtomicBool::new(false));
+        let t_stop = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("mafat-mem-hog".into())
+            .spawn(move || {
+                let page = crate::coordinator::page_size_bytes() as usize;
+                let target = target_bytes as usize;
+                let steps = target.div_ceil(CHUNK).max(1);
+                let step_every = ramp / steps as u32;
+                let mut held: Vec<Vec<u8>> = Vec::with_capacity(steps);
+                let mut total = 0usize;
+                while total < target && !t_stop.load(Ordering::Relaxed) {
+                    let n = CHUNK.min(target - total);
+                    let mut chunk = vec![0u8; n];
+                    let mut i = 0;
+                    while i < n {
+                        chunk[i] = 1; // fault the page in
+                        i += page.max(1);
+                    }
+                    total += n;
+                    held.push(chunk);
+                    published.store(total as u64, Ordering::Relaxed);
+                    if !step_every.is_zero() {
+                        std::thread::sleep(step_every);
+                    }
+                }
+                while !t_stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                drop(held);
+                published.store(0, Ordering::Relaxed);
+            })
+            .expect("spawn mem-hog thread");
+        MemoryHog {
+            stop,
+            thread: Some(thread),
+        }
+    }
+
+    /// Stop the thread and free its memory (blocking until freed).
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MemoryHog {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hog_ramps_publishes_and_frees() {
+        let cell = Arc::new(AtomicU64::new(0));
+        let target = 2 * CHUNK as u64;
+        let hog = MemoryHog::start(target, Duration::ZERO, cell.clone());
+        // The zero-ramp hog reaches its target quickly; poll briefly.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while cell.load(Ordering::Relaxed) < target {
+            assert!(std::time::Instant::now() < deadline, "hog never reached target");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(cell.load(Ordering::Relaxed), target);
+        hog.stop();
+        assert_eq!(cell.load(Ordering::Relaxed), 0, "stop must free and zero");
+    }
+}

@@ -1,0 +1,240 @@
+//! Closed-loop load generation with latency-targeted convergence.
+//!
+//! A pool of client threads issues `infer` requests over the real TCP
+//! protocol, each waiting for its response before sending the next
+//! (closed loop, rd-hashd style: offered load is a *concurrency*, and
+//! throughput is whatever the server sustains at it). The controller
+//! modulates how many of the pool's clients are active — doubling while
+//! the p90 round-trip stays under the latency target — to converge on
+//! the server's sustainable RPS at that target. Completions are recorded
+//! both into a [`WindowedSamples`] series (the per-window RPS/latency the
+//! protection scenarios score) and into a drainable epoch buffer (what
+//! the controller reads between adjustments).
+
+use crate::metrics::WindowedSamples;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Handle to a running client pool.
+pub struct LoadGen {
+    active: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+    samples: Arc<WindowedSamples>,
+    recent: Arc<Mutex<Vec<u64>>>,
+    errors: Arc<AtomicU64>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl LoadGen {
+    /// Spawn `max_clients` client threads against `addr`; all start
+    /// parked (`set_active(0)`). `window` is the bucket width of the
+    /// recorded completion series.
+    pub fn start(addr: SocketAddr, max_clients: usize, window: Duration) -> LoadGen {
+        let active = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let samples = Arc::new(WindowedSamples::new(window));
+        let recent = Arc::new(Mutex::new(Vec::new()));
+        let errors = Arc::new(AtomicU64::new(0));
+        let threads = (0..max_clients.max(1))
+            .map(|ci| {
+                let active = active.clone();
+                let stop = stop.clone();
+                let samples = samples.clone();
+                let recent = recent.clone();
+                let errors = errors.clone();
+                std::thread::Builder::new()
+                    .name(format!("mafat-bench-client-{ci}"))
+                    .spawn(move || client_loop(ci, addr, active, stop, samples, recent, errors))
+                    .expect("spawn bench client")
+            })
+            .collect();
+        LoadGen {
+            active,
+            stop,
+            samples,
+            recent,
+            errors,
+            threads,
+        }
+    }
+
+    /// Set how many clients of the pool offer load.
+    pub fn set_active(&self, n: usize) {
+        self.active.store(n, Ordering::Relaxed);
+    }
+
+    /// The full windowed completion series.
+    pub fn samples(&self) -> &WindowedSamples {
+        &self.samples
+    }
+
+    /// Take (and clear) the latencies completed since the last drain, in
+    /// microseconds — the controller's per-epoch view.
+    pub fn drain_recent(&self) -> Vec<u64> {
+        std::mem::take(&mut *self.recent.lock().unwrap())
+    }
+
+    /// Protocol-level failures observed by the clients (error responses,
+    /// broken connections).
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Park every client and join the pool.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One closed-loop client: connect lazily, send `infer`, wait for the
+/// response, record the round trip; reconnect (with a short backoff) on
+/// any I/O error. Parked whenever its index is at or beyond the active
+/// count.
+fn client_loop(
+    ci: usize,
+    addr: SocketAddr,
+    active: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+    samples: Arc<WindowedSamples>,
+    recent: Arc<Mutex<Vec<u64>>>,
+    errors: Arc<AtomicU64>,
+) {
+    let request = format!("{{\"cmd\":\"infer\",\"id\":\"c{ci}\",\"seed\":{ci}}}\n");
+    let mut conn: Option<(BufReader<TcpStream>, TcpStream)> = None;
+    while !stop.load(Ordering::Relaxed) {
+        if ci >= active.load(Ordering::Relaxed) {
+            conn = None; // parked clients drop their connection
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        if conn.is_none() {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    // Generous timeouts: an emulated paging stall must
+                    // read as latency, not as a broken connection.
+                    let _ = s.set_read_timeout(Some(Duration::from_secs(30)));
+                    let _ = s.set_write_timeout(Some(Duration::from_secs(30)));
+                    match s.try_clone() {
+                        Ok(r) => conn = Some((BufReader::new(r), s)),
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_millis(20));
+                            continue;
+                        }
+                    }
+                }
+                Err(_) => {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(Duration::from_millis(20));
+                    continue;
+                }
+            }
+        }
+        let (reader, writer) = conn.as_mut().expect("connected above");
+        let t0 = Instant::now();
+        let mut line = String::new();
+        let ok = writer.write_all(request.as_bytes()).is_ok()
+            && reader.read_line(&mut line).is_ok_and(|n| n > 0);
+        if !ok {
+            errors.fetch_add(1, Ordering::Relaxed);
+            conn = None;
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        }
+        if line.contains("\"ok\":true") {
+            let rtt = t0.elapsed();
+            samples.record(rtt);
+            recent.lock().unwrap().push(rtt.as_micros() as u64);
+        } else {
+            errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// What the convergence controller settled on.
+#[derive(Debug, Clone)]
+pub struct ConvergeOutcome {
+    /// Concurrency the load holds for the rest of the scenario.
+    pub concurrency: usize,
+    /// Sustained completions/s at that concurrency — the denominator of
+    /// every isol% window.
+    pub target_rps: f64,
+    /// Baseline (pre-hog) p50 round trip — the denominator of every
+    /// lat-imp% window.
+    pub base_lat: Duration,
+}
+
+/// Converge offered concurrency on `target_lat`: starting from one
+/// client, measure one `epoch` per setting and double the active count
+/// while the epoch's p90 round trip stays at or under the target (and the
+/// pool has clients left and the deadline is ahead). Returns the
+/// best-throughput setting whose p90 met the target — or the last
+/// measured one when none did (an overloaded floor is still a baseline).
+pub fn converge(
+    lg: &LoadGen,
+    target_lat: Duration,
+    epoch: Duration,
+    max_clients: usize,
+    deadline: Instant,
+) -> ConvergeOutcome {
+    let mut c = 1usize.min(max_clients.max(1));
+    lg.set_active(c);
+    // Warm-up epoch: connection setup and first-touch costs stay out of
+    // the measured baselines.
+    std::thread::sleep(epoch);
+    lg.drain_recent();
+    let mut best: Option<ConvergeOutcome> = None;
+    let mut last = ConvergeOutcome {
+        concurrency: c,
+        target_rps: 0.0,
+        base_lat: Duration::from_millis(1),
+    };
+    loop {
+        std::thread::sleep(epoch);
+        let lats = lg.drain_recent();
+        if lats.is_empty() {
+            if Instant::now() >= deadline {
+                break;
+            }
+            continue;
+        }
+        let rps = lats.len() as f64 / epoch.as_secs_f64();
+        let p50 = Duration::from_micros(super::percentile_u64(&lats, 0.5).max(1));
+        let p90 = Duration::from_micros(super::percentile_u64(&lats, 0.9));
+        eprintln!(
+            "bench: converge c={c} rps={rps:.1} p50={:.1}ms p90={:.1}ms",
+            p50.as_secs_f64() * 1e3,
+            p90.as_secs_f64() * 1e3
+        );
+        last = ConvergeOutcome {
+            concurrency: c,
+            target_rps: rps,
+            base_lat: p50,
+        };
+        let met = p90 <= target_lat;
+        let improves = match &best {
+            None => true,
+            Some(b) => rps > b.target_rps,
+        };
+        if met && improves {
+            best = Some(last.clone());
+        }
+        if met && c < max_clients && Instant::now() < deadline {
+            c = (c * 2).min(max_clients);
+            lg.set_active(c);
+        } else {
+            break;
+        }
+    }
+    let out = best.unwrap_or(last);
+    // Hold the converged concurrency for the measurement phase.
+    lg.set_active(out.concurrency);
+    out
+}

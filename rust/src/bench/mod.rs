@@ -1,0 +1,783 @@
+//! `mafat bench`: adversarial memory-protection benchmarking of the
+//! serving stack (resctl-bench style).
+//!
+//! The suite answers one question the unit tests cannot: **does the
+//! governor actually protect throughput and latency when a co-located
+//! workload eats the memory the budget assumed?** Each scenario runs the
+//! real server (real TCP protocol, real engines, real governor) under a
+//! closed-loop load generator ([`loadgen`]), converges offered concurrency
+//! on a latency target, then springs a co-located anonymous-memory
+//! allocator ([`hog::MemoryHog`]) on it and scores every measurement
+//! window:
+//!
+//! * **isol%** — `min(100, window_rps / target_rps * 100)`: how much of
+//!   the converged throughput survived the hog. Windows with zero
+//!   completions count as 0 (a stall that kills throughput must not
+//!   vanish from the distribution).
+//! * **lat-imp%** — `max(0, window_p90 / base_p50 - 1) * 100`: latency
+//!   impact over the converged baseline (empty windows are skipped — no
+//!   completions, no latency to score).
+//!
+//! # Determinism: the accounted footprint and the emulated stall
+//!
+//! Naively "just allocate and watch" does not benchmark on CI runners
+//! with tens of GB of RAM: the hog never creates real pressure, and when
+//! it does (tiny cgroups) the kernel's reaction is host-specific noise.
+//! Instead the scenarios drive the server through its [`ServeHooks`]
+//! seams with a deterministic signal derived from real quantities:
+//!
+//! * the **accounted footprint** `hog_bytes + predicted(active rung)` is
+//!   injected as the governor's RSS sample (`--real-rss` opts back into
+//!   procfs), so stepping down genuinely shrinks the signal by the
+//!   rung-to-rung predicted delta; and
+//! * every drained batch pays an **emulated paging stall**
+//!   `rate x overage x batch_len` (overage = footprint above budget),
+//!   applied identically to the governed and the ungoverned leg. The
+//!   `rate` is calibrated once, from the *ungoverned* control leg:
+//!   `rate = stall_mult x base_lat / overage_ref`, i.e. "when the whole
+//!   hog overage is resident over budget, one request slows by
+//!   `stall_mult` baselines". The governed leg reuses the same rate, so
+//!   the only difference between the legs is what the governor does.
+//!
+//! The ungoverned control runs first (clean calibration), the governed
+//! leg second; `protection_ratio = governed isol_p50 / ungoverned
+//! isol_p50` is the headline number CI gates (`ci/bench_diff.py`, `min`
+//! direction).
+
+pub mod hog;
+pub mod loadgen;
+
+use crate::coordinator::{
+    auto_config_from_manifest, ladder_from_manifest, MemoryGovernor, ModelSpec, QosClass,
+    ServeHooks, Server, ServerConfig, TenantSpec,
+};
+use crate::engine::{Engine, EngineShared};
+use crate::jsonlite::Json;
+use crate::metrics::WindowStats;
+use crate::network::MIB;
+use crate::predictor::PredictorParams;
+use crate::search::ConfigLadder;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A worst-case bound on one batch's emulated stall, so a grossly
+/// overcommitted configuration degrades instead of wedging the worker.
+const MAX_STALL: Duration = Duration::from_secs(2);
+
+/// Scenario knobs (CLI flags; see `cmd_bench`).
+#[derive(Clone)]
+pub struct BenchOpts {
+    /// Bundle directory served as model `default`.
+    pub bundle: String,
+    /// The governor's memory budget, bytes.
+    pub budget_bytes: u64,
+    /// The hog's target footprint, bytes.
+    pub hog_bytes: u64,
+    /// Convergence latency target (per-epoch p90 must stay under it).
+    pub target_lat: Duration,
+    /// Wall-clock cap on the convergence phase, per leg.
+    pub converge: Duration,
+    /// Length of the hog-armed measurement phase, per leg.
+    pub measure: Duration,
+    /// Measurement window width (isol%/lat-imp% are per-window).
+    pub window: Duration,
+    /// Client pool size — the convergence ceiling on concurrency.
+    pub max_clients: usize,
+    /// Stall calibration: full-overage residency slows one request by
+    /// this many baselines.
+    pub stall_mult: f64,
+    /// Sample real procfs RSS instead of the accounted footprint.
+    pub real_rss: bool,
+    /// Predictor parameters (bench defaults `--bias-mb 0`: the reference
+    /// bundle's whole ladder should sit near a tens-of-MB budget).
+    pub params: PredictorParams,
+    /// `mem-hog-tune`: a rung is "protected" when its isol_p50 is at
+    /// least this.
+    pub protect_floor_isol: f64,
+    /// Where the machine-readable report goes.
+    pub out: String,
+    /// Fail (non-zero exit) unless the governed leg beats the ungoverned
+    /// control on isol_p50.
+    pub check: bool,
+}
+
+/// p50/p90/p99 of one per-window metric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pcts {
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Pcts {
+    pub fn of(xs: &[f64]) -> Pcts {
+        Pcts {
+            p50: percentile_f64(xs, 0.5),
+            p90: percentile_f64(xs, 0.9),
+            p99: percentile_f64(xs, 0.99),
+        }
+    }
+}
+
+/// One scenario leg's scored outcome.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    /// Row id in the report (e.g. `mem-hog:governed`).
+    pub scenario: String,
+    /// Converged throughput — every isol% window's denominator.
+    pub target_rps: f64,
+    /// Mean throughput across the hog-armed measurement windows.
+    pub achieved_rps: f64,
+    /// Converged concurrency held through the measurement.
+    pub concurrency: usize,
+    /// Converged p50 round trip — every lat-imp% window's denominator.
+    pub base_lat_ms: f64,
+    pub isol_pct: Pcts,
+    pub lat_imp_pct: Pcts,
+    /// Governor ladder steps (down + up) during the whole leg.
+    pub governor_swaps: u64,
+    /// The configuration the leg ended on (for a governed leg, where the
+    /// ladder walk settled).
+    pub floor_config: String,
+    /// Protocol-level client errors over the whole leg.
+    pub errors: u64,
+}
+
+// ------------------------------------------------------------ pure helpers
+
+/// Nearest-rank percentile (`round((n-1) q)` on the ascending sort);
+/// 0 for an empty slice.
+pub fn percentile_u64(xs: &[u64], q: f64) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    let ix = ((v.len() - 1) as f64 * q).round() as usize;
+    v[ix.min(v.len() - 1)]
+}
+
+/// [`percentile_u64`] over f64 samples (NaNs sort last and are never
+/// picked below q=1).
+pub fn percentile_f64(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Less));
+    let ix = ((v.len() - 1) as f64 * q).round() as usize;
+    v[ix.min(v.len() - 1)]
+}
+
+/// Score measurement windows against the converged baseline: per-window
+/// isol% (empty windows = 0) and lat-imp% (empty windows skipped).
+/// Mirrored by the numpy port (`protection_stats`).
+pub fn protection_stats(
+    windows: &[WindowStats],
+    target_rps: f64,
+    base_lat: Duration,
+) -> (Vec<f64>, Vec<f64>) {
+    let base = base_lat.as_secs_f64().max(1e-6);
+    let mut isol = Vec::with_capacity(windows.len());
+    let mut lat_imp = Vec::new();
+    for w in windows {
+        if target_rps > 0.0 {
+            isol.push((w.rps / target_rps * 100.0).min(100.0));
+        } else {
+            isol.push(0.0);
+        }
+        if w.count > 0 {
+            let imp = (w.lat_p90.as_secs_f64() / base - 1.0) * 100.0;
+            lat_imp.push(imp.max(0.0));
+        }
+    }
+    (isol, lat_imp)
+}
+
+/// The stall emulation's calibrated rate, seconds per overage byte (per
+/// batched request): full reference overage costs `mult` baselines.
+/// Mirrored by the numpy port (`calibrate_stall_rate`).
+pub fn calibrate_stall_rate(base_lat: Duration, overage_ref: u64, mult: f64) -> f64 {
+    if overage_ref == 0 {
+        return 0.0;
+    }
+    mult.max(0.0) * base_lat.as_secs_f64() / overage_ref as f64
+}
+
+/// `mem-hog-tune`'s search: the largest index in `0..n` whose predicate
+/// holds, assuming protection is monotone (bigger footprint = worse).
+/// `None` when even index 0 is unprotected. The classic last-true binary
+/// search probes O(log n) candidates — each probe is a full serve leg.
+pub fn tune_search(n: usize, mut protected: impl FnMut(usize) -> bool) -> Option<usize> {
+    if n == 0 || !protected(0) {
+        return None;
+    }
+    let (mut lo, mut hi) = (0usize, n - 1);
+    while lo < hi {
+        let mid = (lo + hi).div_ceil(2);
+        if protected(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    Some(lo)
+}
+
+// --------------------------------------------------------- leg orchestration
+
+/// How one serve leg is governed.
+enum LegGovernor {
+    /// Full ladder from `start`: the protected system under test.
+    Governed { ladder: ConfigLadder, start: usize },
+    /// No governor at all: the control.
+    Ungoverned,
+    /// Single-rung ladder (drain governed, config pinned): one
+    /// `mem-hog-tune` candidate.
+    Pinned { rung: crate::search::LadderRung },
+}
+
+/// Everything a leg needs beyond the shared options.
+struct LegSpec {
+    label: String,
+    governor: LegGovernor,
+    /// Served configuration at startup.
+    initial: crate::plan::MultiConfig,
+    /// Predicted bytes backing the accounted footprint when no governor
+    /// tracks an active rung.
+    predicted_fixed: u64,
+    /// Shared stall rate, f64 bits. The calibrating leg writes it after
+    /// convergence; later legs read whatever is stored.
+    rate_bits: Arc<AtomicU64>,
+    /// Compute and store the stall rate from this leg's converged
+    /// baseline (the ungoverned control; a tune candidate calibrates
+    /// against itself).
+    calibrate: bool,
+}
+
+/// Run one full scenario leg: start the hooked server, converge load,
+/// (maybe) calibrate the stall rate, arm the hog, score the measurement
+/// windows, tear everything down.
+fn run_leg(shared: &Arc<EngineShared>, opts: &BenchOpts, spec: LegSpec) -> Result<ScenarioResult> {
+    let hog_cell = Arc::new(AtomicU64::new(0));
+    let governor = match &spec.governor {
+        LegGovernor::Governed { ladder, start } => Some(Arc::new(MemoryGovernor::new(
+            vec![TenantSpec {
+                name: "default".into(),
+                ladder: ladder.clone(),
+                start_rung: *start,
+                qos: QosClass::Interactive,
+            }],
+            opts.budget_bytes,
+            ServerConfig::default().max_batch,
+            ServerConfig::default().workers,
+            Default::default(),
+        )?)),
+        LegGovernor::Pinned { rung } => Some(Arc::new(MemoryGovernor::new(
+            vec![TenantSpec {
+                name: "default".into(),
+                ladder: ConfigLadder::new(vec![rung.clone()]),
+                start_rung: 0,
+                qos: QosClass::Interactive,
+            }],
+            opts.budget_bytes,
+            ServerConfig::default().max_batch,
+            ServerConfig::default().workers,
+            Default::default(),
+        )?)),
+        LegGovernor::Ungoverned => None,
+    };
+    // The accounted footprint: hog bytes + the active rung's prediction
+    // (the governed signal shrinks when the ladder steps down; the
+    // ungoverned one cannot).
+    let footprint: Arc<dyn Fn() -> u64 + Send + Sync> = {
+        let hog_cell = hog_cell.clone();
+        let governor = governor.clone();
+        let ladder = match &spec.governor {
+            LegGovernor::Governed { ladder, .. } => Some(ladder.clone()),
+            LegGovernor::Pinned { rung } => Some(ConfigLadder::new(vec![rung.clone()])),
+            LegGovernor::Ungoverned => None,
+        };
+        let fixed = spec.predicted_fixed;
+        Arc::new(move || {
+            let predicted = match (&governor, &ladder) {
+                (Some(g), Some(l)) => {
+                    let ix = g.active_rung("default").unwrap_or(0).min(l.len() - 1);
+                    l.rungs()[ix].predicted_bytes
+                }
+                _ => fixed,
+            };
+            hog_cell.load(Ordering::Relaxed).saturating_add(predicted)
+        })
+    };
+    let hooks = ServeHooks {
+        rss_sampler: if opts.real_rss {
+            None
+        } else {
+            let footprint = footprint.clone();
+            Some(Arc::new(move || Some(footprint())))
+        },
+        after_batch: {
+            let footprint = footprint.clone();
+            let rate_bits = spec.rate_bits.clone();
+            let budget = opts.budget_bytes;
+            Some(Arc::new(move |_model: &str, batch_len: usize| {
+                let rate = f64::from_bits(rate_bits.load(Ordering::Relaxed));
+                let overage = footprint().saturating_sub(budget);
+                let stall = rate * overage as f64 * batch_len as f64;
+                if stall > 1e-6 {
+                    std::thread::sleep(Duration::from_secs_f64(stall).min(MAX_STALL));
+                }
+            }))
+        },
+    };
+    let factory_shared = shared.clone();
+    let factory_config = spec.initial.clone();
+    let server = Arc::new(Server::start_multi_hooked(
+        vec![ModelSpec {
+            name: "default".into(),
+            qos: QosClass::Interactive,
+            factory: Box::new(move || {
+                Engine::with_shared(factory_shared.clone(), factory_config.clone())
+            }),
+        }],
+        "127.0.0.1:0",
+        ServerConfig::default(),
+        governor.clone(),
+        hooks,
+    )?);
+    let addr = server.local_addr;
+    let accept = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.run();
+        })
+    };
+
+    let lg = loadgen::LoadGen::start(addr, opts.max_clients, opts.window);
+    eprintln!("bench: [{}] converging on {addr} ...", spec.label);
+    let outcome = loadgen::converge(
+        &lg,
+        opts.target_lat,
+        Duration::from_secs(1),
+        opts.max_clients,
+        Instant::now() + opts.converge,
+    );
+    if spec.calibrate {
+        let overage_ref =
+            hog_and_base_overage(opts.hog_bytes, spec.predicted_fixed, opts.budget_bytes);
+        let rate = calibrate_stall_rate(outcome.base_lat, overage_ref, opts.stall_mult);
+        spec.rate_bits.store(rate.to_bits(), Ordering::Relaxed);
+        eprintln!(
+            "bench: [{}] calibrated stall rate {rate:.3e} s/byte (overage ref {:.1} MB, base \
+             {:.1} ms)",
+            spec.label,
+            overage_ref as f64 / MIB as f64,
+            outcome.base_lat.as_secs_f64() * 1e3
+        );
+    }
+    eprintln!(
+        "bench: [{}] converged: c={} target {:.1} rps, base p50 {:.1} ms — arming the hog \
+         ({:.0} MiB)",
+        spec.label,
+        outcome.concurrency,
+        outcome.target_rps,
+        outcome.base_lat.as_secs_f64() * 1e3,
+        opts.hog_bytes as f64 / MIB as f64
+    );
+
+    // Measurement starts at the first full window after the hog arms.
+    let width = opts.window.as_nanos().max(1);
+    let m0 = (lg.samples().elapsed().as_nanos() / width) as usize + 1;
+    let hog = hog::MemoryHog::start(opts.hog_bytes, Duration::from_secs(1), hog_cell.clone());
+    std::thread::sleep(opts.measure);
+    // ... and ends at the last window that completed before the hog stops
+    // (the currently-filling one is partial and stays out).
+    let m1 = ((lg.samples().elapsed().as_nanos() / width) as usize).saturating_sub(1);
+    hog.stop();
+
+    let governor_swaps = wire_governor_swaps(addr).unwrap_or(0);
+    let floor_config = match &governor {
+        Some(g) => g
+            .active_config("default")
+            .map(|c| c.to_string())
+            .unwrap_or_else(|| spec.initial.to_string()),
+        None => spec.initial.to_string(),
+    };
+    let errors = lg.errors();
+    let windows = lg.samples().windows();
+    lg.stop();
+    server.stop();
+    let _ = TcpStream::connect(addr); // unblock the accept loop
+    let _ = accept.join();
+
+    // Slice the measured range, padding windows past the last completion
+    // with empties — a stall that silences the tail must score as 0.
+    let empty = |ix| WindowStats {
+        index: ix,
+        count: 0,
+        rps: 0.0,
+        lat_p50: Duration::ZERO,
+        lat_p90: Duration::ZERO,
+        lat_p99: Duration::ZERO,
+    };
+    let measured: Vec<WindowStats> = (m0..=m1.max(m0))
+        .map(|ix| windows.get(ix).cloned().unwrap_or_else(|| empty(ix)))
+        .collect();
+    let (isol, lat_imp) = protection_stats(&measured, outcome.target_rps, outcome.base_lat);
+    let total: usize = measured.iter().map(|w| w.count).sum();
+    let span = measured.len() as f64 * opts.window.as_secs_f64();
+    let result = ScenarioResult {
+        scenario: spec.label,
+        target_rps: outcome.target_rps,
+        achieved_rps: if span > 0.0 { total as f64 / span } else { 0.0 },
+        concurrency: outcome.concurrency,
+        base_lat_ms: outcome.base_lat.as_secs_f64() * 1e3,
+        isol_pct: Pcts::of(&isol),
+        lat_imp_pct: Pcts::of(&lat_imp),
+        governor_swaps,
+        floor_config,
+        errors,
+    };
+    eprintln!(
+        "bench: [{}] measured {} windows: isol p50 {:.1}% (p90 {:.1}, p99 {:.1}), lat-imp p50 \
+         {:.1}% | {:.1}/{:.1} rps | {} swaps | settled on {}",
+        result.scenario,
+        measured.len(),
+        result.isol_pct.p50,
+        result.isol_pct.p90,
+        result.isol_pct.p99,
+        result.lat_imp_pct.p50,
+        result.achieved_rps,
+        result.target_rps,
+        result.governor_swaps,
+        result.floor_config
+    );
+    Ok(result)
+}
+
+/// The calibration reference overage: the whole hog resident on top of
+/// the starting prediction, over budget.
+fn hog_and_base_overage(hog_bytes: u64, predicted_start: u64, budget: u64) -> u64 {
+    hog_bytes.saturating_add(predicted_start).saturating_sub(budget)
+}
+
+/// Total governor ladder steps, read over the wire (`metrics` command) —
+/// the bench is a client like any other; server internals stay private.
+fn wire_governor_swaps(addr: std::net::SocketAddr) -> Result<u64> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"{\"cmd\":\"metrics\"}\n")?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let doc = Json::parse(&line)?;
+    let snapshot = doc.get("metrics")?.as_str()?.to_string();
+    let mut swaps = 0u64;
+    for l in snapshot.lines() {
+        for prefix in ["governor_swaps{dir=down} ", "governor_swaps{dir=up} "] {
+            if let Some(n) = l.strip_prefix(prefix) {
+                swaps += n.trim().parse::<u64>().unwrap_or(0);
+            }
+        }
+    }
+    Ok(swaps)
+}
+
+// ---------------------------------------------------------------- scenarios
+
+/// Resolve the served bundle the way `mafat serve` does: auto-pick the
+/// compiled config for the budget, build the manifest ladder, start at
+/// the picked rung (or the budget's rung when the least-stall pick is
+/// dominated off the ladder).
+fn resolve_bundle(
+    opts: &BenchOpts,
+) -> Result<(Arc<EngineShared>, ConfigLadder, usize, crate::plan::MultiConfig)> {
+    let shared = EngineShared::load(&opts.bundle)
+        .with_context(|| format!("loading bundle from {}", opts.bundle))?;
+    let mnet = shared.manifest_network();
+    let (picked, predicted) = auto_config_from_manifest(mnet, opts.budget_bytes, &opts.params)?;
+    eprintln!(
+        "bench: auto-selected {picked} for a {:.1} MB budget (predicted {:.1} MB)",
+        opts.budget_bytes as f64 / MIB as f64,
+        predicted as f64 / MIB as f64
+    );
+    let ladder = ladder_from_manifest(mnet, &opts.params)?;
+    let (start, initial) = match ladder.position_of(&picked) {
+        Some(ix) => (ix, picked),
+        None => {
+            let ix = ladder.rung_for_limit(opts.budget_bytes).unwrap_or(0);
+            (ix, ladder.rungs()[ix].config.clone())
+        }
+    };
+    Ok((shared, ladder, start, initial))
+}
+
+/// The `mem-hog` scenario: ungoverned control first (calibrates the
+/// stall rate), governed leg second, report + optional protection check.
+pub fn run_mem_hog(opts: &BenchOpts) -> Result<()> {
+    let (shared, ladder, start, initial) = resolve_bundle(opts)?;
+    let predicted_start = ladder.rungs()[start].predicted_bytes;
+    let rate_bits = Arc::new(AtomicU64::new(0.0f64.to_bits()));
+    let ungoverned = run_leg(
+        &shared,
+        opts,
+        LegSpec {
+            label: "mem-hog:ungoverned".into(),
+            governor: LegGovernor::Ungoverned,
+            initial: initial.clone(),
+            predicted_fixed: predicted_start,
+            rate_bits: rate_bits.clone(),
+            calibrate: true,
+        },
+    )?;
+    let governed = run_leg(
+        &shared,
+        opts,
+        LegSpec {
+            label: "mem-hog:governed".into(),
+            governor: LegGovernor::Governed {
+                ladder: ladder.clone(),
+                start,
+            },
+            initial,
+            predicted_fixed: predicted_start,
+            rate_bits,
+            calibrate: false,
+        },
+    )?;
+    // Guard a collapsed control: a ratio against ~0 is meaningless noise,
+    // so it saturates.
+    let protection_ratio = if ungoverned.isol_pct.p50 > 0.01 {
+        (governed.isol_pct.p50 / ungoverned.isol_pct.p50).min(99.0)
+    } else {
+        99.0
+    };
+    let rows = vec![
+        scenario_row(&governed, Some(protection_ratio)),
+        scenario_row(&ungoverned, None),
+    ];
+    write_report(opts, rows)?;
+    println!(
+        "mem-hog: governed isol p50 {:.1}% vs ungoverned {:.1}% — protection ratio {:.2} \
+         ({} governor swaps, floor {})",
+        governed.isol_pct.p50,
+        ungoverned.isol_pct.p50,
+        protection_ratio,
+        governed.governor_swaps,
+        governed.floor_config
+    );
+    if opts.check && governed.isol_pct.p50 <= ungoverned.isol_pct.p50 {
+        anyhow::bail!(
+            "protection check failed: governed isol p50 {:.1}% does not beat ungoverned {:.1}%",
+            governed.isol_pct.p50,
+            ungoverned.isol_pct.p50
+        );
+    }
+    Ok(())
+}
+
+/// The `mem-hog-tune` scenario: binary-search the ladder for the largest
+/// (most capable) rung that stays protected under the hog when pinned —
+/// the safe ceiling an operator could `serve --config` on this budget.
+pub fn run_mem_hog_tune(opts: &BenchOpts) -> Result<()> {
+    let (shared, ladder, _, _) = resolve_bundle(opts)?;
+    let mut probed: std::collections::BTreeMap<usize, ScenarioResult> = Default::default();
+    let floor_ix = {
+        let shared = &shared;
+        let probe = |ix: usize| {
+            let rung = ladder.rungs()[ix].clone();
+            eprintln!(
+                "bench: tune probing rung {ix} ({}, predicted {:.1} MB)",
+                rung.config,
+                rung.predicted_bytes as f64 / MIB as f64
+            );
+            // Each pinned candidate calibrates against its own baseline:
+            // the question is "would THIS shape survive", not "how does
+            // it compare to another shape's stall scale".
+            let spec = LegSpec {
+                label: format!("mem-hog-tune:rung{ix}"),
+                governor: LegGovernor::Pinned { rung: rung.clone() },
+                initial: rung.config.clone(),
+                predicted_fixed: rung.predicted_bytes,
+                rate_bits: Arc::new(AtomicU64::new(0.0f64.to_bits())),
+                calibrate: true,
+            };
+            run_leg(shared, opts, spec)
+        };
+        tune_search(ladder.len(), |ix| match probe(ix) {
+            Ok(r) => {
+                let ok = r.isol_pct.p50 >= opts.protect_floor_isol;
+                probed.insert(ix, r);
+                ok
+            }
+            Err(e) => {
+                eprintln!("bench: tune probe of rung {ix} failed: {e:#}");
+                false
+            }
+        })
+    };
+    let Some(ix) = floor_ix else {
+        anyhow::bail!(
+            "no rung stays protected (isol p50 >= {:.0}%) under a {:.0} MiB hog — shrink the hog \
+             or raise the budget",
+            opts.protect_floor_isol,
+            opts.hog_bytes as f64 / MIB as f64
+        );
+    };
+    let floor = probed.get(&ix).expect("probed the returned index").clone();
+    let mut row = scenario_row(&floor, None);
+    if let Json::Obj(fields) = &mut row {
+        fields.insert("scenario".into(), Json::str("mem-hog-tune"));
+        fields.insert("floor_rung".into(), Json::num(ix as f64));
+        fields.insert("protect_floor_isol".into(), Json::num(opts.protect_floor_isol));
+    }
+    write_report(opts, vec![row])?;
+    println!(
+        "mem-hog-tune: largest protected rung is {ix} ({}, predicted {:.1} MB) — isol p50 \
+         {:.1}% under a {:.0} MiB hog",
+        floor.floor_config,
+        ladder.rungs()[ix].predicted_bytes as f64 / MIB as f64,
+        floor.isol_pct.p50,
+        opts.hog_bytes as f64 / MIB as f64
+    );
+    Ok(())
+}
+
+/// One report row (`ci/bench_diff.py` keys rows by `scenario` and gates
+/// flat numeric fields).
+fn scenario_row(r: &ScenarioResult, protection_ratio: Option<f64>) -> Json {
+    let mut fields = vec![
+        ("scenario", Json::str(r.scenario.clone())),
+        ("target_rps", Json::num(r.target_rps)),
+        ("achieved_rps", Json::num(r.achieved_rps)),
+        ("concurrency", Json::num(r.concurrency as f64)),
+        ("base_lat_ms", Json::num(r.base_lat_ms)),
+        ("isol_p50", Json::num(r.isol_pct.p50)),
+        ("isol_p90", Json::num(r.isol_pct.p90)),
+        ("isol_p99", Json::num(r.isol_pct.p99)),
+        ("lat_imp_p50", Json::num(r.lat_imp_pct.p50)),
+        ("lat_imp_p90", Json::num(r.lat_imp_pct.p90)),
+        ("lat_imp_p99", Json::num(r.lat_imp_pct.p99)),
+        ("governor_swaps", Json::num(r.governor_swaps as f64)),
+        ("floor_config", Json::str(r.floor_config.clone())),
+        ("errors", Json::num(r.errors as f64)),
+    ];
+    if let Some(ratio) = protection_ratio {
+        fields.push(("protection_ratio", Json::num(ratio)));
+    }
+    Json::obj(fields)
+}
+
+fn write_report(opts: &BenchOpts, rows: Vec<Json>) -> Result<()> {
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_protection")),
+        ("budget_mb", Json::num(opts.budget_bytes as f64 / MIB as f64)),
+        ("hog_mb", Json::num(opts.hog_bytes as f64 / MIB as f64)),
+        (
+            "target_lat_ms",
+            Json::num(opts.target_lat.as_secs_f64() * 1e3),
+        ),
+        ("stall_mult", Json::num(opts.stall_mult)),
+        ("scenarios", Json::Arr(rows)),
+    ]);
+    std::fs::write(&opts.out, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", opts.out))?;
+    eprintln!("bench: wrote {}", opts.out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn win(ix: usize, count: usize, rps: f64, p90_ms: u64) -> WindowStats {
+        WindowStats {
+            index: ix,
+            count,
+            rps,
+            lat_p50: Duration::from_millis(p90_ms / 2),
+            lat_p90: Duration::from_millis(p90_ms),
+            lat_p99: Duration::from_millis(p90_ms * 2),
+        }
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank_on_the_ascending_sort() {
+        let xs: Vec<u64> = (1..=100).collect();
+        // round((n-1)q) rounds half away from zero: round(49.5) = index 50.
+        assert_eq!(percentile_u64(&xs, 0.5), 51);
+        assert_eq!(percentile_u64(&xs, 0.9), 90);
+        assert_eq!(percentile_u64(&xs, 0.99), 99);
+        assert_eq!(percentile_u64(&[], 0.5), 0);
+        assert_eq!(percentile_u64(&[7], 0.99), 7);
+        // Unsorted input sorts first.
+        assert_eq!(percentile_u64(&[30, 10, 20], 0.5), 20);
+        assert_eq!(percentile_f64(&[3.0, 1.0, 2.0], 1.0), 3.0);
+    }
+
+    #[test]
+    fn protection_stats_score_empty_windows_as_zero_isolation() {
+        let ws = vec![
+            win(0, 10, 10.0, 100), // full target, baseline latency
+            win(1, 0, 0.0, 0),     // stalled-out window
+            win(2, 5, 5.0, 300),   // half throughput, 3x latency
+        ];
+        let (isol, lat_imp) = protection_stats(&ws, 10.0, Duration::from_millis(100));
+        assert_eq!(isol, vec![100.0, 0.0, 50.0]);
+        // The empty window contributes no latency sample.
+        assert_eq!(lat_imp.len(), 2);
+        assert!((lat_imp[0] - 0.0).abs() < 1e-9, "{lat_imp:?}");
+        assert!((lat_imp[1] - 200.0).abs() < 1e-9, "{lat_imp:?}");
+        // isol is capped at 100 even when a window beats the target.
+        let (isol, _) = protection_stats(&[win(0, 20, 20.0, 50)], 10.0, Duration::from_millis(100));
+        assert_eq!(isol, vec![100.0]);
+    }
+
+    #[test]
+    fn stall_rate_calibration_prices_full_overage_at_mult_baselines() {
+        let base = Duration::from_millis(40);
+        let rate = calibrate_stall_rate(base, 16 * crate::network::MIB, 3.0);
+        // One request over the full reference overage stalls 3 baselines.
+        let stall = rate * (16 * crate::network::MIB) as f64;
+        assert!((stall - 0.12).abs() < 1e-9, "{stall}");
+        // No overage, no stall; negative mult clamps to zero.
+        assert_eq!(calibrate_stall_rate(base, 0, 3.0), 0.0);
+        assert_eq!(calibrate_stall_rate(base, 1024, -1.0), 0.0);
+    }
+
+    #[test]
+    fn tune_search_finds_the_last_protected_rung() {
+        // Monotone predicate: rungs 0..=k protected.
+        for k in 0..6usize {
+            let got = tune_search(6, |ix| ix <= k);
+            assert_eq!(got, Some(k), "k={k}");
+        }
+        // Nothing protected (even the floor): None, after exactly one probe.
+        let mut probes = 0;
+        assert_eq!(
+            tune_search(6, |_| {
+                probes += 1;
+                false
+            }),
+            None
+        );
+        assert_eq!(probes, 1);
+        assert_eq!(tune_search(0, |_| true), None);
+        // All protected: the top rung, in O(log n) probes.
+        let mut probes = 0;
+        assert_eq!(
+            tune_search(64, |_| {
+                probes += 1;
+                true
+            }),
+            Some(63)
+        );
+        assert!(probes <= 8, "{probes} probes for n=64");
+    }
+}

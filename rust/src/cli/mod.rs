@@ -86,6 +86,36 @@ Real execution (against `make artifacts` or an `export-bundle` dir):
              governor steps the lowest-QoS tenant's footprint ladder
              down first under sustained pressure)
 
+Protection benchmarking (adversarial, resctl-bench style):
+  bench mem-hog | mem-hog-tune
+            [--bundle DIR]                          default artifacts-ref
+            [--mem-limit-mb N]                      governor budget
+                                                    (default 22)
+            [--hog-mb N]                            co-located hog size
+                                                    (default 16)
+            [--target-lat-ms N]                     convergence latency
+                                                    target (default 80)
+            [--converge-s N] [--measure-s N]        phase lengths (6 / 8)
+            [--window-ms N]                         scoring window (500)
+            [--max-clients N]                       load ceiling (8)
+            [--stall-mult X]                        stall calibration (3)
+            [--json FILE]                           report (default
+                                                    BENCH_serve.json)
+            [--check]                               fail unless governed
+                                                    isol p50 beats the
+                                                    ungoverned control
+            [--real-rss]                            sample procfs RSS
+                                                    instead of the
+                                                    accounted footprint
+            [--protect-isol N]                      mem-hog-tune
+                                                    protection floor (50)
+            (mem-hog: converge a closed loop on the latency target, spring
+             an anonymous-memory hog, and score per-window isol%/lat-imp%
+             for an ungoverned control and the governed server under one
+             deterministic calibrated stall model. mem-hog-tune: binary-
+             search the bundle's ladder for the largest pinned config that
+             stays protected under the hog. bench defaults --bias-mb to 0)
+
 Common flags:
   --cfg FILE        Darknet-style .cfg network (default: built-in YOLOv2-16)
   --network NAME    built-in network: yolov2 (default) or mobilenet (the
@@ -749,6 +779,48 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         budget,
         &args.predictor_params()?,
     )
+}
+
+/// `mafat bench <scenario>`: the adversarial memory-protection suite
+/// ([`crate::bench`]). The scenario is positional (dispatched in `main`);
+/// every knob is a flag with a CI-smoke-sized default.
+pub fn cmd_bench(scenario: &str, args: &Args) -> Result<()> {
+    use std::time::Duration;
+    let bundle = match args.get("bundle") {
+        Some(b) => split_bundle(b).1,
+        None => "artifacts-ref".to_string(),
+    };
+    // Bench defaults the predictor bias to 0 (not the paper's 31 MB
+    // constant): the scenarios run against tens-of-MB budgets where the
+    // bias would push the whole ladder above the budget before the hog
+    // even starts. --bias-mb still overrides.
+    let mut params = PredictorParams::default();
+    params.bias_bytes = args.get_u64("bias-mb")?.unwrap_or(0) * MIB;
+    let opts = crate::bench::BenchOpts {
+        bundle,
+        budget_bytes: args.get_u64("mem-limit-mb")?.unwrap_or(22) * MIB,
+        hog_bytes: args.get_u64("hog-mb")?.unwrap_or(16) * MIB,
+        target_lat: Duration::from_millis(args.get_u64("target-lat-ms")?.unwrap_or(80)),
+        converge: Duration::from_secs(args.get_u64("converge-s")?.unwrap_or(6).max(2)),
+        measure: Duration::from_secs(args.get_u64("measure-s")?.unwrap_or(8).max(2)),
+        window: Duration::from_millis(args.get_u64("window-ms")?.unwrap_or(500).max(50)),
+        max_clients: args.get_u64("max-clients")?.unwrap_or(8).max(1) as usize,
+        stall_mult: args
+            .get("stall-mult")
+            .map(|v| v.parse::<f64>().with_context(|| format!("--stall-mult {v:?}")))
+            .transpose()?
+            .unwrap_or(3.0),
+        real_rss: args.has("real-rss"),
+        params,
+        protect_floor_isol: args.get_u64("protect-isol")?.unwrap_or(50) as f64,
+        out: args.get("json").unwrap_or("BENCH_serve.json").to_string(),
+        check: args.has("check"),
+    };
+    match scenario {
+        "mem-hog" => crate::bench::run_mem_hog(&opts),
+        "mem-hog-tune" => crate::bench::run_mem_hog_tune(&opts),
+        other => bail!("unknown bench scenario {other:?} (expected mem-hog or mem-hog-tune)"),
+    }
 }
 
 #[cfg(test)]

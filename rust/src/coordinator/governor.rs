@@ -78,6 +78,68 @@ impl Default for GovernorConfig {
     }
 }
 
+impl GovernorConfig {
+    /// Reject degenerate knobs: the governor needs
+    /// `0 < low_watermark < high_watermark <= 1` and at least one
+    /// hysteresis wake. A low >= high band would classify the same RSS
+    /// reading as both pressure and headroom and oscillate forever;
+    /// catching it at construction turns that silent misbehavior into a
+    /// clear error.
+    pub fn validate(&self) -> Result<()> {
+        if !self.high_watermark.is_finite() || !self.low_watermark.is_finite() {
+            anyhow::bail!(
+                "governor watermarks must be finite (got low {} / high {})",
+                self.low_watermark,
+                self.high_watermark
+            );
+        }
+        if !(self.high_watermark > 0.0 && self.high_watermark <= 1.0) {
+            anyhow::bail!(
+                "governor high watermark must be in (0, 1], got {}",
+                self.high_watermark
+            );
+        }
+        if self.low_watermark <= 0.0 {
+            anyhow::bail!(
+                "governor low watermark must be positive, got {}",
+                self.low_watermark
+            );
+        }
+        if self.low_watermark >= self.high_watermark {
+            anyhow::bail!(
+                "governor low watermark {} must be below the high watermark {}",
+                self.low_watermark,
+                self.high_watermark
+            );
+        }
+        if self.hysteresis_wakes == 0 {
+            anyhow::bail!("governor hysteresis must be at least one wake");
+        }
+        Ok(())
+    }
+
+    /// The `(low, high)` watermark thresholds in bytes at `budget`.
+    /// Validates the fractions, then rejects bands whose `as u64`
+    /// truncation collapses to empty at small budgets (e.g. the default
+    /// 0.60/0.85 band at a 2-byte budget truncates to low == high == 1,
+    /// where every reading is either pressure or headroom and the governor
+    /// oscillates). Mirrored by the numpy port (`watermark_bytes`).
+    pub fn watermark_bytes(&self, budget: u64) -> Result<(u64, u64)> {
+        self.validate()?;
+        let high = (budget as f64 * self.high_watermark) as u64;
+        let low = (budget as f64 * self.low_watermark) as u64;
+        if low >= high {
+            anyhow::bail!(
+                "governor watermark band {}..{} truncates to empty ({low}..{high} bytes) \
+                 at budget {budget} bytes — widen the band or raise the budget",
+                self.low_watermark,
+                self.high_watermark
+            );
+        }
+        Ok((low, high))
+    }
+}
+
 /// A tenant's latency sensitivity: how the arbiter ranks it when memory
 /// pressure forces someone's configuration down the ladder, and what share
 /// of the joint headroom its drain is derived from.
@@ -159,11 +221,47 @@ pub fn derive_drain(
     usize::try_from(budget_headroom / predicted_per_image).unwrap_or(usize::MAX).clamp(1, cap)
 }
 
+/// The kernel page size in bytes, probed once through POSIX
+/// `getpagesize()` and cached for the process lifetime. Falls back to
+/// 4096 only off-unix or when the probe returns garbage — the arm64
+/// kernels edge devices actually run are frequently built with 16K or
+/// 64K pages, where assuming 4K reads statm-derived RSS 4-16x low and
+/// the governor never sees pressure.
+pub fn page_size_bytes() -> u64 {
+    static PAGE: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    *PAGE.get_or_init(|| {
+        #[cfg(unix)]
+        {
+            extern "C" {
+                fn getpagesize() -> std::os::raw::c_int;
+            }
+            // SAFETY: no arguments, no preconditions; libc is always
+            // linked on unix targets.
+            let probed = unsafe { getpagesize() };
+            if probed > 0 {
+                return probed as u64;
+            }
+        }
+        4096
+    })
+}
+
+/// Parse the resident-set field of a `/proc/self/statm` snapshot (second
+/// whitespace-separated field, in pages) into bytes at `page_size`.
+/// Split out of [`sample_rss_bytes`] so the page-size scaling is
+/// unit-testable against synthetic non-4K lines. Mirrored by the numpy
+/// port (`parse_statm_rss`).
+pub fn parse_statm_rss(text: &str, page_size: u64) -> Option<u64> {
+    let pages = text.split_whitespace().nth(1).and_then(|v| v.parse::<u64>().ok())?;
+    pages.checked_mul(page_size)
+}
+
 /// Sample this process's live resident set, in bytes. Prefers
 /// `/proc/self/status` `VmRSS` (unit-explicit kB); falls back to the
-/// second field of `/proc/self/statm` (pages, assumed 4 KiB — the common
-/// Linux page size). `None` when procfs is unavailable (non-Linux), in
-/// which case the governor holds its rungs and keeps the derived drains.
+/// second field of `/proc/self/statm` (pages, scaled by the probed
+/// [`page_size_bytes`] — never a hardcoded 4 KiB). `None` when procfs is
+/// unavailable (non-Linux), in which case the governor holds its rungs
+/// and keeps the derived drains.
 pub fn sample_rss_bytes() -> Option<u64> {
     if let Ok(text) = std::fs::read_to_string("/proc/self/status") {
         for line in text.lines() {
@@ -176,8 +274,8 @@ pub fn sample_rss_bytes() -> Option<u64> {
         }
     }
     if let Ok(text) = std::fs::read_to_string("/proc/self/statm") {
-        if let Some(pages) = text.split_whitespace().nth(1).and_then(|v| v.parse::<u64>().ok()) {
-            return Some(pages * 4096);
+        if let Some(bytes) = parse_statm_rss(&text, page_size_bytes()) {
+            return Some(bytes);
         }
     }
     None
@@ -271,6 +369,11 @@ struct GovState {
 /// the hysteresis streaks and the active rungs are global.
 pub struct MemoryGovernor {
     budget_bytes: u64,
+    /// Watermark thresholds in bytes, computed and validated once at
+    /// construction ([`GovernorConfig::watermark_bytes`]); guaranteed
+    /// `low_bytes < high_bytes`.
+    low_bytes: u64,
+    high_bytes: u64,
     max_batch: usize,
     workers: usize,
     cfg: GovernorConfig,
@@ -294,6 +397,7 @@ impl MemoryGovernor {
         if budget_bytes == 0 {
             anyhow::bail!("memory governor needs a non-zero budget");
         }
+        let (low_bytes, high_bytes) = cfg.watermark_bytes(budget_bytes)?;
         let mut states = Vec::with_capacity(tenants.len());
         for t in tenants {
             if t.ladder.is_empty() {
@@ -312,6 +416,8 @@ impl MemoryGovernor {
         }
         Ok(MemoryGovernor {
             budget_bytes,
+            low_bytes,
+            high_bytes,
             max_batch,
             workers,
             cfg,
@@ -390,10 +496,10 @@ impl MemoryGovernor {
         let mut st = self.state.lock().unwrap();
         let mut action = GovernorAction::Hold;
         if let Some(rss) = rss_bytes {
-            let high = (self.budget_bytes as f64 * self.cfg.high_watermark) as u64;
-            let low = (self.budget_bytes as f64 * self.cfg.low_watermark) as u64;
-            if rss > high {
-                st.pressure_streak += 1;
+            if rss > self.high_bytes {
+                // Saturating: a pool pinned at its floor under permanent
+                // pressure accrues an unbounded streak (no step resets it).
+                st.pressure_streak = st.pressure_streak.saturating_add(1);
                 st.headroom_streak = 0;
                 if st.pressure_streak >= self.cfg.hysteresis_wakes {
                     if let Some(ix) = step_down_victim(&st.tenants) {
@@ -406,8 +512,8 @@ impl MemoryGovernor {
                         action = GovernorAction::StepDown { model, from, to };
                     }
                 }
-            } else if rss < low {
-                st.headroom_streak += 1;
+            } else if rss < self.low_bytes {
+                st.headroom_streak = st.headroom_streak.saturating_add(1);
                 st.pressure_streak = 0;
                 if st.headroom_streak >= self.cfg.hysteresis_wakes {
                     if let Some(ix) = step_up_riser(&st.tenants, self.budget_bytes) {
@@ -474,7 +580,12 @@ fn step_up_riser(tenants: &[TenantState], budget: u64) -> Option<usize> {
 /// minus the sum of every tenant's resident base, shared by QoS weight
 /// (interactive 3 : batch 1), each share divided by that tenant's active
 /// activation footprint via [`derive_drain`]. With one tenant this is
-/// exactly the single-model drain derivation. Mirrored by the numpy port
+/// exactly the single-model drain derivation. When the budget is
+/// overcommitted (budget < Σ resident bases) the headroom saturates to 0
+/// and every share is 0 — [`derive_drain`]'s lower clamp still hands
+/// every tenant a drain of 1, so no tenant is ever starved while the
+/// arbiter steps the victim down toward a fitting ladder (pinned by the
+/// `overcommitted_budget_*` regression test). Mirrored by the numpy port
 /// (`arbiter_drains`).
 fn split_drains(
     tenants: &[TenantState],
@@ -489,7 +600,7 @@ fn split_drains(
         .iter()
         .map(|t| {
             let rung = &t.ladder.rungs()[t.active];
-            let share = headroom * t.qos.weight() / total_weight.max(1);
+            let share = headroom.saturating_mul(t.qos.weight()) / total_weight.max(1);
             TenantDecision {
                 model: t.name.clone(),
                 qos: t.qos,
@@ -699,6 +810,94 @@ mod tests {
     }
 
     #[test]
+    fn statm_parsing_scales_by_the_page_size() {
+        // Regression: the statm fallback used to hardcode pages * 4096.
+        // On a 16K-page arm64 kernel the same statm line is 4x more
+        // resident bytes; the parser must scale by the page size it is
+        // handed, not by an assumed constant. Mirrored by the numpy port.
+        let line = "5000 2048 300 20 0 1000 0\n";
+        assert_eq!(parse_statm_rss(line, 4096), Some(2048 * 4096));
+        assert_eq!(parse_statm_rss(line, 16384), Some(2048 * 16384));
+        assert_eq!(parse_statm_rss(line, 65536), Some(2048 * 65536));
+        // Malformed lines are None, not zero.
+        assert_eq!(parse_statm_rss("", 4096), None);
+        assert_eq!(parse_statm_rss("5000", 4096), None);
+        assert_eq!(parse_statm_rss("5000 x", 4096), None);
+        // Overflow is a None, never a wrapped small number.
+        assert_eq!(parse_statm_rss("1 18446744073709551615", 4096), None);
+    }
+
+    #[test]
+    fn probed_page_size_is_sane_and_cached() {
+        let ps = page_size_bytes();
+        // Every Linux target uses power-of-two pages of at least 4 KiB.
+        assert!(ps >= 4096, "page size {ps}");
+        assert!(ps.is_power_of_two(), "page size {ps}");
+        assert_eq!(page_size_bytes(), ps);
+    }
+
+    #[test]
+    fn degenerate_watermarks_are_rejected_at_construction() {
+        let ok = GovernorConfig::default();
+        assert!(ok.validate().is_ok());
+        // low >= high would classify one reading as both pressure and
+        // headroom — rejected, not silently oscillating.
+        let inverted = GovernorConfig {
+            low_watermark: 0.9,
+            ..ok
+        };
+        let err = MemoryGovernor::single(test_ladder(), 100, 0, 8, 1, inverted).unwrap_err();
+        assert!(err.to_string().contains("watermark"), "{err}");
+        for bad in [
+            GovernorConfig {
+                high_watermark: 0.0,
+                ..ok
+            },
+            GovernorConfig {
+                high_watermark: 1.5,
+                ..ok
+            },
+            GovernorConfig {
+                low_watermark: 0.0,
+                ..ok
+            },
+            GovernorConfig {
+                low_watermark: -0.2,
+                ..ok
+            },
+            GovernorConfig {
+                high_watermark: f64::NAN,
+                ..ok
+            },
+            GovernorConfig {
+                hysteresis_wakes: 0,
+                ..ok
+            },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} must be rejected");
+            assert!(MemoryGovernor::single(test_ladder(), 100, 0, 8, 1, bad).is_err());
+        }
+    }
+
+    #[test]
+    fn watermark_bands_that_truncate_to_empty_are_rejected() {
+        // At a 2-byte budget the default 0.60/0.85 band truncates to
+        // low == high == 1 via the `as u64` casts: every reading would be
+        // either pressure or headroom and the governor would oscillate.
+        // Construction must reject it with a clear error instead.
+        let cfg = GovernorConfig::default();
+        assert!(cfg.watermark_bytes(100).is_ok());
+        let err = cfg.watermark_bytes(2).unwrap_err();
+        assert!(err.to_string().contains("truncates to empty"), "{err}");
+        let err = MemoryGovernor::single(test_ladder(), 2, 0, 8, 1, cfg).unwrap_err();
+        assert!(err.to_string().contains("truncates to empty"), "{err}");
+        // The bytes the state machine uses are exactly the validated pair.
+        let (low, high) = cfg.watermark_bytes(100).unwrap();
+        assert_eq!((low, high), (60, 85));
+        assert!(low < high);
+    }
+
+    #[test]
     fn resolve_budget_precedence() {
         use crate::network::MIB;
         // Explicit flag wins over everything (env untouched: avoid
@@ -830,6 +1029,40 @@ mod tests {
         assert_eq!(d.tenant("a").unwrap().drain, 4);
         assert_eq!(d.tenant("b").unwrap().drain, 2);
         assert!(d.tenant("c").is_none());
+    }
+
+    #[test]
+    fn overcommitted_budget_never_starves_a_tenant_and_keeps_stepping_down() {
+        // Budget 50 < Σ resident bases (30 + 30): the joint headroom
+        // saturates to 0 and every QoS share is 0. Regression guarantees:
+        // (1) every tenant still drains >= 1 on every wake (nobody is
+        // starved to 0 and wedges the queue), (2) the arbiter keeps
+        // stepping the victim down to its floor rather than stalling, and
+        // (3) once the victim is at its floor the pool holds — the
+        // (saturating) pressure streak keeps accruing without a panic.
+        let cfg = GovernorConfig::default();
+        let g = MemoryGovernor::new(two_tenants(2, 2), 50, 8, 1, cfg).unwrap();
+        let mut downs = 0;
+        for _ in 0..40 {
+            let d = g.on_wake(Some(49)); // high watermark is 42
+            for t in &d.tenants {
+                assert_eq!(t.drain, 1, "tenant {} must not be starved below 1", t.model);
+            }
+            if matches!(d.action, GovernorAction::StepDown { .. }) {
+                downs += 1;
+            }
+        }
+        assert_eq!(downs, 2, "batch tenant walked both rungs to its floor");
+        assert_eq!(g.active_rung("b"), Some(0));
+        assert_eq!(g.active_rung("a"), Some(2), "interactive rung holds");
+        // Recovery is still possible: nothing fits jointly here (next rung
+        // 70 + other base 30 >= 50), so sustained headroom holds instead
+        // of oscillating.
+        for _ in 0..10 {
+            let d = g.on_wake(Some(10));
+            assert!(matches!(d.action, GovernorAction::Hold));
+            assert!(d.tenants.iter().all(|t| t.drain == 1));
+        }
     }
 
     #[test]

@@ -86,8 +86,9 @@
 pub mod governor;
 
 pub use governor::{
-    derive_drain, ladder_from_manifest, resolve_budget_bytes, sample_rss_bytes, GovernorAction,
-    GovernorConfig, MemoryGovernor, QosClass, TenantDecision, TenantSpec, WakeDecision,
+    derive_drain, ladder_from_manifest, page_size_bytes, parse_statm_rss, resolve_budget_bytes,
+    sample_rss_bytes, GovernorAction, GovernorConfig, MemoryGovernor, QosClass, TenantDecision,
+    TenantSpec, WakeDecision,
 };
 
 use crate::engine::{Engine, EngineShared};
@@ -176,6 +177,26 @@ impl Default for ServerConfig {
             workers: 1,
         }
     }
+}
+
+/// Scenario hooks for deterministic serving experiments: the seams the
+/// [`crate::bench`] scenarios (and tests) use to make governor behavior
+/// reproducible on any host. Both default to `None` (production behavior);
+/// `Default` is exactly the unhooked server.
+///
+/// * `rss_sampler` replaces the per-wake [`sample_rss_bytes`] procfs read,
+///   so a scenario can inject the memory signal (e.g. the *accounted*
+///   footprint of a co-located hog plus the active rung's prediction)
+///   instead of depending on host RSS, allocator behavior, and page cache.
+/// * `after_batch` runs on the worker thread right after a drained batch's
+///   `infer_batch` call returns, before responses are sent, with
+///   `(model, batch_len)` — the seam the mem-hog scenario uses to charge
+///   overcommit-proportional paging stalls into measured latency (and the
+///   overload test uses to hold a batch in flight).
+#[derive(Clone, Default)]
+pub struct ServeHooks {
+    pub rss_sampler: Option<Arc<dyn Fn() -> Option<u64> + Send + Sync>>,
+    pub after_batch: Option<Arc<dyn Fn(&str, usize) + Send + Sync>>,
 }
 
 /// One model a [`Server`] serves: its routing id, QoS class, and the
@@ -389,6 +410,19 @@ impl Server {
         cfg: ServerConfig,
         governor: Option<Arc<MemoryGovernor>>,
     ) -> Result<Server> {
+        Self::start_multi_hooked(models, addr, cfg, governor, ServeHooks::default())
+    }
+
+    /// [`Server::start_multi`] with scenario [`ServeHooks`] — the bench
+    /// scenarios' and tests' entry point; `ServeHooks::default()` is
+    /// byte-identical to the unhooked server.
+    pub fn start_multi_hooked(
+        models: Vec<ModelSpec>,
+        addr: &str,
+        cfg: ServerConfig,
+        governor: Option<Arc<MemoryGovernor>>,
+        hooks: ServeHooks,
+    ) -> Result<Server> {
         if models.is_empty() {
             anyhow::bail!("a server needs at least one model");
         }
@@ -415,6 +449,7 @@ impl Server {
             let worker_shutdown = shutdown.clone();
             let metrics = metrics.clone();
             let governor = governor.clone();
+            let hooks = hooks.clone();
             std::thread::Builder::new()
                 .name(format!("mafat-worker-{wi}"))
                 .spawn(move || {
@@ -469,6 +504,7 @@ impl Server {
                         worker_shutdown,
                         governor,
                         metrics,
+                        hooks,
                     );
                 })?;
         }
@@ -629,6 +665,7 @@ fn err_response(req: &Request, code: &str, e: &anyhow::Error) -> Json {
     )
 }
 
+#[allow(clippy::too_many_arguments)] // private pool entry; callers are the two start_* paths
 fn worker_loop(
     mut engines: BTreeMap<String, Engine>,
     model_metrics: BTreeMap<String, Arc<ModelMetrics>>,
@@ -637,6 +674,7 @@ fn worker_loop(
     shutdown: Arc<AtomicBool>,
     governor: Option<Arc<MemoryGovernor>>,
     metrics: Arc<Metrics>,
+    hooks: ServeHooks,
 ) {
     // Ungoverned fallback drain: the batch cap divided across the pool, so
     // one worker cannot swallow a whole burst while its peers idle. A
@@ -670,7 +708,11 @@ fn worker_loop(
         // plan-stage-only rebuild on the shared weight stage, so the swap
         // is cheap and the queues keep moving.
         if let Some(g) = &governor {
-            let d = g.on_wake(sample_rss_bytes());
+            let rss = match &hooks.rss_sampler {
+                Some(sampler) => sampler(),
+                None => sample_rss_bytes(),
+            };
+            let d = g.on_wake(rss);
             let mb = |b: u64| b as f64 / MIB as f64;
             metrics.rss_bytes.set(d.rss_bytes.unwrap_or(0));
             for t in &d.tenants {
@@ -768,6 +810,13 @@ fn worker_loop(
         let t0 = Instant::now();
         match engine.infer_batch(&images) {
             Ok(results) => {
+                // The scenario seam sits between execution and the latency
+                // stamp: a hook that sleeps (emulated paging stall) lands
+                // in both the recorded and the client-observed latency,
+                // exactly where a real memory stall would.
+                if let Some(after) = &hooks.after_batch {
+                    after(&model, valid.len());
+                }
                 let elapsed = t0.elapsed();
                 for ((req, (out, stats)), q_ms) in valid.iter().zip(&results).zip(&queue_ms) {
                     engine.metrics.requests.inc();

@@ -72,6 +72,7 @@
 //! ```
 
 pub mod baseline;
+pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod data;

@@ -6,6 +6,7 @@
 //!   `fig-4-1`, `fig-4-2`, `fig-4-3`, `table-4-1`, `headline`
 //! * tooling: `predict`, `search`, `frontier`, `simulate`, `export-geometry`
 //! * real execution: `run` (PJRT engine), `serve` (TCP serving loop)
+//! * benchmarking: `bench <scenario>` (adversarial memory-protection suite)
 
 use anyhow::{bail, Context, Result};
 use mafat::cli::{self, Args};
@@ -23,6 +24,16 @@ fn dispatch(argv: &[String]) -> Result<()> {
         print!("{}", cli::USAGE);
         return Ok(());
     };
+    // `bench` takes its scenario as a positional token (`mafat bench
+    // mem-hog --flags...`), which the --flag parser would reject.
+    if cmd == "bench" {
+        let Some(scenario) = argv.get(1).filter(|s| !s.starts_with("--")) else {
+            bail!("usage: mafat bench <mem-hog|mem-hog-tune> [--flags...] (run `mafat help`)");
+        };
+        let args = Args::parse(&argv[2..])?;
+        return cli::cmd_bench(scenario, &args)
+            .with_context(|| format!("command 'bench {scenario}' failed"));
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "help" | "--help" | "-h" => {

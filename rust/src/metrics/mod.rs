@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -72,6 +72,117 @@ impl Histogram {
             return None;
         }
         Some(Duration::from_micros(s.iter().sum::<u64>() / s.len() as u64))
+    }
+}
+
+/// One fixed-width time bucket of a [`WindowedSamples`] recording, the
+/// unit the bench convergence loop and the protection scenarios reason
+/// over (resctl-bench style: per-window RPS and latency percentiles, so a
+/// stall shows up as degraded *windows*, not as one diluted aggregate).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowStats {
+    /// Bucket index (0 = the first window after the anchor).
+    pub index: usize,
+    /// Completions that landed in this window.
+    pub count: usize,
+    /// Completions per second: `count / window length`.
+    pub rps: f64,
+    /// Latency percentiles over this window's completions (zero when the
+    /// window is empty).
+    pub lat_p50: Duration,
+    pub lat_p90: Duration,
+    pub lat_p99: Duration,
+}
+
+/// Completion samples bucketed into fixed-width time windows. `record`
+/// stamps against a monotonic anchor taken at construction; `record_at`
+/// takes an explicit offset so tests and deterministic scenarios can
+/// replay a timeline. Windows with no completions are reported with
+/// `count 0 / rps 0` — a stall must read as collapsed throughput, not as
+/// a gap in the series.
+#[derive(Debug)]
+pub struct WindowedSamples {
+    window: Duration,
+    anchor: Instant,
+    /// `(offset from anchor, latency)` in microseconds.
+    samples: Mutex<Vec<(u64, u64)>>,
+}
+
+impl WindowedSamples {
+    /// `window` is the bucket width (must be non-zero).
+    pub fn new(window: Duration) -> WindowedSamples {
+        assert!(!window.is_zero(), "window width must be non-zero");
+        WindowedSamples {
+            window,
+            anchor: Instant::now(),
+            samples: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn window_len(&self) -> Duration {
+        self.window
+    }
+
+    /// Time since the anchor — `elapsed() / window_len()` is the index of
+    /// the window currently filling, which is how phase boundaries are
+    /// mapped onto window indices.
+    pub fn elapsed(&self) -> Duration {
+        self.anchor.elapsed()
+    }
+
+    /// Record a completion now (offset = time since construction).
+    pub fn record(&self, latency: Duration) {
+        self.record_at(self.anchor.elapsed(), latency);
+    }
+
+    /// Record a completion at an explicit offset from the anchor.
+    pub fn record_at(&self, at: Duration, latency: Duration) {
+        self.samples
+            .lock()
+            .unwrap()
+            .push((at.as_micros() as u64, latency.as_micros() as u64));
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    /// Per-window stats from the anchor through the last recorded sample,
+    /// empty windows included. Empty when nothing was recorded.
+    pub fn windows(&self) -> Vec<WindowStats> {
+        let samples = self.samples.lock().unwrap().clone();
+        if samples.is_empty() {
+            return Vec::new();
+        }
+        let width_us = (self.window.as_micros() as u64).max(1);
+        let last_ix = samples.iter().map(|&(at, _)| at / width_us).max().unwrap_or(0) as usize;
+        let mut buckets: Vec<Vec<u64>> = vec![Vec::new(); last_ix + 1];
+        for (at, lat) in samples {
+            buckets[(at / width_us) as usize].push(lat);
+        }
+        let window_s = self.window.as_secs_f64();
+        buckets
+            .into_iter()
+            .enumerate()
+            .map(|(index, mut lats)| {
+                lats.sort_unstable();
+                let pct = |q: f64| -> Duration {
+                    if lats.is_empty() {
+                        return Duration::ZERO;
+                    }
+                    let ix = ((lats.len() - 1) as f64 * q).round() as usize;
+                    Duration::from_micros(lats[ix])
+                };
+                WindowStats {
+                    index,
+                    count: lats.len(),
+                    rps: lats.len() as f64 / window_s,
+                    lat_p50: pct(0.5),
+                    lat_p90: pct(0.9),
+                    lat_p99: pct(0.99),
+                }
+            })
+            .collect()
     }
 }
 
@@ -313,6 +424,30 @@ mod tests {
         assert!(s.contains("requests{model=mobile} 1"), "{s}");
         // Aggregate lines stay unlabelled and untouched.
         assert!(s.contains("governor_swaps{dir=down} 0"), "{s}");
+    }
+
+    #[test]
+    fn windowed_samples_bucket_deterministically() {
+        let w = WindowedSamples::new(Duration::from_secs(1));
+        assert!(w.windows().is_empty());
+        // Window 0: three completions at 10/20/30 ms latency.
+        for (at_ms, lat_ms) in [(100u64, 10u64), (400, 20), (900, 30)] {
+            w.record_at(Duration::from_millis(at_ms), Duration::from_millis(lat_ms));
+        }
+        // Window 2: one slow completion; window 1 stays empty.
+        w.record_at(Duration::from_millis(2500), Duration::from_millis(500));
+        let ws = w.windows();
+        assert_eq!(ws.len(), 3, "{ws:?}");
+        assert_eq!((ws[0].index, ws[0].count), (0, 3));
+        assert!((ws[0].rps - 3.0).abs() < 1e-9);
+        assert_eq!(ws[0].lat_p50, Duration::from_millis(20));
+        assert_eq!(ws[0].lat_p99, Duration::from_millis(30));
+        // The empty middle window reads as collapsed throughput, not as a
+        // missing row.
+        assert_eq!((ws[1].count, ws[1].rps as u64), (0, 0));
+        assert_eq!(ws[1].lat_p50, Duration::ZERO);
+        assert_eq!((ws[2].count, ws[2].lat_p90), (1, Duration::from_millis(500)));
+        assert_eq!(w.count(), 4);
     }
 
     #[test]

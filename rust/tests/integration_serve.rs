@@ -6,7 +6,7 @@
 
 use mafat::coordinator::{
     auto_config_from_manifest, ladder_from_manifest, sample_rss_bytes, GovernorConfig,
-    MemoryGovernor, ModelSpec, QosClass, Server, ServerConfig, TenantSpec,
+    MemoryGovernor, ModelSpec, QosClass, ServeHooks, Server, ServerConfig, TenantSpec,
 };
 use mafat::engine::Engine;
 use mafat::jsonlite::Json;
@@ -802,5 +802,203 @@ fn two_models_one_budget() {
     assert!(
         snapshot.contains("governor_swaps{model=default,dir=down} 0"),
         "{snapshot}"
+    );
+}
+
+#[test]
+fn sustained_overload_backpressure_isolates_tenants() {
+    // Sustained-overload pin: one tenant flooded past its bounded queue
+    // gets structured `queue_full` errors — and ONLY that tenant pays.
+    // The other tenant's every request keeps succeeding with unchanged
+    // checksums, because queues are bounded per model and the pop order
+    // serves the interactive class first. The `after_batch` hook holds
+    // each flooded batch in flight a little, so the depth-2 queue
+    // overflows deterministically under 6 closed-loop flooders.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let dir_a = tiny_bundle().to_string();
+    let dir_b = tiny_bundle_b().to_string();
+    let ca: MultiConfig = "2x2/NoCut".parse().unwrap();
+    let cb: MultiConfig = "2x2/NoCut".parse().unwrap();
+    let hooks = ServeHooks {
+        rss_sampler: None,
+        after_batch: Some(Arc::new(|model: &str, _len: usize| {
+            if model == "mobile" {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        })),
+    };
+    let server = Server::start_multi_hooked(
+        vec![
+            ModelSpec {
+                name: "default".into(),
+                qos: QosClass::Interactive,
+                factory: Box::new(move || Engine::load(&dir_a, ca.clone())),
+            },
+            ModelSpec {
+                name: "mobile".into(),
+                qos: QosClass::Batch,
+                factory: Box::new(move || Engine::load(&dir_b, cb.clone())),
+            },
+        ],
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 1,
+            queue_depth: 2,
+            ..ServerConfig::default()
+        },
+        None,
+        hooks,
+    )
+    .unwrap();
+    let addr = server.local_addr;
+    std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    // Pre-flood baseline checksums for the protected tenant.
+    let mut c = Client::connect(addr);
+    let baseline: Vec<f64> = (0..2u64)
+        .map(|seed| {
+            let r = c.call(&format!(r#"{{"cmd":"infer","id":"pre{seed}","seed":{seed}}}"#));
+            assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+            r.get("checksum").unwrap().as_f64().unwrap()
+        })
+        .collect();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let flooders: Vec<_> = (0..6)
+        .map(|t| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let (mut ok, mut rejected, mut other) = (0u64, 0u64, 0u64);
+                while !stop.load(Ordering::Relaxed) {
+                    let r = c.call(&format!(
+                        r#"{{"v":1,"cmd":"infer","model":"mobile","id":"f{t}","seed":{t}}}"#
+                    ));
+                    if r.get("ok").unwrap().as_bool().unwrap() {
+                        ok += 1;
+                    } else if r.get("error").unwrap().str_at("code").unwrap() == "queue_full" {
+                        rejected += 1;
+                    } else {
+                        other += 1;
+                    }
+                }
+                (ok, rejected, other)
+            })
+        })
+        .collect();
+
+    // Let the flood saturate the mobile queue, then keep using the
+    // interactive tenant straight through it.
+    std::thread::sleep(Duration::from_millis(150));
+    for i in 0..20u64 {
+        let seed = i % 2;
+        let r = c.call(&format!(r#"{{"cmd":"infer","id":"i{i}","seed":{seed}}}"#));
+        assert!(
+            r.get("ok").unwrap().as_bool().unwrap(),
+            "interactive request {i} failed mid-flood: {r:?}"
+        );
+        assert_eq!(
+            r.get("checksum").unwrap().as_f64().unwrap(),
+            baseline[seed as usize],
+            "interactive checksum drifted mid-flood (request {i})"
+        );
+    }
+    stop.store(true, Ordering::Relaxed);
+    let (mut ok, mut rejected, mut other) = (0u64, 0u64, 0u64);
+    for f in flooders {
+        let (o, r, x) = f.join().unwrap();
+        ok += o;
+        rejected += r;
+        other += x;
+    }
+    assert!(rejected > 0, "flood never overflowed the bounded queue (ok {ok})");
+    assert!(ok > 0, "backpressure must shed load, not starve the tenant");
+    assert_eq!(other, 0, "flooded tenant saw non-queue_full errors");
+}
+
+#[test]
+fn injected_rss_sampler_steps_the_governor_without_real_pressure() {
+    // The ServeHooks::rss_sampler seam: an injected memory signal drives
+    // the governor deterministically on any host — down the whole ladder
+    // under synthetic pressure, back up under synthetic headroom — while
+    // the process's real RSS never changes. This is the seam the bench
+    // scenarios build their accounted-footprint signal on.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let params = PredictorParams {
+        bias_bytes: 0,
+        ..PredictorParams::default()
+    };
+    let budget = 100 * MIB; // watermarks at 85 / 60 MiB
+    let dir = tiny_bundle().to_string();
+    let manifest = mafat::runtime::Manifest::load(std::path::Path::new(&dir)).unwrap();
+    let mnet = manifest.sole_network().unwrap();
+    let ladder = ladder_from_manifest(mnet, &params).unwrap();
+    let len = ladder.len();
+    assert!(len >= 2, "need rungs to step through");
+    let top = len - 1;
+    let start_config = ladder.rungs()[top].config.clone();
+    let governor = Arc::new(
+        MemoryGovernor::single(
+            ladder,
+            budget,
+            top,
+            ServerConfig::default().max_batch,
+            1,
+            GovernorConfig::default(),
+        )
+        .unwrap(),
+    );
+    let injected = Arc::new(AtomicU64::new(10 * MIB)); // well under the low watermark
+    let sampler_cell = injected.clone();
+    let hooks = ServeHooks {
+        rss_sampler: Some(Arc::new(move || Some(sampler_cell.load(Ordering::Relaxed)))),
+        after_batch: None,
+    };
+    let server = Server::start_multi_hooked(
+        vec![ModelSpec {
+            name: "default".into(),
+            qos: QosClass::Interactive,
+            factory: Box::new(move || Engine::load(&dir, start_config.clone())),
+        }],
+        "127.0.0.1:0",
+        ServerConfig::default(),
+        Some(governor.clone()),
+        hooks,
+    )
+    .unwrap();
+    let addr = server.local_addr;
+    std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    let mut c = Client::connect(addr);
+    let wake = |c: &mut Client, tag: &str, n: usize| {
+        for i in 0..n {
+            let r = c.call(&format!(r#"{{"cmd":"infer","id":"{tag}{i}","seed":{}}}"#, i % 2));
+            assert!(r.get("ok").unwrap().as_bool().unwrap(), "{tag}{i}: {r:?}");
+        }
+    };
+    // Low signal: the governor holds at the top rung (headroom, but no
+    // rung above to step to).
+    wake(&mut c, "hold", 8);
+    assert_eq!(governor.active_rung("default").unwrap(), top);
+    // Synthetic pressure (no real allocation anywhere): walk the whole
+    // ladder down, one step per hysteresis streak.
+    injected.store(95 * MIB, Ordering::Relaxed);
+    wake(&mut c, "down", 3 * len + 4);
+    assert_eq!(
+        governor.active_rung("default").unwrap(),
+        0,
+        "injected pressure must walk the ladder to the floor"
+    );
+    // Synthetic headroom: climb all the way back.
+    injected.store(10 * MIB, Ordering::Relaxed);
+    wake(&mut c, "up", 3 * len + 4);
+    assert_eq!(
+        governor.active_rung("default").unwrap(),
+        top,
+        "injected headroom must walk the ladder back to the top"
     );
 }
