@@ -2,7 +2,8 @@
 //! TWO models from one process — the multi-tenant edge scenario — and
 //! drives it with a mixed client load: legacy v0 requests (no `v`, no
 //! `model`) at the default YOLOv2 bundle and protocol-v1 requests at the
-//! MobileNet bundle. Prints per-request latencies and the final metrics
+//! MobileNet bundle, then a protocol-v2 request carrying a `deadline_ms`
+//! latency budget. Prints per-request latencies and the final metrics
 //! snapshot with its per-model slices.
 //!
 //! Runs against `make artifacts` output when present; otherwise falls
@@ -133,6 +134,23 @@ fn main() -> anyhow::Result<()> {
         "\nunknown model -> error.code {:?}: {}",
         j.get("error")?.str_at("code")?,
         j.get("error")?.str_at("message")?
+    );
+
+    // Protocol v2 carries a per-request deadline. This one is generous,
+    // so the server answers normally (echoing "v":2); a request whose
+    // deadline has already passed when a worker drains it is dropped
+    // before execution with code `deadline_exceeded`.
+    let req = br#"{"v":2,"cmd":"infer","id":"d","seed":3,"deadline_ms":60000}"#;
+    writer.write_all(req)?;
+    writer.write_all(b"\n")?;
+    line.clear();
+    reader.read_line(&mut line)?;
+    let j = Json::parse(&line)?;
+    println!(
+        "\nv2 infer with deadline_ms=60000 -> ok={} v={} in {:.1} ms",
+        j.get("ok")?.as_bool()?,
+        j.get("v")?.as_f64()?,
+        j.get("latency_ms")?.as_f64()?
     );
 
     // Metrics snapshot (aggregates + per-model slices).

@@ -806,14 +806,66 @@ def arbiter_drains(tenants, budget, max_batch, workers):
     }
 
 
+# Deadline weighting (PR 9): a tenant missing more than this fraction of
+# its observed deadlines is shielded from the victim pick and preferred
+# for the next step up within its class.
+DEADLINE_MISS_HOLD = 0.5
+
+
+def deadline_miss_rate(met, missed):
+    """governor::deadline_miss_rate — missed / (met + missed); 0.0 with no
+    observations, so deadline-free tenants behave exactly as before."""
+    total = met + missed
+    if total == 0:
+        return 0.0
+    return missed / total
+
+
+def _miss_rate(t):
+    return deadline_miss_rate(t.get('met', 0), t.get('missed', 0))
+
+
 def step_down_victim(tenants):
     """governor::step_down_victim — among tenants of the lowest QoS class
-    present, the first in registration order with a rung left below it
-    (tenant dicts carry a `rung` index). Interactive tenants are never
-    victims while any batch tenant is registered."""
+    present with a rung left below them (tenant dicts carry a `rung`
+    index), the first in registration order whose deadline-miss rate is
+    at or under DEADLINE_MISS_HOLD; when every candidate is missing, the
+    first candidate anyway (someone must yield). Interactive tenants are
+    never victims while any batch tenant is registered. Optional dict
+    keys `met`/`missed` default to 0 (the pre-deadline behaviour)."""
     sacrificial = min(QOS_ORDER[t['qos']] for t in tenants)
-    for t in tenants:
-        if QOS_ORDER[t['qos']] == sacrificial and t['rung'] > 0:
+    candidates = [
+        t for t in tenants
+        if QOS_ORDER[t['qos']] == sacrificial and t['rung'] > 0
+    ]
+    for t in candidates:
+        if _miss_rate(t) <= DEADLINE_MISS_HOLD:
+            return t['name']
+    return candidates[0]['name'] if candidates else None
+
+
+def step_up_riser(tenants, budget):
+    """governor::step_up_riser — the first tenant (interactive before
+    batch; within a class, deadline-missing tenants before meeting ones;
+    registration order last — the sort is stable, so without deadline
+    observations this is exactly the pre-deadline order) whose next rung
+    up exists and fits the budget jointly with every other tenant's
+    resident base. Tenant dicts carry name/qos/rung/ladder (per-rung
+    predicted bytes), predicted/activation for the active rung, and
+    optional met/missed."""
+    order = sorted(
+        range(len(tenants)),
+        key=lambda i: (
+            -QOS_ORDER[tenants[i]['qos']],
+            -(_miss_rate(tenants[i]) > DEADLINE_MISS_HOLD),
+        ))
+    for i in order:
+        t = tenants[i]
+        if t['rung'] + 1 >= len(t['ladder']):
+            continue
+        others = sum(o['predicted'] - o['activation']
+                     for j, o in enumerate(tenants) if j != i)
+        if others + t['ladder'][t['rung'] + 1] < budget:
             return t['name']
     return None
 
@@ -914,3 +966,28 @@ def calibrate_stall_rate(base_lat_s, overage_ref, mult):
     if overage_ref == 0:
         return 0.0
     return max(mult, 0.0) * base_lat_s / overage_ref
+
+
+# --------------------------------------------------------------------------
+# coordinator::admission — the per-tenant token bucket (PR 9).
+
+
+def token_bucket_tokens_at(tokens, last, rate, burst, now_s):
+    """admission::TokenBucket::tokens_at — pure refill preview at now_s,
+    clamped to the burst; a clock running backwards refills nothing."""
+    if now_s > last:
+        return min(burst, tokens + (now_s - last) * rate)
+    return tokens
+
+
+def token_bucket_admit(tokens, last, rate, burst, now_s):
+    """admission::TokenBucket::admit_at — refill, then consume one whole
+    token. Returns (admitted, tokens', last'). A zero rate rejects before
+    the token check, so not even the initial burst leaks through."""
+    tokens = token_bucket_tokens_at(tokens, last, rate, burst, now_s)
+    last = max(last, now_s)
+    if rate <= 0.0:
+        return False, tokens, last
+    if tokens >= 1.0:
+        return True, tokens - 1.0, last
+    return False, tokens, last

@@ -418,6 +418,86 @@ def test_arbiter_victim_and_routing_mirror_the_coordinator():
     assert port.route_model(served, {'v': 1, 'model': 'nope'}) == (None, 'unknown_model')
 
 
+def test_deadline_miss_rate_pins_cross_language_numbers():
+    # Pinned against rust governor.rs `deadline_miss_rate_pins_cross_
+    # language_numbers`.
+    assert port.deadline_miss_rate(0, 0) == 0.0
+    assert port.deadline_miss_rate(7, 0) == 0.0
+    assert port.deadline_miss_rate(0, 4) == 1.0
+    assert port.deadline_miss_rate(3, 5) == 0.625
+    assert port.deadline_miss_rate(1, 1) == 0.5
+    assert port.DEADLINE_MISS_HOLD == 0.5
+
+
+def test_deadline_shielded_victim_mirrors_the_governor():
+    # Rust `missing_deadline_tenant_is_shielded_from_the_victim_pick`:
+    # b1 registered first but missing most deadlines (3 met / 5 missed =
+    # 0.625 > the 0.5 hold) is shielded while b2 has rungs to yield; once
+    # b2 is at its floor, b1 — the sole candidate — steps anyway.
+    tenants = [
+        {'name': 'a', 'qos': 'interactive', 'rung': 2},
+        {'name': 'b1', 'qos': 'batch', 'rung': 2, 'met': 3, 'missed': 5},
+        {'name': 'b2', 'qos': 'batch', 'rung': 2},
+    ]
+    downs = []
+    for _ in range(4):
+        victim = port.step_down_victim(tenants)
+        downs.append(victim)
+        for t in tenants:
+            if t['name'] == victim:
+                t['rung'] -= 1
+    assert downs == ['b2', 'b2', 'b1', 'b1']
+    # Both batch tenants at their floors: nobody left to step, and the
+    # interactive tenant was never a victim.
+    assert port.step_down_victim(tenants) is None
+    assert tenants[0]['rung'] == 2
+
+
+def test_deadline_aware_riser_mirrors_the_governor():
+    # Rust `missing_deadline_tenant_rises_first_within_its_class_only`,
+    # over the same 3-rung test ladder (predicted 40/70/100 bytes,
+    # activation 10/40/70).
+    ladder = [40, 70, 100]
+
+    def tenant(name, qos, rung, missed=0):
+        return {
+            'name': name, 'qos': qos, 'rung': rung, 'ladder': ladder,
+            'predicted': ladder[rung], 'activation': [10, 40, 70][rung],
+            'missed': missed,
+        }
+
+    # A missing-deadline tenant outranks its earlier-registered classmate.
+    both = [tenant('a1', 'interactive', 0), tenant('a2', 'interactive', 0, missed=1)]
+    assert port.step_up_riser(both, 200) == 'a2'
+    # ...but misses never outrank QoS class: batch rises after interactive.
+    mixed = [tenant('a', 'interactive', 0), tenant('b', 'batch', 0, missed=1)]
+    assert port.step_up_riser(mixed, 200) == 'a'
+    # The joint-fit check: without headroom for the next rung nobody rises.
+    assert port.step_up_riser(mixed, 40) is None
+    # At the top rung there is nowhere to rise to.
+    assert port.step_up_riser([tenant('a', 'interactive', 2)], 10**6) is None
+
+
+def test_token_bucket_mirrors_the_admission_gate():
+    # Rust admission.rs `bucket_bursts_then_settles_to_the_sustained_rate`:
+    # rate 2/s, burst 3 — the pinned admit sequence at t=0 and t=1.
+    tokens, last = 3.0, 0.0
+    seq = []
+    for now in [0.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0]:
+        admitted, tokens, last = port.token_bucket_admit(tokens, last, 2.0, 3.0, now)
+        seq.append(admitted)
+    assert seq == [True, True, True, False, True, True, False]
+    # A long idle stretch refills to the burst cap, never beyond.
+    assert port.token_bucket_tokens_at(tokens, last, 2.0, 3.0, 100.0) == 3.0
+    # Zero rate rejects even the initial burst (rust
+    # `zero_rate_rejects_even_the_initial_burst`).
+    admitted, tokens, _ = port.token_bucket_admit(5.0, 0.0, 0.0, 5.0, 10.0)
+    assert not admitted and tokens == 5.0
+    # A clock running backwards never refills (rust
+    # `clock_going_backwards_never_refills`).
+    assert port.token_bucket_tokens_at(0.0, 10.0, 1.0, 2.0, 5.0) == 0.0
+
+
 def test_statm_rss_scales_by_the_probed_page_size():
     # Pinned cross-language numbers (rust governor.rs test
     # `statm_parsing_scales_by_the_page_size`): the same statm line is

@@ -76,6 +76,22 @@ Real execution (against `make artifacts` or an `export-bundle` dir):
                                                     MAFAT_MEM_LIMIT_MB env >
                                                     --limit-mb > probed host
                                                     limit)
+            [--admit NAME=RATE:BURST]...            per-model admission
+                                                    token bucket (RATE
+                                                    admissions/s sustained,
+                                                    BURST capacity; rate 0
+                                                    rejects everything;
+                                                    unlisted models are
+                                                    always admitted)
+            [--high-watermark X]                    governor pressure
+                                                    threshold as a budget
+                                                    fraction (default 0.85)
+            [--low-watermark X]                     governor headroom
+                                                    threshold (default 0.60;
+                                                    must stay below high)
+            [--hysteresis-wakes N]                  consecutive wakes before
+                                                    a governor step
+                                                    (default 3)
             (--bundle repeats to serve several models from one governed
              budget; a bare --bundle DIR serves as model \"default\", the
              model legacy v0 clients route to. No --config: each model's
@@ -213,6 +229,38 @@ impl Args {
             p.bias_bytes = mb * MIB;
         }
         Ok(p)
+    }
+
+    /// Every `--admit NAME=RATE:BURST` rule, parsed and validated (the
+    /// serve admission gate; see [`crate::coordinator::AdmissionRule`]).
+    pub fn admit_rules(&self) -> Result<Vec<crate::coordinator::AdmissionRule>> {
+        self.get_all("admit")
+            .iter()
+            .map(|v| v.parse().with_context(|| format!("--admit {v:?}")))
+            .collect()
+    }
+
+    /// The governor band knobs: the compiled-in 0.85/0.60/3 defaults with
+    /// `--high-watermark` / `--low-watermark` / `--hysteresis-wakes`
+    /// overrides. Band sanity (low < high, at least one wake) is enforced
+    /// by [`crate::coordinator::GovernorConfig::validate`] in `serve_cli`.
+    pub fn governor_config(&self) -> Result<crate::coordinator::GovernorConfig> {
+        let mut cfg = crate::coordinator::GovernorConfig::default();
+        if let Some(v) = self.get("high-watermark") {
+            cfg.high_watermark = v
+                .parse::<f64>()
+                .with_context(|| format!("--high-watermark {v:?}"))?;
+        }
+        if let Some(v) = self.get("low-watermark") {
+            cfg.low_watermark = v
+                .parse::<f64>()
+                .with_context(|| format!("--low-watermark {v:?}"))?;
+        }
+        if let Some(n) = self.get_u64("hysteresis-wakes")? {
+            cfg.hysteresis_wakes =
+                u32::try_from(n).with_context(|| format!("--hysteresis-wakes {n}"))?;
+        }
+        Ok(cfg)
     }
 
     pub fn sim_options(&self) -> Result<SimOptions> {
@@ -778,6 +826,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         server_cfg,
         budget,
         &args.predictor_params()?,
+        args.governor_config()?,
+        args.admit_rules()?,
     )
 }
 
@@ -883,6 +933,53 @@ mod tests {
         // Scalar accessors keep the historical last-one-wins behaviour.
         assert_eq!(a.get_u64("limit-mb").unwrap(), Some(2));
         assert!(a.get_all("missing").is_empty());
+    }
+
+    #[test]
+    fn admit_rules_parse_and_name_the_offending_flag() {
+        assert!(parse(&[]).admit_rules().unwrap().is_empty());
+        let rules = parse(&["--admit", "mobile=5:10", "--admit", "batch=0:1"])
+            .admit_rules()
+            .unwrap();
+        assert_eq!(rules.len(), 2);
+        assert_eq!((rules[0].model.as_str(), rules[0].rate, rules[0].burst), ("mobile", 5.0, 10.0));
+        assert_eq!((rules[1].model.as_str(), rules[1].rate, rules[1].burst), ("batch", 0.0, 1.0));
+        for bad in ["mobile", "mobile=5", "=1:2", "m=x:1", "m=1:x", "m=-1:2", "m=1:0.5"] {
+            let err = format!("{:#}", parse(&["--admit", bad]).admit_rules().unwrap_err());
+            assert!(err.contains("--admit"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn governor_config_defaults_and_overrides() {
+        let cfg = parse(&[]).governor_config().unwrap();
+        assert_eq!(
+            (cfg.high_watermark, cfg.low_watermark, cfg.hysteresis_wakes),
+            (0.85, 0.60, 3),
+        );
+        let cfg = parse(&[
+            "--high-watermark",
+            "0.9",
+            "--low-watermark",
+            "0.5",
+            "--hysteresis-wakes",
+            "5",
+        ])
+        .governor_config()
+        .unwrap();
+        assert_eq!((cfg.high_watermark, cfg.low_watermark, cfg.hysteresis_wakes), (0.9, 0.5, 5));
+        // Unparsable values fail with the flag named; band sanity itself
+        // (low < high) is validated later by GovernorConfig::validate.
+        for (flag, v) in [
+            ("--high-watermark", "hot"),
+            ("--low-watermark", "cold"),
+            ("--hysteresis-wakes", "often"),
+        ] {
+            let err = format!("{:#}", parse(&[flag, v]).governor_config().unwrap_err());
+            assert!(err.contains(flag.trim_start_matches('-')), "{flag}: {err}");
+        }
+        let inverted = parse(&["--high-watermark", "0.4"]).governor_config().unwrap();
+        assert!(inverted.validate().is_err(), "low >= high must fail validation");
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Per-tenant **admission control**: one token bucket per model, checked
+//! *before* a request touches its queue.
+//!
+//! The bounded per-model queues (PR 7) already stop one tenant's spike
+//! from growing memory without bound, but a saturating flood still fills
+//! its queue to the brim and makes every queued request wait out the
+//! drain. Admission moves the rejection to the accept path: a model over
+//! its configured rate answers `admission_rejected` immediately, the
+//! queue never sees the request, and the QoS-weighted drain only ever
+//! works on traffic that was worth admitting.
+//!
+//! The bucket is the classic token bucket with deterministic time
+//! injection for tests: [`TokenBucket::tokens_at`] is a pure preview of
+//! the refill at a given instant, [`TokenBucket::admit_at`] consumes one
+//! token at that instant. A model with no rule is always admitted
+//! ([`Admission::default`] has no rules at all), so an un-flagged server
+//! is byte-identical to the pre-admission one. A rate of 0 rejects
+//! unconditionally — including the initial burst — which gives tests and
+//! operators a deterministic "drop this tenant" switch. Mirrored by the
+//! numpy port (`token_bucket_admit`).
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A token bucket: `rate` tokens per second refill, capacity `burst`,
+/// one token per admitted request. Time is injected (seconds since an
+/// arbitrary epoch), so every transition is deterministic under test.
+#[derive(Debug, Clone, Copy)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: f64,
+}
+
+impl TokenBucket {
+    /// A full bucket (an idle tenant may immediately burst). `rate` must
+    /// be finite and non-negative; `burst` finite and at least 1 (a
+    /// bucket that can never hold one whole token would reject even at
+    /// rate > 0, which is what rate 0 is for).
+    pub fn new(rate: f64, burst: f64) -> Result<TokenBucket> {
+        if !rate.is_finite() || rate < 0.0 {
+            anyhow::bail!("admission rate must be finite and >= 0, got {rate}");
+        }
+        if !burst.is_finite() || burst < 1.0 {
+            anyhow::bail!("admission burst must be finite and >= 1, got {burst}");
+        }
+        Ok(TokenBucket {
+            rate,
+            burst,
+            tokens: burst,
+            last: 0.0,
+        })
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    pub fn burst(&self) -> f64 {
+        self.burst
+    }
+
+    /// Pure preview: the token count at `now_s`, refilled at `rate` since
+    /// the last consuming call and clamped to `burst`. Time running
+    /// backwards (clock skew) refills nothing rather than draining.
+    pub fn tokens_at(&self, now_s: f64) -> f64 {
+        if now_s > self.last {
+            (self.tokens + (now_s - self.last) * self.rate).min(self.burst)
+        } else {
+            self.tokens
+        }
+    }
+
+    /// Admit one request at `now_s`: refill, then consume one token if a
+    /// whole one is available. A zero-rate bucket rejects before the
+    /// token check, so not even the initial burst leaks through.
+    pub fn admit_at(&mut self, now_s: f64) -> bool {
+        self.tokens = self.tokens_at(now_s);
+        self.last = self.last.max(now_s);
+        if self.rate <= 0.0 {
+            return false;
+        }
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// One `--admit NAME=RATE:BURST` rule, parsed and validated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionRule {
+    pub model: String,
+    /// Sustained admissions per second (0 rejects everything).
+    pub rate: f64,
+    /// Bucket capacity: how far an idle tenant may burst.
+    pub burst: f64,
+}
+
+impl std::str::FromStr for AdmissionRule {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<AdmissionRule> {
+        let (model, spec) = s
+            .split_once('=')
+            .with_context(|| format!("admission rule {s:?} (expected NAME=RATE:BURST)"))?;
+        if model.is_empty() {
+            anyhow::bail!("admission rule {s:?} has an empty model name");
+        }
+        let (rate, burst) = spec.split_once(':').with_context(|| {
+            format!("admission rule {s:?} (expected NAME=RATE:BURST, e.g. mobile=5:10)")
+        })?;
+        let rate: f64 = rate
+            .parse()
+            .with_context(|| format!("admission rule {s:?}: bad rate {rate:?}"))?;
+        let burst: f64 = burst
+            .parse()
+            .with_context(|| format!("admission rule {s:?}: bad burst {burst:?}"))?;
+        // Validate the pair eagerly so the CLI rejects a bad flag at parse
+        // time with the offending rule named.
+        TokenBucket::new(rate, burst).with_context(|| format!("admission rule {s:?}"))?;
+        Ok(AdmissionRule {
+            model: model.to_string(),
+            rate,
+            burst,
+        })
+    }
+}
+
+/// The server's admission gate: a bucket per configured model, sharing
+/// one epoch. Models without a rule are always admitted, so the default
+/// (no rules) is byte-identical to the pre-admission server.
+pub struct Admission {
+    epoch: Instant,
+    buckets: BTreeMap<String, Mutex<TokenBucket>>,
+}
+
+impl Default for Admission {
+    fn default() -> Self {
+        Admission {
+            epoch: Instant::now(),
+            buckets: BTreeMap::new(),
+        }
+    }
+}
+
+impl Admission {
+    /// Build the gate from parsed rules; duplicate models are rejected
+    /// (two rates for one tenant has no sane merge).
+    pub fn new(rules: Vec<AdmissionRule>) -> Result<Admission> {
+        let mut buckets = BTreeMap::new();
+        for r in rules {
+            let bucket = TokenBucket::new(r.rate, r.burst)
+                .with_context(|| format!("admission rule for model {:?}", r.model))?;
+            if buckets.insert(r.model.clone(), Mutex::new(bucket)).is_some() {
+                anyhow::bail!("duplicate admission rule for model {:?}", r.model);
+            }
+        }
+        Ok(Admission {
+            epoch: Instant::now(),
+            buckets,
+        })
+    }
+
+    /// Whether any model is rate-limited at all.
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Admit or reject one request for `model` at the current instant.
+    /// Models without a rule are always admitted.
+    pub fn admit(&self, model: &str) -> bool {
+        match self.buckets.get(model) {
+            None => true,
+            Some(b) => b.lock().unwrap().admit_at(self.epoch.elapsed().as_secs_f64()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bursts_then_settles_to_the_sustained_rate() {
+        // Pinned against the numpy port (`token_bucket_admit`): rate 2/s,
+        // burst 3. At t=0 the full burst admits 3 and no more; by t=1 two
+        // tokens have refilled.
+        let mut b = TokenBucket::new(2.0, 3.0).unwrap();
+        assert_eq!(b.tokens_at(0.0), 3.0);
+        assert!(b.admit_at(0.0));
+        assert!(b.admit_at(0.0));
+        assert!(b.admit_at(0.0));
+        assert!(!b.admit_at(0.0), "burst exhausted");
+        assert_eq!(b.tokens_at(1.0), 2.0);
+        assert!(b.admit_at(1.0));
+        assert!(b.admit_at(1.0));
+        assert!(!b.admit_at(1.0));
+        // A long idle stretch refills to the burst cap, never beyond.
+        assert_eq!(b.tokens_at(100.0), 3.0);
+    }
+
+    #[test]
+    fn zero_rate_rejects_even_the_initial_burst() {
+        let mut b = TokenBucket::new(0.0, 5.0).unwrap();
+        for t in 0..10 {
+            assert!(!b.admit_at(t as f64));
+        }
+    }
+
+    #[test]
+    fn clock_going_backwards_never_refills() {
+        let mut b = TokenBucket::new(1.0, 2.0).unwrap();
+        assert!(b.admit_at(10.0));
+        assert!(b.admit_at(10.0));
+        // An earlier timestamp must not mint tokens (or drain them).
+        assert_eq!(b.tokens_at(5.0), 0.0);
+        assert!(!b.admit_at(5.0));
+        assert_eq!(b.tokens_at(11.0), 1.0);
+    }
+
+    #[test]
+    fn bucket_validation_rejects_degenerate_knobs() {
+        assert!(TokenBucket::new(-1.0, 5.0).is_err());
+        assert!(TokenBucket::new(f64::NAN, 5.0).is_err());
+        assert!(TokenBucket::new(f64::INFINITY, 5.0).is_err());
+        assert!(TokenBucket::new(1.0, 0.5).is_err());
+        assert!(TokenBucket::new(1.0, f64::NAN).is_err());
+        let b = TokenBucket::new(5.0, 10.0).unwrap();
+        assert_eq!((b.rate(), b.burst()), (5.0, 10.0));
+    }
+
+    #[test]
+    fn rule_parsing_round_trips_and_names_bad_input() {
+        let r: AdmissionRule = "mobile=5:10".parse().unwrap();
+        assert_eq!(
+            r,
+            AdmissionRule {
+                model: "mobile".into(),
+                rate: 5.0,
+                burst: 10.0,
+            }
+        );
+        let r: AdmissionRule = "default=0.5:1".parse().unwrap();
+        assert_eq!(r.rate, 0.5);
+        for bad in [
+            "mobile",        // no '='
+            "mobile=5",      // no ':'
+            "=5:10",         // empty name
+            "mobile=x:10",   // bad rate
+            "mobile=5:x",    // bad burst
+            "mobile=-1:10",  // negative rate
+            "mobile=5:0.25", // burst below one token
+        ] {
+            let err = bad.parse::<AdmissionRule>().unwrap_err();
+            assert!(format!("{err:#}").contains("admission rule"), "{bad}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn gate_admits_unruled_models_and_rejects_duplicates() {
+        let gate = Admission::default();
+        assert!(gate.is_empty());
+        assert!(gate.admit("anything"));
+        let gate = Admission::new(vec!["m=0:1".parse().unwrap()]).unwrap();
+        assert!(!gate.is_empty());
+        assert!(!gate.admit("m"), "zero-rate rule rejects");
+        assert!(gate.admit("other"), "unruled model admitted");
+        let dup = Admission::new(vec!["m=1:1".parse().unwrap(), "m=2:2".parse().unwrap()]);
+        assert!(dup.is_err());
+    }
+}

@@ -36,6 +36,17 @@
 //!   silent while memory is steady, so a steady-state governed server is
 //!   byte-identical to the static path.
 //!
+//! Since protocol v2, both picks also weigh each tenant's observed
+//! **deadline-miss rate** ([`deadline_miss_rate`], fed by
+//! [`MemoryGovernor::record_deadline`]): a tenant missing more than
+//! [`DEADLINE_MISS_HOLD`] of its deadlines is shielded from the victim
+//! pick while a same-class sibling can yield instead, and is preferred by
+//! the riser within its class. v0/v1-only traffic records nothing, so
+//! every rate is 0.0 and the arbiter behaves exactly as before. Workers
+//! also report per-model queue depths
+//! ([`MemoryGovernor::note_queue_depth`]) as an arbiter-visible pressure
+//! signal.
+//!
 //! State machine (per [`MemoryGovernor::on_wake`], shared by the pool;
 //! `victim`/`riser` are the QoS-ordered picks described above):
 //!
@@ -336,6 +347,27 @@ impl WakeDecision {
     }
 }
 
+/// Observed deadline-miss rate above which the arbiter treats a tenant as
+/// already failing its deadlines: such a tenant is shielded from the
+/// step-down victim pick (stepping it down would slow it further) and
+/// preferred by the step-up riser within its QoS class. Mirrored by the
+/// numpy port (`DEADLINE_MISS_HOLD`).
+pub const DEADLINE_MISS_HOLD: f64 = 0.5;
+
+/// Fraction of a tenant's deadline-carrying (protocol v2) requests that
+/// missed their deadline: `missed / (met + missed)`, `0.0` when nothing
+/// has been observed — so v0/v1-only traffic leaves every arbiter
+/// decision exactly as it was before deadlines existed. Mirrored by the
+/// numpy port (`deadline_miss_rate`).
+pub fn deadline_miss_rate(met: u64, missed: u64) -> f64 {
+    let total = met.saturating_add(missed);
+    if total == 0 {
+        0.0
+    } else {
+        missed as f64 / total as f64
+    }
+}
+
 /// Internal per-tenant state.
 #[derive(Debug)]
 struct TenantState {
@@ -343,6 +375,14 @@ struct TenantState {
     ladder: ConfigLadder,
     qos: QosClass,
     active: usize,
+    /// Deadline-carrying (v2) requests served before their deadline.
+    deadline_met: u64,
+    /// Deadline-carrying (v2) requests that expired (dropped at drain
+    /// time, or served too late).
+    deadline_missed: u64,
+    /// Queue depth reported at the last worker wake — the arbiter-visible
+    /// admission-pressure signal.
+    queue_depth: usize,
 }
 
 impl TenantState {
@@ -352,6 +392,11 @@ impl TenantState {
     fn resident_base(&self) -> u64 {
         let rung = &self.ladder.rungs()[self.active];
         rung.predicted_bytes.saturating_sub(rung.activation_bytes)
+    }
+
+    /// This tenant's observed [`deadline_miss_rate`].
+    fn miss_rate(&self) -> f64 {
+        deadline_miss_rate(self.deadline_met, self.deadline_missed)
     }
 }
 
@@ -412,6 +457,9 @@ impl MemoryGovernor {
                 ladder: t.ladder,
                 qos: t.qos,
                 active,
+                deadline_met: 0,
+                deadline_missed: 0,
+                queue_depth: 0,
             });
         }
         Ok(MemoryGovernor {
@@ -488,6 +536,49 @@ impl MemoryGovernor {
         st.tenants.iter().find(|t| t.name == model).map(|t| t.active)
     }
 
+    /// Record one deadline-carrying (protocol v2) request's outcome for
+    /// `model`: `met` is whether it was answered before its deadline.
+    /// Unregistered ids are ignored. The accumulated counts feed
+    /// [`deadline_miss_rate`] into the victim/riser picks.
+    pub fn record_deadline(&self, model: &str, met: bool) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(t) = st.tenants.iter_mut().find(|t| t.name == model) {
+            if met {
+                t.deadline_met = t.deadline_met.saturating_add(1);
+            } else {
+                t.deadline_missed = t.deadline_missed.saturating_add(1);
+            }
+        }
+    }
+
+    /// A tenant's observed `(met, missed)` deadline counts (`None` for an
+    /// unregistered id).
+    pub fn deadline_counts(&self, model: &str) -> Option<(u64, u64)> {
+        let st = self.state.lock().unwrap();
+        st.tenants
+            .iter()
+            .find(|t| t.name == model)
+            .map(|t| (t.deadline_met, t.deadline_missed))
+    }
+
+    /// Report `model`'s queue depth as sampled by a worker wake — the
+    /// arbiter-visible queue-pressure signal. Unregistered ids are
+    /// ignored.
+    pub fn note_queue_depth(&self, model: &str, depth: usize) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(t) = st.tenants.iter_mut().find(|t| t.name == model) {
+            t.queue_depth = depth;
+        }
+    }
+
+    /// The last queue depth reported for `model` via
+    /// [`MemoryGovernor::note_queue_depth`] (`None` for an unregistered
+    /// id).
+    pub fn queue_depth(&self, model: &str) -> Option<usize> {
+        let st = self.state.lock().unwrap();
+        st.tenants.iter().find(|t| t.name == model).map(|t| t.queue_depth)
+    }
+
     /// One wake of the state machine (module docs): update the pressure /
     /// headroom streaks from `rss_bytes`, possibly step one tenant's rung,
     /// and derive every tenant's drain from its share of the joint
@@ -544,22 +635,44 @@ impl MemoryGovernor {
 
 /// Pick the step-down victim: among tenants of the *lowest QoS class
 /// present* (batch before interactive), the first in registration order
-/// with a rung left below it. While any batch tenant is registered,
-/// interactive tenants are never victims — even if every batch tenant is
-/// already at its floor (the pool then holds under pressure, exactly like
-/// a single-model server at its floor).
+/// with a rung left below it — preferring candidates whose observed
+/// deadline-miss rate is at or below [`DEADLINE_MISS_HOLD`]. A tenant
+/// already missing most of its deadlines is shielded while a same-class
+/// sibling that still meets them can yield memory instead; if *every*
+/// candidate is past the hold the first one steps anyway (someone must
+/// yield under sustained pressure). With no deadline observations every
+/// miss rate is 0.0, so the pick is byte-identical to the pre-deadline
+/// arbiter. While any batch tenant is registered, interactive tenants
+/// are never victims — even if every batch tenant is already at its
+/// floor (the pool then holds under pressure, exactly like a
+/// single-model server at its floor). Mirrored by the numpy port
+/// (`step_down_victim`).
 fn step_down_victim(tenants: &[TenantState]) -> Option<usize> {
     let sacrificial = tenants.iter().map(|t| t.qos).min().expect("at least one tenant");
-    tenants.iter().position(|t| t.qos == sacrificial && t.active > 0)
+    let candidates: Vec<usize> = (0..tenants.len())
+        .filter(|&i| tenants[i].qos == sacrificial && tenants[i].active > 0)
+        .collect();
+    candidates
+        .iter()
+        .copied()
+        .find(|&i| tenants[i].miss_rate() <= DEADLINE_MISS_HOLD)
+        .or_else(|| candidates.first().copied())
 }
 
 /// Pick the step-up riser: the first tenant — interactive class before
-/// batch, registration order within a class — whose next rung up exists
-/// and whose prediction fits the budget *jointly* with every other
-/// tenant's current resident base.
+/// batch; within a class, tenants missing their deadlines (miss rate
+/// above [`DEADLINE_MISS_HOLD`]) before those meeting them; registration
+/// order last — whose next rung up exists and whose prediction fits the
+/// budget *jointly* with every other tenant's current resident base.
+/// With no deadline observations the order is exactly the pre-deadline
+/// QoS-then-registration order (the sort is stable). Mirrored by the
+/// numpy port (`step_up_riser`).
 fn step_up_riser(tenants: &[TenantState], budget: u64) -> Option<usize> {
     let mut order: Vec<usize> = (0..tenants.len()).collect();
-    order.sort_by_key(|&i| std::cmp::Reverse(tenants[i].qos));
+    order.sort_by_key(|&i| {
+        let t = &tenants[i];
+        (std::cmp::Reverse(t.qos), std::cmp::Reverse(t.miss_rate() > DEADLINE_MISS_HOLD))
+    });
     order.into_iter().find(|&i| {
         let t = &tenants[i];
         if t.active + 1 >= t.ladder.len() {
@@ -1081,5 +1194,118 @@ mod tests {
         }
         assert!("realtime".parse::<QosClass>().is_err());
         assert!(QosClass::Interactive.weight() > QosClass::Batch.weight());
+    }
+
+    // ------------------------------------------------ deadline bookkeeping
+
+    #[test]
+    fn deadline_miss_rate_pins_cross_language_numbers() {
+        // Pinned against the numpy port (`deadline_miss_rate`).
+        assert_eq!(deadline_miss_rate(0, 0), 0.0);
+        assert_eq!(deadline_miss_rate(7, 0), 0.0);
+        assert_eq!(deadline_miss_rate(0, 4), 1.0);
+        assert_eq!(deadline_miss_rate(3, 5), 0.625);
+        assert_eq!(deadline_miss_rate(1, 1), 0.5);
+        // Saturating counts never panic or wrap.
+        assert!(deadline_miss_rate(u64::MAX, u64::MAX) <= 1.0);
+        assert_eq!(DEADLINE_MISS_HOLD, 0.5);
+    }
+
+    #[test]
+    fn record_deadline_and_queue_depth_accumulate_per_tenant() {
+        let cfg = GovernorConfig::default();
+        let g = MemoryGovernor::new(two_tenants(2, 2), 100, 8, 1, cfg).unwrap();
+        assert_eq!(g.deadline_counts("a"), Some((0, 0)));
+        for _ in 0..3 {
+            g.record_deadline("a", true);
+        }
+        for _ in 0..5 {
+            g.record_deadline("a", false);
+        }
+        g.record_deadline("nope", false); // unregistered: ignored
+        assert_eq!(g.deadline_counts("a"), Some((3, 5)));
+        assert_eq!(g.deadline_counts("b"), Some((0, 0)));
+        assert_eq!(g.deadline_counts("nope"), None);
+        // Queue-pressure reporting: last write wins, per tenant.
+        assert_eq!(g.queue_depth("a"), Some(0));
+        g.note_queue_depth("a", 7);
+        g.note_queue_depth("a", 4);
+        g.note_queue_depth("nope", 9);
+        assert_eq!(g.queue_depth("a"), Some(4));
+        assert_eq!(g.queue_depth("b"), Some(0));
+        assert_eq!(g.queue_depth("nope"), None);
+    }
+
+    #[test]
+    fn missing_deadline_tenant_is_shielded_from_the_victim_pick() {
+        // Mirrored by the numpy port (`step_down_victim`): two batch
+        // tenants; b1 registered first but missing most of its deadlines
+        // (3 met / 5 missed = 0.625 > the 0.5 hold), so b2 yields both of
+        // its rungs first; only once b2 is at its floor does b1 — the
+        // sole remaining candidate — step despite its misses.
+        let cfg = GovernorConfig::default();
+        let tenants = vec![
+            TenantSpec {
+                name: "a".into(),
+                ladder: test_ladder(),
+                start_rung: 2,
+                qos: QosClass::Interactive,
+            },
+            TenantSpec {
+                name: "b1".into(),
+                ladder: test_ladder(),
+                start_rung: 2,
+                qos: QosClass::Batch,
+            },
+            TenantSpec {
+                name: "b2".into(),
+                ladder: test_ladder(),
+                start_rung: 2,
+                qos: QosClass::Batch,
+            },
+        ];
+        let g = MemoryGovernor::new(tenants, 100, 8, 1, cfg).unwrap();
+        for _ in 0..3 {
+            g.record_deadline("b1", true);
+        }
+        for _ in 0..5 {
+            g.record_deadline("b1", false);
+        }
+        let mut downs = vec![];
+        for _ in 0..40 {
+            if let GovernorAction::StepDown { model, .. } = g.on_wake(Some(99)).action {
+                downs.push(model);
+            }
+        }
+        assert_eq!(downs, vec!["b2", "b2", "b1", "b1"]);
+        assert_eq!(g.active_rung("a"), Some(2), "interactive rung must hold");
+    }
+
+    #[test]
+    fn missing_deadline_tenant_rises_first_within_its_class_only() {
+        // Mirrored by the numpy port (`step_up_riser`): two interactive
+        // tenants at their floors; a2 is missing its deadlines, so it
+        // outranks the earlier-registered a1 for the first step up...
+        let cfg = GovernorConfig::default();
+        let mut tenants = two_tenants(0, 0);
+        tenants[0].name = "a1".into();
+        tenants[1].name = "a2".into();
+        tenants[1].qos = QosClass::Interactive;
+        let g = MemoryGovernor::new(tenants, 200, 8, 1, cfg).unwrap();
+        g.record_deadline("a2", false);
+        for _ in 0..3 {
+            g.on_wake(Some(10));
+        }
+        assert_eq!(g.active_rung("a2"), Some(1), "missing-deadline tenant rises first");
+        assert_eq!(g.active_rung("a1"), Some(0));
+        // ...but deadline misses never outrank QoS class: a batch tenant
+        // missing every deadline still rises after the interactive one.
+        let g = MemoryGovernor::new(two_tenants(0, 0), 200, 8, 1, cfg).unwrap();
+        g.record_deadline("b", false);
+        for _ in 0..3 {
+            g.on_wake(Some(10));
+        }
+        assert_eq!(g.active_rung("a"), Some(1), "interactive still rises first");
+        assert_eq!(g.active_rung("b"), Some(0));
     }
 }

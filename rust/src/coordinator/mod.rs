@@ -47,6 +47,22 @@
 //!
 //! # Wire protocol (JSON lines, one request/response per line)
 //!
+//! **v2** (requests carry `"v":2`): v1 plus an optional `deadline_ms` on
+//! `infer` — the time the client is still willing to wait, measured from
+//! request arrival:
+//!
+//! ```text
+//! {"v":2,"cmd":"infer","model":"m","id":"r1","seed":123,"deadline_ms":50}
+//! ```
+//!
+//! A request whose deadline has already passed when a worker drains it is
+//! dropped with a structured `deadline_exceeded` error instead of burning
+//! batch capacity on an answer nobody is waiting for; every
+//! deadline-carrying outcome feeds the governor's per-tenant miss-rate
+//! bookkeeping ([`governor::deadline_miss_rate`]), which the arbiter
+//! weighs in its victim/riser picks. v2 responses echo `"v":2` and
+//! `"model"`; everything else is shaped exactly like v1.
+//!
 //! **v1** (versioned; requests carry `"v":1`):
 //!
 //! ```text
@@ -80,15 +96,20 @@
 //! Stable error codes ([`error_code`]): `bad_request` (malformed JSON,
 //! unknown `cmd`, unknown/ill-typed field — typos like `"imge"` are
 //! rejected, not ignored), `unknown_model` (rejected before touching any
-//! queue), `bad_image` (the engine's own image validation), `queue_full`
-//! (per-model backpressure), `internal` (engine/runtime failure).
+//! queue), `bad_image` (the engine's own image validation),
+//! `admission_rejected` (the model is over its [`admission`] token-bucket
+//! rate; rejected before touching any queue), `queue_full` (per-model
+//! backpressure), `deadline_exceeded` (a v2 deadline passed before the
+//! worker drained the request), `internal` (engine/runtime failure).
 
+pub mod admission;
 pub mod governor;
 
+pub use admission::{Admission, AdmissionRule, TokenBucket};
 pub use governor::{
-    derive_drain, ladder_from_manifest, page_size_bytes, parse_statm_rss, resolve_budget_bytes,
-    sample_rss_bytes, GovernorAction, GovernorConfig, MemoryGovernor, QosClass, TenantDecision,
-    TenantSpec, WakeDecision,
+    deadline_miss_rate, derive_drain, ladder_from_manifest, page_size_bytes, parse_statm_rss,
+    resolve_budget_bytes, sample_rss_bytes, GovernorAction, GovernorConfig, MemoryGovernor,
+    QosClass, TenantDecision, TenantSpec, WakeDecision, DEADLINE_MISS_HOLD,
 };
 
 use crate::engine::{Engine, EngineShared};
@@ -116,8 +137,13 @@ pub mod error_code {
     pub const UNKNOWN_MODEL: &str = "unknown_model";
     /// The engine's own image validation rejected the input.
     pub const BAD_IMAGE: &str = "bad_image";
+    /// The model is over its admission token-bucket rate; rejected before
+    /// touching any queue.
+    pub const ADMISSION_REJECTED: &str = "admission_rejected";
     /// The model's bounded queue is at depth (per-model backpressure).
     pub const QUEUE_FULL: &str = "queue_full";
+    /// A v2 `deadline_ms` passed before a worker drained the request.
+    pub const DEADLINE_EXCEEDED: &str = "deadline_exceeded";
     /// Engine/runtime failure while serving a validated request.
     pub const INTERNAL: &str = "internal";
 }
@@ -127,6 +153,18 @@ pub mod error_code {
 enum Proto {
     V0,
     V1,
+    V2,
+}
+
+impl Proto {
+    /// The numeric `v` responses echo (`None` for legacy v0).
+    fn version(self) -> Option<f64> {
+        match self {
+            Proto::V0 => None,
+            Proto::V1 => Some(1.0),
+            Proto::V2 => Some(2.0),
+        }
+    }
 }
 
 /// A queued inference request.
@@ -138,6 +176,9 @@ struct Request {
     return_output: bool,
     respond: Sender<Json>,
     enqueued: Instant,
+    /// v2 `deadline_ms`, resolved to an absolute instant at arrival;
+    /// `None` for v0/v1 (and v2 requests without one).
+    deadline: Option<Instant>,
 }
 
 /// Server tuning knobs.
@@ -225,6 +266,9 @@ pub struct ServerShared {
     pub metrics: Arc<Metrics>,
     /// Served models by routing id.
     pub models: BTreeMap<String, ModelInfo>,
+    /// Per-model admission gate, checked before any queue is touched.
+    /// The default (no rules) admits everything.
+    pub admission: Admission,
 }
 
 impl Default for ServerShared {
@@ -240,6 +284,7 @@ impl Default for ServerShared {
         ServerShared {
             metrics: Arc::new(Metrics::default()),
             models,
+            admission: Admission::default(),
         }
     }
 }
@@ -346,6 +391,13 @@ impl RequestQueues {
         }
     }
 
+    /// Current per-model queue depths — the queue-pressure signal workers
+    /// forward to the governor and the `queue_depth{model=...}` gauge.
+    fn depths(&self) -> Vec<(String, usize)> {
+        let st = self.state.lock().unwrap();
+        st.models.iter().map(|m| (m.name.clone(), m.buf.len())).collect()
+    }
+
     fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.ready.notify_all();
@@ -422,6 +474,22 @@ impl Server {
         cfg: ServerConfig,
         governor: Option<Arc<MemoryGovernor>>,
         hooks: ServeHooks,
+    ) -> Result<Server> {
+        Self::start_multi_admitted(models, addr, cfg, governor, hooks, Admission::default())
+    }
+
+    /// [`Server::start_multi_hooked`] with a per-model [`Admission`] gate:
+    /// a request for a rate-limited model that is over its token bucket
+    /// answers `admission_rejected` before touching its queue.
+    /// `Admission::default()` (no rules) is byte-identical to the
+    /// un-admitted server.
+    pub fn start_multi_admitted(
+        models: Vec<ModelSpec>,
+        addr: &str,
+        cfg: ServerConfig,
+        governor: Option<Arc<MemoryGovernor>>,
+        hooks: ServeHooks,
+        admission: Admission,
     ) -> Result<Server> {
         if models.is_empty() {
             anyhow::bail!("a server needs at least one model");
@@ -520,6 +588,7 @@ impl Server {
         let shared = Arc::new(ServerShared {
             metrics,
             models: model_infos.expect("at least one worker"),
+            admission,
         });
         Ok(Server {
             listener,
@@ -577,8 +646,9 @@ impl Drop for Server {
 }
 
 /// Build an error response in the request's protocol shape: v0 keeps the
-/// legacy string `error` and adds the machine-readable `code`; v1 carries
-/// the structured `error` object.
+/// legacy string `error` and adds the machine-readable `code`; v1 and v2
+/// carry the structured `error` object (v2 only differs in the echoed
+/// version number).
 fn protocol_error(
     proto: Proto,
     id: Option<&str>,
@@ -596,8 +666,8 @@ fn protocol_error(
             fields.push(("error", Json::str(message)));
             fields.push(("code", Json::str(code)));
         }
-        Proto::V1 => {
-            fields.push(("v", Json::num(1)));
+        Proto::V1 | Proto::V2 => {
+            fields.push(("v", Json::num(proto.version().expect("versioned proto"))));
             if let Some(id) = id {
                 fields.push(("id", Json::str(id)));
             }
@@ -618,7 +688,7 @@ fn protocol_error(
 }
 
 /// Build the success response for one served request (v0 shape is exactly
-/// the pre-router schema; v1 adds `v` and `model`).
+/// the pre-router schema; v1/v2 add `v` and `model`).
 fn ok_response(
     req: &Request,
     out: &crate::engine::FeatureMap,
@@ -642,8 +712,8 @@ fn ok_response(
         ("queue_ms", Json::num(queue_ms)),
         ("tasks", Json::num(stats.tasks as f64)),
     ];
-    if req.proto == Proto::V1 {
-        fields.push(("v", Json::num(1)));
+    if let Some(v) = req.proto.version() {
+        fields.push(("v", Json::num(v)));
         fields.push(("model", Json::str(req.model.clone())));
     }
     if req.return_output {
@@ -699,6 +769,17 @@ fn worker_loop(
         let Some((model, batch)) = queues.pop_batch(&drains) else {
             break; // closed and fully drained
         };
+        // Report post-drain queue depths: the `queue_depth{model=...}`
+        // gauge plus the arbiter-visible pressure signal the governor
+        // keeps per tenant.
+        for (name, depth) in queues.depths() {
+            if let Some(mm) = model_metrics.get(&name) {
+                mm.queue_depth.set(depth as u64);
+            }
+            if let Some(g) = &governor {
+                g.note_queue_depth(&name, depth);
+            }
+        }
         // Consult the governor at the batch boundary (the only place
         // engines may swap), with the queue lock released: sample live
         // RSS, record the observability gauges, log a ladder step once
@@ -778,6 +859,31 @@ fn worker_loop(
             continue;
         };
         let mm = model_metrics.get(&model);
+        // Drop requests whose v2 deadline already passed — at drain time,
+        // before any work: the client gets `deadline_exceeded` instead of
+        // an answer it stopped waiting for, the batch does not burn
+        // capacity on it, and the governor learns the miss either way.
+        let now = Instant::now();
+        let (batch, expired): (Vec<Request>, Vec<Request>) =
+            batch.into_iter().partition(|r| !r.deadline.is_some_and(|d| now >= d));
+        for req in expired {
+            if let Some(mm) = mm {
+                mm.rejected_deadline.inc();
+            }
+            if let Some(g) = &governor {
+                g.record_deadline(&model, false);
+            }
+            let _ = req.respond.send(protocol_error(
+                req.proto,
+                Some(&req.id),
+                Some(&req.model),
+                error_code::DEADLINE_EXCEEDED,
+                "deadline exceeded: request expired before a worker drained it",
+            ));
+        }
+        if batch.is_empty() {
+            continue;
+        }
         // Split out requests whose image cannot run BEFORE batching, using
         // the engine's own validation predicate (the same check
         // `infer_batch` enforces — one rule, no drift): each gets its
@@ -824,6 +930,13 @@ fn worker_loop(
                     if let Some(mm) = mm {
                         mm.requests.inc();
                     }
+                    // Deadline bookkeeping for served v2 requests: met if
+                    // the answer lands before the deadline, missed if the
+                    // batch finished too late (the response is still
+                    // sent — only drain-time expiry drops).
+                    if let (Some(d), Some(g)) = (req.deadline, &governor) {
+                        g.record_deadline(&model, Instant::now() < d);
+                    }
                     let _ = req.respond.send(ok_response(req, out, stats, *q_ms));
                 }
             }
@@ -867,12 +980,18 @@ fn handle_conn(
     Ok(())
 }
 
-/// Fields each command accepts; anything else is a `bad_request` — a typo
-/// like `"imge"` must surface, not silently serve a synthetic image.
-fn allowed_fields(cmd: &str) -> Option<&'static [&'static str]> {
-    match cmd {
-        "infer" => Some(&["v", "cmd", "model", "id", "seed", "image", "return_output"]),
-        "ping" | "metrics" => Some(&["v", "cmd", "model", "id"]),
+/// Fields each command accepts *under the request's protocol version*;
+/// anything else is a `bad_request` — a typo like `"imge"` must surface,
+/// not silently serve a synthetic image, and a v2-only field like
+/// `deadline_ms` in a v0/v1 request must surface rather than be silently
+/// ignored.
+fn allowed_fields(cmd: &str, proto: Proto) -> Option<&'static [&'static str]> {
+    match (cmd, proto) {
+        ("infer", Proto::V2) => {
+            Some(&["v", "cmd", "model", "id", "seed", "image", "return_output", "deadline_ms"])
+        }
+        ("infer", _) => Some(&["v", "cmd", "model", "id", "seed", "image", "return_output"]),
+        ("ping" | "metrics", _) => Some(&["v", "cmd", "model", "id"]),
         _ => None,
     }
 }
@@ -899,13 +1018,15 @@ fn process_line(line: &str, queues: &RequestQueues, shared: &ServerShared) -> Js
         None => Proto::V0,
         Some(v) => match v.as_f64() {
             Ok(f) if f == 1.0 => Proto::V1,
+            Ok(f) if f == 2.0 => Proto::V2,
             _ => {
                 return protocol_error(
                     Proto::V0,
                     id_ref,
                     None,
                     BAD_REQUEST,
-                    "unsupported protocol version (this server speaks \"v\":1 and legacy v0)",
+                    "unsupported protocol version (this server speaks \"v\":1, \"v\":2, and \
+                     legacy v0)",
                 );
             }
         },
@@ -925,7 +1046,7 @@ fn process_line(line: &str, queues: &RequestQueues, shared: &ServerShared) -> Js
             }
         },
     };
-    let Some(allowed) = allowed_fields(cmd) else {
+    let Some(allowed) = allowed_fields(cmd, proto) else {
         return protocol_error(
             proto,
             id_ref,
@@ -975,8 +1096,8 @@ fn process_line(line: &str, queues: &RequestQueues, shared: &ServerShared) -> Js
     match cmd {
         "ping" => {
             let mut out = vec![("ok", Json::Bool(true))];
-            if proto == Proto::V1 {
-                out.push(("v", Json::num(1)));
+            if let Some(v) = proto.version() {
+                out.push(("v", Json::num(v)));
             }
             Json::obj(out)
         }
@@ -985,14 +1106,28 @@ fn process_line(line: &str, queues: &RequestQueues, shared: &ServerShared) -> Js
                 ("ok", Json::Bool(true)),
                 ("metrics", Json::str(shared.metrics.snapshot())),
             ];
-            if proto == Proto::V1 {
-                out.push(("v", Json::num(1)));
+            if let Some(v) = proto.version() {
+                out.push(("v", Json::num(v)));
                 out.push(("model", Json::str(model.clone())));
             }
             Json::obj(out)
         }
         "infer" => {
             let id = id.unwrap_or_else(|| "anon".to_string());
+            let mm = shared.metrics.model(&model);
+            // Admission runs before anything else is spent on the request
+            // — no image parse, no queue push: an over-rate tenant's spike
+            // is answered immediately and cannot starve its neighbours.
+            if !shared.admission.admit(&model) {
+                mm.rejected_admission.inc();
+                return protocol_error(
+                    proto,
+                    Some(&id),
+                    Some(&model),
+                    ADMISSION_REJECTED,
+                    &format!("admission rejected: model {model:?} is over its admission rate"),
+                );
+            }
             let image: Vec<f32> = match req.get_opt("image") {
                 Some(arr) => {
                     let parsed: Result<Vec<f32>> = (|| {
@@ -1046,6 +1181,27 @@ fn process_line(line: &str, queues: &RequestQueues, shared: &ServerShared) -> Js
                     );
                 }
             };
+            // v2 deadline: milliseconds the client will still wait,
+            // resolved to an absolute instant now (arrival time) so queue
+            // wait counts against it. `allowed_fields` already rejected
+            // the field for v0/v1.
+            let deadline = match req.get_opt("deadline_ms") {
+                None => None,
+                Some(d) => match d.as_f64() {
+                    Ok(ms) if ms.is_finite() && ms >= 0.0 => {
+                        Some(Instant::now() + std::time::Duration::from_secs_f64(ms / 1e3))
+                    }
+                    _ => {
+                        return protocol_error(
+                            proto,
+                            Some(&id),
+                            Some(&model),
+                            BAD_REQUEST,
+                            "field \"deadline_ms\" must be a non-negative number of milliseconds",
+                        );
+                    }
+                },
+            };
             let (tx, rx) = std::sync::mpsc::channel();
             let request = Request {
                 id: id.clone(),
@@ -1055,24 +1211,31 @@ fn process_line(line: &str, queues: &RequestQueues, shared: &ServerShared) -> Js
                 return_output,
                 respond: tx,
                 enqueued: Instant::now(),
+                deadline,
             };
             match queues.push(&model, request) {
-                Ok(()) => rx.recv().unwrap_or_else(|_| {
+                Ok(()) => {
+                    mm.admitted.inc();
+                    rx.recv().unwrap_or_else(|_| {
+                        protocol_error(
+                            proto,
+                            Some(&id),
+                            Some(&model),
+                            INTERNAL,
+                            &format!("worker dropped request {id}"),
+                        )
+                    })
+                }
+                Err(PushError::QueueFull) => {
+                    mm.rejected_queue_full.inc();
                     protocol_error(
                         proto,
                         Some(&id),
                         Some(&model),
-                        INTERNAL,
-                        &format!("worker dropped request {id}"),
+                        QUEUE_FULL,
+                        "overloaded: queue full (backpressure)",
                     )
-                }),
-                Err(PushError::QueueFull) => protocol_error(
-                    proto,
-                    Some(&id),
-                    Some(&model),
-                    QUEUE_FULL,
-                    "overloaded: queue full (backpressure)",
-                ),
+                }
                 Err(PushError::UnknownModel) => protocol_error(
                     proto,
                     Some(&id),
@@ -1114,6 +1277,12 @@ pub struct BundleSpec {
 /// * `budget_bytes: None` with an explicit config serves statically (the
 ///   pre-governor behaviour); with no config it is an error — there is
 ///   nothing to pick against.
+/// * `gov_cfg` carries the watermark/streak knobs (`--high-watermark`,
+///   `--low-watermark`, `--hysteresis-wakes`); it is validated up front
+///   even when no governor is armed, so a bad band is an error rather
+///   than silently unused.
+/// * `admit` carries the per-model `--admit NAME=RATE:BURST` rules.
+#[allow(clippy::too_many_arguments)] // CLI entry; the one caller is cmd_serve
 pub fn serve_cli(
     bundles: &[BundleSpec],
     config: Option<MultiConfig>,
@@ -1121,6 +1290,8 @@ pub fn serve_cli(
     cfg: ServerConfig,
     budget_bytes: Option<u64>,
     params: &PredictorParams,
+    gov_cfg: GovernorConfig,
+    admit: Vec<AdmissionRule>,
 ) -> Result<()> {
     if bundles.is_empty() {
         anyhow::bail!("serve needs at least one --bundle");
@@ -1128,6 +1299,16 @@ pub fn serve_cli(
     if bundles.len() > 1 && config.is_some() {
         anyhow::bail!("--config pins one shape and needs exactly one --bundle");
     }
+    gov_cfg.validate()?;
+    for rule in &admit {
+        if !bundles.iter().any(|b| b.name == rule.model) {
+            anyhow::bail!(
+                "--admit names model {:?} but no --bundle serves it",
+                rule.model
+            );
+        }
+    }
+    let admission = Admission::new(admit)?;
     let workers = cfg.workers.max(1);
     // Each bundle's weight stage runs once here; every worker's engine and
     // every governor hot-swap of that model share it (weights packed once
@@ -1216,7 +1397,7 @@ pub fn serve_cli(
             budget,
             cfg.max_batch,
             workers,
-            GovernorConfig::default(),
+            gov_cfg,
         )?)),
         _ => None,
     };
@@ -1235,7 +1416,8 @@ pub fn serve_cli(
             }
         })
         .collect();
-    let server = Server::start_multi(models, addr, cfg, gov)?;
+    let server =
+        Server::start_multi_admitted(models, addr, cfg, gov, ServeHooks::default(), admission)?;
     server.run()
 }
 
@@ -1391,6 +1573,7 @@ mod tests {
             return_output: false,
             respond: tx,
             enqueued: Instant::now(),
+            deadline: None,
         }
     }
 
@@ -1438,9 +1621,10 @@ mod tests {
         let err = r.get("error").unwrap();
         assert_eq!(err.str_at("code").unwrap(), error_code::BAD_REQUEST);
         assert!(err.str_at("message").unwrap().contains("imge"));
-        // An unsupported version is bad_request too.
-        let r = process_line(r#"{"v":2,"cmd":"ping"}"#, &q, &shared);
+        // An unsupported version is bad_request too (v2 is spoken now).
+        let r = process_line(r#"{"v":3,"cmd":"ping"}"#, &q, &shared);
         assert_eq!(r.str_at("code").unwrap(), error_code::BAD_REQUEST);
+        assert!(r.str_at("error").unwrap().contains("\"v\":2"), "{r:?}");
     }
 
     #[test]
@@ -1519,9 +1703,82 @@ mod tests {
         q.push("m", dummy_request("m")).unwrap();
         assert_eq!(q.push("m", dummy_request("m")), Err(PushError::QueueFull));
         assert_eq!(q.push("nope", dummy_request("nope")), Err(PushError::UnknownModel));
+        assert_eq!(q.depths(), vec![("m".to_string(), 2)]);
         let drains: BTreeMap<String, usize> = [("m".to_string(), 1)].into();
         let (_, b) = q.pop_batch(&drains).unwrap();
         assert_eq!(b.len(), 1, "drain 1 takes one request, not the backlog");
+        assert_eq!(q.depths(), vec![("m".to_string(), 1)]);
+    }
+
+    #[test]
+    fn v2_ping_and_metrics_echo_the_version() {
+        let shared = ServerShared::default();
+        let q = test_queues(&shared, 4);
+        let r = process_line(r#"{"v":2,"cmd":"ping"}"#, &q, &shared);
+        assert!(r.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(r.get("v").unwrap().as_f64().unwrap(), 2.0);
+        let r = process_line(r#"{"v":2,"cmd":"metrics"}"#, &q, &shared);
+        assert_eq!(r.get("v").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(r.str_at("model").unwrap(), "default");
+    }
+
+    #[test]
+    fn deadline_ms_is_v2_only_and_must_be_a_non_negative_number() {
+        let shared = ServerShared::default();
+        let q = test_queues(&shared, 4);
+        // v0 and v1 do not speak deadline_ms: unknown field, not ignored.
+        let r = process_line(r#"{"cmd":"infer","id":"d0","deadline_ms":5}"#, &q, &shared);
+        assert_eq!(r.str_at("code").unwrap(), error_code::BAD_REQUEST);
+        assert!(r.str_at("error").unwrap().contains("deadline_ms"), "{r:?}");
+        let r = process_line(r#"{"v":1,"cmd":"infer","id":"d1","deadline_ms":5}"#, &q, &shared);
+        let err = r.get("error").unwrap();
+        assert_eq!(err.str_at("code").unwrap(), error_code::BAD_REQUEST);
+        assert!(err.str_at("message").unwrap().contains("deadline_ms"));
+        // v2 rejects ill-typed values with the field named.
+        for bad in [
+            r#"{"v":2,"cmd":"infer","id":"d2","deadline_ms":-1}"#,
+            r#"{"v":2,"cmd":"infer","id":"d2","deadline_ms":"soon"}"#,
+        ] {
+            let r = process_line(bad, &q, &shared);
+            let err = r.get("error").unwrap();
+            assert_eq!(err.str_at("code").unwrap(), error_code::BAD_REQUEST);
+            assert!(err.str_at("message").unwrap().contains("deadline_ms"), "{r:?}");
+            assert_eq!(r.get("v").unwrap().as_f64().unwrap(), 2.0);
+        }
+    }
+
+    #[test]
+    fn admission_rejection_is_structured_in_every_protocol_and_spares_the_queue() {
+        // Rate 0: deterministic rejection of every request for "default".
+        let shared = ServerShared {
+            admission: Admission::new(vec!["default=0:1".parse().unwrap()]).unwrap(),
+            ..ServerShared::default()
+        };
+        let q = test_queues(&shared, 1);
+        // v0: legacy error string plus the additive code.
+        let r = process_line(r#"{"cmd":"infer","id":"a0","seed":1}"#, &q, &shared);
+        assert_eq!(r.str_at("code").unwrap(), error_code::ADMISSION_REJECTED);
+        assert!(r.str_at("error").unwrap().contains("admission"), "{r:?}");
+        assert_eq!(r.str_at("id").unwrap(), "a0");
+        // v1/v2: structured error object, version echoed.
+        for (line, v) in [
+            (r#"{"v":1,"cmd":"infer","id":"a1","seed":1}"#, 1.0),
+            (r#"{"v":2,"cmd":"infer","id":"a2","seed":1,"deadline_ms":50}"#, 2.0),
+        ] {
+            let r = process_line(line, &q, &shared);
+            let err = r.get("error").unwrap();
+            assert_eq!(err.str_at("code").unwrap(), error_code::ADMISSION_REJECTED);
+            assert_eq!(r.get("v").unwrap().as_f64().unwrap(), v);
+            assert_eq!(r.str_at("model").unwrap(), "default");
+        }
+        // Rejection happened before the depth-1 queue was touched.
+        assert!(q.push("default", dummy_request("default")).is_ok());
+        // And the per-model rejection counter saw all three.
+        let snap = shared.metrics.snapshot();
+        assert!(
+            snap.contains("rejected{model=default,reason=admission_rejected} 3"),
+            "{snap}"
+        );
     }
 
     // (The factory-failure path of Server::start is covered by the

@@ -223,6 +223,19 @@ pub struct ModelMetrics {
     pub governor_rung: Gauge,
     /// The governor-derived per-wake drain for this model's queue.
     pub governor_drain: Gauge,
+    /// Requests that passed this model's admission gate and were enqueued.
+    pub admitted: Counter,
+    /// Requests refused before enqueue: over the admission rate
+    /// (`rejected{reason=admission_rejected}`).
+    pub rejected_admission: Counter,
+    /// v2 requests dropped at drain time because their deadline passed
+    /// (`rejected{reason=deadline_exceeded}`).
+    pub rejected_deadline: Counter,
+    /// Requests refused at enqueue because the bounded queue was at depth
+    /// (`rejected{reason=queue_full}`).
+    pub rejected_queue_full: Counter,
+    /// This model's queue depth as sampled at the last worker wake.
+    pub queue_depth: Gauge,
 }
 
 /// Registry of named metrics for one engine/server instance.
@@ -315,17 +328,28 @@ impl Metrics {
             .unwrap()
             .iter()
             .map(|(name, m)| {
+                // The pre-admission lines keep their exact order and
+                // shapes; admission/deadline lines are appended after.
                 format!(
                     "requests{{model={name}}} {}\nerrors{{model={name}}} {}\n\
                      governor_rung{{model={name}}} {}\ngovernor_drain{{model={name}}} {}\n\
                      governor_swaps{{model={name},dir=down}} {}\n\
-                     governor_swaps{{model={name},dir=up}} {}\n",
+                     governor_swaps{{model={name},dir=up}} {}\n\
+                     admitted{{model={name}}} {}\nqueue_depth{{model={name}}} {}\n\
+                     rejected{{model={name},reason=admission_rejected}} {}\n\
+                     rejected{{model={name},reason=deadline_exceeded}} {}\n\
+                     rejected{{model={name},reason=queue_full}} {}\n",
                     m.requests.get(),
                     m.errors.get(),
                     m.governor_rung.get(),
                     m.governor_drain.get(),
                     m.governor_swaps_down.get(),
-                    m.governor_swaps_up.get()
+                    m.governor_swaps_up.get(),
+                    m.admitted.get(),
+                    m.queue_depth.get(),
+                    m.rejected_admission.get(),
+                    m.rejected_deadline.get(),
+                    m.rejected_queue_full.get()
                 )
             })
             .collect();
@@ -424,6 +448,24 @@ mod tests {
         assert!(s.contains("requests{model=mobile} 1"), "{s}");
         // Aggregate lines stay unlabelled and untouched.
         assert!(s.contains("governor_swaps{dir=down} 0"), "{s}");
+        // Admission/deadline lines are present (zeroed) for every slice...
+        assert!(s.contains("admitted{model=yolo} 0"), "{s}");
+        assert!(s.contains("queue_depth{model=yolo} 0"), "{s}");
+        assert!(s.contains("rejected{model=yolo,reason=admission_rejected} 0"), "{s}");
+        assert!(s.contains("rejected{model=yolo,reason=deadline_exceeded} 0"), "{s}");
+        assert!(s.contains("rejected{model=yolo,reason=queue_full} 0"), "{s}");
+        // ...and track their counters.
+        a.admitted.add(9);
+        a.queue_depth.set(4);
+        a.rejected_admission.add(3);
+        a.rejected_deadline.add(2);
+        a.rejected_queue_full.inc();
+        let s = m.snapshot();
+        assert!(s.contains("admitted{model=yolo} 9"), "{s}");
+        assert!(s.contains("queue_depth{model=yolo} 4"), "{s}");
+        assert!(s.contains("rejected{model=yolo,reason=admission_rejected} 3"), "{s}");
+        assert!(s.contains("rejected{model=yolo,reason=deadline_exceeded} 2"), "{s}");
+        assert!(s.contains("rejected{model=yolo,reason=queue_full} 1"), "{s}");
     }
 
     #[test]

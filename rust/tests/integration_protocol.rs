@@ -1,0 +1,747 @@
+//! Serving-protocol conformance suite: one live server, a committed corpus
+//! of v0/v1/v2 request lines, and the exact response shape each must get.
+//!
+//! Error responses carry no timing fields, and `jsonlite` serializes
+//! deterministically (key-sorted, compact, integral floats as integers),
+//! so every statically-known error is pinned **byte for byte** — a future
+//! protocol rev that changes v0/v1 shapes fails here, not in a client.
+//! Success responses carry latencies, so they are pinned as exact key
+//! sets instead.
+//!
+//! Every structured error code is driven in all three protocol versions:
+//! `bad_request`, `unknown_model`, `bad_image`, `queue_full`,
+//! `admission_rejected`, `internal` — and `deadline_exceeded` in v2, the
+//! only version that can carry a deadline (in v0/v1 the `deadline_ms`
+//! field itself is a pinned `bad_request`).
+
+use mafat::coordinator::{
+    ladder_from_manifest, Admission, GovernorConfig, MemoryGovernor, ModelSpec, QosClass,
+    ServeHooks, Server, ServerConfig, TenantSpec,
+};
+use mafat::engine::Engine;
+use mafat::jsonlite::Json;
+use mafat::network::{LayerKind, Network, MIB};
+use mafat::plan::MultiConfig;
+use mafat::predictor::PredictorParams;
+use mafat::runtime::export::{write_reference_bundle, ExportSpec};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+fn conv(filters: usize, size: usize) -> LayerKind {
+    LayerKind::Conv {
+        filters,
+        size,
+        stride: 1,
+        pad: size / 2,
+    }
+}
+
+fn maxpool() -> LayerKind {
+    LayerKind::MaxPool { size: 2, stride: 2 }
+}
+
+/// The interactive tenant's tiny net (32x32x3), low-millisecond work.
+fn tiny_net() -> Network {
+    Network::from_ops(
+        "tiny-proto",
+        32,
+        32,
+        3,
+        &[conv(8, 3), maxpool(), conv(16, 3), maxpool(), conv(16, 1)],
+    )
+}
+
+fn tiny_bundle() -> &'static str {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("mafat-test-proto-{}", std::process::id()));
+        let net = tiny_net();
+        write_reference_bundle(
+            &dir,
+            &[ExportSpec {
+                net: &net,
+                configs: vec!["1x1/NoCut".parse().unwrap(), "2x2/NoCut".parse().unwrap()],
+                emit_full: true,
+            }],
+        )
+        .expect("export reference bundle");
+        dir
+    })
+    .to_str()
+    .unwrap()
+}
+
+/// A second, differently shaped net for the batch tenants.
+fn tiny_net_b() -> Network {
+    Network::from_ops("tiny-proto-b", 32, 32, 3, &[conv(4, 3), maxpool(), conv(8, 3)])
+}
+
+fn tiny_bundle_b() -> &'static str {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("mafat-test-proto-b-{}", std::process::id()));
+        let net = tiny_net_b();
+        write_reference_bundle(
+            &dir,
+            &[ExportSpec {
+                net: &net,
+                configs: vec!["1x1/NoCut".parse().unwrap(), "2x2/NoCut".parse().unwrap()],
+                emit_full: true,
+            }],
+        )
+        .expect("export second reference bundle");
+        dir
+    })
+    .to_str()
+    .unwrap()
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    /// One request -> the raw response line, newline trimmed (the byte pin).
+    fn raw_call(&mut self, req: &str) -> String {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line.trim_end_matches('\n').to_string()
+    }
+
+    fn call(&mut self, req: &str) -> Json {
+        let line = self.raw_call(req);
+        Json::parse(&line).unwrap()
+    }
+}
+
+// ------------------------------------------------------------ byte pins
+
+/// The v0 error line (pre-PR legacy shape): key-sorted compact JSON with
+/// the string `error` and additive `code`. `msg` is the message as it
+/// appears in the JSON text (quotes pre-escaped).
+fn err_v0(id: Option<&str>, code: &str, msg: &str) -> String {
+    let mut s = format!(r#"{{"code":"{code}","error":"{msg}""#);
+    if let Some(id) = id {
+        s.push_str(&format!(r#","id":"{id}""#));
+    }
+    s.push_str(r#","ok":false}"#);
+    s
+}
+
+/// The v1/v2 error line: structured `error` object, echoed `v` (and
+/// `model` when routing got that far).
+fn err_vn(v: u32, id: &str, model: Option<&str>, code: &str, msg: &str) -> String {
+    let mut s = format!(r#"{{"error":{{"code":"{code}","message":"{msg}"}},"id":"{id}""#);
+    if let Some(m) = model {
+        s.push_str(&format!(r#","model":"{m}""#));
+    }
+    s.push_str(&format!(r#","ok":false,"v":{v}}}"#));
+    s
+}
+
+/// Exact key set of a response object (success shapes carry latencies, so
+/// they pin keys, not bytes).
+fn assert_keys(r: &Json, expected: &[&str]) {
+    let Json::Obj(map) = r else {
+        panic!("response is not an object: {r:?}")
+    };
+    let keys: Vec<&str> = map.keys().map(String::as_str).collect();
+    assert_eq!(keys, expected, "{r:?}");
+}
+
+fn error_code_of(r: &Json) -> String {
+    // v0 carries the code at top level; v1/v2 inside the error object.
+    match r.str_at("code") {
+        Ok(c) => c.to_string(),
+        Err(_) => r.get("error").unwrap().str_at("code").unwrap().to_string(),
+    }
+}
+
+/// The conformance server: three models behind one listener.
+/// * `default` — interactive, tiny bundle (the v0 legacy route).
+/// * `gate`    — batch, second bundle, its batches held by a test gate
+///   (started/release channels) so `queue_full` is deterministic.
+/// * `limited` — batch, second bundle, admission rate 0 (always rejects).
+type GateServer = (Server, std::sync::mpsc::Receiver<()>, std::sync::mpsc::Sender<()>);
+
+fn start_conformance_server() -> GateServer {
+    let dir_a = tiny_bundle().to_string();
+    let dir_b = tiny_bundle_b().to_string();
+    let dir_c = dir_b.clone();
+    let ca: MultiConfig = "2x2/NoCut".parse().unwrap();
+    let cb: MultiConfig = "2x2/NoCut".parse().unwrap();
+    let cc: MultiConfig = "1x1/NoCut".parse().unwrap();
+    let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+    let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+    // mpsc endpoints are Send but not Sync; the hook closure must be Sync.
+    let started_tx = Mutex::new(started_tx);
+    let release_rx = Mutex::new(release_rx);
+    let hooks = ServeHooks {
+        rss_sampler: None,
+        after_batch: Some(Arc::new(move |model: &str, _len: usize| {
+            if model == "gate" {
+                started_tx.lock().unwrap().send(()).unwrap();
+                let _ = release_rx.lock().unwrap().recv();
+            }
+        })),
+    };
+    let admission = Admission::new(vec!["limited=0:1".parse().unwrap()]).unwrap();
+    let server = Server::start_multi_admitted(
+        vec![
+            ModelSpec {
+                name: "default".into(),
+                qos: QosClass::Interactive,
+                factory: Box::new(move || Engine::load(&dir_a, ca.clone())),
+            },
+            ModelSpec {
+                name: "gate".into(),
+                qos: QosClass::Batch,
+                factory: Box::new(move || Engine::load(&dir_b, cb.clone())),
+            },
+            ModelSpec {
+                name: "limited".into(),
+                qos: QosClass::Batch,
+                factory: Box::new(move || Engine::load(&dir_c, cc.clone())),
+            },
+        ],
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 1,
+            queue_depth: 1,
+            ..ServerConfig::default()
+        },
+        None,
+        hooks,
+        admission,
+    )
+    .unwrap();
+    (server, started_rx, release_tx)
+}
+
+/// One deterministic `queue_full` round under `prefix` (the request's
+/// `"v":N,` text, empty for v0): blocker A drains alone and parks in the
+/// gate, then B and C race for the single queue slot — the first response
+/// to land MUST be the loser's `queue_full` (the winner cannot finish
+/// while the gate is held), then both held requests complete ok.
+fn queue_full_round(
+    addr: std::net::SocketAddr,
+    prefix: &'static str,
+    started_rx: &std::sync::mpsc::Receiver<()>,
+    release_tx: &std::sync::mpsc::Sender<()>,
+) {
+    let (res_tx, res_rx) = std::sync::mpsc::channel::<Json>();
+    let send = |id: &'static str| {
+        let tx = res_tx.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            let r = c.call(&format!(
+                r#"{{{prefix}"cmd":"infer","model":"gate","id":"{id}","seed":0}}"#
+            ));
+            tx.send(r).unwrap();
+        })
+    };
+    let a = send("qa");
+    started_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("blocker batch never reached the gate");
+    let b = send("qb");
+    let c = send("qc");
+    // With the worker parked in the gate nothing can drain: one of B/C
+    // takes the depth-1 queue slot, the other is rejected synchronously —
+    // so the first finished response is deterministically the loser.
+    let loser = res_rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!(error_code_of(&loser), "queue_full", "{loser:?}");
+    assert!(
+        loser
+            .get("error")
+            .unwrap()
+            .to_string_compact()
+            .contains("overloaded: queue full (backpressure)"),
+        "{loser:?}"
+    );
+    release_tx.send(()).unwrap(); // A completes
+    started_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("winner batch never reached the gate");
+    release_tx.send(()).unwrap(); // the winner completes
+    let r1 = res_rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    let r2 = res_rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    for r in [&r1, &r2] {
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+    }
+    for h in [a, b, c] {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn conformance_corpus_pins_every_error_code_across_protocol_versions() {
+    let (server, started_rx, release_tx) = start_conformance_server();
+    let addr = server.local_addr;
+    let server = Arc::new(server);
+    let accept = server.clone();
+    std::thread::spawn(move || {
+        let _ = accept.run();
+    });
+    let mut c = Client::connect(addr);
+
+    // ---- liveness: ping is fully deterministic -> byte pins in all
+    // three versions (v0 must stay the exact pre-v1 shape).
+    assert_eq!(c.raw_call(r#"{"cmd":"ping"}"#), r#"{"ok":true}"#);
+    assert_eq!(c.raw_call(r#"{"v":1,"cmd":"ping"}"#), r#"{"ok":true,"v":1}"#);
+    assert_eq!(c.raw_call(r#"{"v":2,"cmd":"ping"}"#), r#"{"ok":true,"v":2}"#);
+
+    // ---- metrics: snapshot text varies -> exact key sets per version.
+    assert_keys(&c.call(r#"{"cmd":"metrics"}"#), &["metrics", "ok"]);
+    assert_keys(&c.call(r#"{"v":1,"cmd":"metrics"}"#), &["metrics", "model", "ok", "v"]);
+    assert_keys(&c.call(r#"{"v":2,"cmd":"metrics"}"#), &["metrics", "model", "ok", "v"]);
+
+    // ---- success shapes: latencies vary -> exact key sets per version,
+    // plus determinism (same seed, same checksum) across versions.
+    let v0_keys = ["checksum", "id", "latency_ms", "ok", "queue_ms", "shape", "tasks"];
+    let vn_keys =
+        ["checksum", "id", "latency_ms", "model", "ok", "queue_ms", "shape", "tasks", "v"];
+    let r0 = c.call(r#"{"cmd":"infer","id":"i0","seed":7}"#);
+    assert_keys(&r0, &v0_keys);
+    let r1 = c.call(r#"{"v":1,"cmd":"infer","id":"i1","seed":7}"#);
+    assert_keys(&r1, &vn_keys);
+    assert_eq!(r1.get("v").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(r1.str_at("model").unwrap(), "default");
+    let r2 = c.call(r#"{"v":2,"cmd":"infer","id":"i2","seed":7}"#);
+    assert_keys(&r2, &vn_keys);
+    assert_eq!(r2.get("v").unwrap().as_f64().unwrap(), 2.0);
+    let sum = |r: &Json| r.get("checksum").unwrap().as_f64().unwrap();
+    assert_eq!(sum(&r0), sum(&r1), "checksum must not depend on the protocol version");
+    assert_eq!(sum(&r0), sum(&r2));
+    // return_output adds exactly the output array.
+    let ro = c.call(r#"{"v":2,"cmd":"infer","id":"io","seed":7,"return_output":true}"#);
+    let mut with_output = vn_keys.to_vec();
+    with_output.insert(5, "output"); // sorted position: after "ok"
+    assert_keys(&ro, &with_output);
+    // A generous v2 deadline is carried and met: plain success shape.
+    let dl_ok = c.call(r#"{"v":2,"cmd":"infer","id":"dlok","seed":3,"deadline_ms":60000}"#);
+    assert_keys(&dl_ok, &vn_keys);
+
+    // ---- bad_request corpus: every parse/validation rejection, byte-
+    // pinned where the message is statically known.
+    // Garbage and truncated JSON (parser message varies -> code pin).
+    for junk in ["not json", r#"{"cmd":"ping""#, "}{"] {
+        let r = c.call(junk);
+        assert!(!r.get("ok").unwrap().as_bool().unwrap(), "{junk:?}");
+        assert_eq!(error_code_of(&r), "bad_request", "{junk:?}");
+    }
+    // A huge garbage payload neither kills the connection nor the worker.
+    let huge = "x".repeat(512 * 1024);
+    assert_eq!(error_code_of(&c.call(&huge)), "bad_request");
+    assert_eq!(c.raw_call(r#"{"cmd":"ping"}"#), r#"{"ok":true}"#);
+    // Non-object request.
+    assert_eq!(
+        c.raw_call("[1,2,3]"),
+        err_v0(None, "bad_request", "request must be a JSON object"),
+    );
+    // Unsupported version (the response is v0-shaped: the server cannot
+    // know the dialect of a version it does not speak).
+    assert_eq!(
+        c.raw_call(r#"{"v":3,"cmd":"ping","id":"v3"}"#),
+        err_v0(
+            Some("v3"),
+            "bad_request",
+            r#"unsupported protocol version (this server speaks \"v\":1, \"v\":2, and legacy v0)"#,
+        ),
+    );
+    // Unknown cmd, ill-typed cmd/model/seed/return_output.
+    assert_eq!(
+        c.raw_call(r#"{"cmd":"nonsense","id":"c0"}"#),
+        err_v0(
+            Some("c0"),
+            "bad_request",
+            r#"unknown cmd \"nonsense\" (expected infer, metrics, or ping)"#,
+        ),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"cmd":5,"id":"c1"}"#),
+        err_v0(Some("c1"), "bad_request", r#"field \"cmd\" must be a string"#),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"cmd":"infer","model":5,"id":"m1"}"#),
+        err_v0(Some("m1"), "bad_request", r#"field \"model\" must be a string"#),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"cmd":"infer","id":"s1","seed":"x"}"#),
+        err_v0(Some("s1"), "bad_request", r#"field \"seed\" must be a number"#),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"cmd":"infer","id":"b1","return_output":"yes"}"#),
+        err_v0(Some("b1"), "bad_request", r#"field \"return_output\" must be a boolean"#),
+    );
+    // An image of strings is a bad_request (shape known before any queue).
+    let r = c.call(r#"{"cmd":"infer","id":"is","image":["x","y"]}"#);
+    assert_eq!(error_code_of(&r), "bad_request");
+    // Unknown-field typo, in all three versions.
+    assert_eq!(
+        c.raw_call(r#"{"cmd":"infer","id":"t0","imge":[1]}"#),
+        err_v0(Some("t0"), "bad_request", r#"unknown field \"imge\" for cmd \"infer\""#),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"v":1,"cmd":"infer","id":"t1","imge":[1]}"#),
+        err_vn(1, "t1", None, "bad_request", r#"unknown field \"imge\" for cmd \"infer\""#),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"v":2,"cmd":"infer","id":"t2","imge":[1]}"#),
+        err_vn(2, "t2", None, "bad_request", r#"unknown field \"imge\" for cmd \"infer\""#),
+    );
+    // deadline_ms is v2-only: in v0/v1 the field itself is the pinned
+    // error (not silently ignored); in v2 a bad value is rejected.
+    assert_eq!(
+        c.raw_call(r#"{"cmd":"infer","id":"d0","seed":1,"deadline_ms":5}"#),
+        err_v0(Some("d0"), "bad_request", r#"unknown field \"deadline_ms\" for cmd \"infer\""#),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"v":1,"cmd":"infer","id":"d1","seed":1,"deadline_ms":5}"#),
+        err_vn(1, "d1", None, "bad_request", r#"unknown field \"deadline_ms\" for cmd \"infer\""#),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"v":2,"cmd":"infer","id":"d2","deadline_ms":-5}"#),
+        err_vn(
+            2,
+            "d2",
+            Some("default"),
+            "bad_request",
+            r#"field \"deadline_ms\" must be a non-negative number of milliseconds"#,
+        ),
+    );
+
+    // ---- unknown_model, all three versions (BTreeMap keeps the serving
+    // list sorted, so the message is deterministic).
+    let serving = r#"unknown model \"nope\" (serving: default, gate, limited)"#;
+    assert_eq!(
+        c.raw_call(r#"{"cmd":"infer","model":"nope","id":"u0"}"#),
+        err_v0(Some("u0"), "unknown_model", serving),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"v":1,"cmd":"infer","model":"nope","id":"u1"}"#),
+        err_vn(1, "u1", Some("nope"), "unknown_model", serving),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"v":2,"cmd":"infer","model":"nope","id":"u2"}"#),
+        err_vn(2, "u2", Some("nope"), "unknown_model", serving),
+    );
+
+    // ---- bad_image, all three versions: valid numbers, wrong element
+    // count — the engine's own validation message (contains the counts).
+    for prefix in ["", r#""v":1,"#, r#""v":2,"#] {
+        let r = c.call(&format!(
+            r#"{{{prefix}"cmd":"infer","id":"bi","image":[1.0,2.0,3.0]}}"#
+        ));
+        assert_eq!(error_code_of(&r), "bad_image", "{r:?}");
+        assert!(r.to_string_compact().contains("elems"), "{r:?}");
+    }
+
+    // ---- admission_rejected, all three versions: model `limited` has a
+    // zero-rate rule, so every request is rejected before its queue.
+    let over = r#"admission rejected: model \"limited\" is over its admission rate"#;
+    assert_eq!(
+        c.raw_call(r#"{"cmd":"infer","model":"limited","id":"adm0","seed":1}"#),
+        err_v0(Some("adm0"), "admission_rejected", over),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"v":1,"cmd":"infer","model":"limited","id":"adm1","seed":1}"#),
+        err_vn(1, "adm1", Some("limited"), "admission_rejected", over),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"v":2,"cmd":"infer","model":"limited","id":"adm2","seed":1}"#),
+        err_vn(2, "adm2", Some("limited"), "admission_rejected", over),
+    );
+
+    // ---- deadline_exceeded (v2): a zero deadline has always expired by
+    // drain time, deterministically.
+    assert_eq!(
+        c.raw_call(r#"{"v":2,"cmd":"infer","id":"dl","seed":1,"deadline_ms":0}"#),
+        err_vn(
+            2,
+            "dl",
+            Some("default"),
+            "deadline_exceeded",
+            "deadline exceeded: request expired before a worker drained it",
+        ),
+    );
+
+    // ---- queue_full, all three versions, made deterministic by the gate.
+    for prefix in ["", r#""v":1,"#, r#""v":2,"#] {
+        queue_full_round(addr, prefix, &started_rx, &release_tx);
+    }
+
+    // ---- the metrics tell the same story, with exact deterministic
+    // counts for every rejection the corpus provoked.
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    let snapshot = m.str_at("metrics").unwrap();
+    for line in [
+        "rejected{model=limited,reason=admission_rejected} 3",
+        "rejected{model=default,reason=deadline_exceeded} 1",
+        "rejected{model=gate,reason=queue_full} 3",
+        "admitted{model=limited} 0",
+        "admitted{model=gate} 6", // 3 rounds x (blocker + winner)
+    ] {
+        assert!(snapshot.contains(line), "missing {line:?} in:\n{snapshot}");
+    }
+    assert!(snapshot.contains("queue_depth{model=default} "), "{snapshot}");
+
+    // ---- internal, all three versions: a stopping server answers infer
+    // on a still-open connection with a structured error, not a hangup.
+    server.stop();
+    assert_eq!(
+        c.raw_call(r#"{"cmd":"infer","id":"x0","seed":1}"#),
+        err_v0(Some("x0"), "internal", "server shutting down"),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"v":1,"cmd":"infer","id":"x1","seed":1}"#),
+        err_vn(1, "x1", Some("default"), "internal", "server shutting down"),
+    );
+    assert_eq!(
+        c.raw_call(r#"{"v":2,"cmd":"infer","id":"x2","seed":1}"#),
+        err_vn(2, "x2", Some("default"), "internal", "server shutting down"),
+    );
+}
+
+/// Collect `output` arrays for fixed seeds under a protocol prefix.
+fn outputs_for_seeds(addr: std::net::SocketAddr, prefix: &str, seeds: &[u64]) -> Vec<Vec<f64>> {
+    let mut c = Client::connect(addr);
+    seeds
+        .iter()
+        .map(|seed| {
+            let r = c.call(&format!(
+                r#"{{{prefix}"cmd":"infer","id":"s{seed}","seed":{seed},"return_output":true}}"#
+            ));
+            assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+            r.get("output")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn admission_never_changes_the_bytes_of_an_admitted_response() {
+    // The admission satellite's identity property, end to end: a server
+    // whose rule admits everything (generous rate/burst) must produce
+    // outputs byte-identical to a server with no admission at all — the
+    // gate may only *drop* requests, never touch an admitted one.
+    let start = |admission: Admission| {
+        let dir = tiny_bundle().to_string();
+        let cfg: MultiConfig = "2x2/NoCut".parse().unwrap();
+        Server::start_multi_admitted(
+            vec![ModelSpec {
+                name: "default".into(),
+                qos: QosClass::Interactive,
+                factory: Box::new(move || Engine::load(&dir, cfg.clone())),
+            }],
+            "127.0.0.1:0",
+            ServerConfig::default(),
+            None,
+            ServeHooks::default(),
+            admission,
+        )
+        .unwrap()
+    };
+    let plain = start(Admission::default());
+    let paddr = plain.local_addr;
+    std::thread::spawn(move || {
+        let _ = plain.run();
+    });
+    let ruled = start(Admission::new(vec!["default=1000:1000".parse().unwrap()]).unwrap());
+    let raddr = ruled.local_addr;
+    std::thread::spawn(move || {
+        let _ = ruled.run();
+    });
+    let seeds: Vec<u64> = (0..6).collect();
+    for prefix in ["", r#""v":2,"#] {
+        assert_eq!(
+            outputs_for_seeds(paddr, prefix, &seeds),
+            outputs_for_seeds(raddr, prefix, &seeds),
+            "admission changed an admitted response (prefix {prefix:?})"
+        );
+    }
+}
+
+#[test]
+fn admission_shields_the_interactive_tenant_from_a_flooding_batch_tenant() {
+    // The acceptance pin: under a saturating batch-tenant flood the
+    // interactive tenant's checksums and governor rung hold exactly at
+    // their unflooded baseline, while the flooder observes structured
+    // `admission_rejected` (its spike never reaches a queue). The
+    // governor runs on an injected mid-band RSS signal (between the
+    // watermarks), so it provably holds on any host.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let params = PredictorParams {
+        bias_bytes: 0,
+        ..PredictorParams::default()
+    };
+    let budget = 100 * MIB; // watermarks at 85 / 60 MiB
+    let dir_a = tiny_bundle().to_string();
+    let dir_b = tiny_bundle_b().to_string();
+    let load = |dir: &str| {
+        let manifest = mafat::runtime::Manifest::load(std::path::Path::new(dir)).unwrap();
+        ladder_from_manifest(manifest.sole_network().unwrap(), &params).unwrap()
+    };
+    let (ladder_a, ladder_b) = (load(&dir_a), load(&dir_b));
+    let (start_a, start_b) = (ladder_a.len() - 1, ladder_b.len() - 1);
+    let (ca, cb) = (
+        ladder_a.rungs()[start_a].config.clone(),
+        ladder_b.rungs()[start_b].config.clone(),
+    );
+    let governor = Arc::new(
+        MemoryGovernor::new(
+            vec![
+                TenantSpec {
+                    name: "default".into(),
+                    ladder: ladder_a,
+                    start_rung: start_a,
+                    qos: QosClass::Interactive,
+                },
+                TenantSpec {
+                    name: "mobile".into(),
+                    ladder: ladder_b,
+                    start_rung: start_b,
+                    qos: QosClass::Batch,
+                },
+            ],
+            budget,
+            ServerConfig::default().max_batch,
+            1,
+            GovernorConfig::default(),
+        )
+        .unwrap(),
+    );
+    let hooks = ServeHooks {
+        // 70 MiB sits strictly between the 60/85 MiB watermarks: neither
+        // pressure nor headroom, so the governor holds every rung.
+        rss_sampler: Some(Arc::new(move || Some(70 * MIB))),
+        after_batch: None,
+    };
+    let admission = Admission::new(vec!["mobile=1:1".parse().unwrap()]).unwrap();
+    let server = Server::start_multi_admitted(
+        vec![
+            ModelSpec {
+                name: "default".into(),
+                qos: QosClass::Interactive,
+                factory: Box::new(move || Engine::load(&dir_a, ca.clone())),
+            },
+            ModelSpec {
+                name: "mobile".into(),
+                qos: QosClass::Batch,
+                factory: Box::new(move || Engine::load(&dir_b, cb.clone())),
+            },
+        ],
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 1,
+            ..ServerConfig::default()
+        },
+        Some(governor.clone()),
+        hooks,
+        admission,
+    )
+    .unwrap();
+    let addr = server.local_addr;
+    std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    // Unflooded baseline: checksums per seed and the held rung.
+    let mut c = Client::connect(addr);
+    let baseline: Vec<f64> = (0..2u64)
+        .map(|seed| {
+            let r = c.call(&format!(r#"{{"cmd":"infer","id":"pre{seed}","seed":{seed}}}"#));
+            assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+            r.get("checksum").unwrap().as_f64().unwrap()
+        })
+        .collect();
+    let rung_before = governor.active_rung("default").unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let flooders: Vec<_> = (0..6)
+        .map(|t| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let (mut ok, mut rejected, mut other) = (0u64, 0u64, 0u64);
+                while !stop.load(Ordering::Relaxed) {
+                    let r = c.call(&format!(
+                        r#"{{"v":2,"cmd":"infer","model":"mobile","id":"f{t}","seed":{t}}}"#
+                    ));
+                    if r.get("ok").unwrap().as_bool().unwrap() {
+                        ok += 1;
+                    } else if error_code_of(&r) == "admission_rejected" {
+                        rejected += 1;
+                    } else {
+                        other += 1;
+                    }
+                }
+                (ok, rejected, other)
+            })
+        })
+        .collect();
+
+    // Drive the interactive tenant straight through the flood.
+    std::thread::sleep(Duration::from_millis(100));
+    for i in 0..20u64 {
+        let seed = i % 2;
+        let r = c.call(&format!(r#"{{"cmd":"infer","id":"i{i}","seed":{seed}}}"#));
+        assert!(
+            r.get("ok").unwrap().as_bool().unwrap(),
+            "interactive request {i} failed mid-flood: {r:?}"
+        );
+        assert_eq!(
+            r.get("checksum").unwrap().as_f64().unwrap(),
+            baseline[seed as usize],
+            "interactive checksum drifted mid-flood (request {i})"
+        );
+    }
+    stop.store(true, Ordering::Relaxed);
+    let (mut ok, mut rejected, mut other) = (0u64, 0u64, 0u64);
+    for f in flooders {
+        let (o, r, x) = f.join().unwrap();
+        ok += o;
+        rejected += r;
+        other += x;
+    }
+    assert!(rejected > 0, "the flood never hit the admission gate (ok {ok})");
+    assert_eq!(other, 0, "flooder saw errors other than admission_rejected");
+    assert_eq!(
+        governor.active_rung("default").unwrap(),
+        rung_before,
+        "interactive rung must hold at its unflooded baseline"
+    );
+    // The rejections are visible per model in the metrics.
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    let snapshot = m.str_at("metrics").unwrap();
+    let rejected_line: u64 = snapshot
+        .lines()
+        .find_map(|l| l.strip_prefix("rejected{model=mobile,reason=admission_rejected} "))
+        .unwrap_or_else(|| panic!("missing admission line in {snapshot}"))
+        .trim()
+        .parse()
+        .unwrap();
+    assert_eq!(rejected_line, rejected, "metrics must count every rejection");
+}

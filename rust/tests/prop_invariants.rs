@@ -4,7 +4,7 @@
 //! deterministic driver over the crate's SplitMix64 — every failure prints
 //! the seed, and re-running with that seed reproduces the case exactly.
 
-use mafat::coordinator::derive_drain;
+use mafat::coordinator::{derive_drain, TokenBucket};
 use mafat::data::SplitMix64;
 use mafat::engine::{gen_network_weights, FeatureMap, WEIGHT_SEED};
 use mafat::ftp::{balance_spans, down_extent, plan_group, plan_group_from_bounds, Rect};
@@ -623,5 +623,87 @@ fn prop_governor_drain_bounded_and_monotone_in_budget() {
         }
         // Degenerate prediction (0 bytes/image) falls back to the cap.
         assert_eq!(derive_drain(budget, 0, max_batch, workers), cap);
+    });
+}
+
+/// A random bucket: rate in [0, ~8)/s (quarters, so zero-rate shows up),
+/// burst in [1, 17) (halves).
+fn random_bucket(rng: &mut SplitMix64) -> TokenBucket {
+    let rate = rng.next_below(32) as f64 / 4.0;
+    let burst = 1.0 + rng.next_below(32) as f64 / 2.0;
+    TokenBucket::new(rate, burst).unwrap()
+}
+
+#[test]
+fn prop_token_bucket_never_exceeds_burst_and_rejects_at_zero_rate() {
+    // Admission invariants (ISSUE 9 satellite): however the clock moves —
+    // forward, stalled, or backwards — the token count stays within
+    // [0, burst], and a zero-rate bucket admits nothing, ever.
+    cases(CASES, |rng| {
+        let mut b = random_bucket(rng);
+        let zero_rate = b.rate() == 0.0;
+        let mut now = 0.0f64;
+        for _ in 0..40 {
+            // Mostly forward steps, occasionally a stall or a skew jump back.
+            now += rng.next_below(9) as f64 / 2.0 - 0.5;
+            let preview = b.tokens_at(now);
+            assert!((0.0..=b.burst()).contains(&preview), "preview {preview}");
+            let admitted = b.admit_at(now);
+            assert!((0.0..=b.burst()).contains(&b.tokens_at(now)));
+            if zero_rate {
+                assert!(!admitted, "zero-rate bucket admitted at t={now}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_token_bucket_long_run_admissions_bounded_by_rate() {
+    // Over any forward-moving schedule, total admissions can never exceed
+    // the initial burst plus what the rate refilled: burst + rate*elapsed.
+    cases(CASES, |rng| {
+        let mut b = random_bucket(rng);
+        let mut now = 0.0f64;
+        let mut admitted = 0u32;
+        for _ in 0..200 {
+            now += rng.next_below(8) as f64 / 8.0;
+            if b.admit_at(now) {
+                admitted += 1;
+            }
+        }
+        let bound = b.burst() + b.rate() * now;
+        assert!(
+            (admitted as f64) <= bound + 1e-9,
+            "admitted {admitted} > burst {} + rate {} * {now}",
+            b.burst(),
+            b.rate()
+        );
+    });
+}
+
+#[test]
+fn prop_token_bucket_refill_preview_monotone_in_time() {
+    // tokens_at is a pure preview: for t1 <= t2 it never shrinks, and it
+    // never mutates the bucket (repeated previews agree).
+    cases(CASES, |rng| {
+        let mut b = random_bucket(rng);
+        // Age the bucket through a few random consuming calls first.
+        let mut now = 0.0f64;
+        for _ in 0..rng.next_below(6) {
+            now += rng.next_below(4) as f64;
+            b.admit_at(now);
+        }
+        let mut t = now - 2.0;
+        let mut prev = b.tokens_at(t);
+        for _ in 0..30 {
+            t += rng.next_below(8) as f64 / 4.0;
+            let tokens = b.tokens_at(t);
+            assert_eq!(tokens, b.tokens_at(t), "preview must not mutate");
+            assert!(
+                tokens >= prev,
+                "preview shrank from {prev} to {tokens} as time advanced to {t}"
+            );
+            prev = tokens;
+        }
     });
 }
