@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
             queue_depth: 32,
             max_batch: 4,
             workers,
+            ..ServerConfig::default()
         },
         None,
     )?;

@@ -991,3 +991,79 @@ def token_bucket_admit(tokens, last, rate, burst, now_s):
     if tokens >= 1.0:
         return True, tokens - 1.0, last
     return False, tokens, last
+
+
+# --------------------------------------------------------------------------
+# runtime::parallel — intra-worker tile teams (PR 10) — and the governor's
+# model-based rung jump / periodic budget re-probe cadence.
+
+
+def partition_tiles(n_tiles, threads):
+    """parallel::partition_tiles — at most `threads` contiguous
+    (start, len) chunks covering 0..n_tiles exactly once, sizes differing
+    by at most one (remainder on the leading chunks), never an empty
+    chunk. Pinned against the Rust `partition_pins_exact_chunks` test."""
+    threads = max(threads, 1)
+    base, rem = divmod(n_tiles, threads)
+    chunks = []
+    start = 0
+    for i in range(threads):
+        ln = base + (1 if i < rem else 0)
+        if ln == 0:
+            break  # all remaining chunks are empty too
+        chunks.append((start, ln))
+        start += ln
+    return chunks
+
+
+def run_task_batch_blocked_threaded(layers, packed, task, tiles, threads):
+    """parallel::run_task_batch_blocked_threaded — the partition contract
+    only: each chunk runs through the ordinary sequential blocked executor
+    and the chunk outputs concatenate in partition order, so the result is
+    byte-identical to one sequential call over the whole batch. (The port
+    runs the chunks serially; the Rust team runs them on scoped threads
+    into pre-split disjoint output regions — same arithmetic, same
+    layout.)"""
+    if max(threads, 1) == 1 or len(tiles) <= 1:
+        return run_task_batch_blocked(layers, packed, task, tiles)
+    out = []
+    for start, ln in partition_tiles(len(tiles), threads):
+        out.extend(run_task_batch_blocked(layers, packed, task,
+                                          tiles[start:start + ln]))
+    return out
+
+
+def clamp_exec_threads(requested, workers, cores):
+    """parallel::clamp_exec_threads — the pool-wide oversubscription rule
+    workers * exec_threads <= cores, floor of one thread per engine."""
+    return min(max(requested, 1), max(max(cores, 1) // max(workers, 1), 1))
+
+
+def rung_for_limit(ladder, limit_bytes):
+    """frontier::Ladder::rung_for_limit — the highest rung whose
+    prediction is strictly under the limit (None when even the floor
+    doesn't fit). `ladder` is the per-rung predicted bytes, ascending."""
+    fit = None
+    for i, predicted in enumerate(ladder):
+        if predicted < limit_bytes:
+            fit = i
+    return fit
+
+
+def jump_down_target(ladder, active, rss, high_bytes):
+    """governor::jump_down_target — the model-based step-down: observed
+    overage (rss above the high watermark) is charged against the active
+    rung's prediction, and the ladder is re-searched for the rung fitting
+    the discounted limit — the ladder projection of the frontier's
+    fitting-branch pick. Clamped to at least one rung down so a sustained
+    pressure streak always makes progress."""
+    overage = max(rss - high_bytes, 0)
+    limit = max(ladder[active] - overage, 0)
+    fit = rung_for_limit(ladder, limit)
+    return min(fit if fit is not None else 0, active - 1)
+
+
+def reprobe_due(wakes, reprobe_wakes):
+    """governor::on_wake's re-probe cadence — wakes count from 1, and the
+    probe is due every `reprobe_wakes`-th wake; 0 disables it."""
+    return reprobe_wakes > 0 and wakes % reprobe_wakes == 0

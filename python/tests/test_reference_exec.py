@@ -571,3 +571,85 @@ def test_bench_protection_scoring_mirrors_the_rust_bench():
     assert port.percentile_nearest_rank(xs, 0.99) == 99
     assert port.percentile_nearest_rank([], 0.5) == 0.0
     assert port.percentile_nearest_rank([30, 10, 20], 0.5) == 20
+
+
+def test_partition_tiles_pins_cross_language_chunks():
+    # The exact partitions the Rust `partition_pins_exact_chunks` test
+    # pins, plus the coverage/balance invariants over a small sweep.
+    assert port.partition_tiles(7, 3) == [(0, 3), (3, 2), (5, 2)]
+    assert port.partition_tiles(4, 8) == [(0, 1), (1, 1), (2, 1), (3, 1)]
+    assert port.partition_tiles(0, 4) == []
+    assert port.partition_tiles(5, 1) == [(0, 5)]
+    for n in range(17):
+        for t in range(1, 9):
+            chunks = port.partition_tiles(n, t)
+            assert len(chunks) <= t
+            next_start = 0
+            for start, ln in chunks:
+                assert start == next_start and ln > 0, (n, t, chunks)
+                next_start += ln
+            assert next_start == n, (n, t, chunks)
+            if chunks:
+                sizes = [ln for _, ln in chunks]
+                assert max(sizes) - min(sizes) <= 1, (n, t, chunks)
+
+
+def test_threaded_batch_byte_identical_to_sequential():
+    # The intra-worker team contract: chunked execution through the
+    # sequential blocked executor, concatenated in partition order, equals
+    # one call over the whole batch — for every team size including
+    # threads > tiles.
+    layers = tiny_layers()
+    weights = gen_network_weights(layers)
+    packed = pack_weights(layers, weights)
+    img = gen_image(31, 16, 16, 3).reshape(16, 16, 3)
+    tasks = plan_group(layers, 0, 2, 4, 4)
+    by_class = {}
+    for t in tasks:
+        by_class.setdefault(class_key(t), []).append(t)
+    multi = max(by_class.values(), key=len)
+    assert len(multi) > 1, "want a real multi-tile class"
+    tiles = [gather(img, t.input_rect()) for t in multi]
+    sequential = run_task_batch_blocked(layers, packed, multi[0], tiles)
+    for threads in range(1, len(multi) + 3):
+        teamed = port.run_task_batch_blocked_threaded(
+            layers, packed, multi[0], tiles, threads)
+        assert len(teamed) == len(sequential), threads
+        for s, o in zip(sequential, teamed):
+            assert np.array_equal(s, o), threads
+
+
+def test_rung_jump_pins_cross_language_numbers():
+    # The governor's model-based step-down, pinned against the Rust
+    # `pressure_overshoot_jumps_straight_to_the_fitting_rung` test:
+    # ladder 40/70/100 MiB-ish units, budget 100 -> high watermark 85.
+    ladder, high = [40, 70, 100], 85
+    # Mild overshoot from the top rung: overage 10 discounts the limit to
+    # 90, rung 1 (70) still fits -> single step.
+    assert port.jump_down_target(ladder, 2, 95, high) == 1
+    # Deep overshoot: overage 45 -> limit 55, only rung 0 fits -> the jump
+    # skips rung 1 entirely.
+    assert port.jump_down_target(ladder, 2, 130, high) == 0
+    # Barely over: overage 1 -> limit 99, highest fit is still rung 1.
+    assert port.jump_down_target(ladder, 2, 86, high) == 1
+    # From the middle rung even a huge overage clamps to one rung down.
+    assert port.jump_down_target(ladder, 1, 500, high) == 0
+    # rung_for_limit itself: strict inequality at the boundary.
+    assert port.rung_for_limit(ladder, 70) == 0
+    assert port.rung_for_limit(ladder, 71) == 1
+    assert port.rung_for_limit(ladder, 40) is None
+
+
+def test_exec_thread_clamp_and_reprobe_cadence():
+    # The oversubscription rule workers * threads <= cores...
+    assert port.clamp_exec_threads(8, 2, 8) == 4
+    assert port.clamp_exec_threads(2, 2, 8) == 2
+    assert port.clamp_exec_threads(4, 8, 8) == 1
+    assert port.clamp_exec_threads(4, 1, 2) == 2
+    assert port.clamp_exec_threads(0, 1, 8) == 1
+    assert port.clamp_exec_threads(3, 1, 0) == 1
+    # ...and the re-probe cadence: due every K-th wake, 0 = never, pinned
+    # against the Rust `reprobe_cadence_fires_every_k_wakes` test.
+    assert [port.reprobe_due(w, 3) for w in range(1, 8)] == [
+        False, False, True, False, False, True, False]
+    assert not any(port.reprobe_due(w, 0) for w in range(1, 20))

@@ -1,35 +1,38 @@
-//! Executor-throughput bench: the blocked, class-batched reference
-//! executor versus the scalar per-tile executor on the YOLOv2-16 default
-//! bundle network (160x160), single-threaded.
+//! Executor-throughput bench: scalar per-tile vs blocked class-batched vs
+//! SIMD-dispatched execution on the YOLOv2-16 default bundle network
+//! (160x160), plus an intra-worker thread-scaling sweep.
 //!
-//! Proves the blocked-executor refactor's two claims and fails loudly if
-//! either regresses:
+//! Proves the executor stack's claims and fails loudly if any regresses:
 //!
 //! * **bit-identical outputs** — for every measured configuration the
-//!   blocked class-batched path must equal the scalar per-tile path
-//!   exactly (the §2.1.1 equivalence survives the layout change);
-//! * **>= 2x single-thread speedup** in aggregate across the measured
-//!   configurations — the blocked layout (one weight-row load per
-//!   [`BLOCK_W`]-pixel block instead of per pixel, `out_c` padded to
-//!   [`OC_LANES`] for fixed-width SIMD, fused bias + leaky-ReLU store)
-//!   must actually pay off.
+//!   blocked class-batched path (forced-scalar kernel), the
+//!   SIMD-dispatched path, and every threaded team size must equal the
+//!   scalar per-tile path exactly (the §2.1.1 equivalence survives both
+//!   the layout change and the microkernel/parallelism changes);
+//! * **>= 2x single-thread speedup** of the blocked layout over the
+//!   scalar per-tile executor, asserted in-bench (kernel-independent:
+//!   both sides run the portable scalar chunk loop).
 //!
-//! Writes a machine-readable `BENCH_exec.json` (per-config scalar/blocked
-//! wall clock, speedups, task/executor-call counts, plus an `overall`
-//! row) that CI uploads and diffs against the committed baseline
-//! (`rust/benches/BENCH_exec.baseline.json`) via `ci/bench_diff.py
-//! --rows per_config --row-key config --metric speedup:1.5:min`. The gate
-//! is on the *speedup ratio* — wall-clock derived but hardware-normalized
-//! — with the committed baseline's floor matching the >= 2x claim;
-//! absolute millisecond fields are informational.
+//! The SIMD speedup (`simd_speedup` = blocked-scalar ms / SIMD ms) and
+//! the thread scaling (`scale` = 1-thread ms / N-thread ms) are *not*
+//! asserted here — this binary must pass on a 1-core scalar-only host —
+//! they are gated in CI, whose runners pin the ISA and core count:
 //!
-//! [`BLOCK_W`]: mafat::runtime::reference::BLOCK_W
-//! [`OC_LANES`]: mafat::runtime::reference::OC_LANES
+//! * `ci/bench_diff.py --rows per_config --row-key config
+//!   --metric speedup:1.5:min --metric simd_speedup:1.2:min`
+//! * `ci/bench_diff.py --rows thread_scaling --row-key config
+//!   --metric scale:1.2:min`
+//!
+//! Writes a machine-readable `BENCH_exec.json` that CI uploads and diffs
+//! against the committed baseline (`rust/benches/BENCH_exec.baseline.json`).
+//! The gates are on *ratios* — wall-clock derived but hardware-normalized
+//! — and absolute millisecond fields are informational.
 
 use mafat::engine::{gen_network_weights, FeatureMap, LayerWeights, WEIGHT_SEED};
 use mafat::jsonlite::Json;
 use mafat::network::Network;
 use mafat::plan::{plan_multi, MultiConfig, Plan};
+use mafat::runtime::parallel;
 use mafat::runtime::reference::{self, PackedWeights};
 use std::collections::HashMap;
 use std::time::Instant;
@@ -40,6 +43,13 @@ const CONFIGS: [&str; 3] = ["2x2/NoCut", "3x3/8/2x2", "5v5/12/3v3"];
 /// Best-of-N wall clock: the min over iterations discards scheduling
 /// noise on shared CI runners before the >= 2x assertion below.
 const ITERS: usize = 3;
+/// Team sizes swept by the thread-scaling rows.
+const TEAMS: [usize; 3] = [1, 2, 4];
+/// Images batched per class call in the thread-scaling sweep: enough
+/// (image x tile) pairs that every team size gets balanced chunks.
+const SCALE_IMAGES: usize = 8;
+/// Config driving the thread-scaling sweep (the paper's 2-group shape).
+const SCALE_CONFIG: &str = "3x3/8/2x2";
 
 /// Scalar per-tile execution: the engine's pre-batching group loop.
 fn exec_scalar(
@@ -67,8 +77,9 @@ fn exec_scalar(
     input.data
 }
 
-/// Blocked class-batched execution: one executor call per tile class.
-/// Returns the final map and the number of executor calls issued.
+/// Blocked class-batched execution with whatever kernel `packed` carries:
+/// one executor call per tile class. Returns the final map and the number
+/// of executor calls issued.
 fn exec_blocked(
     net: &Network,
     packed: &PackedWeights,
@@ -134,67 +145,161 @@ fn best_ms<R>(iters: usize, mut f: impl FnMut() -> R) -> (R, f64) {
     (last.unwrap(), best)
 }
 
+/// The thread-scaling workload: the largest tile class of the top fusing
+/// group under [`SCALE_CONFIG`], batched over [`SCALE_IMAGES`] images.
+/// Returns the class exemplar task index plus the gathered batch.
+fn scaling_workload(net: &Network, plan: &Plan) -> (usize, Vec<f32>, usize) {
+    let group = &plan.groups[0];
+    let mut by_class: HashMap<String, Vec<usize>> = HashMap::new();
+    for (ix, task) in group.tasks.iter().enumerate() {
+        by_class
+            .entry(task.class_key().short_name())
+            .or_default()
+            .push(ix);
+    }
+    let ixs = by_class
+        .values()
+        .max_by_key(|v| v.len())
+        .expect("plan has at least one tile class");
+    let mut batch = Vec::new();
+    for seed in 0..SCALE_IMAGES as u64 {
+        let image = mafat::data::gen_image(1000 + seed, net.in_w, net.in_h, net.in_c);
+        let input = FeatureMap {
+            h: net.in_h,
+            w: net.in_w,
+            c: net.in_c,
+            data: image,
+        };
+        for &ix in ixs {
+            batch.extend_from_slice(&input.gather(&group.tasks[ix].input_rect()));
+        }
+    }
+    (ixs[0], batch, ixs.len() * SCALE_IMAGES)
+}
+
 fn main() {
     let net = mafat::runtime::export::default_network();
     let weights = gen_network_weights(&net, WEIGHT_SEED);
     let packed = reference::pack_weights(&net, &weights);
+    let mut packed_scalar = reference::pack_weights(&net, &weights);
+    packed_scalar.force_scalar();
+    let isa = packed.isa().as_str();
     let image = mafat::data::gen_image(42, net.in_w, net.in_h, net.in_c);
 
-    println!("exec throughput on {} ({}x{}), single thread\n", net.name, net.in_w, net.in_h);
     println!(
-        "{:<16} {:>6} {:>7} {:>12} {:>12} {:>9}",
-        "config", "tasks", "calls", "scalar ms", "blocked ms", "speedup"
+        "exec throughput on {} ({}x{}), kernel isa {isa}\n",
+        net.name, net.in_w, net.in_h
+    );
+    println!(
+        "{:<16} {:>6} {:>7} {:>11} {:>11} {:>9} {:>9} {:>9}",
+        "config", "tasks", "calls", "scalar ms", "blocked ms", "simd ms", "speedup", "simd x"
     );
 
     let mut rows: Vec<Json> = Vec::new();
     let mut scalar_total = 0.0;
     let mut blocked_total = 0.0;
+    let mut simd_total = 0.0;
     for config in CONFIGS {
         let mc: MultiConfig = config.parse().unwrap();
         let plan = plan_multi(&net, &mc).unwrap();
         let (scalar_out, scalar_ms) = best_ms(ITERS, || exec_scalar(&net, &weights, &plan, &image));
         let ((blocked_out, calls), blocked_ms) =
+            best_ms(ITERS, || exec_blocked(&net, &packed_scalar, &plan, &image));
+        let ((simd_out, _), simd_ms) =
             best_ms(ITERS, || exec_blocked(&net, &packed, &plan, &image));
         assert_eq!(
             scalar_out, blocked_out,
             "{config}: blocked executor must be bit-identical to scalar"
         );
+        assert_eq!(
+            scalar_out, simd_out,
+            "{config}: {isa} kernel must be bit-identical to scalar"
+        );
         let speedup = scalar_ms / blocked_ms;
+        let simd_speedup = blocked_ms / simd_ms;
         println!(
-            "{config:<16} {:>6} {calls:>7} {scalar_ms:>12.1} {blocked_ms:>12.1} {speedup:>8.2}x",
+            "{config:<16} {:>6} {calls:>7} {scalar_ms:>11.1} {blocked_ms:>11.1} \
+             {simd_ms:>9.1} {speedup:>8.2}x {simd_speedup:>8.2}x",
             plan.n_tasks()
         );
         scalar_total += scalar_ms;
         blocked_total += blocked_ms;
+        simd_total += simd_ms;
         rows.push(Json::obj(vec![
             ("config", Json::str(config)),
             ("tasks", Json::num(plan.n_tasks() as f64)),
             ("exec_calls", Json::num(calls as f64)),
             ("scalar_ms", Json::num(scalar_ms)),
             ("blocked_ms", Json::num(blocked_ms)),
+            ("simd_ms", Json::num(simd_ms)),
             ("speedup", Json::num(speedup)),
+            ("simd_speedup", Json::num(simd_speedup)),
         ]));
     }
     let overall = scalar_total / blocked_total;
+    let overall_simd = blocked_total / simd_total;
     println!(
-        "\noverall: {scalar_total:.1} ms scalar vs {blocked_total:.1} ms blocked ({overall:.2}x)"
+        "\noverall: {scalar_total:.1} ms scalar vs {blocked_total:.1} ms blocked ({overall:.2}x), \
+         {simd_total:.1} ms {isa} ({overall_simd:.2}x over blocked)"
     );
     rows.push(Json::obj(vec![
         ("config", Json::str("overall")),
         ("scalar_ms", Json::num(scalar_total)),
         ("blocked_ms", Json::num(blocked_total)),
+        ("simd_ms", Json::num(simd_total)),
         ("speedup", Json::num(overall)),
+        ("simd_speedup", Json::num(overall_simd)),
     ]));
     assert!(
         overall >= 2.0,
         "blocked executor must be >= 2x the scalar executor (got {overall:.2}x)"
     );
+    if packed.isa() == reference::SimdIsa::Scalar {
+        println!("note: no SIMD extension detected; simd rows measure the scalar fallback");
+    }
+
+    // Thread-scaling sweep: one class batch, teams of 1/2/4.
+    let mc: MultiConfig = SCALE_CONFIG.parse().unwrap();
+    let plan = plan_multi(&net, &mc).unwrap();
+    let (exemplar, batch, n_tiles) = scaling_workload(&net, &plan);
+    let task = &plan.groups[0].tasks[exemplar];
+    println!(
+        "\nthread scaling on {SCALE_CONFIG}: {n_tiles} tiles ({SCALE_IMAGES} images), kernel {isa}"
+    );
+    let mut scale_rows: Vec<Json> = Vec::new();
+    let mut t1_ms = 0.0;
+    let mut t1_out: Vec<f32> = Vec::new();
+    for threads in TEAMS {
+        let (out, ms) = best_ms(ITERS, || {
+            parallel::run_task_batch_blocked_threaded(&net, &packed, task, &batch, n_tiles, threads)
+                .unwrap()
+        });
+        if threads == 1 {
+            t1_ms = ms;
+            t1_out = out;
+        } else {
+            assert_eq!(
+                t1_out, out,
+                "team of {threads} must be bit-identical to the sequential executor"
+            );
+        }
+        let scale = t1_ms / ms;
+        println!("  threads-{threads}: {ms:>8.1} ms  ({scale:.2}x)");
+        scale_rows.push(Json::obj(vec![
+            ("config", Json::str(format!("threads-{threads}"))),
+            ("threads", Json::num(threads as f64)),
+            ("ms", Json::num(ms)),
+            ("scale", Json::num(scale)),
+        ]));
+    }
 
     let doc = Json::obj(vec![
         ("bench", Json::str("exec_throughput")),
         ("network", Json::str(net.name.clone())),
+        ("isa", Json::str(isa)),
         ("iters", Json::num(ITERS as f64)),
         ("per_config", Json::Arr(rows)),
+        ("thread_scaling", Json::Arr(scale_rows)),
     ]);
     let out = "BENCH_exec.json";
     std::fs::write(out, doc.to_string_pretty()).expect("write BENCH_exec.json");

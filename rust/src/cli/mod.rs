@@ -61,6 +61,10 @@ Tooling:
 
 Real execution (against `make artifacts` or an `export-bundle` dir):
   run       --config 5v5/12/3v3 [--bundle DIR] [--batch N] [--verify]
+            [--exec-threads N]                      executor team size
+                                                    (default: flag >
+                                                    MAFAT_EXEC_THREADS env >
+                                                    all cores; must be >= 1)
             (--config takes any manifest entry: k-group cuts and
              variable `TvT` tilings included)
   serve     --addr 127.0.0.1:7077 [--bundle NAME=DIR]...
@@ -92,6 +96,17 @@ Real execution (against `make artifacts` or an `export-bundle` dir):
             [--hysteresis-wakes N]                  consecutive wakes before
                                                     a governor step
                                                     (default 3)
+            [--reprobe-wakes K]                     re-probe the host memory
+                                                    limit every K governor
+                                                    wakes and adopt it as
+                                                    the budget (0 = never,
+                                                    the default)
+            [--exec-threads N]                      per-engine executor team
+                                                    size (default: flag >
+                                                    MAFAT_EXEC_THREADS env >
+                                                    cores/workers; clamped
+                                                    so workers x threads
+                                                    <= cores; must be >= 1)
             (--bundle repeats to serve several models from one governed
              budget; a bare --bundle DIR serves as model \"default\", the
              model legacy v0 clients route to. No --config: each model's
@@ -259,6 +274,10 @@ impl Args {
         if let Some(n) = self.get_u64("hysteresis-wakes")? {
             cfg.hysteresis_wakes =
                 u32::try_from(n).with_context(|| format!("--hysteresis-wakes {n}"))?;
+        }
+        if let Some(n) = self.get_u64("reprobe-wakes")? {
+            // 0 is valid: it disables periodic re-probing (the default).
+            cfg.reprobe_wakes = n;
         }
         Ok(cfg)
     }
@@ -798,7 +817,11 @@ pub fn cmd_run(args: &Args) -> Result<()> {
     let config = args.multi_config()?;
     let batch = args.get_u64("batch")?.unwrap_or(1) as usize;
     let verify = args.has("verify");
-    crate::engine::run_cli(&bundle, config, batch, verify)
+    // Standalone run = a pool of one worker: the default team is every
+    // core (flag > MAFAT_EXEC_THREADS env > cores).
+    let exec_threads =
+        crate::runtime::parallel::resolve_exec_threads(args.get_u64("exec-threads")?, 1)?;
+    crate::engine::run_cli(&bundle, config, batch, verify, exec_threads)
 }
 
 pub fn cmd_serve(args: &Args) -> Result<()> {
@@ -807,6 +830,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(workers) = args.get_u64("workers")? {
         server_cfg.workers = workers.max(1) as usize;
     }
+    // Per-engine executor team (flag > MAFAT_EXEC_THREADS env >
+    // cores/workers); `serve_cli` clamps it so workers x exec-threads
+    // never oversubscribes the host.
+    server_cfg.exec_threads = crate::runtime::parallel::resolve_exec_threads(
+        args.get_u64("exec-threads")?,
+        server_cfg.workers,
+    )?;
     // Parse --config first so a malformed TvT string fails before any
     // artifact or budget work.
     let config = args.has("config").then(|| args.multi_config()).transpose()?;
@@ -980,6 +1010,53 @@ mod tests {
         }
         let inverted = parse(&["--high-watermark", "0.4"]).governor_config().unwrap();
         assert!(inverted.validate().is_err(), "low >= high must fail validation");
+    }
+
+    #[test]
+    fn exec_threads_flag_precedence_and_zero_rejection() {
+        use crate::runtime::parallel::resolve_exec_threads;
+        // Flag wins over everything (same precedence model as
+        // --mem-limit-mb; the env leg lives in this test too, below).
+        let a = parse(&["--exec-threads", "2"]);
+        assert_eq!(resolve_exec_threads(a.get_u64("exec-threads").unwrap(), 4).unwrap(), 2);
+        // 0 threads is rejected with the flag named.
+        let a = parse(&["--exec-threads", "0"]);
+        let err = resolve_exec_threads(a.get_u64("exec-threads").unwrap(), 1).unwrap_err();
+        assert!(err.to_string().contains("--exec-threads"), "{err}");
+        // Unparsable values fail in get_u64 with the flag named, exactly
+        // like every other numeric flag.
+        let a = parse(&["--exec-threads", "two"]);
+        let err = format!("{:#}", a.get_u64("exec-threads").unwrap_err());
+        assert!(err.contains("exec-threads"), "{err}");
+        // Flag > MAFAT_EXEC_THREADS env > derived default. The env is set
+        // to a *valid* value only: engine tests running concurrently also
+        // read it (as their default team size), and a valid value merely
+        // changes their thread count, never their output.
+        std::env::set_var("MAFAT_EXEC_THREADS", "5");
+        let a = parse(&["--exec-threads", "2"]);
+        assert_eq!(resolve_exec_threads(a.get_u64("exec-threads").unwrap(), 1).unwrap(), 2);
+        assert_eq!(resolve_exec_threads(None, 1).unwrap(), 5);
+        std::env::remove_var("MAFAT_EXEC_THREADS");
+    }
+
+    #[test]
+    fn reprobe_wakes_flag_parses_with_zero_meaning_off() {
+        // Default: re-probing off.
+        assert_eq!(parse(&[]).governor_config().unwrap().reprobe_wakes, 0);
+        let cfg = parse(&["--reprobe-wakes", "16"]).governor_config().unwrap();
+        assert_eq!(cfg.reprobe_wakes, 16);
+        assert!(cfg.validate().is_ok());
+        // 0 is VALID here (it means "never re-probe"), unlike
+        // --exec-threads where 0 is rejected.
+        let cfg = parse(&["--reprobe-wakes", "0"]).governor_config().unwrap();
+        assert_eq!(cfg.reprobe_wakes, 0);
+        assert!(cfg.validate().is_ok());
+        // Unparsable values name the flag.
+        let err = format!(
+            "{:#}",
+            parse(&["--reprobe-wakes", "often"]).governor_config().unwrap_err()
+        );
+        assert!(err.contains("reprobe-wakes"), "{err}");
     }
 
     #[test]

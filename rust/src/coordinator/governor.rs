@@ -77,6 +77,14 @@ pub struct GovernorConfig {
     /// hysteresis that keeps steady-state serving identical to the static
     /// path.
     pub hysteresis_wakes: u32,
+    /// Re-probe the host memory limit every this many governor wakes and
+    /// adopt it as the new budget (`--reprobe-wakes`; 0 = never), so an
+    /// operator resizing the cgroup is picked up without a restart. The
+    /// governor itself only *counts* wakes and raises
+    /// [`WakeDecision::reprobe_due`]; the serving loop runs the actual
+    /// probe and calls [`MemoryGovernor::set_budget`] — probing the
+    /// host is I/O the decision kernel stays free of.
+    pub reprobe_wakes: u64,
 }
 
 impl Default for GovernorConfig {
@@ -85,6 +93,7 @@ impl Default for GovernorConfig {
             high_watermark: 0.85,
             low_watermark: 0.60,
             hysteresis_wakes: 3,
+            reprobe_wakes: 0,
         }
     }
 }
@@ -338,6 +347,12 @@ pub struct WakeDecision {
     pub action: GovernorAction,
     /// Per-tenant verdicts, in registration order.
     pub tenants: Vec<TenantDecision>,
+    /// This wake crossed the periodic re-probe cadence
+    /// ([`GovernorConfig::reprobe_wakes`]): the serving loop should re-run
+    /// its budget probe and feed the result to
+    /// [`MemoryGovernor::set_budget`]. Always `false` when re-probing is
+    /// off.
+    pub reprobe_due: bool,
 }
 
 impl WakeDecision {
@@ -400,12 +415,25 @@ impl TenantState {
     }
 }
 
-/// Internal hysteresis state, shared by every worker of the pool.
+/// Internal hysteresis state, shared by every worker of the pool. The
+/// budget and its watermark thresholds live here (not on the governor)
+/// because periodic re-probing ([`MemoryGovernor::set_budget`]) swaps
+/// them at runtime under the same lock the state machine reads them
+/// through.
 #[derive(Debug)]
 struct GovState {
     tenants: Vec<TenantState>,
     pressure_streak: u32,
     headroom_streak: u32,
+    budget_bytes: u64,
+    /// Watermark thresholds in bytes, computed and validated at
+    /// construction and at every budget swap
+    /// ([`GovernorConfig::watermark_bytes`]); guaranteed
+    /// `low_bytes < high_bytes`.
+    low_bytes: u64,
+    high_bytes: u64,
+    /// Total wakes observed — drives the periodic re-probe cadence.
+    wakes: u64,
 }
 
 /// The memory governor: owns the budget and one config ladder per tenant,
@@ -413,12 +441,6 @@ struct GovState {
 /// + one short mutex). One instance per server, shared across the pool so
 /// the hysteresis streaks and the active rungs are global.
 pub struct MemoryGovernor {
-    budget_bytes: u64,
-    /// Watermark thresholds in bytes, computed and validated once at
-    /// construction ([`GovernorConfig::watermark_bytes`]); guaranteed
-    /// `low_bytes < high_bytes`.
-    low_bytes: u64,
-    high_bytes: u64,
     max_batch: usize,
     workers: usize,
     cfg: GovernorConfig,
@@ -463,9 +485,6 @@ impl MemoryGovernor {
             });
         }
         Ok(MemoryGovernor {
-            budget_bytes,
-            low_bytes,
-            high_bytes,
             max_batch,
             workers,
             cfg,
@@ -473,6 +492,10 @@ impl MemoryGovernor {
                 tenants: states,
                 pressure_streak: 0,
                 headroom_streak: 0,
+                budget_bytes,
+                low_bytes,
+                high_bytes,
+                wakes: 0,
             }),
         })
     }
@@ -505,7 +528,32 @@ impl MemoryGovernor {
     }
 
     pub fn budget_bytes(&self) -> u64 {
-        self.budget_bytes
+        self.state.lock().unwrap().budget_bytes
+    }
+
+    /// Adopt a re-probed memory limit as the new budget: recompute and
+    /// revalidate the watermark band at the new budget (same rules as
+    /// construction — a zero budget or a band that truncates to empty is
+    /// rejected and the old budget stays), and reset both hysteresis
+    /// streaks so a step near the swap needs a fresh uninterrupted streak
+    /// against the *new* watermarks. Active rungs are untouched: if the
+    /// new budget is tighter, the ordinary pressure path walks tenants
+    /// down from wherever they are. Returns whether the budget changed.
+    pub fn set_budget(&self, budget_bytes: u64) -> Result<bool> {
+        if budget_bytes == 0 {
+            anyhow::bail!("memory governor needs a non-zero budget");
+        }
+        let (low_bytes, high_bytes) = self.cfg.watermark_bytes(budget_bytes)?;
+        let mut st = self.state.lock().unwrap();
+        if st.budget_bytes == budget_bytes {
+            return Ok(false);
+        }
+        st.budget_bytes = budget_bytes;
+        st.low_bytes = low_bytes;
+        st.high_bytes = high_bytes;
+        st.pressure_streak = 0;
+        st.headroom_streak = 0;
+        Ok(true)
     }
 
     /// Registered `(model, QoS)` pairs, in registration order.
@@ -585,29 +633,32 @@ impl MemoryGovernor {
     /// (post-step) headroom.
     pub fn on_wake(&self, rss_bytes: Option<u64>) -> WakeDecision {
         let mut st = self.state.lock().unwrap();
+        st.wakes = st.wakes.saturating_add(1);
+        let reprobe_due = self.cfg.reprobe_wakes > 0 && st.wakes % self.cfg.reprobe_wakes == 0;
         let mut action = GovernorAction::Hold;
         if let Some(rss) = rss_bytes {
-            if rss > self.high_bytes {
+            if rss > st.high_bytes {
                 // Saturating: a pool pinned at its floor under permanent
                 // pressure accrues an unbounded streak (no step resets it).
                 st.pressure_streak = st.pressure_streak.saturating_add(1);
                 st.headroom_streak = 0;
                 if st.pressure_streak >= self.cfg.hysteresis_wakes {
                     if let Some(ix) = step_down_victim(&st.tenants) {
+                        let target = jump_down_target(&st.tenants[ix], rss, st.high_bytes);
                         let t = &mut st.tenants[ix];
                         let from = t.ladder.rungs()[t.active].config.clone();
-                        t.active -= 1;
+                        t.active = target;
                         let to = t.ladder.rungs()[t.active].config.clone();
                         let model = t.name.clone();
                         st.pressure_streak = 0;
                         action = GovernorAction::StepDown { model, from, to };
                     }
                 }
-            } else if rss < self.low_bytes {
+            } else if rss < st.low_bytes {
                 st.headroom_streak = st.headroom_streak.saturating_add(1);
                 st.pressure_streak = 0;
                 if st.headroom_streak >= self.cfg.hysteresis_wakes {
-                    if let Some(ix) = step_up_riser(&st.tenants, self.budget_bytes) {
+                    if let Some(ix) = step_up_riser(&st.tenants, st.budget_bytes) {
                         let t = &mut st.tenants[ix];
                         let from = t.ladder.rungs()[t.active].config.clone();
                         t.active += 1;
@@ -624,13 +675,32 @@ impl MemoryGovernor {
                 st.headroom_streak = 0;
             }
         }
-        let tenants = split_drains(&st.tenants, self.budget_bytes, self.max_batch, self.workers);
+        let tenants = split_drains(&st.tenants, st.budget_bytes, self.max_batch, self.workers);
         WakeDecision {
             rss_bytes,
             action,
             tenants,
+            reprobe_due,
         }
     }
+}
+
+/// The model-based step-down target for `t` (which must have a rung below
+/// it): instead of shedding one rung per hysteresis streak and needing
+/// `streak x hysteresis_wakes` pressured wakes to resolve a large
+/// overshoot, jump directly to the rung the *observed* overage says fits.
+/// The victim's share of the pressure is `rss - high_bytes`; the rung
+/// that fits is the deepest one whose prediction stays under
+/// `predicted[active] - overage` — the ladder projection of
+/// `pick_for_limit_swap_aware`'s fitting branch
+/// ([`ConfigLadder::rung_for_limit`]). Clamped to `active - 1` so a step
+/// always sheds at least one rung (small overages reduce exactly to the
+/// old one-rung step), and to rung 0 when even the cheapest rung exceeds
+/// the implied limit. Mirrored by the numpy port (`jump_down_target`).
+fn jump_down_target(t: &TenantState, rss: u64, high_bytes: u64) -> usize {
+    let overage = rss.saturating_sub(high_bytes);
+    let limit = t.ladder.rungs()[t.active].predicted_bytes.saturating_sub(overage);
+    t.ladder.rung_for_limit(limit).unwrap_or(0).min(t.active - 1)
 }
 
 /// Pick the step-down victim: among tenants of the *lowest QoS class
@@ -912,6 +982,104 @@ mod tests {
         }
         assert_eq!(g.active_config("default").unwrap().to_string(), "3x3/8/2x2");
         assert_eq!(sole(&g.on_wake(None)).drain, 8);
+    }
+
+    #[test]
+    fn pressure_overshoot_jumps_straight_to_the_fitting_rung() {
+        // Mirrored by the numpy port (`jump_down_target`): ladder predicts
+        // 40/70/100, budget 100 => high watermark 85.
+        //
+        // Moderate overshoot — rss 95, overage 10, implied limit 90: the
+        // deepest rung under 90 is rung 1, identical to the old one-rung
+        // step.
+        let g = governor(100, 2);
+        for _ in 0..2 {
+            g.on_wake(Some(95));
+        }
+        let d = g.on_wake(Some(95));
+        assert!(matches!(d.action, GovernorAction::StepDown { .. }), "{:?}", d.action);
+        assert_eq!(g.active_rung("default"), Some(1));
+
+        // Large overshoot — rss 130, overage 45, implied limit 55: rung 1
+        // (70) does not fit, so ONE step jumps 2 -> 0 instead of spending
+        // a second full hysteresis streak at a rung the evidence already
+        // rules out.
+        let g = governor(100, 2);
+        for _ in 0..2 {
+            g.on_wake(Some(130));
+        }
+        match g.on_wake(Some(130)).action {
+            GovernorAction::StepDown { from, to, .. } => {
+                assert_eq!(from.to_string(), "1x1/NoCut");
+                assert_eq!(to.to_string(), "3x3/8/2x2");
+            }
+            other => panic!("expected step down, got {other:?}"),
+        }
+        assert_eq!(g.active_rung("default"), Some(0));
+
+        // Tiny overage (rss 86, limit 99): still sheds exactly one rung.
+        let g = governor(100, 2);
+        for _ in 0..3 {
+            g.on_wake(Some(86));
+        }
+        assert_eq!(g.active_rung("default"), Some(1));
+    }
+
+    #[test]
+    fn reprobe_cadence_fires_every_k_wakes_and_only_when_enabled() {
+        // Default (reprobe_wakes = 0): never due.
+        let g = governor(100, 1);
+        for _ in 0..5 {
+            assert!(!g.on_wake(None).reprobe_due);
+        }
+        // Every-3-wakes cadence, counted across workers and independent of
+        // RSS availability.
+        let cfg = GovernorConfig {
+            reprobe_wakes: 3,
+            ..GovernorConfig::default()
+        };
+        let g = MemoryGovernor::single(test_ladder(), 100, 1, 8, 1, cfg).unwrap();
+        let due: Vec<bool> = (0..7).map(|_| g.on_wake(None).reprobe_due).collect();
+        assert_eq!(due, [false, false, true, false, false, true, false]);
+    }
+
+    #[test]
+    fn budget_shrink_and_grow_transitions() {
+        // Mirrored by the numpy port (`set_budget` pinned numbers).
+        //
+        // Shrink 100 -> 80: watermarks move from (60, 85) to (48, 68), so
+        // an rss of 70 flips from steady to pressure. The swap resets the
+        // streaks — the two pressured wakes accrued under the old band
+        // never count toward the new one — so the step lands on the 3rd
+        // post-swap wake, onto the rung the overage fits (overage 2,
+        // limit 98 -> rung 1).
+        let g = governor(100, 2);
+        g.on_wake(Some(90));
+        g.on_wake(Some(90));
+        assert!(g.set_budget(80).unwrap());
+        assert_eq!(g.budget_bytes(), 80);
+        for _ in 0..2 {
+            assert!(matches!(g.on_wake(Some(70)).action, GovernorAction::Hold));
+        }
+        assert!(matches!(g.on_wake(Some(70)).action, GovernorAction::StepDown { .. }));
+        assert_eq!(g.active_rung("default"), Some(1));
+
+        // Grow 80 -> 200: watermarks (120, 170), the same rss 70 is now
+        // headroom, and rung 2 (predicted 100) fits the bigger budget, so
+        // the tenant is restored.
+        assert!(g.set_budget(200).unwrap());
+        for _ in 0..2 {
+            assert!(matches!(g.on_wake(Some(70)).action, GovernorAction::Hold));
+        }
+        assert!(matches!(g.on_wake(Some(70)).action, GovernorAction::StepUp { .. }));
+        assert_eq!(g.active_rung("default"), Some(2));
+
+        // Same-value swaps are no-ops; degenerate budgets are rejected and
+        // the last good budget stays.
+        assert!(!g.set_budget(200).unwrap());
+        assert!(g.set_budget(0).is_err());
+        assert!(g.set_budget(2).is_err(), "empty watermark band must be rejected");
+        assert_eq!(g.budget_bytes(), 200);
     }
 
     #[test]

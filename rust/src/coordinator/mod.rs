@@ -208,6 +208,16 @@ pub struct ServerConfig {
     /// Worker pool size: engine sets sharing the request queues. Values
     /// < 1 are treated as 1.
     pub workers: usize,
+    /// Intra-worker executor team size applied to every worker's engines
+    /// ([`Engine::set_exec_threads`]): each class-batch executor call
+    /// partitions its tiles across this many scoped threads. Values < 1
+    /// are treated as 1 (sequential). `serve` resolves it via
+    /// [`crate::runtime::parallel::resolve_exec_threads`] and clamps it so
+    /// `workers x exec_threads` never exceeds the host's cores; the
+    /// default here follows `MAFAT_EXEC_THREADS` when it is set and valid
+    /// (else 1), so a test pool spun up with `ServerConfig::default()`
+    /// exercises the threaded path suite-wide under that env var.
+    pub exec_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -216,6 +226,10 @@ impl Default for ServerConfig {
             queue_depth: 64,
             max_batch: 8,
             workers: 1,
+            exec_threads: crate::runtime::parallel::exec_threads_from_env()
+                .ok()
+                .flatten()
+                .unwrap_or(1),
         }
     }
 }
@@ -536,8 +550,11 @@ impl Server {
                             }
                         };
                         // All workers record into the server's shared
-                        // registry.
+                        // registry; the executor team size (and the SIMD
+                        // ISA info metric) is published after the swap so
+                        // it lands in the shared registry.
                         engine.metrics = metrics.clone();
+                        engine.set_exec_threads(cfg.exec_threads.max(1));
                         let (name, dims, n_exec, config) = {
                             let net = engine.network();
                             (
@@ -831,6 +848,31 @@ fn worker_loop(
                         mb(d.rss_bytes.unwrap_or(0)),
                         mb(g.budget_bytes()),
                     );
+                }
+            }
+            // Periodic budget re-probe (--reprobe-wakes): the wake that
+            // crossed the cadence re-reads the host limit and hands it to
+            // the governor, which revalidates watermarks and resets the
+            // hysteresis streaks. Probe I/O runs here on the worker —
+            // outside the governor lock — and a failed probe (or an
+            // unchanged / degenerate limit) changes nothing.
+            if d.reprobe_due {
+                if let Some(probed) = probe_memory_limit_bytes() {
+                    let before = g.budget_bytes();
+                    match g.set_budget(probed) {
+                        Ok(true) => eprintln!(
+                            "governor: re-probed budget {:.1} MB (was {:.1} MB)",
+                            mb(probed),
+                            mb(before),
+                        ),
+                        Ok(false) => {}
+                        Err(e) => eprintln!(
+                            "governor: re-probed limit {:.1} MB rejected ({e:#}); \
+                             keeping {:.1} MB",
+                            mb(probed),
+                            mb(before),
+                        ),
+                    }
                 }
             }
             if let (Some(t), Some(engine)) = (d.tenant(&model), engines.get_mut(&model)) {
@@ -1309,7 +1351,21 @@ pub fn serve_cli(
         }
     }
     let admission = Admission::new(admit)?;
+    let mut cfg = cfg;
     let workers = cfg.workers.max(1);
+    // Oversubscription rule: workers x exec-threads never exceeds the
+    // host's cores (each engine team would otherwise contend with its
+    // sibling workers instead of scaling).
+    let cores = crate::runtime::parallel::available_cores();
+    let clamped = crate::runtime::parallel::clamp_exec_threads(cfg.exec_threads, workers, cores);
+    if clamped != cfg.exec_threads.max(1) {
+        eprintln!(
+            "serve: clamping --exec-threads {} to {clamped} ({workers} worker(s) on {cores} \
+             core(s))",
+            cfg.exec_threads
+        );
+    }
+    cfg.exec_threads = clamped;
     // Each bundle's weight stage runs once here; every worker's engine and
     // every governor hot-swap of that model share it (weights packed once
     // per bundle).

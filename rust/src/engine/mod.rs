@@ -45,7 +45,9 @@ use crate::ftp::{
 use crate::metrics::Metrics;
 use crate::network::{LayerKind, Network};
 use crate::plan::MultiConfig;
-use crate::runtime::{reference, xla, BackendKind, ClassEntry, Manifest, ManifestNetwork, Runtime};
+use crate::runtime::{
+    parallel, reference, xla, BackendKind, ClassEntry, Manifest, ManifestNetwork, Runtime,
+};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -261,6 +263,13 @@ pub struct Engine {
     config: MultiConfig,
     groups: Vec<GroupExec>,
     executor: Executor,
+    /// Intra-worker executor team size for the reference backend: each
+    /// class-batch executor call partitions its tiles across this many
+    /// scoped threads ([`crate::runtime::parallel`]). 1 = sequential.
+    /// Defaults from `MAFAT_EXEC_THREADS` (else 1); the serving pool
+    /// overrides it per worker so workers x exec-threads never
+    /// oversubscribes the host.
+    exec_threads: usize,
     pub metrics: Arc<Metrics>,
 }
 
@@ -453,13 +462,34 @@ impl Engine {
                 }
             }
         };
-        Ok(Engine {
+        let mut engine = Engine {
             shared,
             config,
             groups,
             executor,
+            exec_threads: 1,
             metrics: Arc::new(Metrics::default()),
-        })
+        };
+        engine.set_exec_threads(parallel::exec_threads_from_env()?.unwrap_or(1));
+        Ok(engine)
+    }
+
+    /// Set the executor team size (clamped >= 1) and publish it — plus the
+    /// packed weights' selected SIMD ISA — to this engine's metrics
+    /// registry. The serving pool calls this after pointing
+    /// `engine.metrics` at the server-shared registry, so the published
+    /// values land where `/metrics` reads them.
+    pub fn set_exec_threads(&mut self, threads: usize) {
+        self.exec_threads = threads.max(1);
+        self.metrics.exec_threads.set(self.exec_threads as u64);
+        if let Some(packed) = self.shared.packed.as_ref() {
+            self.metrics.set_simd_isa(packed.isa().as_str());
+        }
+    }
+
+    /// The executor team size class batches are partitioned across.
+    pub fn exec_threads(&self) -> usize {
+        self.exec_threads
     }
 
     /// Hot-swap this engine onto another compiled configuration of the
@@ -604,12 +634,13 @@ impl Engine {
                 // Execute: one call per class.
                 let te = Instant::now();
                 let out = match &mut self.executor {
-                    Executor::Reference { .. } => reference::run_task_batch_blocked(
+                    Executor::Reference { .. } => parallel::run_task_batch_blocked_threaded(
                         net,
                         packed.expect("reference backend packs weights in the weight stage"),
                         &group.tasks[ixs[0]],
                         &batch,
                         pairs.len(),
+                        self.exec_threads,
                     )?,
                     Executor::Pjrt { runtime, group_weights, .. } => {
                         // The PJRT stub has no batched executable yet: run
@@ -734,14 +765,22 @@ impl Engine {
 
 /// CLI entry: run `batch` inferences, optionally verifying each against the
 /// untiled oracle, and print a summary (used by `mafat run`).
-pub fn run_cli(artifacts: &str, config: MultiConfig, batch: usize, verify: bool) -> Result<()> {
+pub fn run_cli(
+    artifacts: &str,
+    config: MultiConfig,
+    batch: usize,
+    verify: bool,
+    exec_threads: usize,
+) -> Result<()> {
     let mut engine = Engine::load(artifacts, config)?;
+    engine.set_exec_threads(exec_threads);
     let (h, w, c) = engine.output_shape();
     println!(
-        "engine: {} | config {} | {} executables | output {h}x{w}x{c}",
+        "engine: {} | config {} | {} executables | output {h}x{w}x{c} | exec threads {}",
         engine.network().name,
         engine.config(),
-        engine.n_executables()
+        engine.n_executables(),
+        engine.exec_threads()
     );
     let mut total_ms = 0.0;
     for i in 0..batch.max(1) {

@@ -266,6 +266,15 @@ pub struct Metrics {
     /// measured durations, so percentiles expose slow classes; per-tile
     /// time inside one batched call is not separately observable).
     pub task_latency: Histogram,
+    /// Intra-worker executor team size: how many scoped threads each
+    /// class-batch executor call partitions its tiles across (1 =
+    /// sequential; see `runtime::parallel`).
+    pub exec_threads: Gauge,
+    /// The SIMD ISA the blocked executor's microkernels were dispatched to
+    /// at `pack_weights` time (`scalar` / `avx2` / `neon`), rendered as the
+    /// info metric `simd_kernel{isa=...} 1`. Unset until an engine
+    /// publishes it (PJRT backends never do).
+    simd_isa: Mutex<Option<&'static str>>,
     /// Labelled per-model slices (multi-model serving), keyed by model id.
     models: Mutex<BTreeMap<String, Arc<ModelMetrics>>>,
 }
@@ -276,6 +285,17 @@ impl Metrics {
     /// the registry map.
     pub fn model(&self, name: &str) -> Arc<ModelMetrics> {
         self.models.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Record the executor's dispatched SIMD ISA (`scalar`/`avx2`/`neon`)
+    /// for the `simd_kernel{isa=...}` info line.
+    pub fn set_simd_isa(&self, isa: &'static str) {
+        *self.simd_isa.lock().unwrap() = Some(isa);
+    }
+
+    /// The recorded SIMD ISA, if an engine has published one.
+    pub fn simd_isa(&self) -> Option<&'static str> {
+        *self.simd_isa.lock().unwrap()
     }
 
     /// Render a one-line-per-metric text snapshot (the server's `/metrics`).
@@ -290,6 +310,11 @@ impl Metrics {
         kv.insert("exec_calls", self.exec_calls.get().to_string());
         kv.insert("rss_bytes", self.rss_bytes.get().to_string());
         kv.insert("governor_drain", self.governor_drain.get().to_string());
+        kv.insert("exec_threads", self.exec_threads.get().to_string());
+        let simd_line = match self.simd_isa() {
+            Some(isa) => format!("simd_kernel{{isa={isa}}} 1\n"),
+            None => String::new(),
+        };
         let governor_lines = format!(
             "governor_swaps{{dir=down}} {}\ngovernor_swaps{{dir=up}} {}\n",
             self.governor_swaps_down.get(),
@@ -357,6 +382,7 @@ impl Metrics {
             .iter()
             .map(|(k, v)| format!("{k} {v}\n"))
             .collect::<String>();
+        out.push_str(&simd_line);
         out.push_str(&governor_lines);
         out.push_str(&class_lines);
         out.push_str(&model_lines);
@@ -490,6 +516,23 @@ mod tests {
         assert_eq!(ws[1].lat_p50, Duration::ZERO);
         assert_eq!((ws[2].count, ws[2].lat_p90), (1, Duration::from_millis(500)));
         assert_eq!(w.count(), 4);
+    }
+
+    #[test]
+    fn snapshot_renders_executor_metrics() {
+        let m = Metrics::default();
+        // The gauge is present (zeroed) from the start; the ISA info line
+        // only appears once an engine publishes a kernel selection.
+        let s = m.snapshot();
+        assert!(s.contains("exec_threads 0"), "{s}");
+        assert!(!s.contains("simd_kernel"), "{s}");
+        assert_eq!(m.simd_isa(), None);
+        m.exec_threads.set(4);
+        m.set_simd_isa("avx2");
+        let s = m.snapshot();
+        assert!(s.contains("exec_threads 4"), "{s}");
+        assert!(s.contains("simd_kernel{isa=avx2} 1"), "{s}");
+        assert_eq!(m.simd_isa(), Some("avx2"));
     }
 
     #[test]

@@ -8,6 +8,8 @@
 
 pub mod export;
 pub mod manifest;
+// Intra-worker parallel layer over the blocked reference executor.
+pub mod parallel;
 // Pure-Rust executor for geometry-only (reference) bundles.
 pub mod reference;
 // The PJRT binding: the offline build ships an API-compatible stub (see its

@@ -1,0 +1,300 @@
+//! Intra-worker parallel tile execution: a threaded variant of the
+//! blocked class-batch executor
+//! ([`reference::run_task_batch_blocked`]) that partitions a class
+//! batch's (image, tile) pairs across a small scoped-thread team.
+//!
+//! Tiles of one class batch are mutually independent through **every**
+//! layer of the fused task (tile `t`'s layer-`L` output feeds only tile
+//! `t`'s layer `L+1`), so the partition is embarrassingly parallel: the
+//! batch's tile range is split into at most `threads` contiguous chunks,
+//! the output buffer is pre-split into the matching disjoint `&mut`
+//! regions, and each team thread runs its chunk through the whole task
+//! with the ordinary sequential executor. There is **no synchronization
+//! inside the loop** — threads share nothing mutable, and the only join
+//! is the scope exit. Because each tile's arithmetic is untouched, the
+//! result is byte-identical to the sequential call for every partition
+//! (pinned by the property tests below and
+//! `tests/prop_invariants.rs`).
+//!
+//! Thread-count resolution follows the `--mem-limit-mb` precedence
+//! model: `--exec-threads` flag, then the `MAFAT_EXEC_THREADS`
+//! environment variable, then `cores / workers` (clamped >= 1) so a
+//! worker pool never oversubscribes the host
+//! ([`resolve_exec_threads`], [`clamp_exec_threads`]).
+
+use crate::ftp::TaskGeom;
+use crate::network::Network;
+use crate::runtime::reference::{self, PackedWeights};
+use anyhow::{Context, Result};
+
+/// Split `n_tiles` into at most `threads` contiguous `(start, len)`
+/// chunks, in order, covering `0..n_tiles` exactly once. Chunk sizes
+/// differ by at most one (the remainder spreads over the leading
+/// chunks); with `threads > n_tiles` the surplus threads simply get no
+/// chunk (never an empty one). Deterministic in its arguments — the
+/// partition, and therefore the output layout, never depends on
+/// scheduling. Mirrored by the numpy port (`partition_tiles`).
+pub fn partition_tiles(n_tiles: usize, threads: usize) -> Vec<(usize, usize)> {
+    let threads = threads.max(1);
+    let base = n_tiles / threads;
+    let rem = n_tiles % threads;
+    let mut chunks = Vec::with_capacity(threads.min(n_tiles));
+    let mut start = 0;
+    for i in 0..threads {
+        let len = base + usize::from(i < rem);
+        if len == 0 {
+            break; // all remaining chunks are empty too
+        }
+        chunks.push((start, len));
+        start += len;
+    }
+    chunks
+}
+
+/// Threaded [`reference::run_task_batch_blocked`]: byte-identical output,
+/// with the batch's tiles partitioned across `threads` scoped threads
+/// ([`partition_tiles`]). `threads <= 1` (or a single tile) is exactly
+/// the sequential call. Each thread writes its chunk's final layer into
+/// a pre-split disjoint region of one contiguous output buffer.
+pub fn run_task_batch_blocked_threaded(
+    net: &Network,
+    packed: &PackedWeights,
+    task: &TaskGeom,
+    batch: &[f32],
+    n_tiles: usize,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let threads = threads.max(1);
+    if threads == 1 || n_tiles <= 1 {
+        return reference::run_task_batch_blocked(net, packed, task, batch, n_tiles);
+    }
+    let first = task.layers.first().expect("task has layers");
+    let in_c = net.layers[first.layer].in_c;
+    let tile_elems = first.in_rect.w() * first.in_rect.h() * in_c;
+    if batch.len() != n_tiles * tile_elems {
+        // Delegate malformed batches to the sequential path so the error
+        // message is the canonical one whatever the thread count.
+        return reference::run_task_batch_blocked(net, packed, task, batch, n_tiles);
+    }
+    let last = task.layers.last().expect("task has layers");
+    let out_stride = last.out_rect.w() * last.out_rect.h() * net.layers[last.layer].out_c;
+    let mut out = vec![0.0f32; n_tiles * out_stride];
+    // Pre-split the output into one disjoint `&mut` region per chunk:
+    // the type system then guarantees the team never overlaps a write.
+    let chunks = partition_tiles(n_tiles, threads);
+    let mut regions: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(chunks.len());
+    let mut rest: &mut [f32] = &mut out;
+    for &(start, len) in &chunks {
+        let (head, tail) = rest.split_at_mut(len * out_stride);
+        regions.push((start, len, head));
+        rest = tail;
+    }
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
+        let handles: Vec<_> = regions
+            .into_iter()
+            .map(|(start, len, dst)| {
+                s.spawn(move || -> Result<()> {
+                    let sub = &batch[start * tile_elems..][..len * tile_elems];
+                    let o = reference::run_task_batch_blocked(net, packed, task, sub, len)?;
+                    dst.copy_from_slice(&o);
+                    Ok(())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("exec team thread panicked")).collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(out)
+}
+
+/// The host's logical core count (1 when it cannot be probed).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// `MAFAT_EXEC_THREADS`, strictly parsed: `Ok(None)` when unset, an
+/// error for a malformed value or 0 — the same strictness
+/// `MAFAT_MEM_LIMIT_MB` gets in
+/// [`crate::coordinator::resolve_budget_bytes`].
+pub fn exec_threads_from_env() -> Result<Option<usize>> {
+    match std::env::var("MAFAT_EXEC_THREADS") {
+        Ok(v) => {
+            let n: u64 = v
+                .trim()
+                .parse()
+                .with_context(|| format!("MAFAT_EXEC_THREADS={v:?} is not a thread count"))?;
+            if n == 0 {
+                anyhow::bail!("MAFAT_EXEC_THREADS must be at least 1 (0 given)");
+            }
+            Ok(Some(n as usize))
+        }
+        Err(_) => Ok(None),
+    }
+}
+
+/// The default per-engine team size for a `workers`-wide pool:
+/// `cores / workers`, clamped >= 1 — the whole pool saturates the host
+/// without oversubscribing it.
+pub fn default_exec_threads(workers: usize) -> usize {
+    (available_cores() / workers.max(1)).max(1)
+}
+
+/// Resolve the executor team size, in precedence order: an explicit
+/// `--exec-threads` (0 rejected), the `MAFAT_EXEC_THREADS` environment
+/// variable (0 rejected), then [`default_exec_threads`]. The same
+/// flag > env > derived-default order as the `--mem-limit-mb` budget.
+pub fn resolve_exec_threads(flag: Option<u64>, workers: usize) -> Result<usize> {
+    if let Some(n) = flag {
+        if n == 0 {
+            anyhow::bail!("--exec-threads must be at least 1 (0 given)");
+        }
+        return Ok(n as usize);
+    }
+    if let Some(n) = exec_threads_from_env()? {
+        return Ok(n);
+    }
+    Ok(default_exec_threads(workers))
+}
+
+/// Enforce the pool-wide oversubscription rule `workers * exec_threads
+/// <= cores`: clamp a requested team size to `cores / workers` (both
+/// clamped >= 1, so a tiny host still gets one thread per engine).
+/// Mirrored by the numpy port (`clamp_exec_threads`).
+pub fn clamp_exec_threads(requested: usize, workers: usize, cores: usize) -> usize {
+    requested.max(1).min((cores.max(1) / workers.max(1)).max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{gen_network_weights, FeatureMap, WEIGHT_SEED};
+    use crate::ftp::plan_group;
+    use crate::network::LayerKind;
+
+    fn tiny_net() -> Network {
+        Network::from_ops(
+            "par-tiny",
+            16,
+            16,
+            3,
+            &[
+                LayerKind::Conv { filters: 4, size: 3, stride: 1, pad: 1 },
+                LayerKind::DepthwiseConv { size: 3, stride: 1, pad: 1 },
+                LayerKind::MaxPool { size: 2, stride: 2 },
+                LayerKind::Conv { filters: 8, size: 3, stride: 1, pad: 1 },
+            ],
+        )
+    }
+
+    #[test]
+    fn partition_covers_exactly_in_order() {
+        for n_tiles in 0..17 {
+            for threads in 1..9 {
+                let chunks = partition_tiles(n_tiles, threads);
+                assert!(chunks.len() <= threads, "n={n_tiles} t={threads}");
+                let mut next = 0;
+                for &(start, len) in &chunks {
+                    assert_eq!(start, next, "n={n_tiles} t={threads}");
+                    assert!(len > 0, "empty chunk at n={n_tiles} t={threads}");
+                    next += len;
+                }
+                assert_eq!(next, n_tiles, "n={n_tiles} t={threads}");
+                // Balanced: sizes differ by at most one.
+                if let (Some(max), Some(min)) = (
+                    chunks.iter().map(|&(_, l)| l).max(),
+                    chunks.iter().map(|&(_, l)| l).min(),
+                ) {
+                    assert!(max - min <= 1, "n={n_tiles} t={threads} {chunks:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_pins_exact_chunks() {
+        // The exact partitions mirrored by the numpy port.
+        assert_eq!(partition_tiles(7, 3), vec![(0, 3), (3, 2), (5, 2)]);
+        assert_eq!(partition_tiles(4, 8), vec![(0, 1), (1, 1), (2, 1), (3, 1)]);
+        assert_eq!(partition_tiles(0, 4), vec![]);
+        assert_eq!(partition_tiles(5, 1), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn threaded_batch_is_byte_identical_to_sequential() {
+        // Every thread count from 1 through tiles+2 (so threads > tiles is
+        // covered) over the largest class of a 4x4 grid, on a net with
+        // conv, depthwise, and pool layers.
+        let net = tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = reference::pack_weights(&net, &weights);
+        let image = crate::data::gen_image(7, net.in_w, net.in_h, net.in_c);
+        let in_map = FeatureMap { h: net.in_h, w: net.in_w, c: net.in_c, data: image };
+        let plan = plan_group(&net, 0, net.n_layers() - 1, 4, 4).unwrap();
+        let mut by_class: std::collections::HashMap<_, Vec<&TaskGeom>> =
+            std::collections::HashMap::new();
+        for t in &plan.tasks {
+            by_class.entry(t.class_key()).or_default().push(t);
+        }
+        let tasks = by_class.into_values().max_by_key(|v| v.len()).unwrap();
+        assert!(tasks.len() > 1, "want a real batch");
+        let mut batch = Vec::new();
+        for t in &tasks {
+            batch.extend_from_slice(&in_map.gather(&t.input_rect()));
+        }
+        let sequential =
+            reference::run_task_batch_blocked(&net, &packed, tasks[0], &batch, tasks.len())
+                .unwrap();
+        for threads in 1..=tasks.len() + 2 {
+            let threaded = run_task_batch_blocked_threaded(
+                &net,
+                &packed,
+                tasks[0],
+                &batch,
+                tasks.len(),
+                threads,
+            )
+            .unwrap();
+            assert_eq!(threaded, sequential, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn threaded_batch_size_mismatch_is_the_canonical_error() {
+        let net = tiny_net();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = reference::pack_weights(&net, &weights);
+        let plan = plan_group(&net, 0, net.n_layers() - 1, 1, 1).unwrap();
+        let err = run_task_batch_blocked_threaded(&net, &packed, &plan.tasks[0], &[0.0; 7], 2, 4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("elems"), "{err}");
+    }
+
+    #[test]
+    fn clamp_enforces_the_oversubscription_rule() {
+        // workers * exec_threads <= cores, floor of one thread each.
+        assert_eq!(clamp_exec_threads(8, 2, 8), 4);
+        assert_eq!(clamp_exec_threads(2, 2, 8), 2);
+        assert_eq!(clamp_exec_threads(4, 8, 8), 1);
+        assert_eq!(clamp_exec_threads(4, 1, 2), 2);
+        assert_eq!(clamp_exec_threads(0, 1, 8), 1);
+        assert_eq!(clamp_exec_threads(3, 1, 0), 1);
+    }
+
+    #[test]
+    fn default_exec_threads_splits_cores_across_workers() {
+        let cores = available_cores();
+        assert_eq!(default_exec_threads(1), cores.max(1));
+        assert_eq!(default_exec_threads(cores * 2), 1);
+        assert_eq!(default_exec_threads(0), cores.max(1));
+    }
+
+    #[test]
+    fn resolve_rejects_zero_flag() {
+        let err = resolve_exec_threads(Some(0), 1).unwrap_err().to_string();
+        assert!(err.contains("--exec-threads"), "{err}");
+        assert_eq!(resolve_exec_threads(Some(3), 1).unwrap(), 3);
+    }
+}

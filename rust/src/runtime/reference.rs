@@ -150,6 +150,61 @@ pub const OC_LANES: usize = 8;
 /// tensor per output pixel) by the block width.
 pub const BLOCK_W: usize = 8;
 
+/// Which inner-loop implementation the blocked executor runs: the explicit
+/// SIMD microkernel the host supports, or the portable scalar chunk loop.
+/// Selected **once** per weight stage by [`SimdIsa::detect`] inside
+/// [`pack_weights`] and recorded in [`PackedWeights`] — the hot loops
+/// dispatch on the recorded value instead of re-probing CPUID per call.
+///
+/// Every variant is bit-identical to every other: each SIMD lane is an
+/// independent output channel (or depthwise channel), so vectorizing
+/// *across* lanes preserves the per-element `bias, then += x*w over
+/// (fy, fx, ci)` accumulation order exactly. The kernels use a separate
+/// vector multiply then add — never a fused multiply-add, whose single
+/// rounding would diverge from the scalar oracle's
+/// `round(a + round(x*w))` sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// Portable chunked scalar loops: the fallback on hosts without a
+    /// supported SIMD extension and the bit-exact oracle everywhere.
+    Scalar,
+    /// 256-bit AVX2 on x86_64, runtime-gated by
+    /// `is_x86_feature_detected!("avx2")`.
+    Avx2,
+    /// 128-bit NEON on aarch64 (baseline there, still runtime-checked).
+    Neon,
+}
+
+impl SimdIsa {
+    /// Probe this host once: AVX2 on x86_64, NEON on aarch64, scalar
+    /// everywhere else. The only constructor of the SIMD variants — the
+    /// dispatchers' `unsafe` target-feature calls rely on that.
+    pub fn detect() -> SimdIsa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return SimdIsa::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return SimdIsa::Neon;
+            }
+        }
+        SimdIsa::Scalar
+    }
+
+    /// Stable label for logs and the `simd_kernel{isa=...}` metric.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdIsa::Scalar => "scalar",
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Neon => "neon",
+        }
+    }
+}
+
 /// One conv layer's weights repacked for the blocked executor: the same
 /// `(fy, fx, ci)`-major row order as [`crate::engine::LayerWeights`], with
 /// each `out_c` row zero-padded to `oc_pad` lanes.
@@ -178,6 +233,25 @@ pub struct PackedLayer {
 /// repacks.
 pub struct PackedWeights {
     pub layers: Vec<Option<PackedLayer>>,
+    /// The microkernel [`SimdIsa::detect`] selected when this stage was
+    /// packed. Private so the SIMD variants can only originate from
+    /// `detect()` (the dispatchers' safety contract); benches and tests
+    /// downgrade via [`PackedWeights::force_scalar`], which is always safe.
+    isa: SimdIsa,
+}
+
+impl PackedWeights {
+    /// The microkernel this weight stage dispatches to.
+    pub fn isa(&self) -> SimdIsa {
+        self.isa
+    }
+
+    /// Pin the portable scalar chunk loop regardless of host support —
+    /// the oracle side of kernel-equivalence tests and the
+    /// `blocked_ms` rows of `benches/exec_throughput.rs`.
+    pub fn force_scalar(&mut self) {
+        self.isa = SimdIsa::Scalar;
+    }
 }
 
 thread_local! {
@@ -257,7 +331,10 @@ pub fn pack_weights(net: &Network, weights: &[Option<LayerWeights>]) -> PackedWe
             _ => None,
         })
         .collect();
-    PackedWeights { layers }
+    PackedWeights {
+        layers,
+        isa: SimdIsa::detect(),
+    }
 }
 
 /// `acc[i] += x * w[i]` over one padded accumulator row — the innermost
@@ -273,6 +350,143 @@ fn axpy_lanes(acc: &mut [f32], x: f32, w: &[f32]) {
     }
 }
 
+/// `a[i] += x[i] * w[i]` over the real channels of one depthwise tap —
+/// the scalar depthwise inner multiply and its bit-exact oracle. Runs to
+/// the shortest slice (callers pass `in_c`-length views).
+#[inline]
+fn mul_acc(a: &mut [f32], x: &[f32], w: &[f32]) {
+    for ((a, &xv), &wv) in a.iter_mut().zip(x).zip(w) {
+        *a += xv * wv;
+    }
+}
+
+/// AVX2 [`axpy_lanes`]: one 256-bit register per [`OC_LANES`] chunk,
+/// separate `vmulps` + `vaddps` (no FMA — see [`SimdIsa`] for why).
+///
+/// # Safety
+/// The host must support AVX2; guaranteed when reached through a
+/// [`SimdIsa::Avx2`] produced by [`SimdIsa::detect`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_lanes_avx2(acc: &mut [f32], x: f32, w: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = (acc.len() / OC_LANES).min(w.len() / OC_LANES) * OC_LANES;
+    let xv = _mm256_set1_ps(x);
+    let mut i = 0;
+    while i < n {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, _mm256_mul_ps(xv, wv)));
+        i += OC_LANES;
+    }
+}
+
+/// AVX2 [`mul_acc`]: 8-wide vector body plus a scalar tail (`in_c` need
+/// not be a lane multiple), element-wise so per-lane op order is the
+/// scalar loop's exactly.
+///
+/// # Safety
+/// As [`axpy_lanes_avx2`]: AVX2 support proven by [`SimdIsa::detect`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_acc_avx2(a: &mut [f32], x: &[f32], w: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = a.len().min(x.len()).min(w.len());
+    let mut i = 0;
+    while i + 8 <= n {
+        let av = _mm256_loadu_ps(a.as_ptr().add(i));
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+        _mm256_storeu_ps(a.as_mut_ptr().add(i), _mm256_add_ps(av, _mm256_mul_ps(xv, wv)));
+        i += 8;
+    }
+    while i < n {
+        *a.get_unchecked_mut(i) += x.get_unchecked(i) * w.get_unchecked(i);
+        i += 1;
+    }
+}
+
+/// NEON [`axpy_lanes`]: two 128-bit registers per [`OC_LANES`] chunk,
+/// separate `fmul` + `fadd` (no fused `fmla` — see [`SimdIsa`]).
+///
+/// # Safety
+/// The host must support NEON; guaranteed when reached through a
+/// [`SimdIsa::Neon`] produced by [`SimdIsa::detect`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_lanes_neon(acc: &mut [f32], x: f32, w: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = (acc.len() / OC_LANES).min(w.len() / OC_LANES) * OC_LANES;
+    let xv = vdupq_n_f32(x);
+    let mut i = 0;
+    while i < n {
+        let a0 = vld1q_f32(acc.as_ptr().add(i));
+        let a1 = vld1q_f32(acc.as_ptr().add(i + 4));
+        let w0 = vld1q_f32(w.as_ptr().add(i));
+        let w1 = vld1q_f32(w.as_ptr().add(i + 4));
+        vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(a0, vmulq_f32(xv, w0)));
+        vst1q_f32(acc.as_mut_ptr().add(i + 4), vaddq_f32(a1, vmulq_f32(xv, w1)));
+        i += OC_LANES;
+    }
+}
+
+/// NEON [`mul_acc`]: 4-wide vector body plus a scalar tail.
+///
+/// # Safety
+/// As [`axpy_lanes_neon`]: NEON support proven by [`SimdIsa::detect`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mul_acc_neon(a: &mut [f32], x: &[f32], w: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = a.len().min(x.len()).min(w.len());
+    let mut i = 0;
+    while i + 4 <= n {
+        let av = vld1q_f32(a.as_ptr().add(i));
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        let wv = vld1q_f32(w.as_ptr().add(i));
+        vst1q_f32(a.as_mut_ptr().add(i), vaddq_f32(av, vmulq_f32(xv, wv)));
+        i += 4;
+    }
+    while i < n {
+        *a.get_unchecked_mut(i) += x.get_unchecked(i) * w.get_unchecked(i);
+        i += 1;
+    }
+}
+
+/// Dispatch [`axpy_lanes`] on the packed stage's recorded [`SimdIsa`]: a
+/// predictable two-way branch in the hot loop, no per-call CPUID. A SIMD
+/// variant on the wrong architecture (only constructible in tests) falls
+/// through to the scalar loop.
+#[inline]
+fn axpy_lanes_isa(isa: SimdIsa, acc: &mut [f32], x: f32, w: &[f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` is only produced by `SimdIsa::detect` after
+        // `is_x86_feature_detected!("avx2")` returned true on this host.
+        SimdIsa::Avx2 => unsafe { axpy_lanes_avx2(acc, x, w) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `Neon` is only produced by `SimdIsa::detect` after the
+        // NEON feature check returned true on this host.
+        SimdIsa::Neon => unsafe { axpy_lanes_neon(acc, x, w) },
+        _ => axpy_lanes(acc, x, w),
+    }
+}
+
+/// Dispatch [`mul_acc`] on the recorded [`SimdIsa`] (see
+/// [`axpy_lanes_isa`]).
+#[inline]
+fn mul_acc_isa(isa: SimdIsa, a: &mut [f32], x: &[f32], w: &[f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `axpy_lanes_isa` — `Avx2` implies host AVX2.
+        SimdIsa::Avx2 => unsafe { mul_acc_avx2(a, x, w) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see `axpy_lanes_isa` — `Neon` implies host NEON.
+        SimdIsa::Neon => unsafe { mul_acc_neon(a, x, w) },
+        _ => mul_acc(a, x, w),
+    }
+}
+
 /// Blocked conv + bias + leaky ReLU, bit-identical to [`conv2d`]: per
 /// output element the accumulation is still `bias, then += x*w in (fy,
 /// fx, ci) order` — only the loop nest is rearranged so one weight row
@@ -283,6 +497,7 @@ fn conv2d_blocked_into(
     ih: usize,
     iw: usize,
     pk: &PackedLayer,
+    isa: SimdIsa,
     pads: [usize; 4],
     oh: usize,
     ow: usize,
@@ -337,7 +552,7 @@ fn conv2d_blocked_into(
                         for p in p_lo..p_hi {
                             let xx = (base + (p * stride) as isize) as usize;
                             let xv = row[xx * in_c + ci];
-                            axpy_lanes(&mut acc[p * ocp..][..ocp], xv, wrow);
+                            axpy_lanes_isa(isa, &mut acc[p * ocp..][..ocp], xv, wrow);
                         }
                     }
                 }
@@ -370,6 +585,7 @@ fn depthwise_conv2d_blocked_into(
     ih: usize,
     iw: usize,
     pk: &PackedLayer,
+    isa: SimdIsa,
     pads: [usize; 4],
     oh: usize,
     ow: usize,
@@ -421,9 +637,7 @@ fn depthwise_conv2d_blocked_into(
                         let xx = (base + (p * stride) as isize) as usize;
                         let xrow = &row[xx * in_c..][..in_c];
                         let a = &mut acc[p * ocp..][..in_c];
-                        for ((a, &xv), &wv) in a.iter_mut().zip(xrow).zip(wrow) {
-                            *a += xv * wv;
-                        }
+                        mul_acc_isa(isa, a, xrow, &wrow[..in_c]);
                     }
                 }
             }
@@ -492,6 +706,7 @@ pub fn run_task_batch_blocked(
                         ih,
                         iw,
                         pk,
+                        packed.isa,
                         [lg.pad.top, lg.pad.bottom, lg.pad.left, lg.pad.right],
                         oh,
                         ow,
@@ -509,6 +724,7 @@ pub fn run_task_batch_blocked(
                         ih,
                         iw,
                         pk,
+                        packed.isa,
                         [lg.pad.top, lg.pad.bottom, lg.pad.left, lg.pad.right],
                         oh,
                         ow,
@@ -1044,6 +1260,74 @@ mod tests {
             packed.layers.iter().flatten().any(|pk| pk.depthwise),
             "net must contain a depthwise layer"
         );
+    }
+
+    #[test]
+    fn detect_never_selects_a_foreign_isa() {
+        let isa = SimdIsa::detect();
+        #[cfg(target_arch = "x86_64")]
+        assert_ne!(isa, SimdIsa::Neon);
+        #[cfg(target_arch = "aarch64")]
+        assert_ne!(isa, SimdIsa::Avx2);
+        assert!(!isa.as_str().is_empty());
+    }
+
+    #[test]
+    fn simd_microkernels_bit_identical_to_scalar_chunk_loops() {
+        // On hosts without a SIMD extension this degenerates to scalar ==
+        // scalar; on CI (x86_64 + AVX2) it pins the explicit kernels.
+        let isa = SimdIsa::detect();
+        // axpy over 4 padded lane groups, values exercising both signs.
+        let w: Vec<f32> = (0..4 * OC_LANES).map(|i| i as f32 * 0.37 - 5.1).collect();
+        let mut oracle: Vec<f32> = (0..4 * OC_LANES).map(|i| i as f32 * 0.11 - 1.3).collect();
+        let mut simd = oracle.clone();
+        axpy_lanes(&mut oracle, 1.7, &w);
+        axpy_lanes_isa(isa, &mut simd, 1.7, &w);
+        assert_eq!(oracle, simd, "axpy_lanes {isa:?}");
+        // A depthwise tap with a non-lane-multiple channel count, so the
+        // vector body and the scalar tail both run.
+        let x: Vec<f32> = (0..11).map(|i| i as f32 * 0.23 - 0.9).collect();
+        let w: Vec<f32> = (0..11).map(|i| i as f32 * -0.41 + 1.2).collect();
+        let mut oracle: Vec<f32> = (0..11).map(|i| i as f32 * 0.05).collect();
+        let mut simd = oracle.clone();
+        mul_acc(&mut oracle, &x, &w);
+        mul_acc_isa(isa, &mut simd, &x, &w);
+        assert_eq!(oracle, simd, "mul_acc {isa:?}");
+    }
+
+    #[test]
+    fn detected_isa_executor_bit_identical_to_forced_scalar() {
+        // Whole-task equivalence on both net shapes (full conv and
+        // depthwise/pointwise): the detected-ISA stage against the same
+        // stage forced onto the portable scalar kernel, every pad combo.
+        for net in [tiny_net(), dw_tiny_net()] {
+            let weights = gen_network_weights(&net, WEIGHT_SEED);
+            let packed = pack_weights(&net, &weights);
+            let mut scalar_packed = pack_weights(&net, &weights);
+            scalar_packed.force_scalar();
+            assert_eq!(scalar_packed.isa(), SimdIsa::Scalar);
+            let image = crate::data::gen_image(43, net.in_w, net.in_h, net.in_c);
+            let in_map = crate::engine::FeatureMap {
+                h: net.in_h,
+                w: net.in_w,
+                c: net.in_c,
+                data: image,
+            };
+            let plan = plan_group(&net, 0, net.n_layers() - 1, 3, 3).unwrap();
+            for task in &plan.tasks {
+                let tile = in_map.gather(&task.input_rect());
+                let simd = run_task_blocked(&net, &packed, task, &tile).unwrap();
+                let scalar = run_task_blocked(&net, &scalar_packed, task, &tile).unwrap();
+                assert_eq!(
+                    simd,
+                    scalar,
+                    "task ({},{}) {:?} diverged from the scalar kernel",
+                    task.grid_i,
+                    task.grid_j,
+                    packed.isa()
+                );
+            }
+        }
     }
 
     #[test]

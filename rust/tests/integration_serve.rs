@@ -302,6 +302,53 @@ fn worker_pool_matches_single_worker_byte_for_byte() {
 }
 
 #[test]
+fn exec_team_of_two_matches_sequential_byte_for_byte() {
+    // Intra-worker parallelism must be an invisible optimization too: a
+    // two-thread tile team returns byte-identical responses to the
+    // sequential executor, and the server publishes its team size plus
+    // the selected SIMD kernel in the metrics snapshot.
+    let seeds: Vec<u64> = (0..6).collect();
+    let sequential = start_server(
+        "2x2/2/2x2/4/1x1",
+        ServerConfig {
+            exec_threads: 1,
+            ..ServerConfig::default()
+        },
+    );
+    let addr1 = sequential.local_addr;
+    std::thread::spawn(move || {
+        let _ = sequential.run();
+    });
+    let teamed = start_server(
+        "2x2/2/2x2/4/1x1",
+        ServerConfig {
+            exec_threads: 2,
+            ..ServerConfig::default()
+        },
+    );
+    let addr2 = teamed.local_addr;
+    std::thread::spawn(move || {
+        let _ = teamed.run();
+    });
+
+    let a = outputs_for_seeds(addr1, &seeds);
+    let b = outputs_for_seeds(addr2, &seeds);
+    assert_eq!(a, b, "teamed responses must equal sequential responses");
+
+    let mut c = Client::connect(addr2);
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    let snapshot = m.str_at("metrics").unwrap();
+    assert!(
+        snapshot.contains("exec_threads 2"),
+        "team size missing from metrics: {snapshot}"
+    );
+    assert!(
+        snapshot.contains("simd_kernel{isa="),
+        "selected kernel missing from metrics: {snapshot}"
+    );
+}
+
+#[test]
 fn worker_pool_serves_concurrent_load_and_aggregates_metrics() {
     let server = start_server(
         "2x2/NoCut",

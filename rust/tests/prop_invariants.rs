@@ -12,7 +12,7 @@ use mafat::network::{LayerKind, Network, MIB};
 use mafat::plan::{plan_config, MafatConfig};
 use mafat::predictor::{predict_mem, PredictorParams};
 use mafat::reuse::{reuse_analysis, schedule_order};
-use mafat::runtime::reference;
+use mafat::runtime::{parallel, reference};
 use mafat::search::get_config;
 
 const CASES: u64 = 60;
@@ -514,6 +514,76 @@ fn prop_depthwise_class_batched_blocked_matches_scalar_sequential() {
             }
         }
         assert_eq!(expected.data, got.data, "batched blocked != scalar sequential");
+    });
+}
+
+#[test]
+fn prop_threaded_batch_matches_sequential_for_arbitrary_partitions() {
+    // The intra-worker parallelism equivalence: for arbitrary rect
+    // partitions, image batches, and team sizes — including teams larger
+    // than the tile count — the threaded executor must reproduce the
+    // sequential blocked path byte for byte. Threads only split the
+    // (image x tile) pairs into contiguous chunks written to disjoint
+    // output regions, so equality is exact, not approximate.
+    cases(15, |rng| {
+        let net = random_small_network(rng);
+        let bottom = net.n_layers() - 1;
+        let (w, h, _) = net.out_shape(bottom);
+        let xs = random_bounds(rng, w, 4);
+        let ys = random_bounds(rng, h, 4);
+        let g = plan_group_from_bounds(&net, 0, bottom, &xs, &ys).unwrap();
+        let weights = gen_network_weights(&net, WEIGHT_SEED);
+        let packed = reference::pack_weights(&net, &weights);
+        let n_images = 1 + rng.next_below(3);
+        let inputs: Vec<FeatureMap> = (0..n_images)
+            .map(|i| FeatureMap {
+                h: net.in_h,
+                w: net.in_w,
+                c: net.in_c,
+                data: mafat::data::gen_image(4400 + i as u64, net.in_w, net.in_h, net.in_c),
+            })
+            .collect();
+
+        // One shape class at a time, exactly as the engine batches them.
+        let mut by_class: std::collections::HashMap<String, Vec<usize>> =
+            std::collections::HashMap::new();
+        for (ix, task) in g.tasks.iter().enumerate() {
+            by_class
+                .entry(task.class_key().short_name())
+                .or_default()
+                .push(ix);
+        }
+        for ixs in by_class.values() {
+            let mut batch = Vec::new();
+            for input in &inputs {
+                for &ix in ixs {
+                    batch.extend_from_slice(&input.gather(&g.tasks[ix].input_rect()));
+                }
+            }
+            let n_tiles = ixs.len() * n_images;
+            let sequential =
+                reference::run_task_batch_blocked(&net, &packed, &g.tasks[ixs[0]], &batch, n_tiles)
+                    .unwrap();
+            let team = 1 + rng.next_below(n_tiles + 2); // includes threads > tiles
+            let threaded = parallel::run_task_batch_blocked_threaded(
+                &net,
+                &packed,
+                &g.tasks[ixs[0]],
+                &batch,
+                n_tiles,
+                team,
+            )
+            .unwrap();
+            assert_eq!(
+                sequential.len(),
+                threaded.len(),
+                "threaded output length diverged at team {team}"
+            );
+            assert_eq!(
+                sequential, threaded,
+                "threaded != sequential for {n_tiles} tiles on a team of {team}"
+            );
+        }
     });
 }
 
